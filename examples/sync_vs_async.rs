@@ -1,0 +1,52 @@
+//! Fig 6 as a runnable example: synchronous vs asynchronous P2P
+//! training of the mini MobileNetV3 — the paper finds synchronous
+//! converges faster and more stably (async consumes stale gradients).
+//!
+//!     cargo run --release --example sync_vs_async
+
+use p2pless::config::{SyncMode, TrainConfig};
+use p2pless::coordinator::Cluster;
+
+fn main() -> anyhow::Result<()> {
+    let base = TrainConfig {
+        model: "mini_mobilenet".into(),
+        dataset: "mnist".into(),
+        peers: 4,
+        batch_size: 16,
+        epochs: 8,
+        lr: 0.05,
+        train_samples: 4 * 16 * 4,
+        val_samples: 256,
+        ..Default::default()
+    };
+
+    println!("sync vs async: {} peers, {} epochs", base.peers, base.epochs);
+    let sync_cfg = TrainConfig { sync: SyncMode::Synchronous, ..base.clone() };
+    let cluster = Cluster::new(sync_cfg)?;
+    let engine = cluster.engine();
+    let sync_rep = cluster.run()?;
+
+    let async_cfg = TrainConfig { sync: SyncMode::Asynchronous, ..base };
+    let async_rep = Cluster::with_engine(async_cfg, engine)?.run()?;
+
+    println!("\nepoch  sync loss  sync acc   async loss  async acc");
+    let n = sync_rep.val_curve.len().max(async_rep.val_curve.len());
+    for i in 0..n {
+        let s = sync_rep.val_curve.get(i);
+        let a = async_rep.val_curve.get(i);
+        println!(
+            "{:>5}  {:>9}  {:>8}   {:>10}  {:>9}",
+            i + 1,
+            s.map(|v| format!("{:.4}", v.1)).unwrap_or_default(),
+            s.map(|v| format!("{:.3}", v.2)).unwrap_or_default(),
+            a.map(|v| format!("{:.4}", v.1)).unwrap_or_default(),
+            a.map(|v| format!("{:.3}", v.2)).unwrap_or_default(),
+        );
+    }
+    println!(
+        "\nwall: sync {:?} vs async {:?}",
+        sync_rep.wall, async_rep.wall
+    );
+    println!("paper fig 6: sync reaches higher accuracy in fewer epochs");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels -> AOT HLO.
+
+Never imported at runtime; the rust coordinator consumes only the
+artifacts this package emits (see aot.py).
+"""

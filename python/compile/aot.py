@@ -1,0 +1,154 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* + manifest.
+
+This is the only place python touches the system. `make artifacts` runs it
+once; the rust runtime (rust/src/runtime) then loads `artifacts/*.hlo.txt`
+through `HloModuleProto::from_text_file` and executes via PJRT. Python is
+never on the request path.
+
+HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts per (model, dataset):
+    grad_<m>_<ds>_b<B>.hlo.txt            (params, x, y) -> (loss, grads)
+    grad_<m>_<ds>_b<B>_nopallas.hlo.txt   ablation: jnp.dot instead of L1
+    update_<m>_<ds>.hlo.txt               (params, grads, lr) -> (params',)
+    eval_<m>_<ds>_b<B>.hlo.txt            (params, x, y) -> (loss, ncorrect)
+    params_<m>_<ds>.f32                   initial parameters (raw LE f32)
+Plus the QSGD kernel pair (encode/decode) for rust<->kernel
+cross-validation, and manifest.json describing all of it.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import qsgd
+from .model import DATASETS, MODELS, Model
+
+GRAD_BATCHES = (16, 64)
+EVAL_BATCHES = (64, 256)
+NOPALLAS_BATCHES = (64,)
+QSGD_N = 4096
+QSGD_S = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir, name, text):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text)} chars)")
+    return name
+
+
+def lower_model(m: Model, out_dir: str, quick: bool):
+    h, w, c = m.input_shape
+    pspec = jax.ShapeDtypeStruct((m.param_count,), jnp.float32)
+    lr_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    key = f"{m.name}_{m.dataset}"
+    entry = dict(
+        model=m.name,
+        dataset=m.dataset,
+        param_count=m.param_count,
+        input=[h, w, c],
+        nclass=m.nclass,
+        artifacts=dict(grad={}, grad_nopallas={}, eval={}),
+        params_spec=m.params.spec_json(),
+    )
+
+    grad_batches = GRAD_BATCHES[:1] if quick else GRAD_BATCHES
+    eval_batches = EVAL_BATCHES[:1] if quick else EVAL_BATCHES
+    nopallas = () if quick else NOPALLAS_BATCHES
+
+    for b in grad_batches:
+        xs = jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
+        ys = jax.ShapeDtypeStruct((b,), jnp.int32)
+        low = jax.jit(lambda p, x, y: m.grad_step(p, x, y)).lower(pspec, xs, ys)
+        entry["artifacts"]["grad"][str(b)] = _write(
+            out_dir, f"grad_{key}_b{b}.hlo.txt", to_hlo_text(low))
+    for b in nopallas:
+        xs = jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
+        ys = jax.ShapeDtypeStruct((b,), jnp.int32)
+        low = jax.jit(
+            lambda p, x, y: m.grad_step(p, x, y, use_pallas=False)
+        ).lower(pspec, xs, ys)
+        entry["artifacts"]["grad_nopallas"][str(b)] = _write(
+            out_dir, f"grad_{key}_b{b}_nopallas.hlo.txt", to_hlo_text(low))
+    for b in eval_batches:
+        xs = jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
+        ys = jax.ShapeDtypeStruct((b,), jnp.int32)
+        low = jax.jit(lambda p, x, y: m.evaluate(p, x, y)).lower(pspec, xs, ys)
+        entry["artifacts"]["eval"][str(b)] = _write(
+            out_dir, f"eval_{key}_b{b}.hlo.txt", to_hlo_text(low))
+
+    gspec = jax.ShapeDtypeStruct((m.param_count,), jnp.float32)
+    low = jax.jit(m.apply_update).lower(pspec, gspec, lr_spec)
+    entry["artifacts"]["update"] = _write(
+        out_dir, f"update_{key}.hlo.txt", to_hlo_text(low))
+
+    init = np.asarray(m.init_flat(seed=0), dtype="<f4")
+    fname = f"params_{key}.f32"
+    init.tofile(os.path.join(out_dir, fname))
+    entry["init_params"] = fname
+    print(f"  wrote {fname} ({m.param_count} params)")
+    return key, entry
+
+
+def lower_qsgd(out_dir: str):
+    vspec = jax.ShapeDtypeStruct((QSGD_N,), jnp.float32)
+    uspec = jax.ShapeDtypeStruct((QSGD_N,), jnp.float32)
+    qspec = jax.ShapeDtypeStruct((QSGD_N,), jnp.int32)
+    nspec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    enc = jax.jit(lambda v, u: qsgd.qsgd_quantize(v, u, QSGD_S)).lower(vspec, uspec)
+    dec = jax.jit(lambda q, n: (qsgd.qsgd_dequantize(q, n, QSGD_S),)).lower(qspec, nspec)
+    return dict(
+        n=QSGD_N,
+        s=QSGD_S,
+        encode=_write(out_dir, f"qsgd_encode_n{QSGD_N}.hlo.txt", to_hlo_text(enc)),
+        decode=_write(out_dir, f"qsgd_decode_n{QSGD_N}.hlo.txt", to_hlo_text(dec)),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--datasets", nargs="*", default=list(DATASETS))
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest batch only, no ablation artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = dict(version=1, models={}, grad_batches=list(GRAD_BATCHES),
+                    eval_batches=list(EVAL_BATCHES))
+    for name in args.models:
+        for ds in args.datasets:
+            m = Model(name, ds)
+            print(f"lowering {name} on {ds} ({m.param_count} params)")
+            key, entry = lower_model(m, args.out, args.quick)
+            manifest["models"][key] = entry
+    manifest["qsgd"] = lower_qsgd(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json: {len(manifest['models'])} model entries")
+
+
+if __name__ == "__main__":
+    main()

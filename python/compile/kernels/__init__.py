@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+- matmul: MXU-shaped tiled matmul behind every conv (im2col) and dense
+  layer — the per-batch gradient-computation hot spot the paper offloads
+  to serverless functions.
+- qsgd: the QSGD stochastic quantizer used on the gradient-exchange path.
+- ref: pure-jnp oracles for both.
+"""

@@ -1,0 +1,96 @@
+"""L1: Pallas tiled matmul kernel — the gradient-computation hot spot.
+
+The paper's hot spot is per-batch CNN gradient computation on CPU-only
+EC2/Lambda instances. For the TPU idiom required here, convolutions are
+lowered to im2col x weight matmuls, and this kernel implements the matmul
+as an MXU-shaped tiled kernel: a 2-D grid over (M, N) output tiles, the
+full K dimension resident in VMEM per grid step (K <= a few thousand for
+every conv/dense in the models, so a (block_m, K) + (K, block_n) +
+(block_m, block_n) working set stays well under the ~16 MB VMEM budget —
+see DESIGN.md SSPerf for the per-model footprint estimates).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode pallas lowers to plain HLO that the rust
+runtime runs unmodified.
+
+`pmatmul` wraps the kernel with a custom VJP (pallas_call is not
+differentiable by itself) so the same kernel sits on the forward AND
+backward paths of the AOT grad artifact:
+    dA = dC @ B^T      dB = A^T @ dC
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. 128 matches the MXU systolic array edge; on the
+# interpret/CPU path it simply becomes the HLO loop tile.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (block_m, K) x (K, block_n) tile product, f32 accumulate."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pallas_matmul(a, b, block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """`a @ b` via the tiled Pallas kernel. a: [M, K], b: [K, N], f32.
+
+    M and N are padded up to the tile size; K is carried whole into VMEM
+    (the HBM<->VMEM schedule the paper's CPU code left to the cache
+    hierarchy is expressed here by the BlockSpecs).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims mismatch: {a.shape} @ {b.shape}"
+    bm = min(block_m, max(m, 1))
+    bn = min(block_n, max(n, 1))
+    ap = _pad_to(a, bm, 0)
+    bp = _pad_to(b, bn, 1)
+    mp, np_ = ap.shape[0], bp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def pmatmul(a, b):
+    """Differentiable pallas matmul (kernel on fwd and bwd paths)."""
+    return pallas_matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return pallas_matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, g):
+    a, b = res
+    return pallas_matmul(g, b.T), pallas_matmul(a.T, g)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)

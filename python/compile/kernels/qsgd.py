@@ -1,0 +1,99 @@
+"""L1: Pallas QSGD stochastic-quantization kernel.
+
+QSGD (Alistarh et al., NeurIPS'17) is the compression scheme the paper
+uses on the gradient-exchange path (SSIII-B.4). For a gradient vector v
+with l2 norm ||v|| and s quantization levels:
+
+    Q_s(v_i) = ||v|| * sgn(v_i) * xi_i / s
+    xi_i     = floor(|v_i| / ||v|| * s + u_i),   u_i ~ U[0, 1)
+
+i.e. stochastic rounding of |v_i|/||v|| * s to an integer level in
+[0, s]. E[Q_s(v)] = v (unbiased).
+
+The kernel is the elementwise (VPU-shaped) part: given the pre-scaled
+tensor `scaled = v * s / ||v||` and uniform noise `u`, it emits signed
+integer levels. Norm reduction and the final scale live in jnp (L2) —
+keeping the kernel a pure 2-D-blocked map mirrors how the quantizer would
+tile on real hardware. int32 output: wide enough for any s, and the rust
+codec packs levels down to i8 on the wire when s <= 127.
+
+interpret=True for CPU-PJRT executability (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256  # elements per grid step along the flattened axis (x8 lanes)
+LANES = 8
+
+
+def _quantize_kernel(scaled_ref, u_ref, o_ref):
+    s = scaled_ref[...]
+    level = jnp.floor(jnp.abs(s) + u_ref[...])
+    o_ref[...] = (jnp.sign(s) * level).astype(jnp.int32)
+
+
+def _dequantize_kernel(q_ref, scale_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+def _to_blocks(x, block, lanes):
+    """Flatten + zero-pad to a (rows, lanes) grid-friendly 2-D layout."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per = block * lanes
+    rem = (-n) % per
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    return flat.reshape(-1, lanes), n
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def qsgd_quantize(v, u, s: int = 16):
+    """Quantize `v` to integer levels. Returns (levels int32, norm f32[1]).
+
+    `u` must be uniform [0,1) noise of v's shape (passed in — the AOT
+    artifact has no ambient RNG; the rust coordinator supplies the bits).
+    """
+    norm = jnp.sqrt(jnp.sum(v.astype(jnp.float32) ** 2))
+    # Guard the zero vector: scale of 0 keeps all levels at 0.
+    inv = jnp.where(norm > 0.0, s / norm, 0.0)
+    scaled2d, n = _to_blocks(v.astype(jnp.float32) * inv, BLOCK, LANES)
+    u2d, _ = _to_blocks(u.astype(jnp.float32), BLOCK, LANES)
+    rows = scaled2d.shape[0]
+    q = pl.pallas_call(
+        _quantize_kernel,
+        grid=(rows // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=True,
+    )(scaled2d, u2d)
+    return q.reshape(-1)[:n].reshape(v.shape), norm.reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def qsgd_dequantize(q, norm, s: int = 16):
+    """Inverse map: levels -> float gradient estimate (norm/s * q)."""
+    scale = (norm.reshape(()) / s).astype(jnp.float32)
+    q2d, n = _to_blocks(q, BLOCK, LANES)
+    rows = q2d.shape[0]
+    scale2d = jnp.broadcast_to(scale, (rows, LANES))
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(rows // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(q2d, scale2d)
+    return out.reshape(-1)[:n].reshape(q.shape)

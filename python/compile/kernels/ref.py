@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has its reference here; pytest asserts
+allclose between kernel and oracle across a hypothesis-driven sweep of
+shapes and values (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Oracle for kernels.matmul.pallas_matmul."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def qsgd_quantize_ref(v, u, s: int = 16):
+    """Oracle for kernels.qsgd.qsgd_quantize (same stochastic bits `u`)."""
+    v = v.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(v**2))
+    inv = jnp.where(norm > 0.0, s / norm, 0.0)
+    scaled = v * inv
+    level = jnp.floor(jnp.abs(scaled) + u.astype(jnp.float32))
+    return (jnp.sign(scaled) * level).astype(jnp.int32), norm.reshape(1)
+
+
+def qsgd_dequantize_ref(q, norm, s: int = 16):
+    """Oracle for kernels.qsgd.qsgd_dequantize."""
+    return q.astype(jnp.float32) * (norm.reshape(()) / s)

@@ -1,0 +1,205 @@
+"""L2: the paper's three CNN workloads as JAX models over flat parameters.
+
+The paper trains SqueezeNet 1.1 (1.2 M params), MobileNetV3-Small (2.5 M)
+and VGG-11 (132.9 M) on MNIST/CIFAR-10 with PyTorch on EC2/Lambda. Here
+each family is reproduced as a *structurally faithful mini* — fire
+modules, inverted residuals with SE, plain conv stacks — sized to train
+on the CPU-PJRT testbed (full-scale analytic specs used by the cost/time
+model live in rust/src/perfmodel). See DESIGN.md substitution table.
+
+Every model exposes four AOT entry points, all over a single flat f32
+parameter vector (the wire format peers exchange):
+
+    grad_step(flat, x, y)      -> (loss, grads_flat)      # the hot spot
+    apply_update(flat, g, lr)  -> (flat',)                 # SGD step
+    evaluate(flat, x, y)       -> (loss, correct_count)
+    forward(flat, x)           -> (logits,)
+
+All conv/dense matmuls route through the L1 Pallas kernel (im2col x
+weight) unless use_pallas=False (ablation artifacts).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .nn import ParamSet
+
+# dataset name -> (H, W, C, nclass)
+DATASETS = {
+    "mnist": (28, 28, 1, 10),
+    "cifar": (32, 32, 3, 10),
+}
+
+MODELS = ("mini_squeezenet", "mini_mobilenet", "mini_vgg")
+
+
+# --------------------------------------------------------------- builders
+
+
+def _build_mini_vgg(p: ParamSet, cin: int, nclass: int, hw: int):
+    """VGG-style conv stack: conv-relu-pool x3 + two dense layers."""
+    widths = (16, 32, 64)
+    c = cin
+    for i, w in enumerate(widths):
+        nn.declare_conv(p, f"conv{i}", 3, 3, c, w)
+        c = w
+    final_hw = hw // 2 // 2 // 2
+    feat = final_hw * final_hw * widths[-1]
+    nn.declare_dense(p, "fc1", feat, 128)
+    nn.declare_dense(p, "fc2", 128, nclass)
+
+    def apply(flat, x, use_pallas=True):
+        c2 = cin
+        for i, w in enumerate(widths):
+            x = nn.conv2d(p, flat, x, f"conv{i}", 3, 3, c2, w,
+                          use_pallas=use_pallas)
+            x = nn.relu(x)
+            x = nn.maxpool(x)
+            c2 = w
+        x = x.reshape(x.shape[0], -1)
+        x = nn.relu(nn.dense(p, flat, x, "fc1", feat, 128, use_pallas))
+        return nn.dense(p, flat, x, "fc2", 128, nclass, use_pallas)
+
+    return apply
+
+
+def _build_mini_squeezenet(p: ParamSet, cin: int, nclass: int, hw: int):
+    """SqueezeNet-style: stem conv, two fire modules, GAP classifier.
+
+    A fire module squeezes to s 1x1 channels then expands to e 1x1 + e 3x3
+    (concatenated) — exactly SqueezeNet 1.1's block at reduced width."""
+    fires = [
+        ("fire1", 16, 8, 16),   # (name, cin, squeeze, expand)
+        ("fire2", 32, 8, 16),
+        ("fire3", 32, 16, 32),
+    ]
+    nn.declare_conv(p, "stem", 3, 3, cin, 16)
+    for name, fc, s, e in fires:
+        nn.declare_conv(p, f"{name}/squeeze", 1, 1, fc, s)
+        nn.declare_conv(p, f"{name}/e1", 1, 1, s, e)
+        nn.declare_conv(p, f"{name}/e3", 3, 3, s, e)
+    nn.declare_conv(p, "head", 1, 1, 64, nclass)
+
+    def fire(flat, x, name, fc, s, e, up):
+        z = nn.relu(nn.conv2d(p, flat, x, f"{name}/squeeze", 1, 1, fc, s,
+                              use_pallas=up))
+        a = nn.relu(nn.conv2d(p, flat, z, f"{name}/e1", 1, 1, s, e,
+                              use_pallas=up))
+        b = nn.relu(nn.conv2d(p, flat, z, f"{name}/e3", 3, 3, s, e,
+                              use_pallas=up))
+        return jnp.concatenate([a, b], axis=-1)
+
+    def apply(flat, x, use_pallas=True):
+        x = nn.relu(nn.conv2d(p, flat, x, "stem", 3, 3, cin, 16,
+                              use_pallas=use_pallas))
+        x = nn.maxpool(x)
+        x = fire(flat, x, "fire1", 16, 8, 16, use_pallas)
+        x = fire(flat, x, "fire2", 32, 8, 16, use_pallas)
+        x = nn.maxpool(x)
+        x = fire(flat, x, "fire3", 32, 16, 32, use_pallas)
+        x = nn.conv2d(p, flat, x, "head", 1, 1, 64, nclass,
+                      use_pallas=use_pallas)
+        return nn.global_avgpool(x)
+
+    return apply
+
+
+def _build_mini_mobilenet(p: ParamSet, cin: int, nclass: int, hw: int):
+    """MobileNetV3-Small-style: stem, inverted residual blocks with
+    depthwise conv + SE + hardswish, GAP + dense classifier."""
+    # (name, cin, expand, cout, stride, use_se)
+    blocks = [
+        ("ir1", 16, 32, 16, 1, True),
+        ("ir2", 16, 48, 24, 2, False),
+        ("ir3", 24, 64, 24, 1, True),
+    ]
+    nn.declare_conv(p, "stem", 3, 3, cin, 16)
+    for name, bc, ec, oc, _, use_se in blocks:
+        nn.declare_conv(p, f"{name}/expand", 1, 1, bc, ec)
+        nn.declare_depthwise(p, f"{name}/dw", 3, 3, ec)
+        if use_se:
+            nn.declare_se(p, f"{name}/se", ec)
+        nn.declare_conv(p, f"{name}/project", 1, 1, ec, oc)
+    nn.declare_dense(p, "fc1", 24, 64)
+    nn.declare_dense(p, "fc2", 64, nclass)
+
+    def apply(flat, x, use_pallas=True):
+        x = nn.hardswish(nn.conv2d(p, flat, x, "stem", 3, 3, cin, 16,
+                                   stride=2, use_pallas=use_pallas))
+        for name, bc, ec, oc, stride, use_se in blocks:
+            inp = x
+            z = nn.hardswish(nn.conv2d(p, flat, x, f"{name}/expand", 1, 1,
+                                       bc, ec, use_pallas=use_pallas))
+            z = nn.hardswish(nn.depthwise2d(p, flat, z, f"{name}/dw", 3, 3,
+                                            ec, stride=stride))
+            if use_se:
+                z = nn.se_block(p, flat, z, f"{name}/se", ec,
+                                use_pallas=use_pallas)
+            z = nn.conv2d(p, flat, z, f"{name}/project", 1, 1, ec, oc,
+                          use_pallas=use_pallas)
+            if stride == 1 and bc == oc:
+                z = z + inp
+            x = z
+        x = nn.global_avgpool(x)
+        x = nn.hardswish(nn.dense(p, flat, x, "fc1", 24, 64, use_pallas))
+        return nn.dense(p, flat, x, "fc2", 64, nclass, use_pallas)
+
+    return apply
+
+
+_BUILDERS = {
+    "mini_vgg": _build_mini_vgg,
+    "mini_squeezenet": _build_mini_squeezenet,
+    "mini_mobilenet": _build_mini_mobilenet,
+}
+
+
+class Model:
+    """A model family instantiated for a dataset: spec + AOT entry points."""
+
+    def __init__(self, name: str, dataset: str):
+        if name not in _BUILDERS:
+            raise ValueError(f"unknown model {name!r}")
+        h, w, c, nclass = DATASETS[dataset]
+        self.name, self.dataset = name, dataset
+        self.input_shape = (h, w, c)
+        self.nclass = nclass
+        self.params = ParamSet()
+        self._apply = _BUILDERS[name](self.params, c, nclass, h)
+
+    @property
+    def param_count(self) -> int:
+        return self.params.total
+
+    def init_flat(self, seed: int = 0):
+        return self.params.init_flat(jax.random.PRNGKey(seed))
+
+    # ---- AOT entry points (each returns a tuple: artifacts are tuples) --
+
+    def forward(self, flat, x, use_pallas=True):
+        return (self._apply(flat, x, use_pallas=use_pallas),)
+
+    def loss(self, flat, x, y, use_pallas=True):
+        logits = self._apply(flat, x, use_pallas=use_pallas)
+        return nn.softmax_xent(logits, y, self.nclass)
+
+    def grad_step(self, flat, x, y, use_pallas=True):
+        """(loss, flat gradient) — the per-batch hot spot peers offload."""
+        loss, g = jax.value_and_grad(
+            functools.partial(self.loss, use_pallas=use_pallas)
+        )(flat, x, y)
+        return loss, g
+
+    def apply_update(self, flat, grads, lr):
+        """Plain SGD: theta <- theta - lr * g (paper Alg. 1 update)."""
+        return (flat - lr.reshape(()) * grads,)
+
+    def evaluate(self, flat, x, y, use_pallas=True):
+        logits = self._apply(flat, x, use_pallas=use_pallas)
+        return (
+            nn.softmax_xent(logits, y, self.nclass),
+            nn.accuracy_count(logits, y),
+        )

@@ -1,0 +1,191 @@
+"""L2: minimal functional NN library over a single flattened f32 parameter
+vector.
+
+The rust coordinator treats model parameters as one opaque f32 vector (the
+paper's peers exchange exactly that: a flat gradient). Every layer here
+declares its parameters against a `ParamSet`, which assigns offsets into
+the flat vector; `apply`-time code slices views back out. Gradients taken
+with `jax.grad` w.r.t. the flat vector are therefore already in wire
+format — no (un)flattening on the request path.
+
+All matmuls (conv-as-im2col and dense) route through the L1 Pallas kernel
+(`kernels.matmul.pmatmul`) unless `use_pallas=False` — that switch exists
+only to emit the `_nopallas` ablation artifacts.
+"""
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.matmul import pmatmul
+
+
+@dataclass
+class ParamEntry:
+    name: str
+    shape: tuple
+    offset: int
+    size: int
+    init: str  # "he" | "zeros" | "ones"
+    fan_in: int
+
+
+@dataclass
+class ParamSet:
+    """Declares named parameters and assigns flat-vector offsets."""
+
+    entries: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+    total: int = 0
+
+    def declare(self, name: str, shape, init: str = "he", fan_in: int = 0):
+        if name in self.by_name:
+            raise ValueError(f"duplicate param {name!r}")
+        size = int(math.prod(shape))
+        e = ParamEntry(name, tuple(shape), self.total, size, init, fan_in)
+        self.entries.append(e)
+        self.by_name[name] = e
+        self.total += size
+        return name
+
+    def get(self, flat, name: str):
+        e = self.by_name[name]
+        return lax.dynamic_slice(flat, (e.offset,), (e.size,)).reshape(e.shape)
+
+    def init_flat(self, key):
+        """He-normal weights, zero biases, ones scales — as one flat vector."""
+        chunks = []
+        for e in self.entries:
+            key, sub = jax.random.split(key)
+            if e.init == "he":
+                std = math.sqrt(2.0 / max(e.fan_in, 1))
+                chunks.append(jax.random.normal(sub, (e.size,), jnp.float32) * std)
+            elif e.init == "zeros":
+                chunks.append(jnp.zeros((e.size,), jnp.float32))
+            elif e.init == "ones":
+                chunks.append(jnp.ones((e.size,), jnp.float32))
+            else:
+                raise ValueError(f"unknown init {e.init!r}")
+        return jnp.concatenate(chunks) if chunks else jnp.zeros((0,), jnp.float32)
+
+    def spec_json(self):
+        return [
+            dict(name=e.name, shape=list(e.shape), offset=e.offset, size=e.size)
+            for e in self.entries
+        ]
+
+
+def _matmul(a, b, use_pallas: bool):
+    if use_pallas:
+        return pmatmul(a, b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------- layers
+
+
+def declare_conv(p: ParamSet, name, kh, kw, cin, cout):
+    # weight layout matches conv_general_dilated_patches feature order:
+    # (cin, kh, kw) flattened on the rows, cout on the columns.
+    p.declare(f"{name}/w", (cin * kh * kw, cout), "he", fan_in=cin * kh * kw)
+    p.declare(f"{name}/b", (cout,), "zeros")
+
+
+def conv2d(p, flat, x, name, kh, kw, cin, cout, stride=1, padding="SAME",
+           use_pallas=True):
+    """conv = im2col patches x weight matrix (the Pallas hot path)."""
+    w = p.get(flat, f"{name}/w")
+    b = p.get(flat, f"{name}/b")
+    patches = lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    bsz, h, wd, feat = patches.shape
+    y = _matmul(patches.reshape(bsz * h * wd, feat), w, use_pallas)
+    return y.reshape(bsz, h, wd, cout) + b
+
+
+def declare_depthwise(p: ParamSet, name, kh, kw, ch):
+    p.declare(f"{name}/w", (kh, kw, 1, ch), "he", fan_in=kh * kw)
+    p.declare(f"{name}/b", (ch,), "zeros")
+
+
+def depthwise2d(p, flat, x, name, kh, kw, ch, stride=1, padding="SAME"):
+    """Depthwise conv. Not a matmul — stays on the jnp path (the FLOPs here
+    are negligible next to the im2col matmuls; see DESIGN.md SSPerf)."""
+    w = p.get(flat, f"{name}/w")
+    b = p.get(flat, f"{name}/b")
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=ch,
+    )
+    return y + b
+
+
+def declare_dense(p: ParamSet, name, din, dout):
+    p.declare(f"{name}/w", (din, dout), "he", fan_in=din)
+    p.declare(f"{name}/b", (dout,), "zeros")
+
+
+def dense(p, flat, x, name, din, dout, use_pallas=True):
+    w = p.get(flat, f"{name}/w")
+    b = p.get(flat, f"{name}/b")
+    return _matmul(x, w, use_pallas) + b
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def hardswish(x):
+    return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def hardsigmoid(x):
+    return jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def maxpool(x, k=2, stride=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def declare_se(p: ParamSet, name, ch, reduce=4):
+    mid = max(ch // reduce, 4)
+    declare_dense(p, f"{name}/fc1", ch, mid)
+    declare_dense(p, f"{name}/fc2", mid, ch)
+    return mid
+
+
+def se_block(p, flat, x, name, ch, reduce=4, use_pallas=True):
+    """Squeeze-and-excitation (MobileNetV3's SE module)."""
+    mid = max(ch // reduce, 4)
+    z = global_avgpool(x)
+    z = relu(dense(p, flat, z, f"{name}/fc1", ch, mid, use_pallas))
+    z = hardsigmoid(dense(p, flat, z, f"{name}/fc2", mid, ch, use_pallas))
+    return x * z[:, None, None, :]
+
+
+# ------------------------------------------------------------ objectives
+
+
+def softmax_xent(logits, labels, nclass):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=1)
+    return jnp.mean(logz - gold[:, 0])
+
+
+def accuracy_count(logits, labels):
+    """Number of correct top-1 predictions (f32 so outputs stay homogeneous)."""
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.float32))

@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/values; assert_allclose against the oracle is
+THE core correctness signal for the kernels that end up inside every AOT
+gradient artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import pallas_matmul, pmatmul
+from compile.kernels.qsgd import qsgd_dequantize, qsgd_quantize
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              jnp.float32, lo, hi)
+
+
+# ------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_small(m, k, n, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    got = pallas_matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),   # exactly one MXU tile
+        (130, 7, 128),     # M padding
+        (128, 9, 131),     # N padding
+        (257, 300, 3),     # both + tall-skinny
+        (1, 1, 1),
+        (512, 64, 256),    # multi-tile grid
+    ],
+)
+def test_matmul_matches_ref_tiles(m, k, n):
+    a = _rand(m * 7 + n, (m, k))
+    b = _rand(k * 3 + 1, (k, n))
+    np.testing.assert_allclose(
+        pallas_matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (32, 16), (128, 128)])
+def test_matmul_block_shape_invariance(bm, bn):
+    """Result must not depend on the tile decomposition."""
+    a = _rand(5, (100, 33))
+    b = _rand(6, (33, 70))
+    np.testing.assert_allclose(
+        pallas_matmul(a, b, block_m=bm, block_n=bn),
+        ref.matmul_ref(a, b),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_pmatmul_gradients_match_autodiff():
+    """custom VJP (pallas on bwd path) == jax autodiff of jnp.dot."""
+    a = _rand(1, (17, 9))
+    b = _rand(2, (9, 13))
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.sin(pmatmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.sin(a @ b))
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_zero_and_identity():
+    a = jnp.eye(16, dtype=jnp.float32)
+    b = _rand(3, (16, 16))
+    np.testing.assert_allclose(pallas_matmul(a, b), b, rtol=1e-6)
+    z = jnp.zeros((16, 16), jnp.float32)
+    np.testing.assert_allclose(pallas_matmul(z, b), z, atol=0)
+
+
+# --------------------------------------------------------------- qsgd
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 3000), s=st.sampled_from([2, 4, 16, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_qsgd_quantize_matches_ref(n, s, seed):
+    v = _rand(seed, (n,), -5.0, 5.0)
+    u = _rand(seed + 9, (n,), 0.0, 1.0)
+    q, norm = qsgd_quantize(v, u, s)
+    q_ref, norm_ref = ref.qsgd_quantize_ref(v, u, s)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(norm, norm_ref, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 3000), s=st.sampled_from([4, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_qsgd_roundtrip_bounded_error(n, s, seed):
+    """|dequant(quant(v)) - v| <= norm/s elementwise (one level step)."""
+    v = _rand(seed, (n,), -1.0, 1.0)
+    u = _rand(seed + 9, (n,), 0.0, 1.0)
+    q, norm = qsgd_quantize(v, u, s)
+    vhat = qsgd_dequantize(q, norm, s)
+    np.testing.assert_allclose(vhat, ref.qsgd_dequantize_ref(q, norm, s),
+                               rtol=1e-6, atol=1e-7)
+    assert np.max(np.abs(np.asarray(vhat - v))) <= float(norm[0]) / s + 1e-5
+
+
+def test_qsgd_unbiased():
+    """E[Q(v)] = v: average many independent quantizations."""
+    n, s, reps = 256, 4, 400
+    v = _rand(7, (n,), -1.0, 1.0)
+    key = jax.random.PRNGKey(123)
+    acc = jnp.zeros_like(v)
+    for i in range(reps):
+        key, sub = jax.random.split(key)
+        u = jax.random.uniform(sub, (n,), jnp.float32)
+        q, norm = qsgd_quantize(v, u, s)
+        acc = acc + qsgd_dequantize(q, norm, s)
+    mean = acc / reps
+    # std of the estimator is O(norm/s/sqrt(reps)); allow 5 sigma
+    norm = float(jnp.linalg.norm(v))
+    tol = 5 * norm / s / np.sqrt(reps)
+    assert float(jnp.max(jnp.abs(mean - v))) < tol
+
+
+def test_qsgd_zero_vector():
+    v = jnp.zeros((64,), jnp.float32)
+    u = jnp.full((64,), 0.5, jnp.float32)
+    q, norm = qsgd_quantize(v, u, 16)
+    assert float(norm[0]) == 0.0
+    np.testing.assert_array_equal(np.asarray(q), np.zeros(64, np.int32))
+    np.testing.assert_array_equal(np.asarray(qsgd_dequantize(q, norm, 16)),
+                                  np.zeros(64, np.float32))
+
+
+def test_qsgd_levels_in_range():
+    v = _rand(11, (1000,), -3.0, 3.0)
+    u = _rand(12, (1000,), 0.0, 1.0)
+    s = 8
+    q, _ = qsgd_quantize(v, u, s)
+    assert int(jnp.max(jnp.abs(q))) <= s + 1  # |v_i|<=norm => level <= s (+u<1)

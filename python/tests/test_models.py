@@ -1,0 +1,118 @@
+"""L2 correctness: model shapes, gradient sanity, pallas/jnp agreement,
+and that a few SGD steps reduce loss (trainability)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import DATASETS, MODELS, Model
+
+BATCH = 8
+
+
+def _batch(m: Model, seed=0):
+    h, w, c = m.input_shape
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (BATCH, h, w, c), jnp.float32)
+    y = jax.random.randint(ky, (BATCH,), 0, m.nclass, jnp.int32)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for name in MODELS:
+        for ds in DATASETS:
+            out[(name, ds)] = Model(name, ds)
+    return out
+
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("ds", list(DATASETS))
+def test_forward_shape(models, name, ds):
+    m = models[(name, ds)]
+    flat = m.init_flat(0)
+    assert flat.shape == (m.param_count,)
+    x, _ = _batch(m)
+    (logits,) = m.forward(flat, x)
+    assert logits.shape == (BATCH, m.nclass)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_grad_step_finite_and_nonzero(models, name):
+    m = models[(name, "mnist")]
+    flat = m.init_flat(1)
+    x, y = _batch(m, 1)
+    loss, g = jax.jit(m.grad_step)(flat, x, y)
+    assert g.shape == flat.shape
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.linalg.norm(g)) > 1e-6
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_pallas_and_jnp_paths_agree(models, name):
+    """The L1 kernel inside the model must not change the math."""
+    m = models[(name, "mnist")]
+    flat = m.init_flat(2)
+    x, y = _batch(m, 2)
+    l1, g1 = jax.jit(m.grad_step)(flat, x, y)
+    l2, g2 = jax.jit(lambda p, x, y: m.grad_step(p, x, y, use_pallas=False))(
+        flat, x, y)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-6)
+
+
+def test_apply_update_is_sgd(models):
+    m = models[("mini_squeezenet", "mnist")]
+    flat = m.init_flat(3)
+    g = jnp.ones_like(flat)
+    lr = jnp.array([0.1], jnp.float32)
+    (new,) = m.apply_update(flat, g, lr)
+    np.testing.assert_allclose(new, flat - 0.1, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_few_sgd_steps_reduce_loss(models, name):
+    m = models[(name, "mnist")]
+    flat = m.init_flat(4)
+    x, y = _batch(m, 4)
+    step = jax.jit(m.grad_step)
+    lr = jnp.array([0.05], jnp.float32)
+    loss0, _ = step(flat, x, y)
+    for _ in range(10):
+        _, g = step(flat, x, y)
+        (flat,) = m.apply_update(flat, g, lr)
+    loss1, _ = step(flat, x, y)
+    assert float(loss1) < float(loss0), (float(loss0), float(loss1))
+
+
+def test_evaluate_counts(models):
+    m = models[("mini_vgg", "cifar")]
+    flat = m.init_flat(5)
+    x, y = _batch(m, 5)
+    loss, correct = m.evaluate(flat, x, y)
+    assert bool(jnp.isfinite(loss))
+    assert 0.0 <= float(correct) <= BATCH
+
+
+def test_param_counts_ordering():
+    """VGG mini must dominate (mirrors the paper's 132.9M vs 1.2/2.5M)."""
+    sq = Model("mini_squeezenet", "mnist").param_count
+    mb = Model("mini_mobilenet", "mnist").param_count
+    vg = Model("mini_vgg", "mnist").param_count
+    assert vg > 5 * max(sq, mb)
+
+
+def test_param_spec_covers_flat_vector():
+    m = Model("mini_mobilenet", "cifar")
+    spec = m.params.spec_json()
+    total = sum(e["size"] for e in spec)
+    assert total == m.param_count
+    # offsets are contiguous and non-overlapping
+    off = 0
+    for e in spec:
+        assert e["offset"] == off
+        off += e["size"]

@@ -1,0 +1,110 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. L1 kernel ablation: grad artifact with the Pallas tiled matmul
+//!    vs the pure-jnp (`_nopallas`) lowering — same math, different
+//!    kernel structure.
+//! 2. Barrier ablation: sync vs async epoch wall on a real cluster.
+//! 3. Wire ablation: gradient publish with raw vs QSGD vs top-k codecs.
+//!
+//! Needs `make artifacts`.
+
+use std::sync::Arc;
+
+use p2pless::broker::{Broker, QueueMode};
+use p2pless::compress::{codec_for, Codec};
+use p2pless::config::{Compression, SyncMode, TrainConfig};
+use p2pless::coordinator::{Cluster, GradientWire};
+use p2pless::data::{DatasetKind, SyntheticDataset};
+use p2pless::harness::bench::{header, Bench};
+use p2pless::runtime::{Engine, ModelRuntime};
+use p2pless::store::ObjectStore;
+use p2pless::util::Rng;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else if std::path::Path::new("../artifacts/manifest.json").exists() {
+        Some("../artifacts")
+    } else {
+        None
+    }
+}
+
+fn main() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP ablations: run `make artifacts` first");
+        return;
+    };
+    let engine = Arc::new(Engine::new().unwrap());
+
+    // ---- 1. pallas vs nopallas grad artifact -------------------------
+    header("ablation_pallas", "L1 tiled-matmul kernel vs pure-jnp lowering (same math)");
+    let data = SyntheticDataset::new(DatasetKind::Mnist, 1).generate(64);
+    for key in ["mini_squeezenet_mnist", "mini_vgg_mnist"] {
+        let rt = ModelRuntime::load(engine.clone(), dir, key).unwrap();
+        let params = rt.init_params().unwrap();
+        let mut b = Bench::new(key).with_samples(1, 2);
+        b.bench("grad_b64_pallas", || {
+            rt.grad(64, &params, &data.x, &data.y, true).unwrap()
+        });
+        b.bench("grad_b64_nopallas", || {
+            rt.grad(64, &params, &data.x, &data.y, false).unwrap()
+        });
+    }
+
+    // ---- 2. sync vs async epoch wall ---------------------------------
+    header("ablation_barrier", "sync barrier vs async exchange, 2 peers x 1 epoch");
+    let base = TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 1,
+        train_samples: 2 * 16 * 2,
+        val_samples: 64,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    };
+    let mut b = Bench::new("cluster").with_samples(1, 2);
+    for (name, sync) in [
+        ("sync_epoch", SyncMode::Synchronous),
+        ("async_epoch", SyncMode::Asynchronous),
+    ] {
+        let cfg = TrainConfig { sync, ..base.clone() };
+        let engine = engine.clone();
+        b.bench(name, move || {
+            Cluster::with_engine(cfg.clone(), engine.clone())
+                .unwrap()
+                .run()
+                .unwrap()
+        });
+    }
+
+    // ---- 3. wire codecs on the publish path ---------------------------
+    header(
+        "ablation_wire",
+        "gradient publish+decode via GradientWire per codec (2.5M params)",
+    );
+    let mut rng = Rng::seed_from_u64(5);
+    let grad: Vec<f32> = (0..2_500_000).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+    let mut b = Bench::new("wire").with_samples(1, 2);
+    for spec in ["none", "qsgd:16", "topk:0.01"] {
+        let compression = Compression::parse(spec).unwrap();
+        let store = Arc::new(ObjectStore::new());
+        let codec: Arc<dyn Codec> = Arc::from(codec_for(compression, 1));
+        let wire = GradientWire::new(codec, store, usize::MAX);
+        let broker = Broker::default();
+        broker
+            .declare("peer.0.gradients", QueueMode::LatestOnly)
+            .unwrap();
+        b.bench(&format!("publish_decode_{spec}"), || {
+            wire.publish(&broker, 0, 1, &grad).unwrap();
+            let m = broker
+                .get("peer.0.gradients")
+                .unwrap()
+                .peek_latest()
+                .unwrap();
+            std::hint::black_box(wire.decode(&m.payload).unwrap());
+        });
+    }
+}

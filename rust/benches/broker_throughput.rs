@@ -1,0 +1,51 @@
+//! L3 hot-path bench: broker publish/consume throughput at gradient
+//! payload sizes (perf target: >=10k msg/s — see DESIGN.md §Perf).
+
+use p2pless::broker::{Broker, Message, QueueMode};
+use p2pless::harness::bench::{header, Bench};
+use p2pless::util::Bytes;
+
+fn main() {
+    header(
+        "broker_throughput",
+        "publish + peek on LatestOnly queues (the gradient exchange hot path)",
+    );
+    let mut b = Bench::new("broker").with_samples(5, 30);
+    for &size in &[64usize, 4 * 1024, 256 * 1024, 4 * 1024 * 1024] {
+        let broker = Broker::default();
+        let q = broker.declare("g", QueueMode::LatestOnly).unwrap();
+        let payload = Bytes::from(vec![0u8; size]);
+        let iters = 1000;
+        b.bench_throughput(
+            &format!("publish_peek_{}B", size),
+            iters as f64,
+            "msg",
+            || {
+                for i in 0..iters {
+                    q.publish(Message::new(0, i, payload.clone())).unwrap();
+                    std::hint::black_box(q.peek_latest());
+                }
+            },
+        );
+    }
+
+    // barrier round: P publishes + P waits
+    let mut b = Bench::new("barrier").with_samples(5, 20);
+    for &peers in &[2usize, 4, 8, 16] {
+        b.bench(&format!("barrier_{peers}_peers"), || {
+            let broker = std::sync::Arc::new(Broker::default());
+            let bar = std::sync::Arc::new(
+                p2pless::coordinator::EpochBarrier::new(&broker, peers).unwrap(),
+            );
+            let handles: Vec<_> = (0..peers)
+                .map(|r| {
+                    let bar = bar.clone();
+                    std::thread::spawn(move || bar.arrive_and_wait(r, 1).unwrap())
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+}

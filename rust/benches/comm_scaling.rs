@@ -1,0 +1,75 @@
+//! Fig-4 bench: communication cost as the peer count grows — real
+//! broker exchange of MobileNet-sized gradients between P threads, plus
+//! the modeled full-scale times.
+
+use std::sync::Arc;
+
+use p2pless::broker::{Broker, QueueMode};
+use p2pless::compress::RawCodec;
+use p2pless::coordinator::GradientWire;
+use p2pless::harness::bench::{header, Bench};
+use p2pless::perfmodel::{self, paper_model, PaperModel};
+use p2pless::store::ObjectStore;
+use p2pless::util::Rng;
+
+fn main() {
+    header(
+        "comm_scaling",
+        "one full gradient exchange round (publish + consume P-1 queues) over peer count",
+    );
+    let n = 250_000; // 1 MB gradients: in-process stand-in for the 10 MB MobileNet wire
+    let mut rng = Rng::seed_from_u64(9);
+    let grad: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+
+    let mut b = Bench::new("exchange").with_samples(1, 5);
+    for &peers in &[2usize, 4, 8, 12] {
+        let grad = grad.clone();
+        b.bench(&format!("round_{peers}_peers"), move || {
+            let broker = Arc::new(Broker::default());
+            let store = Arc::new(ObjectStore::new());
+            for r in 0..peers {
+                broker
+                    .declare(&Broker::gradient_queue(r), QueueMode::LatestOnly)
+                    .unwrap();
+            }
+            let handles: Vec<_> = (0..peers)
+                .map(|r| {
+                    let broker = broker.clone();
+                    let store = store.clone();
+                    let grad = grad.clone();
+                    std::thread::spawn(move || {
+                        let wire =
+                            GradientWire::new(Arc::new(RawCodec), store, usize::MAX);
+                        wire.publish(&broker, r, 1, &grad).unwrap();
+                        let mut total = 0usize;
+                        for p in 0..peers {
+                            if p == r {
+                                continue;
+                            }
+                            let q = broker.get(&Broker::gradient_queue(p)).unwrap();
+                            let m = q.await_epoch(1);
+                            total += wire.decode(&m.payload).unwrap().len();
+                        }
+                        total
+                    })
+                })
+                .collect();
+            for h in handles {
+                std::hint::black_box(h.join().unwrap());
+            }
+        });
+    }
+
+    println!("\nmodeled full-scale comm (fig 4 series):");
+    for model in [PaperModel::Vgg11, PaperModel::MobilenetV3Small] {
+        let spec = paper_model(model);
+        for &peers in &[4usize, 8, 12] {
+            let send = perfmodel::send_time(spec.gradient_bytes(), 1.0);
+            let recv = perfmodel::recv_time(spec.gradient_bytes(), peers - 1, 1.0);
+            println!(
+                "  {:<20} peers={peers:<3} send {:>8.2?}  recv {:>8.2?}",
+                spec.name, send, recv
+            );
+        }
+    }
+}

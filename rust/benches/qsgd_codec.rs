@@ -1,0 +1,43 @@
+//! Compression codec bench (fig 5's cost side): QSGD encode/decode
+//! throughput at the paper's gradient sizes — SqueezeNet (1.2M),
+//! MobileNet (2.5M) — plus raw and top-k baselines.
+
+use p2pless::compress::{Codec, QsgdCodec, RawCodec, TopkCodec};
+use p2pless::harness::bench::{header, Bench};
+use p2pless::util::Rng;
+
+fn grad(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect()
+}
+
+fn main() {
+    header(
+        "qsgd_codec",
+        "gradient codecs at paper model sizes (elements/s; raw = memcpy floor)",
+    );
+    for &(name, n) in &[("squeezenet_1.2M", 1_200_000usize), ("mobilenet_2.5M", 2_500_000)] {
+        let v = grad(n, 1);
+        let mut b = Bench::new(name).with_samples(2, 8);
+
+        let raw = RawCodec;
+        let wire = raw.encode(&v).unwrap();
+        b.bench_throughput("raw_encode", n as f64, "elem", || raw.encode(&v).unwrap());
+        b.bench_throughput("raw_decode", n as f64, "elem", || raw.decode(&wire).unwrap());
+
+        let q = QsgdCodec::new(16, 7);
+        let wire = q.encode(&v).unwrap();
+        println!(
+            "  qsgd wire: {} bytes ({:.2}x smaller)",
+            wire.len(),
+            (n * 4) as f64 / wire.len() as f64
+        );
+        b.bench_throughput("qsgd16_encode", n as f64, "elem", || q.encode(&v).unwrap());
+        b.bench_throughput("qsgd16_decode", n as f64, "elem", || q.decode(&wire).unwrap());
+
+        let t = TopkCodec::new(0.01);
+        let wire = t.encode(&v).unwrap();
+        b.bench_throughput("topk1%_encode", n as f64, "elem", || t.encode(&v).unwrap());
+        b.bench_throughput("topk1%_decode", n as f64, "elem", || t.decode(&wire).unwrap());
+    }
+}

@@ -1,0 +1,51 @@
+//! Runtime bench: real PJRT gradient steps per model — the per-batch
+//! hot spot everything else orbits (Table I compute stage).
+//!
+//! Needs `make artifacts`.
+
+use std::sync::Arc;
+
+use p2pless::data::{DatasetKind, SyntheticDataset};
+use p2pless::harness::bench::{header, Bench};
+use p2pless::runtime::{Engine, ModelRuntime};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else if std::path::Path::new("../artifacts/manifest.json").exists() {
+        Some("../artifacts")
+    } else {
+        None
+    }
+}
+
+fn main() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP runtime_gradstep: run `make artifacts` first");
+        return;
+    };
+    header(
+        "runtime_gradstep",
+        "PJRT grad/update/eval wall times (mini models, interpret-mode pallas inside)",
+    );
+    let engine = Arc::new(Engine::new().unwrap());
+    let data16 = SyntheticDataset::new(DatasetKind::Mnist, 1).generate(16);
+    let data64 = SyntheticDataset::new(DatasetKind::Mnist, 2).generate(64);
+
+    for key in ["mini_squeezenet_mnist", "mini_mobilenet_mnist", "mini_vgg_mnist"] {
+        let rt = ModelRuntime::load(engine.clone(), dir, key).unwrap();
+        let params = rt.init_params().unwrap();
+        let mut b = Bench::new(key).with_samples(1, 3);
+        b.bench_throughput("grad_b16", 16.0, "sample", || {
+            rt.grad(16, &params, &data16.x, &data16.y, true).unwrap()
+        });
+        b.bench_throughput("grad_b64", 64.0, "sample", || {
+            rt.grad(64, &params, &data64.x, &data64.y, true).unwrap()
+        });
+        let g = vec![0.01f32; params.len()];
+        b.bench("sgd_update", || rt.update(&params, &g, 0.05).unwrap());
+        b.bench("eval_b64", || {
+            rt.eval(64, &params, &data64.x, &data64.y).unwrap()
+        });
+    }
+}

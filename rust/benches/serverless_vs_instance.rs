@@ -1,0 +1,62 @@
+//! Fig-3 bench: the serverless-vs-instance comparison at both scales —
+//! modeled cloud cells (state-machine execution cost) and a real
+//! two-peer PJRT run per backend.
+
+use p2pless::config::{Backend, TrainConfig};
+use p2pless::coordinator::Cluster;
+use p2pless::harness::bench::{header, Bench};
+use p2pless::harness::cloud_exps::fig3_cell;
+use p2pless::perfmodel::PaperModel;
+use p2pless::runtime::Engine;
+use std::sync::Arc;
+
+fn main() {
+    header(
+        "serverless_vs_instance",
+        "modeled fig-3 cell computation + real two-peer runs per backend",
+    );
+
+    // cost of evaluating a modeled cell (orchestration overhead itself)
+    let mut b = Bench::new("modeled").with_samples(3, 10);
+    for &(peers, batch) in &[(4usize, 64usize), (12, 1024)] {
+        b.bench(&format!("fig3_cell_p{peers}_b{batch}"), || {
+            fig3_cell(PaperModel::Vgg11, peers, batch).unwrap()
+        });
+    }
+
+    // real execution (needs artifacts)
+    let dir = if std::path::Path::new("artifacts/manifest.json").exists() {
+        "artifacts"
+    } else if std::path::Path::new("../artifacts/manifest.json").exists() {
+        "../artifacts"
+    } else {
+        eprintln!("SKIP real backend bench: run `make artifacts`");
+        return;
+    };
+    let engine = Arc::new(Engine::new().unwrap());
+    let base = TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 1,
+        train_samples: 2 * 16 * 2,
+        val_samples: 64,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    };
+    let mut b = Bench::new("real").with_samples(1, 2);
+    for (name, backend) in [
+        ("instance_epoch", Backend::Instance),
+        ("serverless_epoch", Backend::Serverless),
+    ] {
+        let cfg = TrainConfig { backend, ..base.clone() };
+        let engine = engine.clone();
+        b.bench(name, move || {
+            Cluster::with_engine(cfg.clone(), engine.clone())
+                .unwrap()
+                .run()
+                .unwrap()
+        });
+    }
+}

@@ -1,0 +1,65 @@
+//! Table-I bench: a real 4-peer epoch with per-stage timing printed —
+//! the benchmark form of `p2pless exp table1`.
+//!
+//! Needs `make artifacts`.
+
+use std::sync::Arc;
+
+use p2pless::config::TrainConfig;
+use p2pless::coordinator::Cluster;
+use p2pless::harness::bench::{header, Bench};
+use p2pless::runtime::Engine;
+
+fn main() {
+    let dir = if std::path::Path::new("artifacts/manifest.json").exists() {
+        "artifacts"
+    } else if std::path::Path::new("../artifacts/manifest.json").exists() {
+        "../artifacts"
+    } else {
+        eprintln!("SKIP stage_breakdown: run `make artifacts`");
+        return;
+    };
+    header(
+        "stage_breakdown",
+        "full 4-peer epoch per model (Table I shape: compute dominates)",
+    );
+    let engine = Arc::new(Engine::new().unwrap());
+    let mut b = Bench::new("epoch").with_samples(1, 2);
+    for model in ["mini_squeezenet", "mini_mobilenet", "mini_vgg"] {
+        let cfg = TrainConfig {
+            model: model.into(),
+            dataset: "mnist".into(),
+            peers: 4,
+            batch_size: 16,
+            epochs: 1,
+            train_samples: 4 * 16 * 2,
+            val_samples: 64,
+            artifacts_dir: dir.into(),
+            ..Default::default()
+        };
+        let engine2 = engine.clone();
+        let engine = engine.clone();
+        let cfg2 = cfg.clone();
+        b.bench(&format!("{model}_4peers"), move || {
+            Cluster::with_engine(cfg2.clone(), engine.clone())
+                .unwrap()
+                .run()
+                .unwrap()
+        });
+        // one verbose run for the stage table
+        let rep = Cluster::with_engine(cfg, engine2.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        for (stage, s) in &rep.stages {
+            if s.count > 0 {
+                println!(
+                    "    {:<24} total {:>10.3?} mean {:>10.3?}",
+                    stage.to_string(),
+                    s.total_wall,
+                    s.mean_wall()
+                );
+            }
+        }
+    }
+}

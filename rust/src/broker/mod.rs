@@ -1,0 +1,182 @@
+//! RabbitMQ-like in-process message broker (the paper's Amazon MQ
+//! substrate, §III-A / §III-B.3).
+//!
+//! Semantics reproduced from the paper:
+//! - **dedicated per-peer gradient queues** holding a single *persistent*
+//!   message: a new gradient *replaces* the previous one
+//!   ([`QueueMode::LatestOnly`]);
+//! - **consume-without-delete**: peers read every other peer's queue
+//!   without removing the message;
+//! - **100 MB message cap** (Amazon MQ limit) — larger payloads must go
+//!   through the object store and be referenced by UUID;
+//! - **synchronization queue**: an append-only queue whose length acts
+//!   as the epoch barrier ([`QueueMode::Fifo`]).
+//!
+//! Fault injection (drop probability, delivery delay) exercises the
+//! paper's "temporary disruptions" claim in the integration tests.
+
+mod queue;
+
+pub use queue::{Message, Queue, QueueMode, QueueStats};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// Amazon MQ's per-message size cap the paper works around via S3+UUID.
+pub const DEFAULT_MESSAGE_CAP: usize = 100 * 1024 * 1024;
+
+/// Broker-wide fault injection knobs (deterministic; see [`Queue`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Drop every Nth publish (0 = never drop).
+    pub drop_every: u64,
+    /// Artificial delivery delay applied by consumers, in microseconds.
+    pub delay_us: u64,
+}
+
+/// The broker: a registry of named queues.
+pub struct Broker {
+    queues: Mutex<HashMap<String, Arc<Queue>>>,
+    cap_bytes: usize,
+    faults: FaultPlan,
+    published: AtomicU64,
+    published_bytes: AtomicU64,
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Self::new(DEFAULT_MESSAGE_CAP, FaultPlan::default())
+    }
+}
+
+impl Broker {
+    pub fn new(cap_bytes: usize, faults: FaultPlan) -> Self {
+        Self {
+            queues: Mutex::new(HashMap::new()),
+            cap_bytes,
+            faults,
+            published: AtomicU64::new(0),
+            published_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Declare (or fetch) a queue. Mode must match an existing queue.
+    pub fn declare(&self, name: &str, mode: QueueMode) -> Result<Arc<Queue>> {
+        let mut map = self.queues.lock().unwrap();
+        if let Some(q) = map.get(name) {
+            if q.mode() != mode {
+                return Err(Error::Broker(format!(
+                    "queue {name:?} already declared with mode {:?}",
+                    q.mode()
+                )));
+            }
+            return Ok(q.clone());
+        }
+        let q = Arc::new(Queue::new(name, mode, self.cap_bytes, self.faults));
+        map.insert(name.to_string(), q.clone());
+        Ok(q)
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<Queue>> {
+        self.queues
+            .lock().unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Broker(format!("unknown queue {name:?}")))
+    }
+
+    /// Publish `payload` to `name` (queue must exist).
+    pub fn publish(&self, name: &str, msg: Message) -> Result<()> {
+        let q = self.get(name)?;
+        let bytes = msg.payload.len() as u64;
+        q.publish(msg)?;
+        self.published.fetch_add(1, Ordering::Relaxed);
+        self.published_bytes.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn queue_names(&self) -> Vec<String> {
+        let mut names: Vec<_> = self.queues.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// (messages, bytes) accepted by the broker so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.published.load(Ordering::Relaxed),
+            self.published_bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Conventional queue name for peer `r`'s gradient queue.
+    pub fn gradient_queue(r: usize) -> String {
+        format!("peer.{r}.gradients")
+    }
+
+    /// Conventional name of the epoch-barrier queue.
+    pub fn sync_queue() -> String {
+        "sync.barrier".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Bytes;
+
+    fn msg(payload: &'static [u8]) -> Message {
+        Message::new(0, 0, Bytes::from_static(payload))
+    }
+
+    #[test]
+    fn declare_idempotent_same_mode() {
+        let b = Broker::default();
+        let q1 = b.declare("a", QueueMode::LatestOnly).unwrap();
+        let q2 = b.declare("a", QueueMode::LatestOnly).unwrap();
+        assert!(Arc::ptr_eq(&q1, &q2));
+    }
+
+    #[test]
+    fn declare_conflicting_mode_fails() {
+        let b = Broker::default();
+        b.declare("a", QueueMode::LatestOnly).unwrap();
+        assert!(b.declare("a", QueueMode::Fifo).is_err());
+    }
+
+    #[test]
+    fn publish_to_unknown_queue_fails() {
+        let b = Broker::default();
+        assert!(b.publish("nope", msg(b"x")).is_err());
+    }
+
+    #[test]
+    fn stats_count_publishes() {
+        let b = Broker::default();
+        b.declare("a", QueueMode::LatestOnly).unwrap();
+        b.publish("a", msg(b"xyz")).unwrap();
+        b.publish("a", msg(b"ab")).unwrap();
+        let (n, bytes) = b.stats();
+        assert_eq!(n, 2);
+        assert_eq!(bytes, 5);
+    }
+
+    #[test]
+    fn message_cap_enforced() {
+        let b = Broker::new(4, FaultPlan::default());
+        b.declare("a", QueueMode::LatestOnly).unwrap();
+        assert!(b.publish("a", msg(b"12345")).is_err());
+        assert!(b.publish("a", msg(b"1234")).is_ok());
+    }
+
+    #[test]
+    fn queue_name_conventions() {
+        assert_eq!(Broker::gradient_queue(3), "peer.3.gradients");
+        assert_eq!(Broker::sync_queue(), "sync.barrier");
+    }
+}

@@ -1,0 +1,328 @@
+//! A single broker queue: latest-gradient (replace) or FIFO (barrier).
+//!
+//! Blocking semantics (peers are OS threads): consumers park on a
+//! condvar and are woken by publishes — no busy polling on the exchange
+//! path.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::broker::FaultPlan;
+use crate::error::{Error, Result};
+use crate::util::Bytes;
+
+/// Queue behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueMode {
+    /// Holds one persistent message; publishing replaces it (the paper's
+    /// dedicated gradient queue).
+    LatestOnly,
+    /// Append-only; length is observable (the paper's sync barrier).
+    Fifo,
+}
+
+/// A broker message. `epoch` carries Algorithm 1's epoch counter so
+/// synchronous consumers can wait for the *right* gradient, and
+/// asynchronous consumers can detect staleness.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub sender: usize,
+    pub epoch: u64,
+    pub payload: Bytes,
+}
+
+impl Message {
+    pub fn new(sender: usize, epoch: u64, payload: Bytes) -> Self {
+        Self { sender, epoch, payload }
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct QueueStats {
+    pub publishes: u64,
+    pub drops: u64,
+    pub consumes: u64,
+}
+
+struct Inner {
+    latest: Option<Message>,
+    fifo: VecDeque<Message>,
+    /// Accepted-publish counter (monotone).
+    version: u64,
+}
+
+/// See [`QueueMode`]. All consumption is non-destructive (`peek`-style),
+/// matching the paper's "access and consume gradient messages from all
+/// other queues without deleting them".
+pub struct Queue {
+    name: String,
+    mode: QueueMode,
+    cap: usize,
+    faults: FaultPlan,
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    stats_publishes: AtomicU64,
+    stats_drops: AtomicU64,
+    stats_consumes: AtomicU64,
+}
+
+impl Queue {
+    pub(crate) fn new(name: &str, mode: QueueMode, cap: usize, faults: FaultPlan) -> Self {
+        Self {
+            name: name.to_string(),
+            mode,
+            cap,
+            faults,
+            inner: Mutex::new(Inner { latest: None, fifo: VecDeque::new(), version: 0 }),
+            cond: Condvar::new(),
+            stats_publishes: AtomicU64::new(0),
+            stats_drops: AtomicU64::new(0),
+            stats_consumes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn mode(&self) -> QueueMode {
+        self.mode
+    }
+
+    /// Accepted-publish counter. For FIFO queues this equals the queue
+    /// length (nothing dequeues), which is exactly the barrier predicate.
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            publishes: self.stats_publishes.load(Ordering::Relaxed),
+            drops: self.stats_drops.load(Ordering::Relaxed),
+            consumes: self.stats_consumes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Publish; replaces in LatestOnly mode, appends in Fifo mode.
+    pub fn publish(&self, msg: Message) -> Result<()> {
+        if msg.payload.len() > self.cap {
+            return Err(Error::MessageTooLarge { size: msg.payload.len(), cap: self.cap });
+        }
+        let n = self.stats_publishes.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.faults.drop_every > 0 && n % self.faults.drop_every == 0 {
+            // injected loss: accepted but never delivered
+            self.stats_drops.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            match self.mode {
+                QueueMode::LatestOnly => inner.latest = Some(msg),
+                QueueMode::Fifo => inner.fifo.push_back(msg),
+            }
+            inner.version += 1;
+        }
+        self.cond.notify_all();
+        Ok(())
+    }
+
+    /// Non-destructive read of the current persistent message.
+    pub fn peek_latest(&self) -> Option<Message> {
+        self.stats_consumes.fetch_add(1, Ordering::Relaxed);
+        let inner = self.inner.lock().unwrap();
+        match self.mode {
+            QueueMode::LatestOnly => inner.latest.clone(),
+            QueueMode::Fifo => inner.fifo.back().cloned(),
+        }
+    }
+
+    /// FIFO length (LatestOnly: 0 or 1).
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        match self.mode {
+            QueueMode::LatestOnly => usize::from(inner.latest.is_some()),
+            QueueMode::Fifo => inner.fifo.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all entries (barrier bookkeeping / tests).
+    pub fn snapshot(&self) -> Vec<Message> {
+        let inner = self.inner.lock().unwrap();
+        match self.mode {
+            QueueMode::LatestOnly => inner.latest.iter().cloned().collect(),
+            QueueMode::Fifo => inner.fifo.iter().cloned().collect(),
+        }
+    }
+
+    /// Remove everything (the paper drains the sync queue between epochs).
+    pub fn purge(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.latest = None;
+        inner.fifo.clear();
+    }
+
+    /// Block until a message with `epoch >= min_epoch` is available
+    /// (sync-mode consumer: "WaitUntilReceptionDone"). Applies the
+    /// injected delivery delay.
+    pub fn await_epoch(&self, min_epoch: u64) -> Message {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let hit = match self.mode {
+                QueueMode::LatestOnly => inner.latest.as_ref(),
+                QueueMode::Fifo => inner.fifo.back(),
+            }
+            .filter(|m| m.epoch >= min_epoch)
+            .cloned();
+            if let Some(m) = hit {
+                self.stats_consumes.fetch_add(1, Ordering::Relaxed);
+                drop(inner);
+                self.delay();
+                return m;
+            }
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+
+    /// Block until the accepted-publish counter reaches `count`
+    /// (barrier predicate).
+    pub fn await_version(&self, count: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.version < count {
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+
+    /// `await_version` with a timeout; returns false on timeout.
+    pub fn await_version_timeout(&self, count: u64, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        while inner.version < count {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) = self.cond.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.version < count {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn delay(&self) {
+        if self.faults.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.faults.delay_us));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn q(mode: QueueMode) -> Queue {
+        Queue::new("t", mode, 1024, FaultPlan::default())
+    }
+
+    fn msg(sender: usize, epoch: u64, data: &'static [u8]) -> Message {
+        Message::new(sender, epoch, Bytes::from_static(data))
+    }
+
+    #[test]
+    fn latest_only_replaces() {
+        let q = q(QueueMode::LatestOnly);
+        q.publish(msg(0, 0, b"old")).unwrap();
+        q.publish(msg(0, 1, b"new")).unwrap();
+        assert_eq!(q.len(), 1);
+        assert_eq!(&q.peek_latest().unwrap().payload[..], b"new");
+    }
+
+    #[test]
+    fn fifo_appends_and_counts() {
+        let q = q(QueueMode::Fifo);
+        for e in 0..5 {
+            q.publish(msg(e, e as u64, b"x")).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.version(), 5);
+        assert_eq!(q.snapshot().len(), 5);
+    }
+
+    #[test]
+    fn peek_is_nondestructive() {
+        let q = q(QueueMode::LatestOnly);
+        q.publish(msg(1, 3, b"grad")).unwrap();
+        for _ in 0..3 {
+            assert!(q.peek_latest().is_some());
+        }
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn purge_empties() {
+        let q = q(QueueMode::Fifo);
+        q.publish(msg(0, 0, b"x")).unwrap();
+        q.purge();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fault_drop_every() {
+        let q = Queue::new("t", QueueMode::Fifo, 1024, FaultPlan { drop_every: 2, delay_us: 0 });
+        for e in 0..6 {
+            q.publish(msg(0, e, b"x")).unwrap();
+        }
+        // publishes 2, 4, 6 dropped
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.stats().drops, 3);
+    }
+
+    #[test]
+    fn await_epoch_wakes_on_publish() {
+        let q = Arc::new(q(QueueMode::LatestOnly));
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.await_epoch(2));
+        q.publish(msg(0, 1, b"stale")).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        q.publish(msg(0, 2, b"fresh")).unwrap();
+        let m = waiter.join().unwrap();
+        assert_eq!(m.epoch, 2);
+        assert_eq!(&m.payload[..], b"fresh");
+    }
+
+    #[test]
+    fn await_version_is_barrier() {
+        let q = Arc::new(q(QueueMode::Fifo));
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.await_version(3));
+        for e in 0..3 {
+            q.publish(msg(e, 0, b"done")).unwrap();
+        }
+        waiter.join().unwrap();
+        assert_eq!(q.version(), 3);
+    }
+
+    #[test]
+    fn await_version_timeout_expires() {
+        let q = q(QueueMode::Fifo);
+        assert!(!q.await_version_timeout(1, Duration::from_millis(20)));
+        q.publish(msg(0, 0, b"x")).unwrap();
+        assert!(q.await_version_timeout(1, Duration::from_millis(20)));
+    }
+
+    #[test]
+    fn dropped_publish_does_not_bump_version() {
+        let q = Queue::new("t", QueueMode::Fifo, 1024, FaultPlan { drop_every: 1, delay_us: 0 });
+        q.publish(msg(0, 0, b"x")).unwrap();
+        assert_eq!(q.version(), 0);
+        assert!(!q.await_version_timeout(1, Duration::from_millis(10)));
+    }
+}

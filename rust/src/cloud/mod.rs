@@ -1,0 +1,101 @@
+//! EC2 instance catalog (the paper's peer substrate).
+//!
+//! Real AWS us-east-1 on-demand specs/prices for the t2 family — the
+//! paper's §IV-C picks t2.medium for SqueezeNet/MobileNet peers and
+//! t2.large for VGG-11, and its cost tables use exactly these per-second
+//! prices (t2.small $0.00000639/s, t2.large $0.00002578/s).
+
+use crate::error::{Error, Result};
+
+/// One EC2 instance type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub memory_gb: f64,
+    /// On-demand USD per hour.
+    pub price_per_hour: f64,
+}
+
+impl InstanceType {
+    pub fn price_per_second(&self) -> f64 {
+        self.price_per_hour / 3600.0
+    }
+
+    /// Relative CPU throughput vs t2.large (2 vCPU), the perfmodel's
+    /// calibration reference.
+    pub fn cpu_factor(&self) -> f64 {
+        self.vcpus as f64 / 2.0
+    }
+}
+
+/// The t2 family (AWS us-east-1 on-demand, as used by the paper).
+pub const CATALOG: &[InstanceType] = &[
+    InstanceType { name: "t2.nano", vcpus: 1, memory_gb: 0.5, price_per_hour: 0.0058 },
+    InstanceType { name: "t2.micro", vcpus: 1, memory_gb: 1.0, price_per_hour: 0.0116 },
+    InstanceType { name: "t2.small", vcpus: 1, memory_gb: 2.0, price_per_hour: 0.023 },
+    InstanceType { name: "t2.medium", vcpus: 2, memory_gb: 4.0, price_per_hour: 0.0464 },
+    InstanceType { name: "t2.large", vcpus: 2, memory_gb: 8.0, price_per_hour: 0.0928 },
+    InstanceType { name: "t2.xlarge", vcpus: 4, memory_gb: 16.0, price_per_hour: 0.1856 },
+    InstanceType { name: "t2.2xlarge", vcpus: 8, memory_gb: 32.0, price_per_hour: 0.3712 },
+];
+
+/// Look an instance type up by name.
+pub fn instance(name: &str) -> Result<&'static InstanceType> {
+    CATALOG
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| Error::Config(format!("unknown instance type {name:?}")))
+}
+
+/// The paper's §IV-C instance-selection procedure: walk the catalog from
+/// the smallest type upward until one satisfies the model's memory need
+/// (the paper discovered t2.medium / t2.large this way by crashing
+/// smaller instances).
+pub fn smallest_fitting(min_memory_gb: f64) -> &'static InstanceType {
+    CATALOG
+        .iter()
+        .find(|t| t.memory_gb >= min_memory_gb)
+        .unwrap_or(CATALOG.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_per_second_prices() {
+        // Table III: t2.large $0.00002578/s; Table II: t2.small $0.00000639/s
+        let small = instance("t2.small").unwrap();
+        let large = instance("t2.large").unwrap();
+        assert!((small.price_per_second() - 0.00000639).abs() < 5e-9);
+        assert!((large.price_per_second() - 0.00002578).abs() < 5e-9);
+    }
+
+    #[test]
+    fn unknown_instance_errors() {
+        assert!(instance("m5.large").is_err());
+    }
+
+    #[test]
+    fn smallest_fitting_walks_up() {
+        assert_eq!(smallest_fitting(0.4).name, "t2.nano");
+        assert_eq!(smallest_fitting(3.0).name, "t2.medium");
+        assert_eq!(smallest_fitting(4.3).name, "t2.large"); // VGG-11's ~4.2 GB/batch
+        assert_eq!(smallest_fitting(999.0).name, "t2.2xlarge");
+    }
+
+    #[test]
+    fn cpu_factor_reference_is_t2_large() {
+        assert_eq!(instance("t2.large").unwrap().cpu_factor(), 1.0);
+        assert_eq!(instance("t2.small").unwrap().cpu_factor(), 0.5);
+        assert_eq!(instance("t2.2xlarge").unwrap().cpu_factor(), 4.0);
+    }
+
+    #[test]
+    fn catalog_sorted_by_memory() {
+        for w in CATALOG.windows(2) {
+            assert!(w[0].memory_gb <= w[1].memory_gb);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Delta compression: transmit the change against the previously-sent
+//! vector, encoded with any inner codec ("Delta compression" pointer in
+//! the paper's §VI-B). Stateful per direction — sender and receiver each
+//! keep their own `DeltaCodec` with mirrored reference state.
+
+use crate::util::Bytes;
+use std::sync::Mutex;
+
+use super::Codec;
+use crate::error::Result;
+
+pub struct DeltaCodec<C: Codec> {
+    inner: C,
+    /// Last full vector this side has synchronized on.
+    reference: Mutex<Option<Vec<f32>>>,
+}
+
+impl<C: Codec> DeltaCodec<C> {
+    pub fn new(inner: C) -> Self {
+        Self { inner, reference: Mutex::new(None) }
+    }
+
+    pub fn reset(&self) {
+        *self.reference.lock().unwrap() = None;
+    }
+}
+
+impl<C: Codec> Codec for DeltaCodec<C> {
+    fn name(&self) -> &'static str {
+        "delta"
+    }
+
+    fn encode(&self, v: &[f32]) -> Result<Bytes> {
+        let mut guard = self.reference.lock().unwrap();
+        let delta: Vec<f32> = match guard.as_ref() {
+            Some(prev) if prev.len() == v.len() => {
+                v.iter().zip(prev).map(|(a, b)| a - b).collect()
+            }
+            _ => v.to_vec(),
+        };
+        let wire = self.inner.encode(&delta)?;
+        // the receiver reconstructs reference + decode(delta); mirror that
+        // here (inner may be lossy) so both sides stay in lockstep.
+        let decoded_delta = self.inner.decode(&wire)?;
+        let new_ref: Vec<f32> = match guard.as_ref() {
+            Some(prev) if prev.len() == v.len() => {
+                prev.iter().zip(&decoded_delta).map(|(p, d)| p + d).collect()
+            }
+            _ => decoded_delta,
+        };
+        *guard = Some(new_ref);
+        Ok(wire)
+    }
+
+    fn decode(&self, wire: &Bytes) -> Result<Vec<f32>> {
+        let delta = self.inner.decode(wire)?;
+        let mut guard = self.reference.lock().unwrap();
+        let out: Vec<f32> = match guard.as_ref() {
+            Some(prev) if prev.len() == delta.len() => {
+                prev.iter().zip(&delta).map(|(p, d)| p + d).collect()
+            }
+            _ => delta,
+        };
+        *guard = Some(out.clone());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::RawCodec;
+
+    #[test]
+    fn lossless_inner_roundtrips_sequences() {
+        let tx = DeltaCodec::new(RawCodec);
+        let rx = DeltaCodec::new(RawCodec);
+        let seqs = [
+            vec![1.0f32, 2.0, 3.0],
+            vec![1.5, 2.0, 2.5],
+            vec![1.5, 2.0, 2.5],
+            vec![-4.0, 0.0, 10.0],
+        ];
+        for v in &seqs {
+            let wire = tx.encode(v).unwrap();
+            let out = rx.decode(&wire).unwrap();
+            for (a, b) in v.iter().zip(&out) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_vector_is_cheap_with_sparse_inner() {
+        use crate::compress::TopkCodec;
+        // after the first send, deltas are ~zero → top-k wire stays tiny
+        let tx = DeltaCodec::new(TopkCodec::new(1.0));
+        let v: Vec<f32> = (0..256).map(|i| (i as f32).cos()).collect();
+        let w1 = tx.encode(&v).unwrap();
+        let _ = w1;
+        // second identical send: delta is exactly zero
+        let tx2 = DeltaCodec::new(RawCodec);
+        tx2.encode(&v).unwrap();
+        let w2 = tx2.encode(&v).unwrap();
+        let decoded = RawCodec.decode(&w2).unwrap();
+        assert!(decoded.iter().all(|&d| d.abs() < 1e-6));
+    }
+
+    #[test]
+    fn reset_clears_reference() {
+        let tx = DeltaCodec::new(RawCodec);
+        let v = vec![5.0f32; 8];
+        tx.encode(&v).unwrap();
+        tx.reset();
+        let wire = tx.encode(&v).unwrap();
+        // after reset the full vector is sent, not a zero delta
+        let raw = RawCodec.decode(&wire).unwrap();
+        assert_eq!(raw, v);
+    }
+
+    #[test]
+    fn dimension_change_resets_reference() {
+        let tx = DeltaCodec::new(RawCodec);
+        tx.encode(&[1.0, 2.0]).unwrap();
+        let wire = tx.encode(&[3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(RawCodec.decode(&wire).unwrap(), vec![3.0, 4.0, 5.0]);
+    }
+}

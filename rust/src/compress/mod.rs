@@ -1,0 +1,144 @@
+//! Gradient compression codecs for the exchange path (§III-B.4).
+//!
+//! The paper adopts QSGD (Alistarh et al., NeurIPS'17) to quantize
+//! gradients before RabbitMQ transmission; the discussion section also
+//! points to sparsification and delta compression, both provided here.
+//!
+//! All codecs speak a common wire format framed by [`Codec`]:
+//! `encode(&[f32]) -> Bytes` / `decode(&bytes) -> Vec<f32>`; `decode`
+//! must accept exactly what `encode` produced (property-tested in
+//! `rust/tests/prop_compress.rs`).
+
+mod delta;
+mod qsgd;
+mod topk;
+
+pub use delta::DeltaCodec;
+pub use qsgd::QsgdCodec;
+pub use topk::TopkCodec;
+
+use crate::util::Bytes;
+
+use crate::config::Compression;
+use crate::error::Result;
+
+/// A gradient codec. Implementations may be lossy (QSGD, top-k) but must
+/// be dimension-preserving: `decode(encode(v)).len() == v.len()`.
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn encode(&self, v: &[f32]) -> Result<Bytes>;
+    fn decode(&self, wire: &Bytes) -> Result<Vec<f32>>;
+}
+
+/// Lossless identity codec: raw little-endian f32s.
+#[derive(Debug, Default, Clone)]
+pub struct RawCodec;
+
+impl Codec for RawCodec {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn encode(&self, v: &[f32]) -> Result<Bytes> {
+        let mut out = Vec::with_capacity(4 + v.len() * 4);
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(Bytes::from(out))
+    }
+
+    fn decode(&self, wire: &Bytes) -> Result<Vec<f32>> {
+        use crate::error::Error;
+        if wire.len() < 4 {
+            return Err(Error::Codec("raw: truncated header".into()));
+        }
+        let n = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+        if wire.len() != 4 + n * 4 {
+            return Err(Error::Codec(format!(
+                "raw: expected {} bytes, got {}",
+                4 + n * 4,
+                wire.len()
+            )));
+        }
+        Ok(wire[4..]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Build the codec a [`Compression`] config names. `seed` feeds the
+/// stochastic quantizer so runs stay reproducible.
+pub fn codec_for(compression: Compression, seed: u64) -> Box<dyn Codec> {
+    match compression {
+        Compression::None => Box::new(RawCodec),
+        Compression::Qsgd { s } => Box::new(QsgdCodec::new(s, seed)),
+        Compression::Topk { frac } => Box::new(TopkCodec::new(frac)),
+    }
+}
+
+/// Compression statistics for reporting (fig 5 harness).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionStats {
+    pub raw_bytes: usize,
+    pub wire_bytes: usize,
+}
+
+impl CompressionStats {
+    pub fn ratio(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            return 0.0;
+        }
+        self.raw_bytes as f64 / self.wire_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let c = RawCodec;
+        let wire = c.encode(&v).unwrap();
+        assert_eq!(c.decode(&wire).unwrap(), v);
+        assert_eq!(wire.len(), 4 + 16);
+    }
+
+    #[test]
+    fn raw_rejects_corrupt() {
+        let c = RawCodec;
+        assert!(c.decode(&Bytes::from_static(&[1, 2])).is_err());
+        let mut wire = c.encode(&[1.0, 2.0]).unwrap().to_vec();
+        wire.pop();
+        assert!(c.decode(&Bytes::from(wire)).is_err());
+    }
+
+    #[test]
+    fn codec_for_dispatch() {
+        use crate::config::Compression as C;
+        assert_eq!(codec_for(C::None, 0).name(), "raw");
+        assert_eq!(codec_for(C::Qsgd { s: 4 }, 0).name(), "qsgd");
+        assert_eq!(codec_for(C::Topk { frac: 0.1 }, 0).name(), "topk");
+    }
+
+    #[test]
+    fn stats_ratio() {
+        let s = CompressionStats { raw_bytes: 400, wire_bytes: 100 };
+        assert!((s.ratio() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_vector_roundtrips() {
+        for codec in [
+            codec_for(Compression::None, 1),
+            codec_for(Compression::Qsgd { s: 8 }, 1),
+            codec_for(Compression::Topk { frac: 0.5 }, 1),
+        ] {
+            let wire = codec.encode(&[]).unwrap();
+            assert_eq!(codec.decode(&wire).unwrap(), Vec::<f32>::new());
+        }
+    }
+}

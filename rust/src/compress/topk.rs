@@ -1,0 +1,131 @@
+//! Top-k sparsification: keep the `frac` largest-magnitude coordinates
+//! (the "model sparsification" direction the paper's §VI-B discussion
+//! recommends for communication reduction).
+//!
+//! Wire format: u32 n | u32 k | k * (u32 index, f32 value).
+
+use crate::util::Bytes;
+
+use super::Codec;
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct TopkCodec {
+    frac: f32,
+}
+
+impl TopkCodec {
+    pub fn new(frac: f32) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "frac must be in (0,1]");
+        Self { frac }
+    }
+
+    pub fn k_for(&self, n: usize) -> usize {
+        ((n as f64 * self.frac as f64).ceil() as usize).clamp(usize::from(n > 0), n)
+    }
+}
+
+impl Codec for TopkCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encode(&self, v: &[f32]) -> Result<Bytes> {
+        let k = if v.is_empty() { 0 } else { self.k_for(v.len()) };
+        let mut idx: Vec<u32> = (0..v.len() as u32).collect();
+        // partial selection by |value| descending
+        if k < v.len() {
+            idx.select_nth_unstable_by(k, |&a, &b| {
+                v[b as usize]
+                    .abs()
+                    .partial_cmp(&v[a as usize].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(k);
+        }
+        idx.sort_unstable(); // deterministic wire, cache-friendly decode
+        let mut out = Vec::with_capacity(8 + idx.len() * 8);
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        for &i in &idx {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&v[i as usize].to_le_bytes());
+        }
+        Ok(Bytes::from(out))
+    }
+
+    fn decode(&self, wire: &Bytes) -> Result<Vec<f32>> {
+        if wire.len() < 8 {
+            return Err(Error::Codec("topk: truncated header".into()));
+        }
+        let n = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+        let k = u32::from_le_bytes(wire[4..8].try_into().unwrap()) as usize;
+        if wire.len() != 8 + k * 8 {
+            return Err(Error::Codec(format!(
+                "topk: expected {} bytes, got {}",
+                8 + k * 8,
+                wire.len()
+            )));
+        }
+        let mut out = vec![0f32; n];
+        for chunk in wire[8..].chunks_exact(8) {
+            let i = u32::from_le_bytes(chunk[0..4].try_into().unwrap()) as usize;
+            let val = f32::from_le_bytes(chunk[4..8].try_into().unwrap());
+            if i >= n {
+                return Err(Error::Codec(format!("topk: index {i} >= n {n}")));
+            }
+            out[i] = val;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest() {
+        let c = TopkCodec::new(0.25);
+        let v = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3];
+        let out = c.decode(&c.encode(&v).unwrap()).unwrap();
+        // k = 2 of 8: -5.0 and 3.0 survive
+        assert_eq!(out[1], -5.0);
+        assert_eq!(out[3], 3.0);
+        assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn frac_one_is_lossless() {
+        let c = TopkCodec::new(1.0);
+        let v: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        assert_eq!(c.decode(&c.encode(&v).unwrap()).unwrap(), v);
+    }
+
+    #[test]
+    fn k_at_least_one() {
+        let c = TopkCodec::new(0.0001);
+        assert_eq!(c.k_for(10), 1);
+        let v = vec![0.0, 7.0, 0.0];
+        let out = c.decode(&c.encode(&v).unwrap()).unwrap();
+        assert_eq!(out[1], 7.0);
+    }
+
+    #[test]
+    fn wire_size_scales_with_k() {
+        let v: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let small = TopkCodec::new(0.01).encode(&v).unwrap().len();
+        let big = TopkCodec::new(0.5).encode(&v).unwrap().len();
+        assert!(small < big);
+        assert!(small < 4 * v.len() / 10);
+    }
+
+    #[test]
+    fn decode_rejects_bad_index() {
+        let c = TopkCodec::new(0.5);
+        let mut wire = c.encode(&[1.0, 2.0]).unwrap().to_vec();
+        // corrupt first index to 9
+        wire[8..12].copy_from_slice(&9u32.to_le_bytes());
+        assert!(c.decode(&Bytes::from(wire)).is_err());
+    }
+}

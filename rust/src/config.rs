@@ -1,0 +1,354 @@
+//! Experiment / training configuration (JSON files + CLI overridable).
+//!
+//! Every runnable surface (CLI, examples, harness drivers, benches) is
+//! driven by a [`TrainConfig`]; JSON files under `configs/` (or inline
+//! defaults) describe the paper's workloads.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// Which gradient-computation backend a peer uses (the paper's two
+/// architectures from §V-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Sequential per-batch gradients on the peer's own EC2 instance.
+    #[default]
+    Instance,
+    /// Per-batch gradients fanned out to Lambda via a Step Functions
+    /// dynamic Map state (the paper's contribution).
+    Serverless,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "instance" => Ok(Self::Instance),
+            "serverless" => Ok(Self::Serverless),
+            _ => Err(Error::Config(format!("unknown backend {s:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Instance => "instance",
+            Self::Serverless => "serverless",
+        }
+    }
+}
+
+/// Synchronisation mode for the gradient exchange (§III-B.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncMode {
+    /// RabbitMQ barrier queue: all peers finish an epoch together.
+    #[default]
+    Synchronous,
+    /// Consume whatever latest gradients are available (possibly stale).
+    Asynchronous,
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sync" | "synchronous" => Ok(Self::Synchronous),
+            "async" | "asynchronous" => Ok(Self::Asynchronous),
+            _ => Err(Error::Config(format!("unknown sync mode {s:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Synchronous => "synchronous",
+            Self::Asynchronous => "asynchronous",
+        }
+    }
+}
+
+/// Gradient compression on the exchange path (§III-B.4).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Compression {
+    #[default]
+    None,
+    /// QSGD stochastic quantization with `s` levels (bit-packed wire).
+    Qsgd { s: u8 },
+    /// Top-k sparsification keeping `frac` of coordinates.
+    Topk { frac: f32 },
+}
+
+impl Compression {
+    /// Parse `"none"`, `"qsgd:16"`, `"topk:0.05"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "none" {
+            return Ok(Self::None);
+        }
+        if let Some(levels) = s.strip_prefix("qsgd:") {
+            let s: u8 = levels
+                .parse()
+                .map_err(|_| Error::Config(format!("bad qsgd levels {levels:?}")))?;
+            return Ok(Self::Qsgd { s });
+        }
+        if let Some(frac) = s.strip_prefix("topk:") {
+            let frac: f32 = frac
+                .parse()
+                .map_err(|_| Error::Config(format!("bad topk frac {frac:?}")))?;
+            return Ok(Self::Topk { frac });
+        }
+        Err(Error::Config(format!("unknown compression {s:?}")))
+    }
+
+    pub fn to_spec(self) -> String {
+        match self {
+            Self::None => "none".into(),
+            Self::Qsgd { s } => format!("qsgd:{s}"),
+            Self::Topk { frac } => format!("topk:{frac}"),
+        }
+    }
+}
+
+/// Full training/experiment configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model key, e.g. `mini_vgg` (real exec) — the perfmodel maps it to
+    /// the paper's full-scale architecture for modeled runs.
+    pub model: String,
+    /// `mnist` or `cifar`.
+    pub dataset: String,
+    /// Number of peers P.
+    pub peers: usize,
+    /// Batch size B.
+    pub batch_size: usize,
+    /// Epoch limit E (convergence detection may stop earlier).
+    pub epochs: usize,
+    /// SGD learning rate η.
+    pub lr: f32,
+    /// Samples in the synthetic training set (per cluster, pre-partition).
+    pub train_samples: usize,
+    /// Samples in the validation set (convergence detection input).
+    pub val_samples: usize,
+    pub backend: Backend,
+    pub sync: SyncMode,
+    pub compression: Compression,
+    /// EC2 instance type for peers (paper: t2.small/medium/large).
+    pub instance_type: String,
+    /// Lambda memory (MB) for serverless gradient functions; 0 = derive
+    /// from the paper's Table II sizing rule.
+    pub lambda_memory_mb: u32,
+    /// Max concurrent lambda invocations per state machine.
+    pub lambda_concurrency: usize,
+    pub seed: u64,
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: String,
+    /// Early-stopping patience in epochs (0 disables).
+    pub early_stop_patience: usize,
+    /// ReduceLROnPlateau patience (0 disables).
+    pub plateau_patience: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "mini_squeezenet".into(),
+            dataset: "mnist".into(),
+            peers: 4,
+            batch_size: 64,
+            epochs: 4,
+            lr: 0.05,
+            train_samples: 4096,
+            val_samples: 256,
+            backend: Backend::default(),
+            sync: SyncMode::default(),
+            compression: Compression::default(),
+            instance_type: "t2.medium".into(),
+            lambda_memory_mb: 0,
+            lambda_concurrency: 64,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            early_stop_patience: 0,
+            plateau_patience: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a JSON file; unknown keys are rejected.
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let json = Json::parse_file(path)?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| Error::Config("config must be a JSON object".into()))?;
+        for (key, v) in obj {
+            let missing = || Error::Config(format!("bad value for {key:?}"));
+            match key.as_str() {
+                "model" => cfg.model = v.as_str().ok_or_else(missing)?.into(),
+                "dataset" => cfg.dataset = v.as_str().ok_or_else(missing)?.into(),
+                "peers" => cfg.peers = v.as_usize().ok_or_else(missing)?,
+                "batch_size" => cfg.batch_size = v.as_usize().ok_or_else(missing)?,
+                "epochs" => cfg.epochs = v.as_usize().ok_or_else(missing)?,
+                "lr" => cfg.lr = v.as_f64().ok_or_else(missing)? as f32,
+                "train_samples" => cfg.train_samples = v.as_usize().ok_or_else(missing)?,
+                "val_samples" => cfg.val_samples = v.as_usize().ok_or_else(missing)?,
+                "backend" => cfg.backend = Backend::parse(v.as_str().ok_or_else(missing)?)?,
+                "sync" => cfg.sync = SyncMode::parse(v.as_str().ok_or_else(missing)?)?,
+                "compression" => {
+                    cfg.compression = Compression::parse(v.as_str().ok_or_else(missing)?)?
+                }
+                "instance_type" => cfg.instance_type = v.as_str().ok_or_else(missing)?.into(),
+                "lambda_memory_mb" => cfg.lambda_memory_mb = v.as_u64().ok_or_else(missing)? as u32,
+                "lambda_concurrency" => {
+                    cfg.lambda_concurrency = v.as_usize().ok_or_else(missing)?
+                }
+                "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
+                "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(missing)?.into(),
+                "early_stop_patience" => {
+                    cfg.early_stop_patience = v.as_usize().ok_or_else(missing)?
+                }
+                "plateau_patience" => cfg.plateau_patience = v.as_usize().ok_or_else(missing)?,
+                other => return Err(Error::Config(format!("unknown config key {other:?}"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", self.model.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("peers", self.peers)
+            .set("batch_size", self.batch_size)
+            .set("epochs", self.epochs)
+            .set("lr", self.lr as f64)
+            .set("train_samples", self.train_samples)
+            .set("val_samples", self.val_samples)
+            .set("backend", self.backend.name())
+            .set("sync", self.sync.name())
+            .set("compression", self.compression.to_spec())
+            .set("instance_type", self.instance_type.as_str())
+            .set("lambda_memory_mb", self.lambda_memory_mb as u64)
+            .set("lambda_concurrency", self.lambda_concurrency)
+            .set("seed", self.seed)
+            .set("artifacts_dir", self.artifacts_dir.as_str())
+            .set("early_stop_patience", self.early_stop_patience)
+            .set("plateau_patience", self.plateau_patience);
+        j
+    }
+
+    /// Manifest key for the runtime (`<model>_<dataset>`).
+    pub fn model_key(&self) -> String {
+        format!("{}_{}", self.model, self.dataset)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.peers == 0 {
+            return Err(Error::Config("peers must be >= 1".into()));
+        }
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be >= 1".into()));
+        }
+        if self.train_samples < self.peers * self.batch_size {
+            return Err(Error::Config(format!(
+                "train_samples={} cannot cover {} peers x batch {}",
+                self.train_samples, self.peers, self.batch_size
+            )));
+        }
+        if !(self.lr > 0.0) {
+            return Err(Error::Config("lr must be > 0".into()));
+        }
+        if let Compression::Qsgd { s } = self.compression {
+            if s < 1 {
+                return Err(Error::Config("qsgd s must be >= 1".into()));
+            }
+        }
+        if let Compression::Topk { frac } = self.compression {
+            if !(frac > 0.0 && frac <= 1.0) {
+                return Err(Error::Config("topk frac must be in (0,1]".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TrainConfig {
+            model: "mini_vgg".into(),
+            backend: Backend::Serverless,
+            sync: SyncMode::Asynchronous,
+            compression: Compression::Qsgd { s: 16 },
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.model, "mini_vgg");
+        assert_eq!(back.backend, Backend::Serverless);
+        assert_eq!(back.sync, SyncMode::Asynchronous);
+        assert!(matches!(back.compression, Compression::Qsgd { s: 16 }));
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let j = Json::parse(r#"{"modle": "x"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn compression_spec_parsing() {
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert!(matches!(
+            Compression::parse("qsgd:8").unwrap(),
+            Compression::Qsgd { s: 8 }
+        ));
+        assert!(matches!(
+            Compression::parse("topk:0.1").unwrap(),
+            Compression::Topk { .. }
+        ));
+        assert!(Compression::parse("gzip").is_err());
+        assert!(Compression::parse("qsgd:many").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_peers() {
+        let cfg = TrainConfig { peers: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_undersized_dataset() {
+        let cfg = TrainConfig {
+            train_samples: 16,
+            peers: 4,
+            batch_size: 64,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_topk() {
+        let cfg = TrainConfig {
+            compression: Compression::Topk { frac: 0.0 },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn model_key_format() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.model_key(), "mini_squeezenet_mnist");
+    }
+}

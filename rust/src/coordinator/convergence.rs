@@ -1,0 +1,187 @@
+//! Convergence detection (§III-B.7): Early Stopping + ReduceLROnPlateau,
+//! driven by validation loss each epoch.
+
+/// Early stopping: stop when the monitored loss has not improved by at
+/// least `min_delta` for `patience` consecutive epochs.
+#[derive(Debug, Clone)]
+pub struct EarlyStopping {
+    patience: usize,
+    min_delta: f32,
+    best: f32,
+    stale: usize,
+    stopped: bool,
+}
+
+impl EarlyStopping {
+    pub fn new(patience: usize, min_delta: f32) -> Self {
+        Self {
+            patience,
+            min_delta,
+            best: f32::INFINITY,
+            stale: 0,
+            stopped: false,
+        }
+    }
+
+    /// Disabled detector (patience 0): never stops.
+    pub fn disabled() -> Self {
+        Self::new(0, 0.0)
+    }
+
+    /// Record an epoch's validation loss; returns true if training
+    /// should stop now.
+    pub fn observe(&mut self, val_loss: f32) -> bool {
+        if self.patience == 0 {
+            return false;
+        }
+        if val_loss < self.best - self.min_delta {
+            self.best = val_loss;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+            if self.stale >= self.patience {
+                self.stopped = true;
+            }
+        }
+        self.stopped
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    pub fn best(&self) -> f32 {
+        self.best
+    }
+}
+
+/// ReduceLROnPlateau: multiply the lr by `factor` when the loss has
+/// plateaued for `patience` epochs; never below `min_lr`.
+#[derive(Debug, Clone)]
+pub struct ReduceLROnPlateau {
+    patience: usize,
+    factor: f32,
+    min_lr: f32,
+    best: f32,
+    stale: usize,
+    lr: f32,
+    reductions: usize,
+}
+
+impl ReduceLROnPlateau {
+    pub fn new(initial_lr: f32, patience: usize, factor: f32, min_lr: f32) -> Self {
+        assert!(factor > 0.0 && factor < 1.0, "factor must be in (0,1)");
+        Self {
+            patience,
+            factor,
+            min_lr,
+            best: f32::INFINITY,
+            stale: 0,
+            lr: initial_lr,
+            reductions: 0,
+        }
+    }
+
+    /// Disabled scheduler: lr never changes.
+    pub fn disabled(initial_lr: f32) -> Self {
+        Self {
+            patience: 0,
+            factor: 0.5,
+            min_lr: 0.0,
+            best: f32::INFINITY,
+            stale: 0,
+            lr: initial_lr,
+            reductions: 0,
+        }
+    }
+
+    /// Record an epoch's validation loss; returns the lr to use next.
+    pub fn observe(&mut self, val_loss: f32) -> f32 {
+        if self.patience == 0 {
+            return self.lr;
+        }
+        if val_loss < self.best - 1e-6 {
+            self.best = val_loss;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+            if self.stale >= self.patience {
+                self.lr = (self.lr * self.factor).max(self.min_lr);
+                self.reductions += 1;
+                self.stale = 0;
+            }
+        }
+        self.lr
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    pub fn reductions(&self) -> usize {
+        self.reductions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_stop_after_patience() {
+        let mut es = EarlyStopping::new(2, 0.0);
+        assert!(!es.observe(1.0));
+        assert!(!es.observe(0.9)); // improved
+        assert!(!es.observe(0.95)); // stale 1
+        assert!(es.observe(0.94)); // stale 2 -> stop
+        assert!(es.stopped());
+        assert_eq!(es.best(), 0.9);
+    }
+
+    #[test]
+    fn early_stop_min_delta() {
+        let mut es = EarlyStopping::new(1, 0.1);
+        assert!(!es.observe(1.0));
+        // 0.95 is an improvement but below min_delta -> counts stale
+        assert!(es.observe(0.95));
+    }
+
+    #[test]
+    fn early_stop_disabled_never_stops() {
+        let mut es = EarlyStopping::disabled();
+        for _ in 0..100 {
+            assert!(!es.observe(5.0));
+        }
+    }
+
+    #[test]
+    fn plateau_halves_lr() {
+        let mut sch = ReduceLROnPlateau::new(0.1, 2, 0.5, 0.001);
+        assert_eq!(sch.observe(1.0), 0.1);
+        assert_eq!(sch.observe(1.0), 0.1); // stale 1
+        let lr = sch.observe(1.0); // stale 2 -> reduce
+        assert!((lr - 0.05).abs() < 1e-7);
+        assert_eq!(sch.reductions(), 1);
+    }
+
+    #[test]
+    fn plateau_respects_min_lr() {
+        let mut sch = ReduceLROnPlateau::new(0.1, 1, 0.1, 0.05);
+        sch.observe(1.0);
+        sch.observe(1.0); // reduce -> clamped at 0.05
+        assert!((sch.lr() - 0.05).abs() < 1e-7);
+        sch.observe(1.0);
+        assert!((sch.lr() - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn plateau_resets_on_improvement() {
+        let mut sch = ReduceLROnPlateau::new(0.1, 2, 0.5, 0.0);
+        sch.observe(1.0);
+        sch.observe(1.0); // stale 1
+        sch.observe(0.5); // improvement resets
+        sch.observe(0.6); // stale 1
+        assert_eq!(sch.reductions(), 0);
+        assert!((sch.lr() - 0.1).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,225 @@
+//! Gradient exchange plumbing (§III-B.3/.5): wire encoding with the
+//! configured codec, the S3-overflow path for oversized messages, the
+//! per-peer gradient dictionary and averaging.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::broker::{Broker, Message};
+use crate::compress::Codec;
+use crate::error::{Error, Result};
+use crate::store::{ObjectRef, ObjectStore, GRADIENT_BUCKET};
+use crate::util::Bytes;
+
+/// Threshold above which a gradient payload is parked in the object
+/// store and referenced by UUID (Amazon MQ's 100 MB cap in the paper;
+/// kept configurable for tests).
+pub struct GradientWire {
+    codec: Arc<dyn Codec>,
+    store: Arc<ObjectStore>,
+    inline_cap: usize,
+}
+
+impl GradientWire {
+    pub fn new(codec: Arc<dyn Codec>, store: Arc<ObjectStore>, inline_cap: usize) -> Self {
+        Self { codec, store, inline_cap }
+    }
+
+    pub fn codec_name(&self) -> &'static str {
+        self.codec.name()
+    }
+
+    /// Encode a gradient for the broker. Returns the message payload
+    /// (either the codec wire bytes, or an [`ObjectRef`] pointing at
+    /// them) plus the raw wire size for stats.
+    pub fn encode(&self, grads: &[f32]) -> Result<(Bytes, usize)> {
+        let wire = self.codec.encode(grads)?;
+        let size = wire.len();
+        if size <= self.inline_cap {
+            return Ok((wire, size));
+        }
+        // the paper's S3+UUID path
+        let r = self.store.put_new(GRADIENT_BUCKET, wire)?;
+        Ok((Bytes::from(r.to_wire()), size))
+    }
+
+    /// Decode a broker payload back into a gradient vector.
+    pub fn decode(&self, payload: &Bytes) -> Result<Vec<f32>> {
+        if ObjectRef::is_wire(payload) {
+            let r = ObjectRef::from_wire(payload)?;
+            let wire = self.store.get_ref(&r)?;
+            return self.codec.decode(&wire);
+        }
+        self.codec.decode(payload)
+    }
+
+    /// Publish peer `r`'s epoch-`e` gradient to its dedicated queue.
+    pub fn publish(
+        &self,
+        broker: &Broker,
+        sender: usize,
+        epoch: u64,
+        grads: &[f32],
+    ) -> Result<usize> {
+        let (payload, wire_size) = self.encode(grads)?;
+        broker.publish(
+            &Broker::gradient_queue(sender),
+            Message::new(sender, epoch, payload),
+        )?;
+        Ok(wire_size)
+    }
+}
+
+/// Algorithm 1's `Gradients_Peers` dictionary: rank -> gradient.
+#[derive(Debug, Default)]
+pub struct GradientDict {
+    entries: BTreeMap<usize, Vec<f32>>,
+}
+
+impl GradientDict {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, rank: usize, grads: Vec<f32>) {
+        self.entries.insert(rank, grads);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn ranks(&self) -> Vec<usize> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// `AverageGradients`: elementwise mean across all entries.
+    pub fn average(&self) -> Result<Vec<f32>> {
+        let mut it = self.entries.values();
+        let first = it
+            .next()
+            .ok_or_else(|| Error::Broker("averaging an empty gradient dict".into()))?;
+        let mut acc: Vec<f64> = first.iter().map(|&x| x as f64).collect();
+        let mut n = 1usize;
+        for g in it {
+            if g.len() != acc.len() {
+                return Err(Error::Broker(format!(
+                    "gradient length mismatch: {} vs {}",
+                    g.len(),
+                    acc.len()
+                )));
+            }
+            for (a, &x) in acc.iter_mut().zip(g) {
+                *a += x as f64;
+            }
+            n += 1;
+        }
+        let inv = 1.0 / n as f64;
+        Ok(acc.into_iter().map(|a| (a * inv) as f32).collect())
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// Elementwise mean of a set of per-batch gradients (the
+/// `AverageBatchesGradients` step).
+pub fn average_batch_gradients(grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+    let mut d = GradientDict::new();
+    for (i, g) in grads.iter().enumerate() {
+        d.insert(i, g.clone());
+    }
+    d.average()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::QueueMode;
+    use crate::compress::RawCodec;
+
+    fn wire(cap: usize) -> (GradientWire, Arc<ObjectStore>) {
+        let store = Arc::new(ObjectStore::new());
+        (
+            GradientWire::new(Arc::new(RawCodec), store.clone(), cap),
+            store,
+        )
+    }
+
+    #[test]
+    fn small_gradient_inline() {
+        let (w, store) = wire(1024);
+        let g = vec![1.0f32, -2.0, 3.0];
+        let (payload, size) = w.encode(&g).unwrap();
+        assert!(!ObjectRef::is_wire(&payload));
+        assert_eq!(size, payload.len());
+        assert_eq!(w.decode(&payload).unwrap(), g);
+        assert_eq!(store.stats().0, 0); // nothing parked
+    }
+
+    #[test]
+    fn large_gradient_overflows_to_store() {
+        let (w, store) = wire(16);
+        let g: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let (payload, size) = w.encode(&g).unwrap();
+        assert!(ObjectRef::is_wire(&payload));
+        assert!(size > 16);
+        assert_eq!(w.decode(&payload).unwrap(), g);
+        assert_eq!(store.stats().0, 1);
+        assert!(payload.len() < 100); // the ref is tiny
+    }
+
+    #[test]
+    fn publish_routes_to_peer_queue() {
+        let (w, _) = wire(1 << 20);
+        let broker = Broker::default();
+        broker
+            .declare(&Broker::gradient_queue(2), QueueMode::LatestOnly)
+            .unwrap();
+        w.publish(&broker, 2, 7, &[1.0, 2.0]).unwrap();
+        let m = broker
+            .get(&Broker::gradient_queue(2))
+            .unwrap()
+            .peek_latest()
+            .unwrap();
+        assert_eq!(m.sender, 2);
+        assert_eq!(m.epoch, 7);
+        assert_eq!(w.decode(&m.payload).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn dict_average() {
+        let mut d = GradientDict::new();
+        d.insert(0, vec![1.0, 2.0]);
+        d.insert(1, vec![3.0, 4.0]);
+        d.insert(2, vec![5.0, 6.0]);
+        assert_eq!(d.average().unwrap(), vec![3.0, 4.0]);
+        assert_eq!(d.ranks(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn dict_rejects_mismatched_lengths() {
+        let mut d = GradientDict::new();
+        d.insert(0, vec![1.0]);
+        d.insert(1, vec![1.0, 2.0]);
+        assert!(d.average().is_err());
+    }
+
+    #[test]
+    fn empty_dict_average_errors() {
+        assert!(GradientDict::new().average().is_err());
+    }
+
+    #[test]
+    fn batch_average_matches_manual() {
+        let got =
+            average_batch_gradients(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![2.0, 2.0]])
+                .unwrap();
+        assert_eq!(got, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's L3 contribution: the serverless peer-to-peer training
+//! coordinator (Algorithm 1 + the Lambda offload of §III-C).
+//!
+//! - [`peer`] — the per-rank actor running Algorithm 1;
+//! - [`trainer`] — cluster assembly, thread lifecycle, reporting;
+//! - [`gradient`] — exchange wire format, S3 overflow, averaging;
+//! - [`serverless`] — the dynamic-state-machine Lambda fan-out;
+//! - [`sync`] — the RabbitMQ epoch barrier;
+//! - [`convergence`] — Early Stopping + ReduceLROnPlateau.
+
+pub mod convergence;
+pub mod gradient;
+pub mod peer;
+pub mod serverless;
+pub mod sync;
+pub mod trainer;
+
+pub use convergence::{EarlyStopping, ReduceLROnPlateau};
+pub use gradient::{average_batch_gradients, GradientDict, GradientWire};
+pub use peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
+pub use serverless::{pack_batch, unpack_batch, OffloadResult, ServerlessOffload};
+pub use sync::EpochBarrier;
+pub use trainer::{Cluster, TrainReport};

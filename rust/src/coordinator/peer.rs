@@ -1,0 +1,283 @@
+//! The peer actor: one thread running Algorithm 1 over its partition.
+//!
+//! Per epoch, a peer:
+//! 1. computes per-batch gradients (sequentially on its "instance", or
+//!    fanned out to Lambda via [`ServerlessOffload`]) and averages them;
+//! 2. publishes the averaged gradient to its dedicated queue;
+//! 3. consumes every other peer's gradient (blocking on the epoch in
+//!    synchronous mode; taking whatever is freshest in async mode);
+//! 4. averages the gradient dictionary and applies the SGD update;
+//! 5. (leader) runs convergence detection on the validation set and
+//!    broadcasts the verdict + scheduled lr on the control queue;
+//! 6. (synchronous) waits at the RabbitMQ epoch barrier.
+//!
+//! Every stage is timed into the shared [`MetricsRegistry`] under its
+//! Table-I stage name.
+
+use std::sync::Arc;
+
+use super::convergence::{EarlyStopping, ReduceLROnPlateau};
+use super::gradient::{average_batch_gradients, GradientDict, GradientWire};
+use super::serverless::ServerlessOffload;
+use super::sync::EpochBarrier;
+use crate::broker::{Broker, Message, QueueMode};
+use crate::config::{SyncMode, TrainConfig};
+use crate::data::{Batcher, Dataset};
+use crate::error::{Error, Result};
+use crate::metrics::{MetricsRegistry, Stage, StageTimer};
+use crate::runtime::ModelRuntime;
+use crate::util::{Bytes, Json};
+
+/// Name of the control queue the leader broadcasts verdicts on.
+pub fn control_queue() -> String {
+    "ctl.convergence".to_string()
+}
+
+/// Leader verdict for one epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct Verdict {
+    pub epoch: u64,
+    pub stop: bool,
+    pub lr: f32,
+    pub val_loss: f32,
+    pub val_acc: f32,
+}
+
+impl Verdict {
+    pub fn to_payload(&self) -> Bytes {
+        let mut j = Json::obj();
+        j.set("stop", self.stop)
+            .set("lr", self.lr as f64)
+            .set("val_loss", self.val_loss as f64)
+            .set("val_acc", self.val_acc as f64);
+        Bytes::from(j.to_string().into_bytes())
+    }
+
+    pub fn from_message(m: &Message) -> Result<Self> {
+        let j = Json::parse(
+            std::str::from_utf8(&m.payload).map_err(|e| Error::Broker(e.to_string()))?,
+        )?;
+        Ok(Self {
+            epoch: m.epoch,
+            stop: j.req("stop")?.as_bool().unwrap_or(false),
+            lr: j.req("lr")?.as_f64().unwrap_or(0.0) as f32,
+            val_loss: j.req("val_loss")?.as_f64().unwrap_or(f64::NAN) as f32,
+            val_acc: j.req("val_acc")?.as_f64().unwrap_or(f64::NAN) as f32,
+        })
+    }
+}
+
+/// How a peer computes its per-batch gradients.
+pub enum GradBackend {
+    /// Sequential loop on the peer's own instance (PJRT local).
+    Local { pallas: bool },
+    /// The paper's serverless fan-out.
+    Serverless(ServerlessOffload),
+}
+
+/// Per-peer outcome.
+#[derive(Debug, Clone)]
+pub struct PeerReport {
+    pub rank: usize,
+    pub epochs_run: usize,
+    /// Mean training loss per epoch.
+    pub train_loss: Vec<f32>,
+    /// Gradient wire bytes sent per epoch.
+    pub sent_bytes: Vec<usize>,
+    /// Serverless cost accrued by this peer (USD), if offloading.
+    pub lambda_cost_usd: f64,
+    pub lambda_invocations: usize,
+}
+
+/// One peer of the cluster.
+pub struct Peer {
+    pub rank: usize,
+    config: TrainConfig,
+    partition: Dataset,
+    val: Arc<Dataset>,
+    runtime: Arc<ModelRuntime>,
+    broker: Arc<Broker>,
+    wire: GradientWire,
+    backend: GradBackend,
+    barrier: Arc<EpochBarrier>,
+    metrics: Arc<MetricsRegistry>,
+    params: Vec<f32>,
+}
+
+impl Peer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: usize,
+        config: TrainConfig,
+        partition: Dataset,
+        val: Arc<Dataset>,
+        runtime: Arc<ModelRuntime>,
+        broker: Arc<Broker>,
+        wire: GradientWire,
+        backend: GradBackend,
+        barrier: Arc<EpochBarrier>,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Result<Self> {
+        // dedicated queue per peer (Algorithm 1 init)
+        broker.declare(&Broker::gradient_queue(rank), QueueMode::LatestOnly)?;
+        broker.declare(&control_queue(), QueueMode::Fifo)?;
+        let params = runtime.init_params()?;
+        Ok(Self {
+            rank,
+            config,
+            partition,
+            val,
+            runtime,
+            broker,
+            wire,
+            backend,
+            barrier,
+            metrics,
+            params,
+        })
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Run Algorithm 1. Returns the per-peer report.
+    pub fn run(&mut self) -> Result<PeerReport> {
+        let batcher = Batcher::new(self.config.batch_size, self.config.seed ^ self.rank as u64);
+        let mut early = if self.config.early_stop_patience > 0 {
+            EarlyStopping::new(self.config.early_stop_patience, 1e-4)
+        } else {
+            EarlyStopping::disabled()
+        };
+        let mut plateau = if self.config.plateau_patience > 0 {
+            ReduceLROnPlateau::new(self.config.lr, self.config.plateau_patience, 0.5, 1e-5)
+        } else {
+            ReduceLROnPlateau::disabled(self.config.lr)
+        };
+        let mut lr = self.config.lr;
+        let mut report = PeerReport {
+            rank: self.rank,
+            epochs_run: 0,
+            train_loss: Vec::new(),
+            sent_bytes: Vec::new(),
+            lambda_cost_usd: 0.0,
+            lambda_invocations: 0,
+        };
+
+        for epoch in 1..=self.config.epochs as u64 {
+            // ---- 1. per-batch gradients + average ---------------------
+            let batches = batcher.epoch_batches(&self.partition, epoch as usize);
+            if batches.is_empty() {
+                return Err(Error::Data(format!(
+                    "peer {}: partition of {} samples yields no batch of {}",
+                    self.rank,
+                    self.partition.len(),
+                    self.config.batch_size
+                )));
+            }
+            let t = StageTimer::start(Stage::ComputeGradients);
+            let (epoch_loss, my_grad) = match &self.backend {
+                GradBackend::Local { pallas } => {
+                    let mut grads = Vec::with_capacity(batches.len());
+                    let mut loss_sum = 0f64;
+                    for b in &batches {
+                        let out = self.runtime.grad(b.size, &self.params, &b.x, &b.y, *pallas)?;
+                        loss_sum += out.loss as f64;
+                        grads.push(out.grads);
+                    }
+                    (
+                        (loss_sum / batches.len() as f64) as f32,
+                        average_batch_gradients(&grads)?,
+                    )
+                }
+                GradBackend::Serverless(offload) => {
+                    let out = offload.compute_epoch(epoch as usize, &self.params, &batches)?;
+                    report.lambda_cost_usd += out.cost_usd;
+                    report.lambda_invocations += out.invocations;
+                    (out.loss, out.grads)
+                }
+            };
+            t.stop(&self.metrics);
+
+            // ---- 2. publish to own queue ------------------------------
+            let t = StageTimer::start(Stage::SendGradients);
+            let sent = self
+                .wire
+                .publish(&self.broker, self.rank, epoch, &my_grad)?;
+            t.stop(&self.metrics);
+            report.sent_bytes.push(sent);
+
+            // ---- 3. consume all other queues --------------------------
+            let t = StageTimer::start(Stage::ReceiveGradients);
+            let mut dict = GradientDict::new();
+            dict.insert(self.rank, my_grad);
+            for peer in 0..self.config.peers {
+                if peer == self.rank {
+                    continue;
+                }
+                let q = self.broker.get(&Broker::gradient_queue(peer))?;
+                match self.config.sync {
+                    SyncMode::Synchronous => {
+                        let m = q.await_epoch(epoch);
+                        dict.insert(peer, self.wire.decode(&m.payload)?);
+                    }
+                    SyncMode::Asynchronous => {
+                        // take whatever is freshest, even stale; skip if
+                        // the peer has not published yet
+                        if let Some(m) = q.peek_latest() {
+                            dict.insert(peer, self.wire.decode(&m.payload)?);
+                        }
+                    }
+                }
+            }
+            t.stop(&self.metrics);
+
+            // ---- 4. average + model update ----------------------------
+            let avg = dict.average()?;
+            let t = StageTimer::start(Stage::ModelUpdate);
+            self.params = self.runtime.update(&self.params, &avg, lr)?;
+            t.stop(&self.metrics);
+
+            report.train_loss.push(epoch_loss);
+            report.epochs_run = epoch as usize;
+
+            // ---- 5. convergence detection (leader broadcasts) ---------
+            let mut stop = false;
+            if self.rank == 0 {
+                let t = StageTimer::start(Stage::ConvergenceDetection);
+                let (val_loss, val_acc) = self.runtime.eval_dataset(&self.params, &self.val)?;
+                stop = early.observe(val_loss);
+                lr = plateau.observe(val_loss);
+                let verdict = Verdict { epoch, stop, lr, val_loss, val_acc };
+                self.broker.publish(
+                    &control_queue(),
+                    Message::new(0, epoch, verdict.to_payload()),
+                )?;
+                t.stop(&self.metrics);
+            }
+
+            // ---- 6. barrier (synchronous mode) ------------------------
+            if self.config.sync == SyncMode::Synchronous {
+                self.barrier.arrive_and_wait(self.rank, epoch)?;
+            }
+
+            // follow the leader's verdict
+            if self.rank != 0 {
+                let ctl = self.broker.get(&control_queue())?;
+                let msg = match self.config.sync {
+                    SyncMode::Synchronous => Some(ctl.await_epoch(epoch)),
+                    SyncMode::Asynchronous => ctl.peek_latest(),
+                };
+                if let Some(m) = msg {
+                    let v = Verdict::from_message(&m)?;
+                    lr = if v.lr > 0.0 { v.lr } else { lr };
+                    stop = v.stop;
+                }
+            }
+            if stop {
+                break;
+            }
+        }
+        Ok(report)
+    }
+}

@@ -1,0 +1,261 @@
+//! The serverless gradient-offload path — the paper's core contribution
+//! (§III-C, §IV-D): per-batch gradient computation fanned out to Lambda
+//! functions through a dynamically-generated Step Functions Map state.
+//!
+//! Faithful to the paper's dataflow:
+//! 1. the peer uploads its (pre-processed, batched) data to S3 and the
+//!    current model parameters alongside;
+//! 2. a state machine is generated *from the batch count* — one Map
+//!    branch per batch;
+//! 3. each Lambda pulls its batch + params from S3, computes the
+//!    gradient with the AOT PJRT executable (the same artifact the
+//!    instance path runs), parks the gradient in S3 and returns its
+//!    UUID + loss;
+//! 4. the peer collects and averages the per-batch gradients.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::faas::{FaasPlatform, FunctionSpec, Handler, StateMachine};
+use crate::runtime::ModelRuntime;
+use crate::store::{ObjectRef, ObjectStore};
+use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+use crate::util::{Bytes, Json};
+
+/// Binary batch object stored in S3: `[u32 b][u32 elems][x f32s][y i32s]`.
+pub fn pack_batch(batch: &Batch, elems: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + batch.x.len() * 4 + batch.y.len() * 4);
+    out.extend_from_slice(&(batch.size as u32).to_le_bytes());
+    out.extend_from_slice(&(elems as u32).to_le_bytes());
+    out.extend_from_slice(&f32s_to_bytes(&batch.x));
+    for &y in &batch.y {
+        out.extend_from_slice(&y.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`pack_batch`].
+pub fn unpack_batch(data: &[u8]) -> Result<Batch> {
+    if data.len() < 8 {
+        return Err(Error::Faas("truncated batch object".into()));
+    }
+    let b = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
+    let elems = u32::from_le_bytes(data[4..8].try_into().unwrap()) as usize;
+    let xbytes = b * elems * 4;
+    let need = 8 + xbytes + b * 4;
+    if data.len() != need {
+        return Err(Error::Faas(format!(
+            "batch object: expected {need} bytes, got {}",
+            data.len()
+        )));
+    }
+    let x = bytes_to_f32s(&data[8..8 + xbytes]);
+    let y = data[8 + xbytes..]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Batch { x, y, size: b })
+}
+
+fn ref_to_json(r: &ObjectRef) -> Json {
+    let mut j = Json::obj();
+    j.set("bucket", r.bucket.as_str())
+        .set("key", r.key.as_str())
+        .set("size", r.size);
+    j
+}
+
+fn ref_from_json(j: &Json) -> Result<ObjectRef> {
+    Ok(ObjectRef {
+        bucket: j
+            .req("bucket")?
+            .as_str()
+            .ok_or_else(|| Error::Faas("bucket".into()))?
+            .to_string(),
+        key: j
+            .req("key")?
+            .as_str()
+            .ok_or_else(|| Error::Faas("key".into()))?
+            .to_string(),
+        size: j.req("size")?.as_usize().unwrap_or(0),
+    })
+}
+
+/// The serverless offload engine bound to one peer.
+pub struct ServerlessOffload {
+    platform: Arc<FaasPlatform>,
+    store: Arc<ObjectStore>,
+    runtime: Arc<ModelRuntime>,
+    function: String,
+    bucket: String,
+    concurrency: usize,
+}
+
+/// Result of one serverless epoch fan-out.
+#[derive(Debug)]
+pub struct OffloadResult {
+    /// Mean loss across batches.
+    pub loss: f32,
+    /// Average of the per-batch gradients.
+    pub grads: Vec<f32>,
+    /// Modeled/measured wall time of the fan-out (parallel branches).
+    pub wall: Duration,
+    /// Billed lambda-seconds.
+    pub billed: Duration,
+    pub cost_usd: f64,
+    pub invocations: usize,
+    pub cold_starts: usize,
+}
+
+impl ServerlessOffload {
+    /// Register the gradient Lambda for `peer_rank` and return the
+    /// offloader. `memory_mb` sizes the function (paper Table II rule).
+    pub fn new(
+        platform: Arc<FaasPlatform>,
+        store: Arc<ObjectStore>,
+        runtime: Arc<ModelRuntime>,
+        peer_rank: usize,
+        memory_mb: u32,
+        concurrency: usize,
+    ) -> Result<Self> {
+        let function = format!("grad-{}-peer{}", runtime.entry.key, peer_rank);
+        let bucket = crate::store::peer_bucket(peer_rank);
+        store.create_bucket(&bucket);
+
+        // The Lambda handler: parse refs, pull params + batch from S3,
+        // run the AOT grad executable, park the gradient in S3.
+        let h_store = store.clone();
+        let h_runtime = runtime.clone();
+        let h_bucket = bucket.clone();
+        let handler: Handler = Arc::new(move |payload: &Bytes| {
+            let req = Json::parse(
+                std::str::from_utf8(payload).map_err(|e| Error::Faas(e.to_string()))?,
+            )?;
+            let params_ref = ref_from_json(req.req("params")?)?;
+            let batch_ref = ref_from_json(req.req("batch")?)?;
+            let params = bytes_to_f32s(&h_store.get_ref(&params_ref)?);
+            let batch = unpack_batch(&h_store.get_ref(&batch_ref)?)?;
+            let out = h_runtime.grad(batch.size, &params, &batch.x, &batch.y, true)?;
+            let grad_ref =
+                h_store.put_new(&h_bucket, Bytes::from(f32s_to_bytes(&out.grads)))?;
+            let mut resp = Json::obj();
+            resp.set("loss", out.loss as f64)
+                .set("grad", ref_to_json(&grad_ref));
+            Ok(Bytes::from(resp.to_string().into_bytes()))
+        });
+        platform.register(FunctionSpec::new(&function, memory_mb, handler))?;
+        Ok(Self {
+            platform,
+            store,
+            runtime,
+            function,
+            bucket,
+            concurrency,
+        })
+    }
+
+    pub fn function_name(&self) -> &str {
+        &self.function
+    }
+
+    /// Run one epoch's batches through the dynamically-generated state
+    /// machine and average the gradients.
+    pub fn compute_epoch(
+        &self,
+        epoch: usize,
+        params: &[f32],
+        batches: &[Batch],
+    ) -> Result<OffloadResult> {
+        if batches.is_empty() {
+            return Err(Error::Faas("no batches to offload".into()));
+        }
+        let elems = {
+            let (h, w, c) = self.runtime.input_shape();
+            h * w * c
+        };
+        // 1. upload params once per epoch
+        let params_ref = self
+            .store
+            .put_new(&self.bucket, Bytes::from(f32s_to_bytes(params)))?;
+        // 2. upload batches + build Map payloads
+        let mut items = Vec::with_capacity(batches.len());
+        for batch in batches {
+            let batch_ref = self
+                .store
+                .put_new(&self.bucket, Bytes::from(pack_batch(batch, elems)))?;
+            let mut req = Json::obj();
+            req.set("params", ref_to_json(&params_ref))
+                .set("batch", ref_to_json(&batch_ref));
+            items.push(Bytes::from(req.to_string().into_bytes()));
+        }
+        // 3. dynamic state machine: one branch per batch
+        let sm = StateMachine::parallel_batches(
+            format!("{}-epoch{epoch}", self.function),
+            &self.function,
+            items,
+            vec![],
+            self.concurrency,
+        );
+        let report = sm.execute(&self.platform)?;
+        // 4. collect + average
+        let outputs = report
+            .outputs
+            .first()
+            .ok_or_else(|| Error::Faas("state machine produced no outputs".into()))?;
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(outputs.len());
+        let mut loss_sum = 0f64;
+        for out in outputs {
+            let resp =
+                Json::parse(std::str::from_utf8(out).map_err(|e| Error::Faas(e.to_string()))?)?;
+            loss_sum += resp.req("loss")?.as_f64().unwrap_or(f64::NAN);
+            let grad_ref = ref_from_json(resp.req("grad")?)?;
+            grads.push(bytes_to_f32s(&self.store.get_ref(&grad_ref)?));
+        }
+        let avg = super::gradient::average_batch_gradients(&grads)?;
+        Ok(OffloadResult {
+            loss: (loss_sum / outputs.len() as f64) as f32,
+            grads: avg,
+            wall: report.wall,
+            billed: report.billed,
+            cost_usd: report.cost_usd,
+            invocations: report.invocations,
+            cold_starts: report.cold_starts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Batch;
+
+    #[test]
+    fn batch_pack_roundtrip() {
+        let b = Batch { x: vec![0.5, -1.0, 2.0, 0.0], y: vec![3, 7], size: 2 };
+        let packed = pack_batch(&b, 2);
+        let back = unpack_batch(&packed).unwrap();
+        assert_eq!(back.x, b.x);
+        assert_eq!(back.y, b.y);
+        assert_eq!(back.size, 2);
+    }
+
+    #[test]
+    fn unpack_rejects_truncated() {
+        let b = Batch { x: vec![1.0; 4], y: vec![0, 1], size: 2 };
+        let mut packed = pack_batch(&b, 2);
+        packed.pop();
+        assert!(unpack_batch(&packed).is_err());
+        assert!(unpack_batch(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn ref_json_roundtrip() {
+        let r = ObjectRef { bucket: "b".into(), key: "k-1".into(), size: 42 };
+        let back = ref_from_json(&ref_to_json(&r)).unwrap();
+        assert_eq!(back, r);
+    }
+
+    // Full offload integration (real PJRT) lives in rust/tests/.
+}

@@ -1,0 +1,110 @@
+//! The RabbitMQ-based epoch barrier (§III-B.6).
+//!
+//! "Each peer sends a message to a designated synchronization queue …
+//! once the size of this synchronization queue matches the total number
+//! of peers, all peers have completed the current epoch."
+//!
+//! The barrier is cumulative: after epoch `e`, the queue has seen
+//! `e * peers` publishes (the queue is never drained mid-run; version
+//! counts are monotone, so late peers still observe past epochs).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::broker::{Broker, Message, Queue, QueueMode};
+use crate::error::Result;
+use crate::util::Bytes;
+
+pub struct EpochBarrier {
+    queue: Arc<Queue>,
+    peers: usize,
+}
+
+impl EpochBarrier {
+    pub fn new(broker: &Broker, peers: usize) -> Result<Self> {
+        let queue = broker.declare(&Broker::sync_queue(), QueueMode::Fifo)?;
+        Ok(Self { queue, peers })
+    }
+
+    /// Signal that `rank` finished epoch `epoch` (1-based), then block
+    /// until all peers have.
+    pub fn arrive_and_wait(&self, rank: usize, epoch: u64) -> Result<()> {
+        self.queue
+            .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))?;
+        self.queue.await_version(epoch * self.peers as u64);
+        Ok(())
+    }
+
+    /// As above but with a timeout; false if the barrier never filled.
+    pub fn arrive_and_wait_timeout(
+        &self,
+        rank: usize,
+        epoch: u64,
+        timeout: Duration,
+    ) -> Result<bool> {
+        self.queue
+            .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))?;
+        Ok(self
+            .queue
+            .await_version_timeout(epoch * self.peers as u64, timeout))
+    }
+
+    /// Completed arrivals so far (all epochs).
+    pub fn arrivals(&self) -> u64 {
+        self.queue.version()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn barrier_releases_all_threads_together() {
+        let broker = Arc::new(Broker::default());
+        let barrier = Arc::new(EpochBarrier::new(&broker, 3).unwrap());
+        let progressed = Arc::new(AtomicUsize::new(0));
+
+        let handles: Vec<_> = (0..3)
+            .map(|rank| {
+                let b = barrier.clone();
+                let p = progressed.clone();
+                std::thread::spawn(move || {
+                    // stagger arrivals
+                    std::thread::sleep(Duration::from_millis(5 * rank as u64));
+                    b.arrive_and_wait(rank, 1).unwrap();
+                    p.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(progressed.load(Ordering::SeqCst), 3);
+        assert_eq!(barrier.arrivals(), 3);
+    }
+
+    #[test]
+    fn barrier_times_out_with_missing_peer() {
+        let broker = Arc::new(Broker::default());
+        let barrier = EpochBarrier::new(&broker, 2).unwrap();
+        let ok = barrier
+            .arrive_and_wait_timeout(0, 1, Duration::from_millis(30))
+            .unwrap();
+        assert!(!ok, "barrier should time out when peer 1 never arrives");
+    }
+
+    #[test]
+    fn cumulative_epochs() {
+        let broker = Arc::new(Broker::default());
+        let barrier = Arc::new(EpochBarrier::new(&broker, 2).unwrap());
+        for epoch in 1..=3u64 {
+            let b0 = barrier.clone();
+            let t = std::thread::spawn(move || b0.arrive_and_wait(0, epoch).unwrap());
+            barrier.arrive_and_wait(1, epoch).unwrap();
+            t.join().unwrap();
+        }
+        assert_eq!(barrier.arrivals(), 6);
+    }
+}

@@ -1,0 +1,225 @@
+//! Cluster assembly: build the substrates, partition the data, spawn
+//! one peer thread per rank, collect the training report.
+//!
+//! This is the top-level entry the CLI / examples / harness use for
+//! *real* (PJRT-executing) runs. Cloud-scale *modeled* runs live in
+//! `harness` and drive `perfmodel` + `faas` directly.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::gradient::GradientWire;
+use super::peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
+use super::serverless::ServerlessOffload;
+use super::sync::EpochBarrier;
+use crate::broker::{Broker, FaultPlan, QueueMode, DEFAULT_MESSAGE_CAP};
+use crate::compress::codec_for;
+use crate::config::{Backend, TrainConfig};
+use crate::data::{DatasetKind, SyntheticDataset};
+use crate::error::{Error, Result};
+use crate::faas::FaasPlatform;
+use crate::metrics::{MetricsRegistry, Stage, StageSummary};
+use crate::perfmodel;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::store::ObjectStore;
+
+/// Everything a finished run reports.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub config: TrainConfig,
+    pub peers: Vec<PeerReport>,
+    /// (epoch, val_loss, val_acc) from the leader's detector.
+    pub val_curve: Vec<(u64, f32, f32)>,
+    /// Per-stage aggregates across all peers (Table I shape).
+    pub stages: Vec<(Stage, StageSummary)>,
+    pub wall: Duration,
+    /// Broker stats: (messages, bytes).
+    pub broker_msgs: u64,
+    pub broker_bytes: u64,
+    /// Faas stats if the serverless backend ran.
+    pub lambda_invocations: u64,
+    pub lambda_cost_usd: f64,
+    pub lambda_cold_starts: u64,
+}
+
+impl TrainReport {
+    pub fn epochs_run(&self) -> usize {
+        self.peers.iter().map(|p| p.epochs_run).max().unwrap_or(0)
+    }
+
+    pub fn final_val_loss(&self) -> Option<f32> {
+        self.val_curve.last().map(|&(_, l, _)| l)
+    }
+
+    pub fn final_val_acc(&self) -> Option<f32> {
+        self.val_curve.last().map(|&(_, _, a)| a)
+    }
+
+    pub fn mean_train_loss_last_epoch(&self) -> Option<f32> {
+        let losses: Vec<f32> = self
+            .peers
+            .iter()
+            .filter_map(|p| p.train_loss.last().copied())
+            .collect();
+        if losses.is_empty() {
+            None
+        } else {
+            Some(losses.iter().sum::<f32>() / losses.len() as f32)
+        }
+    }
+}
+
+/// The cluster: owns substrates, spawns peers.
+pub struct Cluster {
+    config: TrainConfig,
+    engine: Arc<Engine>,
+    faults: FaultPlan,
+}
+
+impl Cluster {
+    pub fn new(config: TrainConfig) -> Result<Self> {
+        config.validate()?;
+        Ok(Self {
+            config,
+            engine: Arc::new(Engine::new()?),
+            faults: FaultPlan::default(),
+        })
+    }
+
+    /// Reuse an existing engine (avoids re-creating the PJRT client).
+    pub fn with_engine(config: TrainConfig, engine: Arc<Engine>) -> Result<Self> {
+        config.validate()?;
+        Ok(Self { config, engine, faults: FaultPlan::default() })
+    }
+
+    /// Inject broker faults (drop/delay) for resilience experiments.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn engine(&self) -> Arc<Engine> {
+        self.engine.clone()
+    }
+
+    /// Build substrates, run all peers to completion.
+    pub fn run(&self) -> Result<TrainReport> {
+        let cfg = &self.config;
+        let kind = DatasetKind::parse(&cfg.dataset)
+            .ok_or_else(|| Error::Config(format!("unknown dataset {:?}", cfg.dataset)))?;
+
+        // ---- substrates ------------------------------------------------
+        let broker = Arc::new(Broker::new(DEFAULT_MESSAGE_CAP, self.faults));
+        let store = Arc::new(ObjectStore::new());
+        let platform = Arc::new(FaasPlatform::default());
+        let metrics = Arc::new(MetricsRegistry::new());
+        let runtime = Arc::new(ModelRuntime::load(
+            self.engine.clone(),
+            &cfg.artifacts_dir,
+            &cfg.model_key(),
+        )?);
+
+        // ---- data -------------------------------------------------------
+        let train = SyntheticDataset::new(kind, cfg.seed).generate(cfg.train_samples);
+        // validation shares the training prototypes (same classes) but
+        // draws independent noise — otherwise "generalization" would be
+        // measured against a different task.
+        let val = Arc::new(
+            SyntheticDataset::new(kind, cfg.seed ^ 0x76616c)
+                .with_prototype_seed(cfg.seed)
+                .generate(cfg.val_samples),
+        );
+        let partitions = train.partition(cfg.peers)?;
+
+        // ---- queues + barrier -------------------------------------------
+        for rank in 0..cfg.peers {
+            broker.declare(&Broker::gradient_queue(rank), QueueMode::LatestOnly)?;
+        }
+        broker.declare(&control_queue(), QueueMode::Fifo)?;
+        let barrier = Arc::new(EpochBarrier::new(&broker, cfg.peers)?);
+
+        // ---- spawn peers --------------------------------------------------
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(cfg.peers);
+        let mut partitions = partitions.into_iter();
+        for rank in 0..cfg.peers {
+            let partition = partitions.next().unwrap();
+            let codec = Arc::from(codec_for(cfg.compression, cfg.seed ^ rank as u64));
+            let wire = GradientWire::new(codec, store.clone(), DEFAULT_MESSAGE_CAP);
+            let backend = match cfg.backend {
+                Backend::Instance => GradBackend::Local { pallas: true },
+                Backend::Serverless => {
+                    let mem = if cfg.lambda_memory_mb > 0 {
+                        cfg.lambda_memory_mb
+                    } else {
+                        // Table II sizing rule for the paper counterpart
+                        perfmodel::PaperModel::from_key(&cfg.model_key())
+                            .map(|m| {
+                                perfmodel::lambda_memory_for(
+                                    perfmodel::paper_model(m),
+                                    cfg.batch_size,
+                                )
+                            })
+                            .unwrap_or(1769)
+                    };
+                    GradBackend::Serverless(ServerlessOffload::new(
+                        platform.clone(),
+                        store.clone(),
+                        runtime.clone(),
+                        rank,
+                        mem,
+                        cfg.lambda_concurrency,
+                    )?)
+                }
+            };
+            let mut peer = Peer::new(
+                rank,
+                cfg.clone(),
+                partition,
+                val.clone(),
+                runtime.clone(),
+                broker.clone(),
+                wire,
+                backend,
+                barrier.clone(),
+                metrics.clone(),
+            )?;
+            handles.push(std::thread::spawn(move || peer.run()));
+        }
+
+        let mut peers = Vec::with_capacity(cfg.peers);
+        for h in handles {
+            peers.push(
+                h.join()
+                    .map_err(|_| Error::Broker("peer thread panicked".into()))??,
+            );
+        }
+        let wall = t0.elapsed();
+
+        // ---- collect the leader's verdict history ------------------------
+        // the control queue is FIFO, so the full per-epoch curve survives
+        let mut val_curve = Vec::new();
+        if let Ok(ctl) = broker.get(&control_queue()) {
+            for m in ctl.snapshot() {
+                if let Ok(v) = Verdict::from_message(&m) {
+                    val_curve.push((v.epoch, v.val_loss, v.val_acc));
+                }
+            }
+        }
+
+        let (broker_msgs, broker_bytes) = broker.stats();
+        let fstats = platform.stats();
+        Ok(TrainReport {
+            config: cfg.clone(),
+            peers,
+            val_curve,
+            stages: metrics.all(),
+            wall,
+            broker_msgs,
+            broker_bytes,
+            lambda_invocations: fstats.invocations,
+            lambda_cost_usd: platform.total_cost_usd(),
+            lambda_cold_starts: fstats.cold_starts,
+        })
+    }
+}

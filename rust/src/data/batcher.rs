@@ -1,0 +1,109 @@
+//! Epoch batching: "Randomly partition the subset D_r into m batches of
+//! size B" (Algorithm 1). Deterministic per (seed, epoch).
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// One training batch in the layout the AOT grad artifact expects:
+/// `x` is `[b, h, w, c]` f32, `y` is `[b]` i32.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub size: usize,
+}
+
+/// Shuffling batcher over a peer's partition. Trailing samples that do
+/// not fill a batch are dropped (the AOT artifacts are shape-specialized,
+/// exactly like a `drop_last=True` PyTorch dataloader).
+#[derive(Debug)]
+pub struct Batcher {
+    batch_size: usize,
+    seed: u64,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, seed: u64) -> Self {
+        assert!(batch_size > 0, "batch_size must be positive");
+        Self { batch_size, seed }
+    }
+
+    /// Number of full batches an epoch over `data` yields.
+    pub fn num_batches(&self, data: &Dataset) -> usize {
+        data.len() / self.batch_size
+    }
+
+    /// Materialize the shuffled batches for `epoch`.
+    pub fn epoch_batches(&self, data: &Dataset, epoch: usize) -> Vec<Batch> {
+        let mut idx: Vec<usize> = (0..data.len()).collect();
+        let mut rng =
+            Rng::seed_from_u64(self.seed ^ (epoch as u64).wrapping_mul(0x9e3779b9));
+        rng.shuffle(&mut idx);
+        let elems = data.sample_elems();
+        idx.chunks_exact(self.batch_size)
+            .map(|chunk| {
+                let mut x = Vec::with_capacity(self.batch_size * elems);
+                let mut y = Vec::with_capacity(self.batch_size);
+                for &i in chunk {
+                    x.extend_from_slice(data.image(i));
+                    y.push(data.y[i]);
+                }
+                Batch { x, y, size: self.batch_size }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, SyntheticDataset};
+
+    fn data(n: usize) -> Dataset {
+        SyntheticDataset::new(DatasetKind::Mnist, 9).generate(n)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = data(50);
+        let b = Batcher::new(16, 1);
+        let batches = b.epoch_batches(&d, 0);
+        assert_eq!(batches.len(), 3); // 50/16, drop_last
+        for batch in &batches {
+            assert_eq!(batch.y.len(), 16);
+            assert_eq!(batch.x.len(), 16 * d.sample_elems());
+        }
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let d = data(64);
+        let b = Batcher::new(32, 1);
+        let e0 = b.epoch_batches(&d, 0);
+        let e1 = b.epoch_batches(&d, 1);
+        assert_ne!(e0[0].y, e1[0].y, "different epochs must reshuffle");
+        // but the same epoch is reproducible
+        let e0b = b.epoch_batches(&d, 0);
+        assert_eq!(e0[0].y, e0b[0].y);
+    }
+
+    #[test]
+    fn every_sample_used_once_per_epoch() {
+        let d = data(48);
+        let b = Batcher::new(16, 7);
+        let batches = b.epoch_batches(&d, 3);
+        let mut seen: Vec<i32> = batches.iter().flat_map(|b| b.y.clone()).collect();
+        seen.sort_unstable();
+        let mut want = d.y.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn num_batches_matches() {
+        let d = data(100);
+        assert_eq!(Batcher::new(30, 0).num_batches(&d), 3);
+        assert_eq!(Batcher::new(100, 0).num_batches(&d), 1);
+        assert_eq!(Batcher::new(101, 0).num_batches(&d), 0);
+    }
+}

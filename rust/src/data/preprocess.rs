@@ -1,0 +1,97 @@
+//! Dataset preprocessing (§III-B.1): min-max scaling, standardization,
+//! l2 normalization — applied before partitioning/upload in the paper.
+
+/// Scale features into `[0, 1]` (no-op on constant data).
+pub fn minmax_scale(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in x.iter() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = hi - lo;
+    if span <= f32::EPSILON {
+        return;
+    }
+    for v in x.iter_mut() {
+        *v = (*v - lo) / span;
+    }
+}
+
+/// Zero mean, unit variance (population std; no-op on constant data).
+pub fn standardize(x: &mut [f32]) {
+    let n = x.len();
+    if n == 0 {
+        return;
+    }
+    let mean = x.iter().sum::<f32>() / n as f32;
+    let var = x.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / n as f32;
+    let std = var.sqrt();
+    if std <= f32::EPSILON {
+        return;
+    }
+    for v in x.iter_mut() {
+        *v = (*v - mean) / std;
+    }
+}
+
+/// Scale the whole buffer to unit l2 norm (no-op on the zero vector).
+pub fn normalize_l2(x: &mut [f32]) {
+    let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+    if norm <= f32::EPSILON {
+        return;
+    }
+    for v in x.iter_mut() {
+        *v /= norm;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_bounds() {
+        let mut x = vec![-3.0, 0.0, 7.0, 2.0];
+        minmax_scale(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert_eq!(x[2], 1.0);
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn minmax_constant_noop() {
+        let mut x = vec![5.0; 4];
+        minmax_scale(&mut x);
+        assert_eq!(x, vec![5.0; 4]);
+    }
+
+    #[test]
+    fn standardize_moments() {
+        let mut x: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        standardize(&mut x);
+        let mean = x.iter().sum::<f32>() / 100.0;
+        let var = x.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 100.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn l2_norm_is_one() {
+        let mut x = vec![3.0, 4.0];
+        normalize_l2(&mut x);
+        let n = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_vectors_survive() {
+        let mut x = vec![0.0; 8];
+        normalize_l2(&mut x);
+        standardize(&mut x);
+        minmax_scale(&mut x);
+        assert_eq!(x, vec![0.0; 8]);
+    }
+}

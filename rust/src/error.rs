@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("broker: {0}")]
+    Broker(String),
+
+    #[error("message of {size} bytes exceeds queue cap of {cap} bytes")]
+    MessageTooLarge { size: usize, cap: usize },
+
+    #[error("object store: {0}")]
+    Store(String),
+
+    #[error("faas: {0}")]
+    Faas(String),
+
+    #[error("lambda function timed out after {elapsed_ms} ms (limit {limit_ms} ms)")]
+    FaasTimeout { elapsed_ms: u64, limit_ms: u64 },
+
+    #[error("codec: {0}")]
+    Codec(String),
+
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("data: {0}")]
+    Data(String),
+
+    #[error("xla: {0}")]
+    Xla(String),
+
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

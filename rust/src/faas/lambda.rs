@@ -1,0 +1,335 @@
+//! AWS-Lambda-like function platform: registry, warm pool, cold starts,
+//! timeout enforcement, GB-second billing.
+//!
+//! Handlers are in-process closures (the "deployment package"); the
+//! gradient handler used by the coordinator captures the PJRT executable
+//! and the object store, mirroring the paper's Lambda that pulls its
+//! batch from S3 (§IV-D.1).
+//!
+//! Time accounting is dual:
+//! - **measured** — wall time of the real handler (PJRT execution);
+//! - **modeled** — a caller-supplied duration from the perfmodel for
+//!   cloud-scale extrapolation. Billing uses the modeled duration when
+//!   present, else the measured one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::Bytes;
+use std::sync::{Mutex, RwLock};
+
+use super::pricing::{self, Arch};
+use crate::error::{Error, Result};
+
+/// AWS Lambda's hard limits the paper designs around (§III-A, §IV-D.1).
+pub const MAX_TIMEOUT: Duration = Duration::from_secs(15 * 60);
+pub const MAX_MEMORY_MB: u32 = 10_240;
+/// Zipped deployment package limit (paper packs PyTorch under 50 MB).
+pub const MAX_ZIP_MB: u32 = 50;
+/// Unzipped layers limit.
+pub const MAX_UNZIPPED_MB: u32 = 250;
+
+/// A function handler: request bytes in, response bytes out.
+pub type Handler = Arc<dyn Fn(&Bytes) -> Result<Bytes> + Send + Sync>;
+
+/// Registered function configuration.
+#[derive(Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    pub memory_mb: u32,
+    pub timeout: Duration,
+    pub arch: Arch,
+    pub handler: Handler,
+}
+
+impl FunctionSpec {
+    pub fn new(name: impl Into<String>, memory_mb: u32, handler: Handler) -> Self {
+        Self {
+            name: name.into(),
+            memory_mb,
+            timeout: MAX_TIMEOUT,
+            arch: Arch::Arm64,
+            handler,
+        }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+}
+
+/// One finished invocation.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub function: String,
+    pub output: Bytes,
+    /// Real handler wall time.
+    pub measured: Duration,
+    /// Duration used for billing/wall aggregation (modeled if supplied).
+    pub billed: Duration,
+    /// Cold-start latency (zero for warm starts) — affects wall time,
+    /// not billing (AWS does not bill init for managed runtimes).
+    pub cold_start: Duration,
+    pub memory_mb: u32,
+    pub cost_usd: f64,
+}
+
+impl Invocation {
+    /// Wall-clock contribution of this invocation (init + execution).
+    pub fn wall(&self) -> Duration {
+        self.cold_start + self.billed
+    }
+}
+
+/// Platform-wide counters.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PlatformStats {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub errors: u64,
+    pub billed_ms: u64,
+}
+
+/// The Lambda platform.
+pub struct FaasPlatform {
+    functions: RwLock<HashMap<String, FunctionSpec>>,
+    /// Warm execution environments per function.
+    warm: Mutex<HashMap<String, usize>>,
+    cold_start: Duration,
+    invocations: AtomicU64,
+    cold_starts: AtomicU64,
+    errors: AtomicU64,
+    billed_ms: AtomicU64,
+    cost_microcents: AtomicU64,
+}
+
+impl Default for FaasPlatform {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(2500))
+    }
+}
+
+impl FaasPlatform {
+    /// `cold_start`: modeled init latency for a fresh environment (the
+    /// paper's PyTorch-on-ARM images land in the seconds range).
+    pub fn new(cold_start: Duration) -> Self {
+        Self {
+            functions: RwLock::new(HashMap::new()),
+            warm: Mutex::new(HashMap::new()),
+            cold_start,
+            invocations: AtomicU64::new(0),
+            cold_starts: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            billed_ms: AtomicU64::new(0),
+            cost_microcents: AtomicU64::new(0),
+        }
+    }
+
+    pub fn register(&self, spec: FunctionSpec) -> Result<()> {
+        if spec.memory_mb > MAX_MEMORY_MB {
+            return Err(Error::Faas(format!(
+                "{}: {} MB exceeds the {} MB Lambda cap",
+                spec.name, spec.memory_mb, MAX_MEMORY_MB
+            )));
+        }
+        if spec.timeout > MAX_TIMEOUT {
+            return Err(Error::Faas(format!(
+                "{}: timeout {:?} exceeds the 15-minute Lambda cap",
+                spec.name, spec.timeout
+            )));
+        }
+        self.functions.write().unwrap().insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<FunctionSpec> {
+        self.functions
+            .read().unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Faas(format!("unknown function {name:?}")))
+    }
+
+    /// Invoke synchronously; `modeled` overrides the billed duration for
+    /// perfmodel-driven extrapolation runs.
+    pub fn invoke(&self, name: &str, payload: &Bytes, modeled: Option<Duration>) -> Result<Invocation> {
+        let spec = self.get(name)?;
+        self.invocations.fetch_add(1, Ordering::Relaxed);
+
+        // warm-pool bookkeeping: take a warm environment if available,
+        // otherwise this is a cold start (returned to the pool after).
+        let cold = {
+            let mut warm = self.warm.lock().unwrap();
+            let slot = warm.entry(spec.name.clone()).or_insert(0);
+            if *slot > 0 {
+                *slot -= 1;
+                false
+            } else {
+                true
+            }
+        };
+        let cold_start = if cold {
+            self.cold_starts.fetch_add(1, Ordering::Relaxed);
+            self.cold_start
+        } else {
+            Duration::ZERO
+        };
+
+        let t0 = Instant::now();
+        let result = (spec.handler)(payload);
+        let measured = t0.elapsed();
+
+        // environment becomes warm for subsequent invokes
+        {
+            let mut warm = self.warm.lock().unwrap();
+            *warm.entry(spec.name.clone()).or_insert(0) += 1;
+        }
+
+        let output = match result {
+            Ok(o) => o,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+
+        let billed = modeled.unwrap_or(measured);
+        if billed > spec.timeout {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::FaasTimeout {
+                elapsed_ms: billed.as_millis() as u64,
+                limit_ms: spec.timeout.as_millis() as u64,
+            });
+        }
+        let billed_ms = billed.as_millis() as u64;
+        let cost = pricing::invocation_cost(spec.memory_mb, billed_ms, spec.arch);
+        self.billed_ms.fetch_add(billed_ms, Ordering::Relaxed);
+        self.cost_microcents
+            .fetch_add((cost * 1e8) as u64, Ordering::Relaxed);
+
+        Ok(Invocation {
+            function: spec.name,
+            output,
+            measured,
+            billed,
+            cold_start,
+            memory_mb: spec.memory_mb,
+            cost_usd: cost,
+        })
+    }
+
+    pub fn stats(&self) -> PlatformStats {
+        PlatformStats {
+            invocations: self.invocations.load(Ordering::Relaxed),
+            cold_starts: self.cold_starts.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            billed_ms: self.billed_ms.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total accumulated USD billed across invocations.
+    pub fn total_cost_usd(&self) -> f64 {
+        self.cost_microcents.load(Ordering::Relaxed) as f64 / 1e8
+    }
+
+    /// Pre-warm `n` environments (provisioned concurrency).
+    pub fn prewarm(&self, name: &str, n: usize) {
+        *self.warm.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo() -> Handler {
+        Arc::new(|b: &Bytes| Ok(b.clone()))
+    }
+
+    fn platform() -> FaasPlatform {
+        FaasPlatform::new(Duration::from_millis(100))
+    }
+
+    #[test]
+    fn register_and_invoke() {
+        let p = platform();
+        p.register(FunctionSpec::new("echo", 512, echo())).unwrap();
+        let inv = p.invoke("echo", &Bytes::from_static(b"hi"), None).unwrap();
+        assert_eq!(&inv.output[..], b"hi");
+        assert!(inv.cost_usd > 0.0);
+    }
+
+    #[test]
+    fn unknown_function_errors() {
+        let p = platform();
+        assert!(p.invoke("nope", &Bytes::new(), None).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_memory() {
+        let p = platform();
+        let spec = FunctionSpec::new("big", MAX_MEMORY_MB + 1, echo());
+        assert!(p.register(spec).is_err());
+    }
+
+    #[test]
+    fn first_invoke_is_cold_then_warm() {
+        let p = platform();
+        p.register(FunctionSpec::new("f", 512, echo())).unwrap();
+        let i1 = p.invoke("f", &Bytes::new(), None).unwrap();
+        let i2 = p.invoke("f", &Bytes::new(), None).unwrap();
+        assert_eq!(i1.cold_start, Duration::from_millis(100));
+        assert_eq!(i2.cold_start, Duration::ZERO);
+        assert_eq!(p.stats().cold_starts, 1);
+    }
+
+    #[test]
+    fn prewarm_avoids_cold_start() {
+        let p = platform();
+        p.register(FunctionSpec::new("f", 512, echo())).unwrap();
+        p.prewarm("f", 1);
+        let inv = p.invoke("f", &Bytes::new(), None).unwrap();
+        assert_eq!(inv.cold_start, Duration::ZERO);
+    }
+
+    #[test]
+    fn modeled_time_drives_billing_and_timeout() {
+        let p = platform();
+        p.register(
+            FunctionSpec::new("f", 1024, echo())
+                .with_timeout(Duration::from_secs(10)),
+        )
+        .unwrap();
+        let inv = p
+            .invoke("f", &Bytes::new(), Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(inv.billed, Duration::from_secs(5));
+        // exceeding the function timeout errors (15-min class behaviour)
+        let err = p.invoke("f", &Bytes::new(), Some(Duration::from_secs(11)));
+        assert!(matches!(err, Err(Error::FaasTimeout { .. })));
+    }
+
+    #[test]
+    fn handler_error_counted() {
+        let p = platform();
+        let failing: Handler = Arc::new(|_| Err(Error::Faas("boom".into())));
+        p.register(FunctionSpec::new("f", 512, failing)).unwrap();
+        assert!(p.invoke("f", &Bytes::new(), None).is_err());
+        assert_eq!(p.stats().errors, 1);
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let p = platform();
+        p.register(FunctionSpec::new("f", 2048, echo())).unwrap();
+        for _ in 0..3 {
+            p.invoke("f", &Bytes::new(), Some(Duration::from_secs(1))).unwrap();
+        }
+        let want = 3.0 * pricing::invocation_cost(2048, 1000, Arch::Arm64);
+        // microcent-granular accumulator => ~1e-8 truncation per call
+        assert!((p.total_cost_usd() - want).abs() < 1e-6);
+    }
+}

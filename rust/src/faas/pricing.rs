@@ -1,0 +1,82 @@
+//! AWS Lambda pricing (ARM/Graviton rate — the paper deploys on a
+//! "custom ARM architecture", §IV-D.1).
+
+/// USD per GB-second, arm64 (matches the paper's Table II rates:
+/// 4400 MB -> $0.0000573/s).
+pub const ARM_USD_PER_GB_S: f64 = 0.0000133334;
+
+/// USD per GB-second, x86_64 (for comparison experiments).
+pub const X86_USD_PER_GB_S: f64 = 0.0000166667;
+
+/// USD per million requests.
+pub const USD_PER_1M_REQUESTS: f64 = 0.20;
+
+/// Billing granularity: AWS bills per 1 ms.
+pub const BILLING_QUANTUM_MS: u64 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Arm64,
+    X86_64,
+}
+
+/// Per-second execution price of a function sized at `memory_mb`.
+pub fn price_per_second(memory_mb: u32, arch: Arch) -> f64 {
+    let rate = match arch {
+        Arch::Arm64 => ARM_USD_PER_GB_S,
+        Arch::X86_64 => X86_USD_PER_GB_S,
+    };
+    memory_mb as f64 / 1024.0 * rate
+}
+
+/// Total invocation cost: duration (rounded up to the billing quantum)
+/// times the memory rate, plus the per-request fee.
+pub fn invocation_cost(memory_mb: u32, billed_ms: u64, arch: Arch) -> f64 {
+    let quantized = billed_ms.div_ceil(BILLING_QUANTUM_MS) * BILLING_QUANTUM_MS;
+    price_per_second(memory_mb, arch) * quantized as f64 / 1000.0
+        + USD_PER_1M_REQUESTS / 1_000_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table2_rates() {
+        // Table II "Estimated Lambda Cost (USD / seconds)" per memory size
+        let cases = [
+            (4400u32, 0.0000573f64),
+            (2800, 0.0000362),
+            (1800, 0.0000233),
+            (1700, 0.0000220),
+        ];
+        for (mem, want) in cases {
+            let got = price_per_second(mem, Arch::Arm64);
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "mem {mem}: got {got}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn x86_is_pricier() {
+        assert!(
+            price_per_second(1024, Arch::X86_64) > price_per_second(1024, Arch::Arm64)
+        );
+    }
+
+    #[test]
+    fn invocation_includes_request_fee() {
+        let c = invocation_cost(1024, 0, Arch::Arm64);
+        assert!((c - 0.2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invocation_scales_linearly() {
+        let c1 = invocation_cost(2048, 1000, Arch::Arm64);
+        let c2 = invocation_cost(2048, 2000, Arch::Arm64);
+        let fee = USD_PER_1M_REQUESTS / 1e6;
+        assert!(((c2 - fee) - 2.0 * (c1 - fee)).abs() < 1e-12);
+    }
+}

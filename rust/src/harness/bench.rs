@@ -1,0 +1,161 @@
+//! Micro-benchmark harness (in-tree criterion stand-in — the build is
+//! offline). Used by every target under `rust/benches/`.
+//!
+//! Methodology: warmup iterations, then timed samples; reports mean,
+//! median, p95 and throughput. Deliberately simple and deterministic —
+//! no outlier rejection, which keeps before/after comparisons in
+//! EXPERIMENTS.md §Perf honest.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A benchmark group with shared sample counts.
+pub struct Bench {
+    group: String,
+    warmup: usize,
+    samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // keep sample counts moderate: several benches run real PJRT
+        Self { group: group.to_string(), warmup: 3, samples: 12, results: Vec::new() }
+    }
+
+    pub fn with_samples(mut self, warmup: usize, samples: usize) -> Self {
+        self.warmup = warmup;
+        self.samples = samples;
+        self
+    }
+
+    /// Time `f` (which must do one full unit of work per call).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = BenchStats {
+            name: format!("{}/{}", self.group, name),
+            samples: self.samples,
+            mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+            median_ns: times[times.len() / 2],
+            p95_ns: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            min_ns: times[0],
+        };
+        println!(
+            "{:<52} mean {:>10}  median {:>10}  p95 {:>10}",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns)
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Like `bench` but annotates throughput for `items` per iteration.
+    pub fn bench_throughput<R>(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &str,
+        f: impl FnMut() -> R,
+    ) -> &BenchStats {
+        let before = self.results.len();
+        self.bench(name, f);
+        let stats = &self.results[before];
+        println!(
+            "{:<52}   -> {:.2} {unit}/s",
+            "",
+            stats.throughput(items)
+        );
+        &self.results[before]
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Print the standard bench header.
+pub fn header(group: &str, note: &str) {
+    println!("\n=== bench: {group} ===");
+    if !note.is_empty() {
+        println!("{note}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let mut b = Bench::new("t").with_samples(1, 5);
+        let s = b.bench("noop", || 1 + 1).clone();
+        assert_eq!(s.samples, 5);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns + 1.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = BenchStats {
+            name: "x".into(),
+            samples: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p95_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((s.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,321 @@
+//! Cloud-scale experiment drivers (perfmodel-calibrated): fig 3,
+//! Tables II/III, fig 4, fig 5 and the headline numbers.
+//!
+//! These reproduce the paper's AWS-scale measurements through the
+//! calibrated time model (DESIGN.md substitution table) while running
+//! the *real* orchestration code: the Step-Functions Map state executes
+//! with modeled durations and real billing, the QSGD codec really
+//! encodes VGG-scale gradients for fig 5.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::report::{fmt_pct, fmt_secs, fmt_usd, Table};
+use crate::cloud;
+use crate::compress::{Codec, QsgdCodec};
+use crate::costs::{instance_cost_per_peer, serverless_cost_per_peer, CostInputs};
+use crate::error::Result;
+use crate::faas::{FaasPlatform, FunctionSpec, Handler, StateMachine};
+use crate::perfmodel::{
+    self, paper_model, PaperModel, LAMBDA_COLD_START,
+};
+use crate::util::{Bytes, Rng};
+
+/// MNIST-scale training set the paper partitions (60 000 samples).
+pub const DATASET_SIZE: usize = 60_000;
+/// AWS default account-level Lambda concurrency.
+pub const LAMBDA_CONCURRENCY: usize = 1000;
+
+/// One fig-3 cell: serverless vs instance partition-pass time.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig3Cell {
+    pub peers: usize,
+    pub batch: usize,
+    pub nbatches: usize,
+    pub instance_s: f64,
+    pub serverless_s: f64,
+    pub improvement: f64,
+}
+
+/// Compute one fig-3 cell, running the *real* state machine with
+/// modeled durations (so orchestration, retry and billing code paths
+/// are exercised, not just arithmetic).
+pub fn fig3_cell(model: PaperModel, peers: usize, batch: usize) -> Result<Fig3Cell> {
+    let spec = paper_model(model);
+    let inst = cloud::instance(spec.paper_instance)?;
+    let partition = DATASET_SIZE / peers;
+    let nbatches = (partition / batch).max(1);
+
+    let instance_s =
+        perfmodel::instance_partition_time(spec, inst, batch, nbatches).as_secs_f64();
+
+    // serverless: dynamic Map state over nbatches modeled lambdas
+    let mem = perfmodel::lambda_memory_for(spec, batch);
+    let lam = perfmodel::lambda_batch_time(spec, mem, batch);
+    let platform = FaasPlatform::new(LAMBDA_COLD_START);
+    let noop: Handler = Arc::new(|b: &Bytes| Ok(b.clone()));
+    platform.register(FunctionSpec::new("grad", mem, noop))?;
+    let items: Vec<Bytes> = (0..nbatches).map(|_| Bytes::new()).collect();
+    let modeled = vec![Some(lam); nbatches];
+    let sm = StateMachine::parallel_batches("fig3", "grad", items, modeled, LAMBDA_CONCURRENCY);
+    let report = sm.execute(&platform)?;
+    let serverless_s = report.wall.as_secs_f64();
+
+    Ok(Fig3Cell {
+        peers,
+        batch,
+        nbatches,
+        instance_s,
+        serverless_s,
+        improvement: 1.0 - serverless_s / instance_s,
+    })
+}
+
+/// Fig 3: gradient-computation time with and without serverless, for
+/// peers x batch-size grid (VGG-11/MNIST as in the paper).
+pub fn fig3() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 3 — gradient computation time per epoch partition: serverless vs instance (VGG-11, MNIST)",
+        &["peers", "batch", "nbatches", "serverless", "instance", "improvement"],
+    );
+    for &peers in &[4usize, 8, 12] {
+        for &batch in &[64usize, 128, 512, 1024] {
+            let c = fig3_cell(PaperModel::Vgg11, peers, batch)?;
+            t.row(vec![
+                c.peers.to_string(),
+                c.batch.to_string(),
+                c.nbatches.to_string(),
+                fmt_secs(c.serverless_s),
+                fmt_secs(c.instance_s),
+                fmt_pct(c.improvement),
+            ]);
+        }
+    }
+    t.note("paper: 97.34% at 4 peers/batch 64; improvement shrinks as batch grows");
+    t.note("serverless wall = real Step-Functions Map execution with perfmodel durations");
+    Ok(t)
+}
+
+/// Table II: time + cost of serverless gradient computation (4 peers).
+pub fn table2() -> Result<Table> {
+    let spec = paper_model(PaperModel::Vgg11);
+    let host = cloud::instance("t2.small")?;
+    let mut t = Table::new(
+        "Table II — serverless compute gradients: time & cost (VGG-11, MNIST, 4 peers, t2.small hosts)",
+        &["batch", "nbatches", "lambda mem", "time", "lambda $/s", "ec2 $/s", "cost/peer", "paper cost"],
+    );
+    let paper_cost = [(1024usize, 0.03567f64), (512, 0.03069), (128, 0.03451), (64, 0.05435)];
+    for &(batch, paper) in &paper_cost {
+        let nbatches = (DATASET_SIZE / 4 / batch).max(1);
+        let mem = perfmodel::lambda_memory_for(spec, batch);
+        let time = perfmodel::lambda_batch_time(spec, mem, batch).as_secs_f64();
+        let rep = serverless_cost_per_peer(
+            host,
+            CostInputs { compute_time_s: time, num_batches: nbatches, lambda_memory_mb: mem },
+        );
+        t.row(vec![
+            batch.to_string(),
+            nbatches.to_string(),
+            format!("{mem} MB"),
+            fmt_secs(time),
+            format!("{:.7}", rep.lambda_rate_per_s),
+            format!("{:.8}", rep.ec2_rate_per_s),
+            fmt_usd(rep.cost_per_peer_usd),
+            fmt_usd(paper),
+        ]);
+    }
+    t.note("cost per paper Eq.(1); time from the calibrated lambda model");
+    Ok(t)
+}
+
+/// Table III: time + cost of instance-based gradient computation.
+pub fn table3() -> Result<Table> {
+    let spec = paper_model(PaperModel::Vgg11);
+    let inst = cloud::instance("t2.large")?;
+    let mut t = Table::new(
+        "Table III — instance-based compute gradients: time & cost (VGG-11, MNIST, 4 peers, t2.large)",
+        &["batch", "nbatches", "time", "ec2 $/s", "cost/peer", "paper cost"],
+    );
+    let paper_cost = [(1024usize, 0.00665f64), (512, 0.00717), (128, 0.00851), (64, 0.01017)];
+    for &(batch, paper) in &paper_cost {
+        let nbatches = (DATASET_SIZE / 4 / batch).max(1);
+        let time = perfmodel::instance_partition_time(spec, inst, batch, nbatches).as_secs_f64();
+        let rep = instance_cost_per_peer(inst, time);
+        t.row(vec![
+            batch.to_string(),
+            nbatches.to_string(),
+            fmt_secs(time),
+            format!("{:.8}", rep.ec2_rate_per_s),
+            fmt_usd(rep.cost_per_peer_usd),
+            fmt_usd(paper),
+        ]);
+    }
+    t.note("cost per paper Eq.(2)");
+    Ok(t)
+}
+
+/// Fig 4: computation vs communication time as the peer count grows
+/// (VGG-11 and MobileNetV3-Small, batch 1024).
+pub fn fig4() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 4 — compute vs communication time per epoch over #peers (batch 1024)",
+        &["model", "peers", "compute", "send", "recv", "comm total"],
+    );
+    for model in [PaperModel::Vgg11, PaperModel::MobilenetV3Small] {
+        let spec = paper_model(model);
+        let inst = cloud::instance(spec.paper_instance)?;
+        for &peers in &[2usize, 4, 8, 12, 16] {
+            let partition = DATASET_SIZE / peers;
+            let nbatches = (partition / 1024).max(1);
+            let compute =
+                perfmodel::instance_partition_time(spec, inst, 1024, nbatches).as_secs_f64();
+            let send = perfmodel::send_time(spec.gradient_bytes(), 1.0).as_secs_f64();
+            let recv =
+                perfmodel::recv_time(spec.gradient_bytes(), peers - 1, 1.0).as_secs_f64();
+            t.row(vec![
+                spec.name.to_string(),
+                peers.to_string(),
+                fmt_secs(compute),
+                fmt_secs(send),
+                fmt_secs(recv),
+                fmt_secs(send + recv),
+            ]);
+        }
+    }
+    t.note("paper shape: compute shrinks with peers (smaller partition), comm grows with peers");
+    t.note("VGG's comm growth dwarfs MobileNet's (531.6 MB vs 10 MB gradients)");
+    Ok(t)
+}
+
+/// Fig 5: QSGD compression impact on send/receive time (VGG-11, MNIST,
+/// 4 peers). The codec time is *measured* on a real VGG-sized gradient;
+/// transfer time comes from the calibrated bandwidth model.
+pub fn fig5() -> Result<Table> {
+    let spec = paper_model(PaperModel::Vgg11);
+    let n = spec.params as usize;
+    let codec = QsgdCodec::new(16, 7);
+
+    // measured on a real 132.9M-element gradient
+    let mut rng = Rng::seed_from_u64(11);
+    let v: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+    let t0 = Instant::now();
+    let wire = codec.encode(&v)?;
+    let enc = t0.elapsed();
+    let t0 = Instant::now();
+    let _ = codec.decode(&wire)?;
+    let dec = t0.elapsed();
+    let ratio = (n * 4) as f64 / wire.len() as f64;
+    drop(v);
+
+    let mut t = Table::new(
+        "Fig 5 — compression impact on communication time (VGG-11, 4 peers, QSGD s=16)",
+        &["batch", "send plain", "send qsgd", "recv plain", "recv qsgd", "speedup"],
+    );
+    for &batch in &[64usize, 128, 512, 1024] {
+        let bytes = spec.gradient_bytes();
+        let send_plain = perfmodel::send_time(bytes, 1.0);
+        let recv_plain = perfmodel::recv_time(bytes, 3, 1.0);
+        // compressed: transfer shrinks by the wire ratio, encode/decode
+        // CPU time is added on the respective sides
+        let send_q = perfmodel::send_time(bytes, ratio) + enc;
+        let recv_q = perfmodel::recv_time(bytes, 3, ratio) + dec * 3;
+        let speedup = (send_plain + recv_plain).as_secs_f64()
+            / (send_q + recv_q).as_secs_f64();
+        t.row(vec![
+            batch.to_string(),
+            fmt_secs(send_plain.as_secs_f64()),
+            fmt_secs(send_q.as_secs_f64()),
+            fmt_secs(recv_plain.as_secs_f64()),
+            fmt_secs(recv_q.as_secs_f64()),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    t.note(format!(
+        "measured rust QSGD on {} params: encode {:?}, decode {:?}, wire ratio {:.2}x",
+        n, enc, dec, ratio
+    ));
+    t.note("gradient size is batch-independent; the paper's per-batch variation is measurement noise");
+    Ok(t)
+}
+
+/// The paper's two headline numbers, derived from the same machinery.
+pub fn headline() -> Result<Table> {
+    let c = fig3_cell(PaperModel::Vgg11, 4, 64)?;
+    let spec = paper_model(PaperModel::Vgg11);
+    let host = cloud::instance("t2.small")?;
+    let inst = cloud::instance("t2.large")?;
+    let nb = DATASET_SIZE / 4 / 1024;
+    let mem = perfmodel::lambda_memory_for(spec, 1024);
+    let lam_t = perfmodel::lambda_batch_time(spec, mem, 1024).as_secs_f64();
+    let srv = serverless_cost_per_peer(
+        host,
+        CostInputs { compute_time_s: lam_t, num_batches: nb, lambda_memory_mb: mem },
+    )
+    .cost_per_peer_usd;
+    let ins_t = perfmodel::instance_partition_time(spec, inst, 1024, nb).as_secs_f64();
+    let ins = instance_cost_per_peer(inst, ins_t).cost_per_peer_usd;
+
+    let mut t = Table::new(
+        "Headline claims",
+        &["claim", "paper", "reproduced"],
+    );
+    t.row(vec![
+        "gradient-time improvement (4 peers, batch 64)".into(),
+        "97.34%".into(),
+        fmt_pct(c.improvement),
+    ]);
+    t.row(vec![
+        "serverless/instance cost ratio (batch 1024)".into(),
+        "5.34x".into(),
+        format!("{:.2}x", srv / ins),
+    ]);
+    Ok(t)
+}
+
+/// Sanity helper for tests: the improvement monotone story.
+pub fn improvement_at(peers: usize, batch: usize) -> Result<f64> {
+    Ok(fig3_cell(PaperModel::Vgg11, peers, batch)?.improvement)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_headline_cell() {
+        let c = fig3_cell(PaperModel::Vgg11, 4, 64).unwrap();
+        assert!(c.improvement > 0.95, "improvement {}", c.improvement);
+        assert_eq!(c.nbatches, 234); // 15000/64
+    }
+
+    #[test]
+    fn fig3_improvement_decreases_with_larger_batches() {
+        let small = improvement_at(4, 64).unwrap();
+        let large = improvement_at(4, 1024).unwrap();
+        assert!(small > large, "{small} vs {large}");
+    }
+
+    #[test]
+    fn fig4_crossover_shape() {
+        // VGG comm at 12 peers must exceed MobileNet comm at 12 peers by
+        // a wide margin, and VGG compute must shrink with peers.
+        let spec = paper_model(PaperModel::Vgg11);
+        let inst = cloud::instance("t2.large").unwrap();
+        let c4 = perfmodel::instance_partition_time(spec, inst, 1024, DATASET_SIZE / 4 / 1024);
+        let c12 = perfmodel::instance_partition_time(spec, inst, 1024, DATASET_SIZE / 12 / 1024);
+        assert!(c12 < c4);
+        let comm_vgg = perfmodel::recv_time(spec.gradient_bytes(), 11, 1.0);
+        let mb = paper_model(PaperModel::MobilenetV3Small);
+        let comm_mb = perfmodel::recv_time(mb.gradient_bytes(), 11, 1.0);
+        assert!(comm_vgg > comm_mb * 10);
+    }
+
+    #[test]
+    fn tables_build() {
+        // fig5 measures a 132.9M-element encode — skip here (bench
+        // covers it); the cheap tables must all build.
+        for t in [table2().unwrap(), table3().unwrap(), fig4().unwrap()] {
+            assert!(!t.rows.is_empty());
+        }
+    }
+}

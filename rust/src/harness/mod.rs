@@ -1,0 +1,64 @@
+//! Experiment harness: one driver per paper table/figure, plus the
+//! in-tree micro-benchmark harness.
+//!
+//! | id       | paper artefact | driver |
+//! |----------|----------------|--------|
+//! | table1   | Table I        | [`real_exps::table1`] (real PJRT) |
+//! | fig3     | Fig 3          | [`cloud_exps::fig3`] (modeled)    |
+//! | table2   | Table II       | [`cloud_exps::table2`]            |
+//! | table3   | Table III      | [`cloud_exps::table3`]            |
+//! | fig4     | Fig 4          | [`cloud_exps::fig4`]              |
+//! | fig5     | Fig 5          | [`cloud_exps::fig5`] (real codec) |
+//! | fig6     | Fig 6          | [`real_exps::fig6`] (real PJRT)   |
+//! | headline | abstract       | [`cloud_exps::headline`]          |
+
+pub mod bench;
+pub mod cloud_exps;
+pub mod real_exps;
+pub mod report;
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::Engine;
+
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table1", "fig3", "table2", "table3", "fig4", "fig5", "fig6", "headline",
+];
+
+/// Run one experiment by id, print its table, save JSON to `out_dir`.
+pub fn run(id: &str, quick: bool, out_dir: &str, engine: Option<Arc<Engine>>) -> Result<()> {
+    let need_engine = || -> Result<Arc<Engine>> {
+        match &engine {
+            Some(e) => Ok(e.clone()),
+            None => Ok(Arc::new(Engine::new()?)),
+        }
+    };
+    let table = match id {
+        "table1" => real_exps::table1(need_engine()?, quick)?,
+        "fig3" => cloud_exps::fig3()?,
+        "table2" => cloud_exps::table2()?,
+        "table3" => cloud_exps::table3()?,
+        "fig4" => cloud_exps::fig4()?,
+        "fig5" => cloud_exps::fig5()?,
+        "fig6" => real_exps::fig6(need_engine()?, quick)?,
+        "headline" => cloud_exps::headline()?,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown experiment {other:?}; try one of {ALL_EXPERIMENTS:?} or `all`"
+            )))
+        }
+    };
+    table.print();
+    table.save(out_dir, id)?;
+    Ok(())
+}
+
+/// Run every experiment (a shared engine keeps PJRT compiles cached).
+pub fn run_all(quick: bool, out_dir: &str) -> Result<()> {
+    let engine = Arc::new(Engine::new()?);
+    for id in ALL_EXPERIMENTS {
+        run(id, quick, out_dir, Some(engine.clone()))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Real-execution experiment drivers: Table I (per-stage resource
+//! usage) and fig 6 (sync vs async convergence). These run the actual
+//! cluster — PJRT gradients, broker exchange, barriers — on the mini
+//! models, and print measured numbers next to the paper's.
+
+use std::sync::Arc;
+
+use super::report::{fmt_secs, Table};
+use crate::config::{Backend, SyncMode, TrainConfig};
+use crate::coordinator::{Cluster, TrainReport};
+use crate::error::Result;
+use crate::metrics::Stage;
+use crate::runtime::Engine;
+
+/// Paper Table I reference values (MNIST column, seconds) for the
+/// side-by-side: (model, [compute, send, recv, update, convergence]).
+pub const PAPER_TABLE1_MNIST_S: &[(&str, [f64; 5])] = &[
+    ("mini_squeezenet", [14.93, 0.084, 0.25, 0.18, 0.19]),
+    ("mini_mobilenet", [29.72, 0.11, 0.38, 0.015, 1.12]),
+    ("mini_vgg", [104.37, 7.38, 15.55, 4.8, 9.20]),
+];
+
+fn stage_mean_s(report: &TrainReport, stage: Stage) -> f64 {
+    report
+        .stages
+        .iter()
+        .find(|(s, _)| *s == stage)
+        .map(|(_, sum)| sum.mean_wall().as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+fn stage_cpu(report: &TrainReport, stage: Stage) -> f64 {
+    report
+        .stages
+        .iter()
+        .find(|(s, _)| *s == stage)
+        .map(|(_, sum)| sum.mean_cpu_pct)
+        .unwrap_or(0.0)
+}
+
+fn stage_rss_mb(report: &TrainReport, stage: Stage) -> f64 {
+    report
+        .stages
+        .iter()
+        .find(|(s, _)| *s == stage)
+        .map(|(_, sum)| sum.peak_rss_bytes as f64 / 1e6)
+        .unwrap_or(0.0)
+}
+
+/// Table I: run 4 peers on each model (both datasets unless quick) and
+/// report the measured per-stage wall/CPU/RSS, with the paper's MNIST
+/// wall times alongside.
+pub fn table1(engine: Arc<Engine>, quick: bool) -> Result<Table> {
+    let mut t = Table::new(
+        "Table I — per-stage resource usage, 4 peers (measured on mini models, real PJRT)",
+        &[
+            "model", "dataset", "stage", "wall (mean)", "cpu %", "rss MB", "paper wall (full-scale)",
+        ],
+    );
+    let datasets: &[&str] = if quick { &["mnist"] } else { &["mnist", "cifar"] };
+    let models: &[&str] = if quick {
+        &["mini_squeezenet"]
+    } else {
+        &["mini_squeezenet", "mini_mobilenet", "mini_vgg"]
+    };
+    for &model in models {
+        for &dataset in datasets {
+            let config = TrainConfig {
+                model: model.into(),
+                dataset: dataset.into(),
+                peers: 4,
+                batch_size: 16,
+                epochs: if quick { 1 } else { 2 },
+                train_samples: 4 * 16 * if quick { 2 } else { 4 },
+                val_samples: 256,
+                backend: Backend::Instance,
+                sync: SyncMode::Synchronous,
+                ..Default::default()
+            };
+            let report = Cluster::with_engine(config, engine.clone())?.run()?;
+            let paper = PAPER_TABLE1_MNIST_S
+                .iter()
+                .find(|(m, _)| *m == model)
+                .map(|(_, v)| *v)
+                .unwrap_or([f64::NAN; 5]);
+            for (i, stage) in Stage::ALL.iter().enumerate() {
+                t.row(vec![
+                    model.into(),
+                    dataset.into(),
+                    stage.to_string(),
+                    fmt_secs(stage_mean_s(&report, *stage)),
+                    format!("{:.1}", stage_cpu(&report, *stage)),
+                    format!("{:.0}", stage_rss_mb(&report, *stage)),
+                    if dataset == "mnist" {
+                        fmt_secs(paper[i])
+                    } else {
+                        "-".into()
+                    },
+                ]);
+            }
+        }
+    }
+    t.note("paper columns are full-scale models on t2 instances; ours are CPU-PJRT minis —");
+    t.note("the claim under test is the SHAPE: compute_gradients dominates every other stage");
+    Ok(t)
+}
+
+/// The Table-I conclusion as a checkable predicate: gradient computation
+/// dominates all other stages.
+pub fn table1_dominant_stage(engine: Arc<Engine>) -> Result<Stage> {
+    let config = TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 1,
+        train_samples: 2 * 16 * 2,
+        val_samples: 64,
+        ..Default::default()
+    };
+    let report = Cluster::with_engine(config, engine)?.run()?;
+    let mut best = (Stage::SendGradients, std::time::Duration::ZERO);
+    for (stage, s) in &report.stages {
+        if s.total_wall > best.1 {
+            best = (*stage, s.total_wall);
+        }
+    }
+    Ok(best.0)
+}
+
+/// Fig 6: synchronous vs asynchronous P2P convergence (MobileNet-style
+/// model, the paper's batch 64 scaled to the testbed).
+pub fn fig6(engine: Arc<Engine>, quick: bool) -> Result<Table> {
+    let epochs = if quick { 4 } else { 12 };
+    let base = TrainConfig {
+        model: "mini_mobilenet".into(),
+        dataset: "mnist".into(),
+        peers: 4,
+        batch_size: 16,
+        epochs,
+        lr: 0.05,
+        train_samples: 4 * 16 * 4,
+        val_samples: 256,
+        backend: Backend::Instance,
+        ..Default::default()
+    };
+    let sync_cfg = TrainConfig { sync: SyncMode::Synchronous, ..base.clone() };
+    let async_cfg = TrainConfig { sync: SyncMode::Asynchronous, ..base };
+    let sync_rep = Cluster::with_engine(sync_cfg, engine.clone())?.run()?;
+    let async_rep = Cluster::with_engine(async_cfg, engine)?.run()?;
+
+    let mut t = Table::new(
+        "Fig 6 — synchronous vs asynchronous P2P training (mini MobileNetV3)",
+        &["epoch", "sync val_loss", "sync acc", "async val_loss", "async acc"],
+    );
+    let n = sync_rep.val_curve.len().max(async_rep.val_curve.len());
+    for i in 0..n {
+        let s = sync_rep.val_curve.get(i);
+        let a = async_rep.val_curve.get(i);
+        t.row(vec![
+            (i + 1).to_string(),
+            s.map(|v| format!("{:.4}", v.1)).unwrap_or("-".into()),
+            s.map(|v| format!("{:.3}", v.2)).unwrap_or("-".into()),
+            a.map(|v| format!("{:.4}", v.1)).unwrap_or("-".into()),
+            a.map(|v| format!("{:.3}", v.2)).unwrap_or("-".into()),
+        ]);
+    }
+    t.note("paper: sync reaches higher accuracy sooner; async risks stale gradients");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    // Real-PJRT drivers are exercised by rust/tests/ integration tests
+    // and the `p2pless exp` CLI; nothing cheap to assert here.
+}

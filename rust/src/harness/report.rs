@@ -1,0 +1,149 @@
+//! Report plumbing shared by the experiment drivers: aligned console
+//! tables + JSON export under `results/`.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::Json;
+
+/// A printable, exportable table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        for n in &self.notes {
+            println!("note: {n}");
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("title", self.title.as_str());
+        j.set(
+            "columns",
+            Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        j.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        j.set(
+            "notes",
+            Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        j
+    }
+
+    /// Write `results/<name>.json` (directory created on demand).
+    pub fn save(&self, out_dir: &str, name: &str) -> Result<()> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = Path::new(out_dir).join(format!("{name}.json"));
+        std::fs::write(&path, self.to_json().to_string())?;
+        println!("saved {}", path.display());
+        Ok(())
+    }
+}
+
+/// `12.34 s` / `567 ms` formatting for table cells.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.1} s")
+    } else {
+        format!("{:.0} ms", s * 1e3)
+    }
+}
+
+pub fn fmt_usd(v: f64) -> String {
+    format!("${v:.5}")
+}
+
+pub fn fmt_pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip_and_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("n");
+        let j = t.to_json();
+        assert_eq!(j.req("rows").unwrap().as_arr().unwrap().len(), 1);
+        t.print(); // must not panic
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(258.0), "258 s");
+        assert_eq!(fmt_secs(41.2), "41.2 s");
+        assert_eq!(fmt_secs(0.084), "84 ms");
+        assert_eq!(fmt_usd(0.03567), "$0.03567");
+        assert_eq!(fmt_pct(0.9734), "97.34%");
+    }
+}

@@ -1,0 +1,53 @@
+//! # p2pless — serverless peer-to-peer distributed training
+//!
+//! Production-shaped reproduction of *"Exploring the Impact of Serverless
+//! Computing on Peer To Peer Training Machine Learning"* (Barrak et al.,
+//! CS.DC 2023).
+//!
+//! The paper's system: a peer-to-peer training cluster where each peer
+//! (an EC2 instance) offloads its most expensive stage — per-batch
+//! gradient computation — to a fleet of serverless functions (AWS Lambda)
+//! orchestrated by a dynamically-generated Step Functions state machine,
+//! while peers exchange averaged gradients through dedicated persistent
+//! queues (RabbitMQ), optionally QSGD-compressed, in synchronous or
+//! asynchronous mode.
+//!
+//! This crate is the L3 coordinator plus every substrate the paper runs
+//! on (see `DESIGN.md` for the substitution table):
+//!
+//! - [`broker`] — RabbitMQ-like message broker (latest-gradient queues,
+//!   consume-without-delete, sync-barrier queue, 100 MB message cap).
+//! - [`store`] — S3-like object store (UUID-referenced large payloads).
+//! - [`faas`] — Lambda + Step Functions substrate (cold starts, memory
+//!   sizing, GB-second billing, parallel Map state, 15-min timeout).
+//! - [`cloud`] — EC2 instance catalog (t2.*) with real AWS pricing.
+//! - [`compress`] — QSGD / top-k / delta gradient codecs.
+//! - [`runtime`] — PJRT engine executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); python never runs at runtime.
+//! - [`data`] — synthetic MNIST/CIFAR datasets, partitioner, batcher.
+//! - [`coordinator`] — the paper's contribution: peer actors running
+//!   Algorithm 1, gradient exchange, barriers, convergence detection,
+//!   and the serverless offload path.
+//! - [`perfmodel`] — analytic time model calibrated to the paper's
+//!   measurements (Tables I–III), used to extrapolate cloud-scale runs.
+//! - [`costs`] — the paper's Eq. (1)/(2) pricing engine.
+//! - [`metrics`] — per-stage CPU/memory/time collection (Table I stages).
+//! - [`harness`] — one driver per paper table/figure.
+
+pub mod broker;
+pub mod cloud;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod costs;
+pub mod data;
+pub mod error;
+pub mod faas;
+pub mod harness;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod store;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,266 @@
+//! `p2pless` — the leader CLI.
+//!
+//! Subcommands:
+//!   train   run a P2P training cluster (real PJRT execution)
+//!   exp     regenerate a paper table/figure (see DESIGN.md index)
+//!   info    inspect the artifacts manifest + runtime
+//!
+//! Argument parsing is hand-rolled (the build is fully offline; no clap).
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use p2pless::config::{Backend, Compression, SyncMode, TrainConfig};
+use p2pless::coordinator::Cluster;
+use p2pless::error::{Error, Result};
+use p2pless::harness;
+use p2pless::runtime::{Engine, Manifest};
+
+const USAGE: &str = "\
+p2pless — serverless peer-to-peer distributed training (Barrak et al. 2023 reproduction)
+
+USAGE:
+    p2pless train [OPTIONS]          run a training cluster
+    p2pless exp <ID|all> [OPTIONS]   regenerate a paper table/figure
+    p2pless info [--artifacts DIR]   inspect artifacts + runtime
+
+TRAIN OPTIONS:
+    --config FILE            JSON config (overridden by the flags below)
+    --model NAME             mini_squeezenet | mini_mobilenet | mini_vgg
+    --dataset NAME           mnist | cifar
+    --peers N                number of peers (default 4)
+    --batch N                batch size (default 64; needs a matching artifact)
+    --epochs N               epoch limit (default 4)
+    --lr F                   learning rate (default 0.05)
+    --train-samples N        synthetic training set size
+    --val-samples N          validation set size
+    --backend B              instance | serverless
+    --sync M                 sync | async
+    --compression C          none | qsgd:S | topk:FRAC
+    --lambda-memory MB       lambda memory (0 = paper Table II rule)
+    --early-stop N           early-stopping patience (0 = off)
+    --plateau N              ReduceLROnPlateau patience (0 = off)
+    --seed N                 RNG seed
+    --artifacts DIR          artifacts directory (default: artifacts)
+
+EXP OPTIONS:
+    --quick                  smaller real-exec runs
+    --out DIR                results directory (default: results)
+
+EXPERIMENT IDS: table1 fig3 table2 table3 fig4 fig5 fig6 headline all
+";
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut args = Args {
+        positional: Vec::new(),
+        flags: std::collections::HashMap::new(),
+        switches: std::collections::HashSet::new(),
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // switches without values
+            if matches!(name, "quick" | "help") {
+                args.switches.insert(name.to_string());
+            } else {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?;
+                args.flags.insert(name.to_string(), v.clone());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+fn parse_num<T: std::str::FromStr>(args: &Args, key: &str) -> Result<Option<T>> {
+    match args.flags.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| Error::Config(format!("--{key}: bad value {v:?}"))),
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => TrainConfig::from_json_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(v) = args.flags.get("model") {
+        cfg.model = v.clone();
+    }
+    if let Some(v) = args.flags.get("dataset") {
+        cfg.dataset = v.clone();
+    }
+    if let Some(v) = parse_num(args, "peers")? {
+        cfg.peers = v;
+    }
+    if let Some(v) = parse_num(args, "batch")? {
+        cfg.batch_size = v;
+    }
+    if let Some(v) = parse_num(args, "epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = parse_num(args, "lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = parse_num(args, "train-samples")? {
+        cfg.train_samples = v;
+    }
+    if let Some(v) = parse_num(args, "val-samples")? {
+        cfg.val_samples = v;
+    }
+    if let Some(v) = args.flags.get("backend") {
+        cfg.backend = Backend::parse(v)?;
+    }
+    if let Some(v) = args.flags.get("sync") {
+        cfg.sync = SyncMode::parse(v)?;
+    }
+    if let Some(v) = args.flags.get("compression") {
+        cfg.compression = Compression::parse(v)?;
+    }
+    if let Some(v) = parse_num(args, "lambda-memory")? {
+        cfg.lambda_memory_mb = v;
+    }
+    if let Some(v) = parse_num(args, "early-stop")? {
+        cfg.early_stop_patience = v;
+    }
+    if let Some(v) = parse_num(args, "plateau")? {
+        cfg.plateau_patience = v;
+    }
+    if let Some(v) = parse_num(args, "seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.flags.get("artifacts") {
+        cfg.artifacts_dir = v.clone();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!(
+        "training {} on {}: peers={} batch={} epochs={} backend={} sync={} compression={}",
+        cfg.model,
+        cfg.dataset,
+        cfg.peers,
+        cfg.batch_size,
+        cfg.epochs,
+        cfg.backend.name(),
+        cfg.sync.name(),
+        cfg.compression.to_spec(),
+    );
+    let report = Cluster::new(cfg)?.run()?;
+    println!("\nepoch  val_loss  val_acc");
+    for (e, loss, acc) in &report.val_curve {
+        println!("{e:>5}  {loss:>8.4}  {acc:>7.3}");
+    }
+    println!("\nper-stage (all peers):");
+    for (stage, s) in &report.stages {
+        if s.count > 0 {
+            println!(
+                "  {:<22} n={:<4} total {:>10.3?}  mean {:>10.3?}  cpu {:>5.1}%  rss {:>5.0} MB",
+                stage.to_string(),
+                s.count,
+                s.total_wall,
+                s.mean_wall(),
+                s.mean_cpu_pct,
+                s.peak_rss_bytes as f64 / 1e6,
+            );
+        }
+    }
+    println!(
+        "\nbroker: {} msgs / {} bytes; lambda: {} invocations / ${:.5} / {} cold starts",
+        report.broker_msgs,
+        report.broker_bytes,
+        report.lambda_invocations,
+        report.lambda_cost_usd,
+        report.lambda_cold_starts
+    );
+    println!("wall: {:?}", report.wall);
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("exp needs an id (or `all`)".into()))?;
+    let quick = args.switches.contains("quick");
+    let out = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "results".to_string());
+    if id == "all" {
+        harness::run_all(quick, &out)
+    } else {
+        harness::run(id, quick, &out, None)
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let manifest = Manifest::load(&dir)?;
+    let engine = Arc::new(Engine::new()?);
+    println!("platform: {}", engine.platform());
+    println!("artifacts dir: {dir}");
+    println!("qsgd kernel: n={} s={}", manifest.qsgd.n, manifest.qsgd.s);
+    println!("\nmodels:");
+    for (key, e) in &manifest.models {
+        println!(
+            "  {key}: {} params, input {:?}, grad batches {:?}, eval batches {:?}",
+            e.param_count,
+            e.input,
+            e.grad.keys().collect::<Vec<_>>(),
+            e.eval.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.positional.is_empty() || args.switches.contains("help") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    let result = match args.positional[0].as_str() {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "info" => cmd_info(&args),
+        other => Err(Error::Config(format!("unknown subcommand {other:?}"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Per-stage resource metrics (the paper's §III-B.8: tracemalloc /
+//! psutil / perf_counter equivalents).
+//!
+//! Table I decomposes an epoch into five stages; [`Stage`] mirrors them.
+//! [`StageTimer`] measures wall time plus CPU utilisation (from
+//! `/proc/self/stat`, like psutil) and RSS (from `/proc/self/statm`,
+//! like tracemalloc's high-water proxy) around a stage.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::time::{Duration, Instant};
+
+use std::sync::Mutex;
+
+/// The five training stages of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    ComputeGradients,
+    SendGradients,
+    ReceiveGradients,
+    ModelUpdate,
+    ConvergenceDetection,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] = [
+        Stage::ComputeGradients,
+        Stage::SendGradients,
+        Stage::ReceiveGradients,
+        Stage::ModelUpdate,
+        Stage::ConvergenceDetection,
+    ];
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Stage::ComputeGradients => "compute_gradients",
+            Stage::SendGradients => "send_gradients",
+            Stage::ReceiveGradients => "receive_gradients",
+            Stage::ModelUpdate => "model_update",
+            Stage::ConvergenceDetection => "convergence_detection",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One stage sample.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSample {
+    pub wall: Duration,
+    /// CPU utilisation percent over the stage (can exceed 100 on
+    /// multi-core, matching psutil semantics).
+    pub cpu_pct: f64,
+    /// Resident set size at stage end, bytes.
+    pub rss_bytes: u64,
+}
+
+/// Aggregated stats for a stage.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageSummary {
+    pub count: u64,
+    pub total_wall: Duration,
+    pub mean_cpu_pct: f64,
+    pub peak_rss_bytes: u64,
+}
+
+impl StageSummary {
+    pub fn mean_wall(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total_wall / self.count as u32
+        }
+    }
+}
+
+/// Process CPU time (user+sys) and RSS, read from /proc (Linux).
+fn proc_cpu_rss() -> (Duration, u64) {
+    let cpu = std::fs::read_to_string("/proc/self/stat")
+        .ok()
+        .and_then(|s| {
+            // utime+stime are fields 14 and 15 (1-based), after comm which
+            // may contain spaces — split after the closing paren.
+            let rest = s.rsplit_once(')')?.1;
+            let f: Vec<&str> = rest.split_whitespace().collect();
+            let utime: u64 = f.get(11)?.parse().ok()?;
+            let stime: u64 = f.get(12)?.parse().ok()?;
+            let tck = 100.0; // USER_HZ on linux
+            Some(Duration::from_secs_f64((utime + stime) as f64 / tck))
+        })
+        .unwrap_or(Duration::ZERO);
+    let rss = std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| s.split_whitespace().nth(1)?.parse::<u64>().ok())
+        .map(|pages| pages * 4096)
+        .unwrap_or(0);
+    (cpu, rss)
+}
+
+/// RAII-ish stage timer.
+pub struct StageTimer {
+    stage: Stage,
+    t0: Instant,
+    cpu0: Duration,
+}
+
+impl StageTimer {
+    pub fn start(stage: Stage) -> Self {
+        let (cpu0, _) = proc_cpu_rss();
+        Self { stage, t0: Instant::now(), cpu0 }
+    }
+
+    /// Finish and record into `registry`.
+    pub fn stop(self, registry: &MetricsRegistry) -> StageSample {
+        let wall = self.t0.elapsed();
+        let (cpu1, rss) = proc_cpu_rss();
+        let cpu_pct = if wall.as_secs_f64() > 0.0 {
+            (cpu1.saturating_sub(self.cpu0)).as_secs_f64() / wall.as_secs_f64() * 100.0
+        } else {
+            0.0
+        };
+        let sample = StageSample { wall, cpu_pct, rss_bytes: rss };
+        registry.record(self.stage, sample);
+        sample
+    }
+}
+
+/// Thread-safe per-stage aggregation.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    stages: Mutex<HashMap<Stage, StageSummary>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, stage: Stage, s: StageSample) {
+        let mut map = self.stages.lock().unwrap();
+        let e = map.entry(stage).or_default();
+        let n = e.count as f64;
+        e.mean_cpu_pct = (e.mean_cpu_pct * n + s.cpu_pct) / (n + 1.0);
+        e.count += 1;
+        e.total_wall += s.wall;
+        e.peak_rss_bytes = e.peak_rss_bytes.max(s.rss_bytes);
+    }
+
+    /// Record a wall-time-only sample (modeled durations).
+    pub fn record_wall(&self, stage: Stage, wall: Duration) {
+        self.record(stage, StageSample { wall, cpu_pct: 0.0, rss_bytes: 0 });
+    }
+
+    pub fn summary(&self, stage: Stage) -> StageSummary {
+        self.stages.lock().unwrap().get(&stage).copied().unwrap_or_default()
+    }
+
+    pub fn all(&self) -> Vec<(Stage, StageSummary)> {
+        Stage::ALL
+            .iter()
+            .map(|&s| (s, self.summary(s)))
+            .collect()
+    }
+
+    /// The Table-I question: which stage dominates wall time?
+    pub fn dominant_stage(&self) -> Option<Stage> {
+        self.all()
+            .into_iter()
+            .filter(|(_, s)| s.count > 0)
+            .max_by(|a, b| a.1.total_wall.cmp(&b.1.total_wall))
+            .map(|(s, _)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_records_wall_time() {
+        let reg = MetricsRegistry::new();
+        let t = StageTimer::start(Stage::ComputeGradients);
+        std::thread::sleep(Duration::from_millis(15));
+        let s = t.stop(&reg);
+        assert!(s.wall >= Duration::from_millis(15));
+        let sum = reg.summary(Stage::ComputeGradients);
+        assert_eq!(sum.count, 1);
+        assert!(sum.total_wall >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn proc_sampler_reads_something() {
+        let (cpu, rss) = proc_cpu_rss();
+        // this process has burned some CPU and holds some memory
+        assert!(rss > 0);
+        let _ = cpu;
+    }
+
+    #[test]
+    fn registry_aggregates_means() {
+        let reg = MetricsRegistry::new();
+        for i in 1..=3u64 {
+            reg.record(
+                Stage::SendGradients,
+                StageSample {
+                    wall: Duration::from_millis(10 * i),
+                    cpu_pct: 50.0,
+                    rss_bytes: 1000 * i,
+                },
+            );
+        }
+        let s = reg.summary(Stage::SendGradients);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.total_wall, Duration::from_millis(60));
+        assert_eq!(s.mean_wall(), Duration::from_millis(20));
+        assert!((s.mean_cpu_pct - 50.0).abs() < 1e-9);
+        assert_eq!(s.peak_rss_bytes, 3000);
+    }
+
+    #[test]
+    fn dominant_stage_is_largest_total() {
+        let reg = MetricsRegistry::new();
+        reg.record_wall(Stage::ComputeGradients, Duration::from_secs(10));
+        reg.record_wall(Stage::SendGradients, Duration::from_secs(1));
+        assert_eq!(reg.dominant_stage(), Some(Stage::ComputeGradients));
+    }
+
+    #[test]
+    fn empty_registry_has_no_dominant() {
+        assert_eq!(MetricsRegistry::new().dominant_stage(), None);
+    }
+
+    #[test]
+    fn stage_display_names() {
+        assert_eq!(Stage::ComputeGradients.to_string(), "compute_gradients");
+        assert_eq!(Stage::ALL.len(), 5);
+    }
+}

@@ -1,0 +1,140 @@
+//! Full-scale specs of the paper's three model architectures, with the
+//! calibration constants derived from the paper's tables (see the
+//! module docs in `perfmodel`).
+
+/// The paper's §IV-B architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PaperModel {
+    /// VGG-11, 132.9 M params — the expensive workload (t2.large).
+    Vgg11,
+    /// MobileNetV3-Small, ~2.5 M params (t2.medium).
+    MobilenetV3Small,
+    /// SqueezeNet 1.1, ~1.2 M params (t2.medium).
+    Squeezenet11,
+}
+
+impl PaperModel {
+    /// Map a mini-model key (the runtime artifacts) to its full-scale
+    /// paper counterpart for cloud extrapolation.
+    pub fn from_key(key: &str) -> Option<Self> {
+        if key.contains("vgg") {
+            Some(Self::Vgg11)
+        } else if key.contains("mobilenet") {
+            Some(Self::MobilenetV3Small)
+        } else if key.contains("squeezenet") {
+            Some(Self::Squeezenet11)
+        } else {
+            None
+        }
+    }
+}
+
+/// Full-scale spec + calibration anchors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaperModelSpec {
+    pub kind: PaperModel,
+    pub name: &'static str,
+    /// Trainable parameters (paper §IV-B).
+    pub params: u64,
+    /// Per-sample gradient time on t2.large at large batch, ms
+    /// (VGG anchored on Tables II/III; others scaled by the Table I
+    /// per-batch ratios, instance factors normalized out).
+    pub base_ms_per_sample: f64,
+    /// Batch-amortized overhead constant `c` in (1 + c/B).
+    pub batch_overhead: f64,
+    /// Lambda sizing rule: resident base MB…
+    pub lambda_base_mb: f64,
+    /// …plus MB per sample of activation memory.
+    pub lambda_mb_per_sample: f64,
+    /// The instance type the paper settled on for this model (§IV-C).
+    pub paper_instance: &'static str,
+}
+
+impl PaperModelSpec {
+    /// Uncompressed f32 gradient size on the wire.
+    pub fn gradient_bytes(&self) -> usize {
+        self.params as usize * 4
+    }
+}
+
+/// Calibrated catalog (see `perfmodel` module docs for derivations).
+pub const PAPER_MODELS: &[PaperModelSpec] = &[
+    PaperModelSpec {
+        kind: PaperModel::Vgg11,
+        name: "vgg11",
+        params: 132_900_000,
+        base_ms_per_sample: 16.17,
+        batch_overhead: 40.0,
+        lambda_base_mb: 1520.0,
+        lambda_mb_per_sample: 2.81,
+        paper_instance: "t2.large",
+    },
+    PaperModelSpec {
+        kind: PaperModel::MobilenetV3Small,
+        name: "mobilenet_v3_small",
+        // Table I ratio vs VGG: 59.44 / 208.7 per-sample => 0.285
+        params: 2_500_000,
+        base_ms_per_sample: 4.61,
+        batch_overhead: 40.0,
+        lambda_base_mb: 430.0,
+        lambda_mb_per_sample: 0.55,
+        paper_instance: "t2.medium",
+    },
+    PaperModelSpec {
+        kind: PaperModel::Squeezenet11,
+        name: "squeezenet1.1",
+        // Table I ratio vs VGG: 29.86 / 208.7 => 0.143
+        params: 1_200_000,
+        base_ms_per_sample: 2.31,
+        batch_overhead: 40.0,
+        lambda_base_mb: 400.0,
+        lambda_mb_per_sample: 0.40,
+        paper_instance: "t2.medium",
+    },
+];
+
+/// Fetch a spec by kind.
+pub fn paper_model(kind: PaperModel) -> &'static PaperModelSpec {
+    PAPER_MODELS.iter().find(|s| s.kind == kind).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_key_maps_minis() {
+        assert_eq!(PaperModel::from_key("mini_vgg_mnist"), Some(PaperModel::Vgg11));
+        assert_eq!(
+            PaperModel::from_key("mini_mobilenet_cifar"),
+            Some(PaperModel::MobilenetV3Small)
+        );
+        assert_eq!(
+            PaperModel::from_key("mini_squeezenet_mnist"),
+            Some(PaperModel::Squeezenet11)
+        );
+        assert_eq!(PaperModel::from_key("resnet"), None);
+    }
+
+    #[test]
+    fn paper_param_counts() {
+        assert_eq!(paper_model(PaperModel::Vgg11).params, 132_900_000);
+        assert!(paper_model(PaperModel::MobilenetV3Small).params < 3_000_000);
+        assert!(paper_model(PaperModel::Squeezenet11).params < 1_500_000);
+    }
+
+    #[test]
+    fn gradient_bytes_vgg_is_531mb() {
+        let b = paper_model(PaperModel::Vgg11).gradient_bytes();
+        assert_eq!(b, 531_600_000);
+    }
+
+    #[test]
+    fn paper_instances() {
+        assert_eq!(paper_model(PaperModel::Vgg11).paper_instance, "t2.large");
+        assert_eq!(
+            paper_model(PaperModel::Squeezenet11).paper_instance,
+            "t2.medium"
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT engine: loads HLO-text artifacts, compiles them once, executes
+//! them from the coordinator hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// Compiled executable wrapper.
+///
+/// SAFETY: the PJRT C API is documented thread-safe (the CPU client
+/// serializes internally), and this crate additionally serializes every
+/// `execute` through [`Engine::exec_lock`]. The `xla` crate omits
+/// Send/Sync only because its wrappers hold raw pointers.
+pub struct Executable(xla::PjRtLoadedExecutable);
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+struct Client(xla::PjRtClient);
+unsafe impl Send for Client {}
+unsafe impl Sync for Client {}
+
+/// Process-wide PJRT client + compiled-executable cache.
+///
+/// All executions are serialized through a mutex: the CPU PJRT client is
+/// single-device here, and serializing keeps wall-time measurements of
+/// individual grad steps honest on the 1-core testbed.
+pub struct Engine {
+    client: Client,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    exec_lock: Mutex<()>,
+    compile_ms: Mutex<HashMap<String, u64>>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Self> {
+        Ok(Self {
+            client: Client(xla::PjRtClient::cpu()?),
+            cache: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+            compile_ms: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by absolute path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let path = path.as_ref();
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(Executable(self.client.0.compile(&comp)?));
+        self.compile_ms
+            .lock()
+            .unwrap()
+            .insert(key.clone(), t0.elapsed().as_millis() as u64);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; unpacks the single tuple output into
+    /// its elements. Returns (outputs, execution wall time).
+    pub fn run(
+        &self,
+        exe: &Executable,
+        inputs: &[xla::Literal],
+    ) -> Result<(Vec<xla::Literal>, Duration)> {
+        let _guard = self.exec_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let result = exe.0.execute::<xla::Literal>(inputs)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("executable produced no output".into()))?
+            .to_literal_sync()?;
+        let elapsed = t0.elapsed();
+        // AOT artifacts are lowered with return_tuple=True.
+        let parts = out.to_tuple()?;
+        Ok((parts, elapsed))
+    }
+
+    /// Total number of compiled executables resident.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Compile-time log (path -> ms), for EXPERIMENTS.md.
+    pub fn compile_times_ms(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<_> = self
+            .compile_ms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &ms)| (k.clone(), ms))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Pack an f32 slice as a rank-N literal.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::Runtime(format!(
+            "literal shape {:?} wants {} elems, got {}",
+            dims,
+            n,
+            data.len()
+        )));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Pack an i32 slice as a rank-N literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::Runtime(format!(
+            "literal shape {:?} wants {} elems, got {}",
+            dims,
+            n,
+            data.len()
+        )));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a scalar f32 from a literal (loss outputs).
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| Error::Runtime("empty literal".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_packing_validates_shape() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1, 2, 3], &[3]).is_ok());
+        assert!(literal_i32(&[1, 2, 3], &[4]).is_err());
+    }
+
+    // Engine integration tests (real PJRT) live in rust/tests/ — they
+    // need the artifacts directory built by `make artifacts`.
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest: the contract between the python AOT path and the
+//! rust runtime (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::Json;
+
+/// One model entry: shapes + artifact file names.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// `<model>_<dataset>` key.
+    pub key: String,
+    pub model: String,
+    pub dataset: String,
+    pub param_count: usize,
+    /// (h, w, c).
+    pub input: (usize, usize, usize),
+    pub nclass: usize,
+    /// batch size -> grad artifact file.
+    pub grad: BTreeMap<usize, String>,
+    /// batch size -> no-pallas ablation grad artifact.
+    pub grad_nopallas: BTreeMap<usize, String>,
+    /// batch size -> eval artifact file.
+    pub eval: BTreeMap<usize, String>,
+    pub update: String,
+    /// Raw little-endian f32 initial parameters.
+    pub init_params: String,
+}
+
+/// The QSGD kernel artifact pair (rust<->kernel cross-validation).
+#[derive(Debug, Clone)]
+pub struct QsgdEntry {
+    pub n: usize,
+    pub s: u8,
+    pub encode: String,
+    pub decode: String,
+}
+
+/// Parsed manifest plus its directory (file names resolve against it).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub qsgd: QsgdEntry,
+}
+
+fn batch_map(json: &Json) -> Result<BTreeMap<usize, String>> {
+    let mut out = BTreeMap::new();
+    if let Some(obj) = json.as_obj() {
+        for (k, v) in obj {
+            let b: usize = k
+                .parse()
+                .map_err(|_| Error::Json(format!("bad batch key {k:?}")))?;
+            let file = v
+                .as_str()
+                .ok_or_else(|| Error::Json("artifact path must be a string".into()))?;
+            out.insert(b, file.to_string());
+        }
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let json = Json::parse_file(&path)?;
+        let mut models = BTreeMap::new();
+        for (key, m) in json
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| Error::Json("models must be an object".into()))?
+        {
+            let input = m.req("input")?;
+            let dims = input
+                .as_arr()
+                .ok_or_else(|| Error::Json("input must be an array".into()))?;
+            if dims.len() != 3 {
+                return Err(Error::Json("input must be [h, w, c]".into()));
+            }
+            let arts = m.req("artifacts")?;
+            models.insert(
+                key.clone(),
+                ModelEntry {
+                    key: key.clone(),
+                    model: m.req("model")?.as_str().unwrap_or_default().to_string(),
+                    dataset: m.req("dataset")?.as_str().unwrap_or_default().to_string(),
+                    param_count: m
+                        .req("param_count")?
+                        .as_usize()
+                        .ok_or_else(|| Error::Json("param_count".into()))?,
+                    input: (
+                        dims[0].as_usize().unwrap_or(0),
+                        dims[1].as_usize().unwrap_or(0),
+                        dims[2].as_usize().unwrap_or(0),
+                    ),
+                    nclass: m.req("nclass")?.as_usize().unwrap_or(10),
+                    grad: batch_map(arts.req("grad")?)?,
+                    grad_nopallas: arts
+                        .get("grad_nopallas")
+                        .map(batch_map)
+                        .transpose()?
+                        .unwrap_or_default(),
+                    eval: batch_map(arts.req("eval")?)?,
+                    update: arts
+                        .req("update")?
+                        .as_str()
+                        .ok_or_else(|| Error::Json("update".into()))?
+                        .to_string(),
+                    init_params: m
+                        .req("init_params")?
+                        .as_str()
+                        .ok_or_else(|| Error::Json("init_params".into()))?
+                        .to_string(),
+                },
+            );
+        }
+        let q = json.req("qsgd")?;
+        let qsgd = QsgdEntry {
+            n: q.req("n")?.as_usize().unwrap_or(0),
+            s: q.req("s")?.as_u64().unwrap_or(16) as u8,
+            encode: q.req("encode")?.as_str().unwrap_or_default().to_string(),
+            decode: q.req("decode")?.as_str().unwrap_or_default().to_string(),
+        };
+        Ok(Self { dir, models, qsgd })
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelEntry> {
+        self.models.get(key).ok_or_else(|| {
+            Error::Runtime(format!(
+                "model {key:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn resolve(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+impl ModelEntry {
+    /// Grad artifact path for a batch size.
+    pub fn grad_for(&self, batch: usize) -> Result<&str> {
+        self.grad
+            .get(&batch)
+            .map(String::as_str)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "{}: no grad artifact for batch {} (have {:?})",
+                    self.key,
+                    batch,
+                    self.grad.keys().collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    /// Batch sizes with grad artifacts, ascending.
+    pub fn grad_batches(&self) -> Vec<usize> {
+        self.grad.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "grad_batches": [16, 64],
+      "eval_batches": [64, 256],
+      "models": {
+        "mini_vgg_mnist": {
+          "model": "mini_vgg", "dataset": "mnist",
+          "param_count": 98442, "input": [28, 28, 1], "nclass": 10,
+          "artifacts": {
+            "grad": {"16": "g16.hlo.txt", "64": "g64.hlo.txt"},
+            "grad_nopallas": {"64": "g64np.hlo.txt"},
+            "eval": {"64": "e64.hlo.txt"},
+            "update": "u.hlo.txt"
+          },
+          "params_spec": [],
+          "init_params": "p.f32"
+        }
+      },
+      "qsgd": {"n": 4096, "s": 16, "encode": "qe.hlo.txt", "decode": "qd.hlo.txt"}
+    }"#;
+
+    fn write_sample(dir: &Path) {
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("mini_vgg_mnist").unwrap();
+        assert_eq!(e.param_count, 98442);
+        assert_eq!(e.input, (28, 28, 1));
+        assert_eq!(e.grad_for(64).unwrap(), "g64.hlo.txt");
+        assert_eq!(e.grad_batches(), vec![16, 64]);
+        assert!(e.grad_for(128).is_err());
+        assert_eq!(m.qsgd.s, 16);
+        assert!(m.resolve("g64.hlo.txt").ends_with("g64.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

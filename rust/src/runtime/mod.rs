@@ -1,0 +1,253 @@
+//! Runtime layer: the rust side of the AOT bridge.
+//!
+//! Loads `artifacts/manifest.json` + the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! exposes typed entry points to the coordinator:
+//!
+//! - [`ModelRuntime::grad`] — (params, x, y) -> (loss, flat gradient):
+//!   the per-batch hot spot (contains the L2 model and the L1 Pallas
+//!   matmul kernels, lowered into one HLO module);
+//! - [`ModelRuntime::update`] — SGD apply;
+//! - [`ModelRuntime::eval`] — (loss, correct count) on a validation set;
+//! - [`QsgdKernel`] — the Pallas quantizer pair, used to cross-validate
+//!   the rust QSGD codec against the kernel bit-for-bit.
+//!
+//! Python never runs here: the binary is self-contained given the
+//! artifacts directory.
+
+mod engine;
+mod manifest;
+
+pub use engine::{literal_f32, literal_i32, scalar_f32, Engine, Executable};
+pub use manifest::{Manifest, ModelEntry, QsgdEntry};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// A model's compiled entry points, bound to one (model, dataset) pair.
+pub struct ModelRuntime {
+    pub entry: ModelEntry,
+    engine: Arc<Engine>,
+    manifest: Manifest,
+}
+
+impl ModelRuntime {
+    /// Load a model runtime from an artifacts dir.
+    pub fn load(engine: Arc<Engine>, artifacts_dir: &str, model_key: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let entry = manifest.model(model_key)?.clone();
+        Ok(Self { entry, engine, manifest })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    /// (h, w, c) input shape.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.entry.input
+    }
+
+    /// Initial parameters (as lowered by the python side, seed 0).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.manifest.resolve(&self.entry.init_params);
+        let raw = std::fs::read(&path)?;
+        if raw.len() != 4 * self.entry.param_count {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} bytes, got {}",
+                path.display(),
+                4 * self.entry.param_count,
+                raw.len()
+            )));
+        }
+        Ok(crate::util::bytes::bytes_to_f32s(&raw))
+    }
+
+    fn check_params(&self, params: &[f32]) -> Result<()> {
+        if params.len() != self.entry.param_count {
+            return Err(Error::Runtime(format!(
+                "params len {} != {}",
+                params.len(),
+                self.entry.param_count
+            )));
+        }
+        Ok(())
+    }
+
+    fn batch_literals(
+        &self,
+        batch: usize,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let (h, w, c) = self.entry.input;
+        let lx = literal_f32(x, &[batch as i64, h as i64, w as i64, c as i64])?;
+        let ly = literal_i32(y, &[batch as i64])?;
+        Ok((lx, ly))
+    }
+
+    /// Compute (loss, flat gradient) for one batch — Algorithm 1's
+    /// `ComputeBatchGradients`. `pallas=false` selects the no-kernel
+    /// ablation artifact.
+    pub fn grad(
+        &self,
+        batch: usize,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        pallas: bool,
+    ) -> Result<GradOutput> {
+        self.check_params(params)?;
+        let file = if pallas {
+            self.entry.grad_for(batch)?.to_string()
+        } else {
+            self.entry
+                .grad_nopallas
+                .get(&batch)
+                .cloned()
+                .ok_or_else(|| {
+                    Error::Runtime(format!("no nopallas grad artifact for batch {batch}"))
+                })?
+        };
+        let exe = self.engine.load(self.manifest.resolve(&file))?;
+        let lp = literal_f32(params, &[params.len() as i64])?;
+        let (lx, ly) = self.batch_literals(batch, x, y)?;
+        let (parts, wall) = self.engine.run(&exe, &[lp, lx, ly])?;
+        if parts.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "grad artifact returned {} outputs, expected 2",
+                parts.len()
+            )));
+        }
+        Ok(GradOutput {
+            loss: scalar_f32(&parts[0])?,
+            grads: parts[1].to_vec::<f32>()?,
+            wall,
+        })
+    }
+
+    /// SGD apply: params' = params - lr * grads.
+    pub fn update(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        self.check_params(grads)?;
+        let exe = self
+            .engine
+            .load(self.manifest.resolve(&self.entry.update))?;
+        let lp = literal_f32(params, &[params.len() as i64])?;
+        let lg = literal_f32(grads, &[grads.len() as i64])?;
+        let llr = literal_f32(&[lr], &[1])?;
+        let (parts, _) = self.engine.run(&exe, &[lp, lg, llr])?;
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    /// Evaluate a batch: (mean loss, correct count).
+    pub fn eval(&self, batch: usize, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        self.check_params(params)?;
+        let file = self.entry.eval.get(&batch).cloned().ok_or_else(|| {
+            Error::Runtime(format!(
+                "no eval artifact for batch {batch} (have {:?})",
+                self.entry.eval.keys().collect::<Vec<_>>()
+            ))
+        })?;
+        let exe = self.engine.load(self.manifest.resolve(&file))?;
+        let lp = literal_f32(params, &[params.len() as i64])?;
+        let (lx, ly) = self.batch_literals(batch, x, y)?;
+        let (parts, _) = self.engine.run(&exe, &[lp, lx, ly])?;
+        Ok((scalar_f32(&parts[0])?, scalar_f32(&parts[1])?))
+    }
+
+    /// Evaluate a whole dataset by tiling over the largest eval batch
+    /// that fits (remainder dropped). Returns (mean loss, accuracy).
+    pub fn eval_dataset(&self, params: &[f32], data: &crate::data::Dataset) -> Result<(f32, f32)> {
+        let batch = *self
+            .entry
+            .eval
+            .keys()
+            .filter(|&&b| b <= data.len())
+            .max()
+            .ok_or_else(|| Error::Runtime("validation set smaller than any eval batch".into()))?;
+        let elems = data.sample_elems();
+        let mut total_loss = 0f64;
+        let mut correct = 0f64;
+        let mut batches = 0usize;
+        for chunk in 0..(data.len() / batch) {
+            let lo = chunk * batch;
+            let x = &data.x[lo * elems..(lo + batch) * elems];
+            let y = &data.y[lo..lo + batch];
+            let (loss, ncorrect) = self.eval(batch, params, x, y)?;
+            total_loss += loss as f64;
+            correct += ncorrect as f64;
+            batches += 1;
+        }
+        Ok((
+            (total_loss / batches.max(1) as f64) as f32,
+            (correct / (batches * batch).max(1) as f64) as f32,
+        ))
+    }
+}
+
+/// Result of one gradient step.
+#[derive(Debug, Clone)]
+pub struct GradOutput {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+    /// PJRT execution wall time (the measured Table-I compute stage).
+    pub wall: Duration,
+}
+
+/// The Pallas QSGD kernel pair, runnable from rust for codec
+/// cross-validation.
+pub struct QsgdKernel {
+    engine: Arc<Engine>,
+    entry: QsgdEntry,
+    dir: std::path::PathBuf,
+}
+
+impl QsgdKernel {
+    pub fn load(engine: Arc<Engine>, artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Self {
+            engine,
+            entry: manifest.qsgd.clone(),
+            dir: manifest.dir,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.entry.n
+    }
+
+    pub fn s(&self) -> u8 {
+        self.entry.s
+    }
+
+    /// Run the Pallas quantizer: (v, u) -> (levels, norm).
+    pub fn encode(&self, v: &[f32], u: &[f32]) -> Result<(Vec<i32>, f32)> {
+        if v.len() != self.entry.n || u.len() != self.entry.n {
+            return Err(Error::Runtime(format!(
+                "qsgd kernel is specialized to n={}",
+                self.entry.n
+            )));
+        }
+        let exe = self.engine.load(self.dir.join(&self.entry.encode))?;
+        let lv = literal_f32(v, &[v.len() as i64])?;
+        let lu = literal_f32(u, &[u.len() as i64])?;
+        let (parts, _) = self.engine.run(&exe, &[lv, lu])?;
+        Ok((parts[0].to_vec::<i32>()?, scalar_f32(&parts[1])?))
+    }
+
+    /// Run the Pallas dequantizer: (levels, norm) -> v_hat.
+    pub fn decode(&self, q: &[i32], norm: f32) -> Result<Vec<f32>> {
+        let exe = self.engine.load(self.dir.join(&self.entry.decode))?;
+        let lq = literal_i32(q, &[q.len() as i64])?;
+        let ln = literal_f32(&[norm], &[1])?;
+        let (parts, _) = self.engine.run(&exe, &[lq, ln])?;
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+}

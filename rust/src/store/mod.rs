@@ -1,0 +1,279 @@
+//! S3-like object store (the paper's AWS S3 substrate).
+//!
+//! Usage in the paper: (a) each peer's dataset partition is uploaded to a
+//! dedicated bucket of pre-batched objects the Lambda functions read;
+//! (b) gradients above Amazon MQ's 100 MB message cap are stored here and
+//! referenced by UUID in the queue message (§III-B.3).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Bytes;
+use std::sync::RwLock;
+
+use crate::error::{Error, Result};
+
+/// A pointer to a stored object, sendable through the broker in place of
+/// an oversized payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectRef {
+    pub bucket: String,
+    pub key: String,
+    pub size: usize,
+}
+
+impl ObjectRef {
+    /// Magic prefix distinguishing a reference message from an inline
+    /// gradient payload on the broker.
+    pub const WIRE_MAGIC: &'static [u8; 4] = b"S3RF";
+
+    /// Serialize for embedding in a broker message (the paper's
+    /// "send UUIDs through Amazon MQ" path).
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.bucket.len() + self.key.len());
+        out.extend_from_slice(Self::WIRE_MAGIC);
+        out.extend_from_slice(&(self.bucket.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.bucket.as_bytes());
+        out.extend_from_slice(&(self.key.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.key.as_bytes());
+        out.extend_from_slice(&(self.size as u64).to_le_bytes());
+        out
+    }
+
+    pub fn is_wire(data: &[u8]) -> bool {
+        data.len() >= 4 && &data[0..4] == Self::WIRE_MAGIC
+    }
+
+    pub fn from_wire(data: &[u8]) -> Result<Self> {
+        if !Self::is_wire(data) {
+            return Err(Error::Store("not an ObjectRef wire message".into()));
+        }
+        let mut i = 4usize;
+        let take_u32 = |i: &mut usize| -> Result<usize> {
+            let v = data
+                .get(*i..*i + 4)
+                .ok_or_else(|| Error::Store("truncated ObjectRef".into()))?;
+            *i += 4;
+            Ok(u32::from_le_bytes(v.try_into().unwrap()) as usize)
+        };
+        let blen = take_u32(&mut i)?;
+        let bucket = String::from_utf8(
+            data.get(i..i + blen)
+                .ok_or_else(|| Error::Store("truncated ObjectRef".into()))?
+                .to_vec(),
+        )
+        .map_err(|e| Error::Store(e.to_string()))?;
+        i += blen;
+        let klen = take_u32(&mut i)?;
+        let key = String::from_utf8(
+            data.get(i..i + klen)
+                .ok_or_else(|| Error::Store("truncated ObjectRef".into()))?
+                .to_vec(),
+        )
+        .map_err(|e| Error::Store(e.to_string()))?;
+        i += klen;
+        let size = data
+            .get(i..i + 8)
+            .ok_or_else(|| Error::Store("truncated ObjectRef".into()))?;
+        Ok(Self {
+            bucket,
+            key,
+            size: u64::from_le_bytes(size.try_into().unwrap()) as usize,
+        })
+    }
+}
+
+/// In-process S3: buckets of key→bytes with monotonic usage stats.
+#[derive(Default)]
+pub struct ObjectStore {
+    buckets: RwLock<HashMap<String, HashMap<String, Bytes>>>,
+    puts: AtomicU64,
+    gets: AtomicU64,
+    bytes_in: AtomicU64,
+    key_counter: AtomicU64,
+}
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create_bucket(&self, bucket: &str) {
+        self.buckets.write().unwrap().entry(bucket.to_string()).or_default();
+    }
+
+    pub fn put(&self, bucket: &str, key: &str, data: Bytes) -> Result<ObjectRef> {
+        let size = data.len();
+        let mut buckets = self.buckets.write().unwrap();
+        buckets
+            .entry(bucket.to_string())
+            .or_default()
+            .insert(key.to_string(), data);
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(size as u64, Ordering::Relaxed);
+        Ok(ObjectRef { bucket: bucket.to_string(), key: key.to_string(), size })
+    }
+
+    /// Store under a freshly generated UUID-ish key (the paper's
+    /// large-gradient path).
+    pub fn put_new(&self, bucket: &str, data: Bytes) -> Result<ObjectRef> {
+        let key = self.new_key();
+        self.put(bucket, &key, data)
+    }
+
+    pub fn get(&self, bucket: &str, key: &str) -> Result<Bytes> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.buckets
+            .read().unwrap()
+            .get(bucket)
+            .and_then(|b| b.get(key).cloned())
+            .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))
+    }
+
+    pub fn get_ref(&self, r: &ObjectRef) -> Result<Bytes> {
+        self.get(&r.bucket, &r.key)
+    }
+
+    pub fn delete(&self, bucket: &str, key: &str) -> Result<()> {
+        let mut buckets = self.buckets.write().unwrap();
+        let b = buckets
+            .get_mut(bucket)
+            .ok_or_else(|| Error::Store(format!("missing bucket {bucket}")))?;
+        b.remove(key)
+            .map(|_| ())
+            .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))
+    }
+
+    pub fn list(&self, bucket: &str) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .buckets
+            .read().unwrap()
+            .get(bucket)
+            .map(|b| b.keys().cloned().collect())
+            .unwrap_or_default();
+        keys.sort();
+        keys
+    }
+
+    pub fn bucket_size(&self, bucket: &str) -> usize {
+        self.buckets
+            .read().unwrap()
+            .get(bucket)
+            .map(|b| b.values().map(|v| v.len()).sum())
+            .unwrap_or(0)
+    }
+
+    /// (puts, gets, bytes written).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.puts.load(Ordering::Relaxed),
+            self.gets.load(Ordering::Relaxed),
+            self.bytes_in.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Deterministic UUID-shaped key (process-unique).
+    fn new_key(&self) -> String {
+        let n = self.key_counter.fetch_add(1, Ordering::Relaxed);
+        // splitmix64 the counter twice for a 128-bit looking key
+        let a = splitmix64(n.wrapping_add(0x9E3779B97F4A7C15));
+        let b = splitmix64(a ^ n);
+        format!(
+            "{:08x}-{:04x}-{:04x}-{:04x}-{:012x}",
+            (a >> 32) as u32,
+            (a >> 16) as u16,
+            a as u16,
+            (b >> 48) as u16,
+            b & 0xFFFF_FFFF_FFFF
+        )
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Conventional bucket name for peer `r`'s batch storage.
+pub fn peer_bucket(r: usize) -> String {
+    format!("peer-{r}-batches")
+}
+
+/// Bucket for oversized gradient payloads.
+pub const GRADIENT_BUCKET: &str = "gradient-overflow";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = ObjectStore::new();
+        let r = s.put("b", "k", Bytes::from_static(b"hello")).unwrap();
+        assert_eq!(r.size, 5);
+        assert_eq!(&s.get("b", "k").unwrap()[..], b"hello");
+        assert_eq!(&s.get_ref(&r).unwrap()[..], b"hello");
+    }
+
+    #[test]
+    fn get_missing_errors() {
+        let s = ObjectStore::new();
+        assert!(s.get("b", "k").is_err());
+        s.create_bucket("b");
+        assert!(s.get("b", "k").is_err());
+    }
+
+    #[test]
+    fn put_new_keys_are_unique() {
+        let s = ObjectStore::new();
+        let r1 = s.put_new("b", Bytes::from_static(b"1")).unwrap();
+        let r2 = s.put_new("b", Bytes::from_static(b"2")).unwrap();
+        assert_ne!(r1.key, r2.key);
+        assert_eq!(r1.key.len(), 36); // uuid shape
+        assert_eq!(s.list("b").len(), 2);
+    }
+
+    #[test]
+    fn delete_removes() {
+        let s = ObjectStore::new();
+        s.put("b", "k", Bytes::from_static(b"x")).unwrap();
+        s.delete("b", "k").unwrap();
+        assert!(s.get("b", "k").is_err());
+        assert!(s.delete("b", "k").is_err());
+    }
+
+    #[test]
+    fn bucket_accounting() {
+        let s = ObjectStore::new();
+        s.put("b", "k1", Bytes::from_static(b"aaaa")).unwrap();
+        s.put("b", "k2", Bytes::from_static(b"bb")).unwrap();
+        assert_eq!(s.bucket_size("b"), 6);
+        let (puts, _gets, bytes) = s.stats();
+        assert_eq!(puts, 2);
+        assert_eq!(bytes, 6);
+    }
+
+    #[test]
+    fn object_ref_wire_roundtrip() {
+        let r = ObjectRef { bucket: "b".into(), key: "k".into(), size: 9 };
+        let back = ObjectRef::from_wire(&r.to_wire()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn object_ref_wire_rejects_garbage() {
+        assert!(ObjectRef::from_wire(b"not a ref").is_err());
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s = ObjectStore::new();
+        s.put("b", "k", Bytes::from_static(b"old")).unwrap();
+        s.put("b", "k", Bytes::from_static(b"new")).unwrap();
+        assert_eq!(&s.get("b", "k").unwrap()[..], b"new");
+        assert_eq!(s.list("b").len(), 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Cheap-to-clone immutable byte buffer (stand-in for `bytes::Bytes`).
+//!
+//! Broker messages and stored objects are shared across peers/threads;
+//! cloning must be O(1) so the hot gradient-exchange path never copies
+//! payloads.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Immutable, reference-counted byte buffer.
+#[derive(Clone, Default)]
+pub struct Bytes {
+    data: Arc<[u8]>,
+}
+
+impl Bytes {
+    pub fn new() -> Self {
+        Self { data: Arc::from(&[][..]) }
+    }
+
+    pub fn from_static(s: &'static [u8]) -> Self {
+        Self { data: Arc::from(s) }
+    }
+
+    pub fn copy_from_slice(s: &[u8]) -> Self {
+        Self { data: Arc::from(s) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.data.to_vec()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Self {
+        Self { data: Arc::from(v.into_boxed_slice()) }
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Self {
+        Self::copy_from_slice(s)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.data[..] == other.data[..]
+    }
+}
+
+impl Eq for Bytes {}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Bytes({} bytes)", self.len())
+    }
+}
+
+/// Pack a `f32` slice into little-endian bytes.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Unpack little-endian bytes into `f32`s (length must be a multiple of 4).
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_is_shallow() {
+        let b = Bytes::from(vec![1u8, 2, 3]);
+        let c = b.clone();
+        assert_eq!(b, c);
+        assert_eq!(Arc::strong_count(&b.data), 2);
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let v = vec![1.5f32, -0.25, f32::MAX, 0.0];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn deref_and_slice() {
+        let b = Bytes::from_static(b"hello");
+        assert_eq!(&b[..2], b"he");
+        assert_eq!(b.len(), 5);
+        assert!(!b.is_empty());
+    }
+}

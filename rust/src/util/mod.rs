@@ -1,0 +1,12 @@
+//! In-tree replacements for the usual ecosystem crates — this build is
+//! fully offline, so the crate carries its own byte buffer, PRNG and
+//! JSON implementation (each small, tested, and tailored to what the
+//! system actually needs).
+
+pub mod bytes;
+pub mod json;
+pub mod rng;
+
+pub use bytes::Bytes;
+pub use json::Json;
+pub use rng::Rng;

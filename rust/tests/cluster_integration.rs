@@ -1,0 +1,170 @@
+//! Integration: full multi-peer training clusters (real PJRT) across
+//! the paper's axes — backends, sync modes, compression, fault
+//! injection — checking replica consistency and learning progress.
+
+mod common;
+
+use p2pless::broker::FaultPlan;
+use p2pless::config::{Backend, Compression, SyncMode, TrainConfig};
+use p2pless::coordinator::Cluster;
+use p2pless::metrics::Stage;
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 2,
+        lr: 0.05,
+        train_samples: 2 * 16 * 3,
+        val_samples: 64,
+        backend: Backend::Instance,
+        sync: SyncMode::Synchronous,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn synchronous_cluster_trains_and_reports() {
+    require_artifacts!();
+    let rep = Cluster::with_engine(base_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.peers.len(), 2);
+    assert_eq!(rep.epochs_run(), 2);
+    assert_eq!(rep.val_curve.len(), 2, "leader verdict per epoch");
+    for p in &rep.peers {
+        assert_eq!(p.train_loss.len(), 2);
+        assert!(p.train_loss.iter().all(|l| l.is_finite()));
+        assert!(p.sent_bytes.iter().all(|&b| b > 0));
+    }
+    // every Table-I stage was measured
+    for (stage, s) in &rep.stages {
+        if *stage != Stage::ConvergenceDetection {
+            assert!(s.count > 0, "stage {stage} unmeasured");
+        }
+    }
+    assert!(rep.broker_msgs > 0);
+}
+
+#[test]
+fn async_cluster_completes_without_barrier() {
+    require_artifacts!();
+    let cfg = TrainConfig { sync: SyncMode::Asynchronous, ..base_cfg() };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 2);
+    assert!(rep.mean_train_loss_last_epoch().unwrap().is_finite());
+}
+
+#[test]
+fn serverless_backend_matches_instance_loss() {
+    require_artifacts!();
+    // identical config except the backend: gradients must be the same
+    // (the offload moves computation, not math), so the leader's
+    // validation loss after each epoch must match closely.
+    let inst = Cluster::with_engine(base_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let cfg = TrainConfig { backend: Backend::Serverless, ..base_cfg() };
+    let srv = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(srv.lambda_invocations > 0, "lambdas must actually run");
+    assert!(srv.lambda_cost_usd > 0.0);
+    for ((_, li, _), (_, ls, _)) in inst.val_curve.iter().zip(&srv.val_curve) {
+        assert!(
+            (li - ls).abs() < 1e-3,
+            "instance {li} vs serverless {ls}"
+        );
+    }
+}
+
+#[test]
+fn qsgd_compression_still_learns() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        compression: Compression::Qsgd { s: 64 },
+        epochs: 3,
+        ..base_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let first = rep.peers[0].train_loss.first().copied().unwrap();
+    let last = rep.mean_train_loss_last_epoch().unwrap();
+    assert!(
+        last < first + 0.1,
+        "training must not diverge under QSGD: {first} -> {last}"
+    );
+    // QSGD wire must be smaller than raw f32
+    let raw = 4 * 9546; // squeezenet_mnist param count
+    for p in &rep.peers {
+        for &sent in &p.sent_bytes {
+            assert!(sent < raw / 3, "sent {sent} vs raw {raw}");
+        }
+    }
+}
+
+#[test]
+fn async_mode_survives_dropped_messages() {
+    require_artifacts!();
+    // every 3rd publish silently dropped: async peers fall back to
+    // stale/absent gradients (the paper's "temporary disruptions")
+    let cfg = TrainConfig { sync: SyncMode::Asynchronous, ..base_cfg() };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .with_faults(FaultPlan { drop_every: 3, delay_us: 0 })
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 2, "async training must complete despite drops");
+}
+
+#[test]
+fn sync_replicas_stay_consistent() {
+    require_artifacts!();
+    // in synchronous mode every peer applies the same averaged gradient
+    // to the same init, so their reported train-loss sequences are the
+    // evaluations of identical replicas on different partitions; the
+    // leader's verdicts must be identical across two identical runs.
+    let r1 = Cluster::with_engine(base_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let r2 = Cluster::with_engine(base_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    for ((e1, l1, a1), (e2, l2, a2)) in r1.val_curve.iter().zip(&r2.val_curve) {
+        assert_eq!(e1, e2);
+        assert!((l1 - l2).abs() < 1e-5, "run determinism: {l1} vs {l2}");
+        assert!((a1 - a2).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn four_peer_cluster_runs() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        peers: 4,
+        train_samples: 4 * 16 * 2,
+        epochs: 1,
+        ..base_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.peers.len(), 4);
+    // 4 gradient publishes + 1 leader verdict per epoch go through the
+    // broker facade (barrier arrivals publish on their queue directly)
+    assert!(rep.broker_msgs >= 5, "broker_msgs = {}", rep.broker_msgs);
+}

@@ -1,0 +1,37 @@
+//! Shared helpers for integration tests (they execute real PJRT against
+//! the AOT artifacts, so `make artifacts` must have run).
+
+use std::sync::{Arc, OnceLock};
+
+use p2pless::runtime::Engine;
+
+/// Artifacts dir resolved against the workspace root (tests run with
+/// cwd = the crate dir `rust/`).
+pub fn artifacts_dir() -> String {
+    format!("{}/../artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// One PJRT engine per test binary (client creation is expensive and
+/// the CPU client is process-wide).
+pub fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Arc::new(Engine::new().expect("PJRT CPU client")))
+        .clone()
+}
+
+/// Skip (with a loud message) when artifacts are missing — keeps
+/// `cargo test` usable before `make artifacts`, while CI runs the
+/// full path.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !std::path::Path::new(&$crate::common::artifacts_dir())
+            .join("manifest.json")
+            .exists()
+        {
+            eprintln!("SKIP: artifacts/manifest.json missing; run `make artifacts`");
+            return;
+        }
+    };
+}

@@ -1,0 +1,212 @@
+//! Property-based tests over randomized inputs (in-tree harness — the
+//! offline build has no proptest). Each property runs against a few
+//! hundred random cases drawn from a seeded PRNG; failures print the
+//! offending seed for reproduction.
+
+use p2pless::broker::{Broker, FaultPlan, Message, QueueMode};
+use p2pless::compress::{codec_for, Codec, QsgdCodec, RawCodec, TopkCodec};
+use p2pless::config::Compression;
+use p2pless::coordinator::GradientDict;
+use p2pless::faas::schedule_wall;
+use p2pless::util::{Bytes, Rng};
+use std::time::Duration;
+
+const CASES: u64 = 200;
+
+fn rand_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = rng.gen_below(max_len + 1);
+    (0..n).map(|_| rng.gen_range_f32(-10.0, 10.0)).collect()
+}
+
+// ---------------------------------------------------------- codecs
+
+#[test]
+fn prop_all_codecs_preserve_dimension() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = rand_vec(&mut rng, 500);
+        for compression in [
+            Compression::None,
+            Compression::Qsgd { s: 1 + (seed % 100) as u8 },
+            Compression::Topk { frac: 0.01 + rng.gen_f32() * 0.99 },
+        ] {
+            let codec = codec_for(compression, seed);
+            let out = codec
+                .decode(&codec.encode(&v).unwrap())
+                .unwrap_or_else(|e| panic!("seed {seed} {compression:?}: {e}"));
+            assert_eq!(out.len(), v.len(), "seed {seed} {compression:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_raw_is_lossless() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xaaaa);
+        let v = rand_vec(&mut rng, 300);
+        let c = RawCodec;
+        assert_eq!(c.decode(&c.encode(&v).unwrap()).unwrap(), v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_qsgd_error_bounded_by_norm_over_s() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xbbbb);
+        let v = rand_vec(&mut rng, 400);
+        if v.is_empty() {
+            continue;
+        }
+        let s = 1 + (seed % 64) as u8;
+        let c = QsgdCodec::new(s, seed);
+        let out = c.decode(&c.encode(&v).unwrap()).unwrap();
+        let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let bound = norm / s as f64 + 1e-4;
+        for (a, b) in v.iter().zip(&out) {
+            assert!(
+                ((a - b).abs() as f64) <= bound,
+                "seed {seed} s {s}: |{a} - {b}| > {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_topk_keeps_only_original_values() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xcccc);
+        let v = rand_vec(&mut rng, 400);
+        if v.is_empty() {
+            continue;
+        }
+        let frac = 0.05 + rng.gen_f32() * 0.9;
+        let c = TopkCodec::new(frac);
+        let out = c.decode(&c.encode(&v).unwrap()).unwrap();
+        let k = c.k_for(v.len());
+        let nonzero = out.iter().filter(|&&x| x != 0.0).count();
+        assert!(nonzero <= k, "seed {seed}: {nonzero} > k {k}");
+        for (i, &x) in out.iter().enumerate() {
+            assert!(x == 0.0 || x == v[i], "seed {seed} i {i}");
+        }
+        // the largest |value| always survives
+        if let Some((imax, _)) = v
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        {
+            if v[imax] != 0.0 {
+                assert_eq!(out[imax], v[imax], "seed {seed}: max dropped");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_qsgd_wire_never_larger_than_raw_plus_header() {
+    for seed in 0..100 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xdddd);
+        let v = rand_vec(&mut rng, 1000);
+        let c = QsgdCodec::new(127, seed); // worst case: 8 bits/elem
+        let wire = c.encode(&v).unwrap();
+        assert!(wire.len() <= 10 + v.len() + 8, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------- averaging
+
+#[test]
+fn prop_average_is_permutation_invariant_and_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xeeee);
+        let n = 1 + rng.gen_below(50);
+        let peers = 1 + rng.gen_below(8);
+        let mut dict_fwd = GradientDict::new();
+        let mut dict_rev = GradientDict::new();
+        let mut grads = Vec::new();
+        for p in 0..peers {
+            let g: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-5.0, 5.0)).collect();
+            grads.push((p, g));
+        }
+        for (p, g) in &grads {
+            dict_fwd.insert(*p, g.clone());
+        }
+        for (p, g) in grads.iter().rev() {
+            dict_rev.insert(*p, g.clone());
+        }
+        let a = dict_fwd.average().unwrap();
+        let b = dict_rev.average().unwrap();
+        assert_eq!(a, b, "seed {seed}: average depends on insertion order");
+        // average within [min, max] elementwise
+        for i in 0..n {
+            let lo = grads.iter().map(|(_, g)| g[i]).fold(f32::INFINITY, f32::min);
+            let hi = grads.iter().map(|(_, g)| g[i]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(a[i] >= lo - 1e-4 && a[i] <= hi + 1e-4, "seed {seed} i {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------- broker
+
+#[test]
+fn prop_latest_only_queue_holds_last_accepted() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x1111);
+        let broker = Broker::default();
+        let q = broker.declare("g", QueueMode::LatestOnly).unwrap();
+        let n = 1 + rng.gen_below(20);
+        let mut last = None;
+        for i in 0..n {
+            let payload: Vec<u8> = (0..rng.gen_below(64)).map(|_| rng.next_u64() as u8).collect();
+            q.publish(Message::new(0, i as u64, Bytes::from(payload.clone())))
+                .unwrap();
+            last = Some(payload);
+        }
+        let got = q.peek_latest().unwrap();
+        assert_eq!(got.payload.to_vec(), last.unwrap(), "seed {seed}");
+        assert_eq!(q.len(), 1);
+    }
+}
+
+#[test]
+fn prop_fifo_version_equals_accepted_publishes() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x2222);
+        let drop_every = rng.gen_below(5) as u64; // 0 = no drops
+        let broker = Broker::new(1024, FaultPlan { drop_every, delay_us: 0 });
+        let q = broker.declare("sync", QueueMode::Fifo).unwrap();
+        let n = rng.gen_below(40) as u64;
+        for i in 0..n {
+            q.publish(Message::new(0, i, Bytes::from_static(b"x"))).unwrap();
+        }
+        let dropped = if drop_every > 0 { n / drop_every } else { 0 };
+        assert_eq!(q.version(), n - dropped, "seed {seed}");
+        assert_eq!(q.len() as u64, n - dropped, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------- scheduler
+
+#[test]
+fn prop_schedule_wall_bounds() {
+    // max(d) <= wall <= sum(d); monotone non-increasing in concurrency
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x3333);
+        let n = 1 + rng.gen_below(30);
+        let d: Vec<Duration> = (0..n)
+            .map(|_| Duration::from_millis(1 + rng.gen_below(1000) as u64))
+            .collect();
+        let sum: Duration = d.iter().sum();
+        let max = *d.iter().max().unwrap();
+        let mut prev = None;
+        for c in [1usize, 2, 4, 8, 64] {
+            let w = schedule_wall(&d, c);
+            assert!(w >= max, "seed {seed} c {c}: wall below max");
+            assert!(w <= sum, "seed {seed} c {c}: wall above sum");
+            if let Some(p) = prev {
+                assert!(w <= p, "seed {seed}: wall increased with concurrency");
+            }
+            prev = Some(w);
+        }
+        assert_eq!(schedule_wall(&d, 1), sum, "seed {seed}: serial != sum");
+    }
+}

@@ -1,0 +1,83 @@
+//! Cross-validation: the rust QSGD codec vs the L1 Pallas QSGD kernel,
+//! executed through PJRT on the very same inputs. The two
+//! implementations must agree *exactly* on integer levels (both compute
+//! floor(|v|/norm * s + u)) and to f32 rounding on the reconstruction.
+
+mod common;
+
+use p2pless::compress::QsgdCodec;
+use p2pless::runtime::QsgdKernel;
+use p2pless::util::Rng;
+
+#[test]
+fn rust_codec_matches_pallas_kernel_bit_for_bit() {
+    require_artifacts!();
+    let kernel = QsgdKernel::load(common::engine(), &common::artifacts_dir()).unwrap();
+    let n = kernel.n();
+    let s = kernel.s();
+    let codec = QsgdCodec::new(s, 0);
+
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-3.0, 3.0)).collect();
+        let u: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+
+        let (q_kernel, norm_kernel) = kernel.encode(&v, &u).unwrap();
+        let (q_rust, norm_rust) = codec.quantize_with_noise(&v, &u);
+
+        assert!(
+            (norm_kernel - norm_rust).abs() <= 1e-3 * norm_rust.abs(),
+            "norms: kernel {norm_kernel} vs rust {norm_rust}"
+        );
+        let mismatches = q_kernel
+            .iter()
+            .zip(&q_rust)
+            .filter(|(a, b)| a != b)
+            .count();
+        // floor() at a boundary can differ by 1 ulp of the scaled input;
+        // allow a vanishing fraction of off-by-one levels.
+        assert!(
+            mismatches <= n / 1000,
+            "seed {seed}: {mismatches}/{n} level mismatches"
+        );
+    }
+}
+
+#[test]
+fn kernel_decode_matches_rust_dequantize() {
+    require_artifacts!();
+    let kernel = QsgdKernel::load(common::engine(), &common::artifacts_dir()).unwrap();
+    let n = kernel.n();
+    let s = kernel.s();
+    let codec = QsgdCodec::new(s, 0);
+
+    let mut rng = Rng::seed_from_u64(11);
+    let q: Vec<i32> = (0..n)
+        .map(|_| (rng.gen_below(2 * s as usize + 1) as i32) - s as i32)
+        .collect();
+    let norm = 17.25f32;
+
+    let from_kernel = kernel.decode(&q, norm).unwrap();
+    let from_rust = codec.dequantize(&q, norm);
+    for (a, b) in from_kernel.iter().zip(&from_rust) {
+        assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn quantize_roundtrip_error_bound_through_kernel() {
+    require_artifacts!();
+    let kernel = QsgdKernel::load(common::engine(), &common::artifacts_dir()).unwrap();
+    let n = kernel.n();
+    let s = kernel.s() as f32;
+
+    let mut rng = Rng::seed_from_u64(23);
+    let v: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+    let u: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+    let (q, norm) = kernel.encode(&v, &u).unwrap();
+    let vhat = kernel.decode(&q, norm).unwrap();
+    let bound = norm / s + 1e-4;
+    for (a, b) in v.iter().zip(&vhat) {
+        assert!((a - b).abs() <= bound, "|{a} - {b}| > {bound}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration: the AOT bridge end to end — python-lowered HLO artifacts
+//! loaded, compiled and executed from rust via PJRT, checked for
+//! numerical sanity and internal consistency.
+
+mod common;
+
+use p2pless::data::{DatasetKind, SyntheticDataset};
+use p2pless::runtime::ModelRuntime;
+use p2pless::util::Rng;
+
+fn batch(kind: DatasetKind, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let d = SyntheticDataset::new(kind, seed).generate(n);
+    (d.x, d.y)
+}
+
+#[test]
+fn grad_runs_and_is_finite_for_all_models() {
+    require_artifacts!();
+    for key in ["mini_squeezenet_mnist", "mini_mobilenet_mnist", "mini_vgg_mnist"] {
+        let rt = ModelRuntime::load(common::engine(), &common::artifacts_dir(), key).unwrap();
+        let params = rt.init_params().unwrap();
+        assert_eq!(params.len(), rt.param_count());
+        let (x, y) = batch(DatasetKind::Mnist, 16, 1);
+        let out = rt.grad(16, &params, &x, &y, true).unwrap();
+        assert!(out.loss.is_finite(), "{key}: loss {}", out.loss);
+        assert!(out.loss > 0.0 && out.loss < 20.0, "{key}: loss {}", out.loss);
+        assert_eq!(out.grads.len(), rt.param_count());
+        assert!(out.grads.iter().all(|g| g.is_finite()), "{key}: non-finite grads");
+        let norm: f32 = out.grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(norm > 1e-6, "{key}: zero gradient");
+    }
+}
+
+#[test]
+fn pallas_and_nopallas_artifacts_agree() {
+    require_artifacts!();
+    // the L1 kernel must not change the math (ablation artifact pair)
+    let rt = ModelRuntime::load(
+        common::engine(),
+        &common::artifacts_dir(),
+        "mini_squeezenet_mnist",
+    )
+    .unwrap();
+    let params = rt.init_params().unwrap();
+    let (x, y) = batch(DatasetKind::Mnist, 64, 2);
+    let a = rt.grad(64, &params, &x, &y, true).unwrap();
+    let b = rt.grad(64, &params, &x, &y, false).unwrap();
+    assert!((a.loss - b.loss).abs() < 1e-4, "{} vs {}", a.loss, b.loss);
+    let max_diff = a
+        .grads
+        .iter()
+        .zip(&b.grads)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "pallas vs jnp grads differ by {max_diff}");
+}
+
+#[test]
+fn update_is_exact_sgd() {
+    require_artifacts!();
+    let rt = ModelRuntime::load(
+        common::engine(),
+        &common::artifacts_dir(),
+        "mini_squeezenet_mnist",
+    )
+    .unwrap();
+    let params = rt.init_params().unwrap();
+    let mut rng = Rng::seed_from_u64(5);
+    let grads: Vec<f32> = (0..params.len()).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+    let lr = 0.1f32;
+    let updated = rt.update(&params, &grads, lr).unwrap();
+    for i in 0..params.len() {
+        let want = params[i] - lr * grads[i];
+        assert!(
+            (updated[i] - want).abs() <= 1e-6 * want.abs().max(1.0),
+            "i={i}: {} vs {}",
+            updated[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn eval_counts_are_bounded() {
+    require_artifacts!();
+    let rt = ModelRuntime::load(
+        common::engine(),
+        &common::artifacts_dir(),
+        "mini_mobilenet_cifar",
+    )
+    .unwrap();
+    let params = rt.init_params().unwrap();
+    let (x, y) = batch(DatasetKind::Cifar, 64, 3);
+    let (loss, correct) = rt.eval(64, &params, &x, &y).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=64.0).contains(&correct), "correct={correct}");
+}
+
+#[test]
+fn eval_dataset_tiles_batches() {
+    require_artifacts!();
+    let rt = ModelRuntime::load(
+        common::engine(),
+        &common::artifacts_dir(),
+        "mini_squeezenet_mnist",
+    )
+    .unwrap();
+    let params = rt.init_params().unwrap();
+    let val = SyntheticDataset::new(DatasetKind::Mnist, 9).generate(200);
+    // 200 samples -> largest eval batch 64 -> 3 batches, 192 samples
+    let (loss, acc) = rt.eval_dataset(&params, &val).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn sgd_step_reduces_loss_on_fixed_batch() {
+    require_artifacts!();
+    // optimization sanity through the full AOT path
+    let rt = ModelRuntime::load(
+        common::engine(),
+        &common::artifacts_dir(),
+        "mini_vgg_mnist",
+    )
+    .unwrap();
+    let mut params = rt.init_params().unwrap();
+    let (x, y) = batch(DatasetKind::Mnist, 16, 7);
+    let first = rt.grad(16, &params, &x, &y, true).unwrap();
+    let mut loss = first.loss;
+    let mut grads = first.grads;
+    for _ in 0..5 {
+        params = rt.update(&params, &grads, 0.05).unwrap();
+        let out = rt.grad(16, &params, &x, &y, true).unwrap();
+        loss = out.loss;
+        grads = out.grads;
+    }
+    assert!(
+        loss < first.loss,
+        "5 SGD steps should reduce loss: {} -> {}",
+        first.loss,
+        loss
+    );
+}
+
+#[test]
+fn wrong_shapes_are_rejected() {
+    require_artifacts!();
+    let rt = ModelRuntime::load(
+        common::engine(),
+        &common::artifacts_dir(),
+        "mini_squeezenet_mnist",
+    )
+    .unwrap();
+    let params = rt.init_params().unwrap();
+    let (x, y) = batch(DatasetKind::Mnist, 16, 1);
+    // wrong param count
+    assert!(rt.grad(16, &params[1..], &x, &y, true).is_err());
+    // batch with no artifact
+    assert!(rt.grad(17, &params, &x, &y, true).is_err());
+    // grads of the wrong length for update
+    assert!(rt.update(&params, &params[1..], 0.1).is_err());
+}
