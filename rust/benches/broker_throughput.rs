@@ -29,6 +29,52 @@ fn main() {
         );
     }
 
+    // real concurrency: T peer threads publishing to their own queues
+    // while peeking every other queue (the cluster exchange shape)
+    let mut b = Bench::new("concurrent").with_samples(3, 15);
+    for &threads in &[2usize, 4, 8] {
+        let iters = 200u64;
+        b.bench_throughput(
+            &format!("exchange_{threads}_peers"),
+            (threads as u64 * iters) as f64,
+            "msg",
+            || {
+                let broker = std::sync::Arc::new(Broker::default());
+                for r in 0..threads {
+                    broker
+                        .declare(&Broker::gradient_queue(r), QueueMode::LatestOnly)
+                        .unwrap();
+                }
+                let handles: Vec<_> = (0..threads)
+                    .map(|r| {
+                        let broker = broker.clone();
+                        std::thread::spawn(move || {
+                            let payload = Bytes::from(vec![0u8; 4 * 1024]);
+                            for e in 0..iters {
+                                broker
+                                    .publish(
+                                        &Broker::gradient_queue(r),
+                                        Message::new(r, e, payload.clone()),
+                                    )
+                                    .unwrap();
+                                for other in 0..threads {
+                                    if other != r {
+                                        let q =
+                                            broker.get(&Broker::gradient_queue(other)).unwrap();
+                                        std::hint::black_box(q.peek_latest());
+                                    }
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            },
+        );
+    }
+
     // barrier round: P publishes + P waits
     let mut b = Bench::new("barrier").with_samples(5, 20);
     for &peers in &[2usize, 4, 8, 16] {

@@ -1,19 +1,23 @@
 //! Fig-3 bench: the serverless-vs-instance comparison at both scales —
-//! modeled cloud cells (state-machine execution cost) and a real
-//! two-peer PJRT run per backend.
+//! modeled cloud cells (state-machine execution cost), the real
+//! worker-pool fan-out at several thread counts, and a real two-peer
+//! PJRT run per backend.
 
 use p2pless::config::{Backend, TrainConfig};
 use p2pless::coordinator::Cluster;
+use p2pless::faas::{Executor, FaasPlatform, FunctionSpec, Handler, StateMachine};
 use p2pless::harness::bench::{header, Bench};
 use p2pless::harness::cloud_exps::fig3_cell;
 use p2pless::perfmodel::PaperModel;
 use p2pless::runtime::Engine;
+use p2pless::util::Bytes;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     header(
         "serverless_vs_instance",
-        "modeled fig-3 cell computation + real two-peer runs per backend",
+        "modeled fig-3 cells + real worker-pool fan-out + real two-peer runs per backend",
     );
 
     // cost of evaluating a modeled cell (orchestration overhead itself)
@@ -21,6 +25,25 @@ fn main() {
     for &(peers, batch) in &[(4usize, 64usize), (12, 1024)] {
         b.bench(&format!("fig3_cell_p{peers}_b{batch}"), || {
             fig3_cell(PaperModel::Vgg11, peers, batch).unwrap()
+        });
+    }
+
+    // the execution fabric itself: 16-branch fan-out of 5 ms handlers,
+    // measured wall as the worker pool widens (modeled outputs are
+    // identical at every size — only the measured wall should shrink)
+    let mut b = Bench::new("fabric").with_samples(2, 8);
+    for &threads in &[1usize, 2, 4, 8] {
+        let platform = Arc::new(FaasPlatform::new(Duration::ZERO));
+        let busy: Handler = Arc::new(|b: &Bytes| {
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(b.clone())
+        });
+        platform.register(FunctionSpec::new("grad", 1024, busy)).unwrap();
+        let pool = Executor::new(threads);
+        b.bench(&format!("fanout_16x5ms_threads{threads}"), move || {
+            let items: Vec<Bytes> = (0..16).map(|_| Bytes::from_static(b"b")).collect();
+            let sm = StateMachine::parallel_batches("bench", "grad", items, vec![], 64);
+            sm.execute_with(&platform, &pool).unwrap()
         });
     }
 

@@ -136,6 +136,12 @@ pub struct TrainConfig {
     pub lambda_memory_mb: u32,
     /// Max concurrent lambda invocations per state machine.
     pub lambda_concurrency: usize,
+    /// Worker threads in the FaaS execution fabric (0 = machine size).
+    /// Physical concurrency only: the modeled accounting does not move.
+    pub exec_threads: usize,
+    /// Concurrent PJRT executions the engine allows (0 = machine size,
+    /// 1 = fully serialized — the honest single-core timing mode).
+    pub exec_slots: usize,
     pub seed: u64,
     /// Where the AOT artifacts live.
     pub artifacts_dir: String,
@@ -162,6 +168,8 @@ impl Default for TrainConfig {
             instance_type: "t2.medium".into(),
             lambda_memory_mb: 0,
             lambda_concurrency: 64,
+            exec_threads: 0,
+            exec_slots: 0,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             early_stop_patience: 0,
@@ -203,6 +211,8 @@ impl TrainConfig {
                 "lambda_concurrency" => {
                     cfg.lambda_concurrency = v.as_usize().ok_or_else(missing)?
                 }
+                "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
+                "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
                 "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
                 "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(missing)?.into(),
                 "early_stop_patience" => {
@@ -232,6 +242,8 @@ impl TrainConfig {
             .set("instance_type", self.instance_type.as_str())
             .set("lambda_memory_mb", self.lambda_memory_mb as u64)
             .set("lambda_concurrency", self.lambda_concurrency)
+            .set("exec_threads", self.exec_threads)
+            .set("exec_slots", self.exec_slots)
             .set("seed", self.seed)
             .set("artifacts_dir", self.artifacts_dir.as_str())
             .set("early_stop_patience", self.early_stop_patience)
@@ -297,6 +309,17 @@ mod tests {
         assert_eq!(back.backend, Backend::Serverless);
         assert_eq!(back.sync, SyncMode::Asynchronous);
         assert!(matches!(back.compression, Compression::Qsgd { s: 16 }));
+    }
+
+    #[test]
+    fn exec_knobs_roundtrip() {
+        let cfg = TrainConfig { exec_threads: 8, exec_slots: 1, ..Default::default() };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.exec_threads, 8);
+        assert_eq!(back.exec_slots, 1);
+        // defaults are 0 = "size to the machine"
+        assert_eq!(TrainConfig::default().exec_threads, 0);
+        assert_eq!(TrainConfig::default().exec_slots, 0);
     }
 
     #[test]

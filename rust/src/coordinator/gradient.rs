@@ -127,14 +127,65 @@ impl GradientDict {
     }
 }
 
-/// Elementwise mean of a set of per-batch gradients (the
-/// `AverageBatchesGradients` step).
-pub fn average_batch_gradients(grads: &[Vec<f32>]) -> Result<Vec<f32>> {
-    let mut d = GradientDict::new();
-    for (i, g) in grads.iter().enumerate() {
-        d.insert(i, g.clone());
+/// Streaming elementwise mean of per-batch gradients (the
+/// `AverageBatchesGradients` step): one running f64 sum instead of
+/// materializing every per-batch gradient, so memory is O(params)
+/// regardless of the batch count.
+#[derive(Debug, Default)]
+pub struct GradAccumulator {
+    acc: Vec<f64>,
+    n: usize,
+}
+
+impl GradAccumulator {
+    pub fn new() -> Self {
+        Self::default()
     }
-    d.average()
+
+    /// Fold one gradient into the running sum.
+    pub fn add(&mut self, g: &[f32]) -> Result<()> {
+        if self.n == 0 {
+            self.acc = g.iter().map(|&x| x as f64).collect();
+        } else {
+            if g.len() != self.acc.len() {
+                return Err(Error::Broker(format!(
+                    "gradient length mismatch: {} vs {}",
+                    g.len(),
+                    self.acc.len()
+                )));
+            }
+            for (a, &x) in self.acc.iter_mut().zip(g) {
+                *a += x as f64;
+            }
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Consume the accumulator, returning the elementwise mean.
+    pub fn mean(self) -> Result<Vec<f32>> {
+        if self.n == 0 {
+            return Err(Error::Broker("averaging zero gradients".into()));
+        }
+        let inv = 1.0 / self.n as f64;
+        Ok(self.acc.into_iter().map(|a| (a * inv) as f32).collect())
+    }
+}
+
+/// Elementwise mean of a set of per-batch gradients. Kept as the
+/// slice-shaped convenience; delegates to the streaming
+/// [`GradAccumulator`] (identical f64 summation order, so results are
+/// bit-for-bit the same).
+pub fn average_batch_gradients(grads: &[Vec<f32>]) -> Result<Vec<f32>> {
+    let mut acc = GradAccumulator::new();
+    for g in grads {
+        acc.add(g)?;
+    }
+    acc.mean()
 }
 
 #[cfg(test)]
@@ -221,5 +272,34 @@ mod tests {
             average_batch_gradients(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![2.0, 2.0]])
                 .unwrap();
         assert_eq!(got, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn accumulator_matches_dict_average_bitwise() {
+        // the streaming path must reproduce GradientDict::average exactly
+        // (f64 sum in order, then * 1/n, then cast)
+        let grads: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..5).map(|j| ((i * 5 + j) as f32).sin()).collect())
+            .collect();
+        let mut d = GradientDict::new();
+        let mut acc = GradAccumulator::new();
+        for (i, g) in grads.iter().enumerate() {
+            d.insert(i, g.clone());
+            acc.add(g).unwrap();
+        }
+        assert_eq!(acc.count(), 7);
+        let via_dict = d.average().unwrap();
+        let via_acc = acc.mean().unwrap();
+        for (a, b) in via_dict.iter().zip(&via_acc) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn accumulator_rejects_mismatch_and_empty() {
+        let mut acc = GradAccumulator::new();
+        acc.add(&[1.0, 2.0]).unwrap();
+        assert!(acc.add(&[1.0]).is_err());
+        assert!(GradAccumulator::new().mean().is_err());
     }
 }

@@ -16,7 +16,7 @@ pub mod sync;
 pub mod trainer;
 
 pub use convergence::{EarlyStopping, ReduceLROnPlateau};
-pub use gradient::{average_batch_gradients, GradientDict, GradientWire};
+pub use gradient::{average_batch_gradients, GradAccumulator, GradientDict, GradientWire};
 pub use peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
 pub use serverless::{pack_batch, unpack_batch, OffloadResult, ServerlessOffload};
 pub use sync::EpochBarrier;

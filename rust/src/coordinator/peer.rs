@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use super::convergence::{EarlyStopping, ReduceLROnPlateau};
-use super::gradient::{average_batch_gradients, GradientDict, GradientWire};
+use super::gradient::{GradAccumulator, GradientDict, GradientWire};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
 use crate::broker::{Broker, Message, QueueMode};
@@ -87,6 +87,9 @@ pub struct PeerReport {
     /// Serverless cost accrued by this peer (USD), if offloading.
     pub lambda_cost_usd: f64,
     pub lambda_invocations: usize,
+    /// Real wall time of this peer's fan-outs across the worker pool
+    /// (vs the modeled wall the paper tables use).
+    pub lambda_measured_wall: std::time::Duration,
 }
 
 /// One peer of the cluster.
@@ -162,6 +165,7 @@ impl Peer {
             sent_bytes: Vec::new(),
             lambda_cost_usd: 0.0,
             lambda_invocations: 0,
+            lambda_measured_wall: std::time::Duration::ZERO,
         };
 
         for epoch in 1..=self.config.epochs as u64 {
@@ -178,22 +182,22 @@ impl Peer {
             let t = StageTimer::start(Stage::ComputeGradients);
             let (epoch_loss, my_grad) = match &self.backend {
                 GradBackend::Local { pallas } => {
-                    let mut grads = Vec::with_capacity(batches.len());
+                    // streaming mean: one running sum, O(params) memory
+                    // no matter how many batches the partition yields
+                    let mut acc = GradAccumulator::new();
                     let mut loss_sum = 0f64;
                     for b in &batches {
                         let out = self.runtime.grad(b.size, &self.params, &b.x, &b.y, *pallas)?;
                         loss_sum += out.loss as f64;
-                        grads.push(out.grads);
+                        acc.add(&out.grads)?;
                     }
-                    (
-                        (loss_sum / batches.len() as f64) as f32,
-                        average_batch_gradients(&grads)?,
-                    )
+                    ((loss_sum / batches.len() as f64) as f32, acc.mean()?)
                 }
                 GradBackend::Serverless(offload) => {
                     let out = offload.compute_epoch(epoch as usize, &self.params, &batches)?;
                     report.lambda_cost_usd += out.cost_usd;
                     report.lambda_invocations += out.invocations;
+                    report.lambda_measured_wall += out.measured_wall;
                     (out.loss, out.grads)
                 }
             };

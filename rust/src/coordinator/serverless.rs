@@ -16,9 +16,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::gradient::GradAccumulator;
 use crate::data::Batch;
 use crate::error::{Error, Result};
-use crate::faas::{FaasPlatform, FunctionSpec, Handler, StateMachine};
+use crate::faas::{Executor, FaasPlatform, FunctionSpec, Handler, StateMachine};
 use crate::runtime::ModelRuntime;
 use crate::store::{ObjectRef, ObjectStore};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
@@ -88,6 +89,7 @@ pub struct ServerlessOffload {
     platform: Arc<FaasPlatform>,
     store: Arc<ObjectStore>,
     runtime: Arc<ModelRuntime>,
+    executor: Arc<Executor>,
     function: String,
     bucket: String,
     concurrency: usize,
@@ -100,8 +102,11 @@ pub struct OffloadResult {
     pub loss: f32,
     /// Average of the per-batch gradients.
     pub grads: Vec<f32>,
-    /// Modeled/measured wall time of the fan-out (parallel branches).
+    /// Modeled wall time of the fan-out (parallel branches overlap
+    /// under the deterministic greedy schedule).
     pub wall: Duration,
+    /// Measured wall time of the real worker-pool dispatch.
+    pub measured_wall: Duration,
     /// Billed lambda-seconds.
     pub billed: Duration,
     pub cost_usd: f64,
@@ -116,6 +121,7 @@ impl ServerlessOffload {
         platform: Arc<FaasPlatform>,
         store: Arc<ObjectStore>,
         runtime: Arc<ModelRuntime>,
+        executor: Arc<Executor>,
         peer_rank: usize,
         memory_mb: u32,
         concurrency: usize,
@@ -138,6 +144,11 @@ impl ServerlessOffload {
             let params = bytes_to_f32s(&h_store.get_ref(&params_ref)?);
             let batch = unpack_batch(&h_store.get_ref(&batch_ref)?)?;
             let out = h_runtime.grad(batch.size, &params, &batch.x, &batch.y, true)?;
+            // a real Lambda has its own environment: the time this
+            // branch queued for an engine slot is a simulation artifact
+            // and must not be billed (the handler's own work — S3 I/O,
+            // decode, execution — stays billed)
+            crate::faas::report_unbilled(out.queue_wait);
             let grad_ref =
                 h_store.put_new(&h_bucket, Bytes::from(f32s_to_bytes(&out.grads)))?;
             let mut resp = Json::obj();
@@ -150,6 +161,7 @@ impl ServerlessOffload {
             platform,
             store,
             runtime,
+            executor,
             function,
             bucket,
             concurrency,
@@ -175,6 +187,24 @@ impl ServerlessOffload {
             let (h, w, c) = self.runtime.input_shape();
             h * w * c
         };
+        // everything this epoch writes — params, packed batches, parked
+        // gradients — lives in this peer's scratch bucket, so whatever
+        // happens below (success, branch failure, malformed handler
+        // output) the bucket sweep keeps the store bounded
+        let outcome = self.fan_out_epoch(epoch, params, batches, elems);
+        self.store.clear_bucket(&self.bucket);
+        outcome
+    }
+
+    /// Upload, fan out, collect. Scratch objects are swept by the
+    /// caller ([`Self::compute_epoch`]) on every exit path.
+    fn fan_out_epoch(
+        &self,
+        epoch: usize,
+        params: &[f32],
+        batches: &[Batch],
+        elems: usize,
+    ) -> Result<OffloadResult> {
         // 1. upload params once per epoch
         let params_ref = self
             .store
@@ -190,7 +220,8 @@ impl ServerlessOffload {
                 .set("batch", ref_to_json(&batch_ref));
             items.push(Bytes::from(req.to_string().into_bytes()));
         }
-        // 3. dynamic state machine: one branch per batch
+        // 3. dynamic state machine: one branch per batch, dispatched
+        //    across the shared worker pool
         let sm = StateMachine::parallel_batches(
             format!("{}-epoch{epoch}", self.function),
             &self.function,
@@ -198,26 +229,28 @@ impl ServerlessOffload {
             vec![],
             self.concurrency,
         );
-        let report = sm.execute(&self.platform)?;
-        // 4. collect + average
+        let report = sm.execute_with(&self.platform, &self.executor)?;
+        // 4. collect + average (streaming: one running sum instead of
+        //    materializing every per-batch gradient)
         let outputs = report
             .outputs
             .first()
             .ok_or_else(|| Error::Faas("state machine produced no outputs".into()))?;
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(outputs.len());
+        let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
         for out in outputs {
             let resp =
                 Json::parse(std::str::from_utf8(out).map_err(|e| Error::Faas(e.to_string()))?)?;
             loss_sum += resp.req("loss")?.as_f64().unwrap_or(f64::NAN);
             let grad_ref = ref_from_json(resp.req("grad")?)?;
-            grads.push(bytes_to_f32s(&self.store.get_ref(&grad_ref)?));
+            acc.add(&bytes_to_f32s(&self.store.get_ref(&grad_ref)?))?;
         }
-        let avg = super::gradient::average_batch_gradients(&grads)?;
+        let avg = acc.mean()?;
         Ok(OffloadResult {
             loss: (loss_sum / outputs.len() as f64) as f32,
             grads: avg,
             wall: report.wall,
+            measured_wall: report.measured_wall,
             billed: report.billed,
             cost_usd: report.cost_usd,
             invocations: report.invocations,

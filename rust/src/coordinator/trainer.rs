@@ -17,7 +17,7 @@ use crate::compress::codec_for;
 use crate::config::{Backend, TrainConfig};
 use crate::data::{DatasetKind, SyntheticDataset};
 use crate::error::{Error, Result};
-use crate::faas::FaasPlatform;
+use crate::faas::{Executor, FaasPlatform};
 use crate::metrics::{MetricsRegistry, Stage, StageSummary};
 use crate::perfmodel;
 use crate::runtime::{Engine, ModelRuntime};
@@ -40,6 +40,12 @@ pub struct TrainReport {
     pub lambda_invocations: u64,
     pub lambda_cost_usd: f64,
     pub lambda_cold_starts: u64,
+    /// Real wall time of the serverless fan-outs, summed over peers
+    /// (the measured counterpart of the modeled Map-state wall).
+    pub lambda_measured_wall: Duration,
+    /// Objects still live in the store at the end of the run — the
+    /// per-epoch sweep must keep this at zero for serverless runs.
+    pub store_objects: usize,
 }
 
 impl TrainReport {
@@ -79,16 +85,23 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(config: TrainConfig) -> Result<Self> {
         config.validate()?;
-        Ok(Self {
-            config,
-            engine: Arc::new(Engine::new()?),
-            faults: FaultPlan::default(),
-        })
+        let engine = Arc::new(Engine::with_slots(config.exec_slots)?);
+        Ok(Self { config, engine, faults: FaultPlan::default() })
     }
 
     /// Reuse an existing engine (avoids re-creating the PJRT client).
+    /// The engine's execution-slot bound is fixed at construction, so a
+    /// config that demands a different `exec_slots` is an error — not a
+    /// silently ignored knob.
     pub fn with_engine(config: TrainConfig, engine: Arc<Engine>) -> Result<Self> {
         config.validate()?;
+        if config.exec_slots != 0 && config.exec_slots != engine.exec_slots() {
+            return Err(Error::Config(format!(
+                "config wants exec_slots={} but the provided engine was built with {}",
+                config.exec_slots,
+                engine.exec_slots()
+            )));
+        }
         Ok(Self { config, engine, faults: FaultPlan::default() })
     }
 
@@ -112,6 +125,8 @@ impl Cluster {
         let broker = Arc::new(Broker::new(DEFAULT_MESSAGE_CAP, self.faults));
         let store = Arc::new(ObjectStore::new());
         let platform = Arc::new(FaasPlatform::default());
+        // one worker pool shared by every peer's fan-outs
+        let executor = Arc::new(Executor::new(cfg.exec_threads));
         let metrics = Arc::new(MetricsRegistry::new());
         let runtime = Arc::new(ModelRuntime::load(
             self.engine.clone(),
@@ -166,6 +181,7 @@ impl Cluster {
                         platform.clone(),
                         store.clone(),
                         runtime.clone(),
+                        executor.clone(),
                         rank,
                         mem,
                         cfg.lambda_concurrency,
@@ -209,6 +225,7 @@ impl Cluster {
 
         let (broker_msgs, broker_bytes) = broker.stats();
         let fstats = platform.stats();
+        let lambda_measured_wall = peers.iter().map(|p| p.lambda_measured_wall).sum();
         Ok(TrainReport {
             config: cfg.clone(),
             peers,
@@ -220,6 +237,8 @@ impl Cluster {
             lambda_invocations: fstats.invocations,
             lambda_cost_usd: platform.total_cost_usd(),
             lambda_cold_starts: fstats.cold_starts,
+            lambda_measured_wall,
+            store_objects: store.total_objects(),
         })
     }
 }

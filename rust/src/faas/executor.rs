@@ -1,0 +1,211 @@
+//! The execution fabric: a shared worker pool that runs FaaS
+//! invocations on real OS threads.
+//!
+//! The paper's speedup comes from *parallel* per-batch Lambda fan-out;
+//! this pool is what makes that fan-out physically concurrent instead
+//! of a modeled fiction. Design points:
+//!
+//! - **bounded concurrency** — a fixed number of worker threads pulls
+//!   jobs off one shared queue, so a 200-branch Map state never spawns
+//!   200 threads;
+//! - **per-invocation result channels** — every [`Executor::submit`]
+//!   returns a [`JobHandle`] backed by its own rendezvous channel, so
+//!   callers collect results in dispatch order (keeping modeled-time
+//!   aggregation deterministic);
+//! - **panic-safe error propagation** — a panicking handler is caught
+//!   with `catch_unwind` and surfaced as [`Error::Faas`] from
+//!   [`JobHandle::join`]; the worker thread survives and keeps serving.
+//!
+//! Jobs must not submit-and-join on the same pool (a saturated pool
+//! would deadlock); the state machine only dispatches leaf invocations,
+//! which never recurse.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool for FaaS invocation dispatch.
+pub struct Executor {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Executor {
+    /// Build a pool with `threads` workers; `0` sizes the pool to the
+    /// machine (`available_parallelism`). `1` reproduces sequential
+    /// dispatch for honest single-core timing comparisons.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 { default_threads() } else { threads };
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("faas-exec-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only while waiting for a job
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // executor dropped
+                        }
+                    })
+                    .expect("spawn faas executor worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, threads }
+    }
+
+    /// The process-wide shared pool, sized to the machine. Used by
+    /// call sites that have no `TrainConfig` to thread a pool through
+    /// (cloud-scale harness drivers, tests).
+    pub fn global() -> &'static Executor {
+        static GLOBAL: OnceLock<Executor> = OnceLock::new();
+        GLOBAL.get_or_init(|| Executor::new(0))
+    }
+
+    /// Number of worker threads (the physical concurrency bound).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Dispatch a job; the returned handle yields the result (or the
+    /// panic, as an error) on [`JobHandle::join`].
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = sync_channel(1);
+        let job: Job = Box::new(move || {
+            let out = catch_unwind(AssertUnwindSafe(move || f())).map_err(|p| panic_message(&*p));
+            // receiver may have been dropped by an abandoning caller
+            let _ = tx.send(out);
+        });
+        self.tx
+            .as_ref()
+            .expect("executor is alive until dropped")
+            .send(job)
+            .expect("executor workers outlive the sender");
+        JobHandle { rx }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // closing the channel wakes every idle worker with RecvError
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One submitted job's result slot.
+pub struct JobHandle<T> {
+    rx: Receiver<std::result::Result<T, String>>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes. A panic inside the job surfaces
+    /// here as [`Error::Faas`]; the worker pool is unaffected.
+    pub fn join(self) -> Result<T> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(panic)) => Err(Error::Faas(format!("invocation worker panicked: {panic}"))),
+            Err(_) => Err(Error::Faas("invocation worker disconnected".into())),
+        }
+    }
+}
+
+// Re-exported here because the state machine gates in-flight fan-out
+// branches on a Map state's `max_concurrency` with it.
+pub use crate::util::sync::{Semaphore, SemaphorePermit};
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn submit_returns_results_in_join_order() {
+        let pool = Executor::new(4);
+        let handles: Vec<_> = (0..16).map(|i| pool.submit(move || i * 2)).collect();
+        let got: Vec<i32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_is_contained_and_pool_survives() {
+        let pool = Executor::new(2);
+        let bad = pool.submit(|| -> u32 { panic!("handler exploded") });
+        let err = bad.join().unwrap_err();
+        assert!(err.to_string().contains("handler exploded"), "{err}");
+        // the worker that caught the panic still serves jobs
+        for i in 0..8 {
+            assert_eq!(pool.submit(move || i + 1).join().unwrap(), i + 1);
+        }
+    }
+
+    #[test]
+    fn concurrency_is_bounded_by_thread_count() {
+        let pool = Executor::new(2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let live = live.clone();
+                let peak = peak.clone();
+                pool.submit(move || {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(10));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {:?}", peak);
+    }
+
+    #[test]
+    fn zero_sizes_to_machine() {
+        let pool = Executor::new(0);
+        assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = Executor::new(3);
+        let h = pool.submit(|| 7u8);
+        assert_eq!(h.join().unwrap(), 7);
+        drop(pool); // must not hang
+    }
+}

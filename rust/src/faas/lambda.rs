@@ -10,7 +10,9 @@
 //! - **measured** — wall time of the real handler (PJRT execution);
 //! - **modeled** — a caller-supplied duration from the perfmodel for
 //!   cloud-scale extrapolation. Billing uses the modeled duration when
-//!   present, else the measured one.
+//!   present, else the measured one minus any time the handler reported
+//!   as an in-process artifact via [`report_unbilled`] (e.g. engine
+//!   slot queue wait, which a real per-environment Lambda never pays).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,6 +35,26 @@ pub const MAX_UNZIPPED_MB: u32 = 250;
 
 /// A function handler: request bytes in, response bytes out.
 pub type Handler = Arc<dyn Fn(&Bytes) -> Result<Bytes> + Send + Sync>;
+
+thread_local! {
+    static UNBILLED: std::cell::Cell<Duration> = std::cell::Cell::new(Duration::ZERO);
+}
+
+/// Called from *inside* a handler to report time that must be excluded
+/// from measured billing — in-process simulation artifacts like the
+/// engine-semaphore queue wait, which a real per-environment Lambda
+/// never pays (it has its own compute). Accumulates across calls within
+/// one invocation; without this, billed seconds and cost would grow
+/// with `--exec-threads` as branches queue behind each other. Real
+/// handler work (S3 I/O, decode, the execution itself) stays billed,
+/// and an explicit `modeled` duration wins outright.
+pub fn report_unbilled(d: Duration) {
+    UNBILLED.with(|c| c.set(c.get() + d));
+}
+
+fn take_unbilled() -> Duration {
+    UNBILLED.with(|c| c.replace(Duration::ZERO))
+}
 
 /// Registered function configuration.
 #[derive(Clone)]
@@ -153,24 +175,50 @@ impl FaasPlatform {
             .ok_or_else(|| Error::Faas(format!("unknown function {name:?}")))
     }
 
+    /// Take up to `n` warm environments for `name`; returns how many
+    /// were available. The remaining `n - taken` invocations of a
+    /// fan-out wave are cold. Making the cold/warm split an up-front
+    /// atomic decision (instead of per-invoke pool probing) keeps the
+    /// modeled accounting deterministic under real thread concurrency.
+    pub fn acquire_environments(&self, name: &str, n: usize) -> usize {
+        let mut warm = self.warm.lock().unwrap();
+        let slot = warm.entry(name.to_string()).or_insert(0);
+        let taken = (*slot).min(n);
+        *slot -= taken;
+        taken
+    }
+
+    /// Return `n` environments to the warm pool — after a fan-out,
+    /// every environment that ran stays warm for the next wave.
+    pub fn release_environments(&self, name: &str, n: usize) {
+        *self.warm.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
+    }
+
     /// Invoke synchronously; `modeled` overrides the billed duration for
     /// perfmodel-driven extrapolation runs.
     pub fn invoke(&self, name: &str, payload: &Bytes, modeled: Option<Duration>) -> Result<Invocation> {
+        self.get(name)?; // unknown functions must not touch the warm pool
+        let cold = self.acquire_environments(name, 1) == 0;
+        let result = self.invoke_prepared(name, payload, modeled, cold);
+        // the environment stays warm even after a handler error
+        self.release_environments(name, 1);
+        result
+    }
+
+    /// Invoke with the cold/warm decision already made by the caller
+    /// (the state machine's deterministic first-wave accounting). Does
+    /// not touch the warm pool; pair with [`Self::acquire_environments`]
+    /// / [`Self::release_environments`].
+    pub fn invoke_prepared(
+        &self,
+        name: &str,
+        payload: &Bytes,
+        modeled: Option<Duration>,
+        cold: bool,
+    ) -> Result<Invocation> {
         let spec = self.get(name)?;
         self.invocations.fetch_add(1, Ordering::Relaxed);
 
-        // warm-pool bookkeeping: take a warm environment if available,
-        // otherwise this is a cold start (returned to the pool after).
-        let cold = {
-            let mut warm = self.warm.lock().unwrap();
-            let slot = warm.entry(spec.name.clone()).or_insert(0);
-            if *slot > 0 {
-                *slot -= 1;
-                false
-            } else {
-                true
-            }
-        };
         let cold_start = if cold {
             self.cold_starts.fetch_add(1, Ordering::Relaxed);
             self.cold_start
@@ -178,15 +226,11 @@ impl FaasPlatform {
             Duration::ZERO
         };
 
+        let _ = take_unbilled(); // drop any stale report
         let t0 = Instant::now();
         let result = (spec.handler)(payload);
         let measured = t0.elapsed();
-
-        // environment becomes warm for subsequent invokes
-        {
-            let mut warm = self.warm.lock().unwrap();
-            *warm.entry(spec.name.clone()).or_insert(0) += 1;
-        }
+        let unbilled = take_unbilled();
 
         let output = match result {
             Ok(o) => o,
@@ -196,7 +240,7 @@ impl FaasPlatform {
             }
         };
 
-        let billed = modeled.unwrap_or(measured);
+        let billed = modeled.unwrap_or_else(|| measured.saturating_sub(unbilled));
         if billed > spec.timeout {
             self.errors.fetch_add(1, Ordering::Relaxed);
             return Err(Error::FaasTimeout {
@@ -287,6 +331,18 @@ mod tests {
     }
 
     #[test]
+    fn wave_acquire_release_cold_accounting() {
+        let p = platform();
+        p.register(FunctionSpec::new("f", 512, echo())).unwrap();
+        assert_eq!(p.acquire_environments("f", 3), 0); // fresh pool: all cold
+        p.release_environments("f", 3); // the wave leaves 3 warm envs
+        assert_eq!(p.acquire_environments("f", 2), 2);
+        p.release_environments("f", 2);
+        let inv = p.invoke("f", &Bytes::new(), None).unwrap();
+        assert_eq!(inv.cold_start, Duration::ZERO);
+    }
+
+    #[test]
     fn prewarm_avoids_cold_start() {
         let p = platform();
         p.register(FunctionSpec::new("f", 512, echo())).unwrap();
@@ -310,6 +366,28 @@ mod tests {
         // exceeding the function timeout errors (15-min class behaviour)
         let err = p.invoke("f", &Bytes::new(), Some(Duration::from_secs(11)));
         assert!(matches!(err, Err(Error::FaasTimeout { .. })));
+    }
+
+    #[test]
+    fn unbilled_time_is_excluded_from_measured_billing() {
+        let p = platform();
+        let h: Handler = Arc::new(|b: &Bytes| {
+            // report far more than the handler takes: billing saturates
+            // to zero instead of going negative
+            report_unbilled(Duration::from_secs(30));
+            report_unbilled(Duration::from_secs(30)); // accumulates
+            Ok(b.clone())
+        });
+        p.register(FunctionSpec::new("f", 512, h)).unwrap();
+        let inv = p.invoke("f", &Bytes::new(), None).unwrap();
+        assert_eq!(inv.billed, Duration::ZERO);
+        // an explicit modeled duration wins outright
+        let inv = p.invoke("f", &Bytes::new(), Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(inv.billed, Duration::from_secs(5));
+        // the report is consumed: a plain handler bills measured time
+        p.register(FunctionSpec::new("plain", 512, echo())).unwrap();
+        let inv = p.invoke("plain", &Bytes::new(), None).unwrap();
+        assert_eq!(inv.billed, inv.measured);
     }
 
     #[test]

@@ -1,14 +1,20 @@
 //! Serverless substrate: AWS-Lambda-like platform + Step-Functions-like
-//! orchestration + Lambda pricing.
+//! orchestration + Lambda pricing, dispatched over a real worker pool.
 //!
 //! See DESIGN.md's substitution table — this is the paper's serverless
 //! layer rebuilt in-process so the gradient fan-out path is exercised by
-//! real code (the handlers execute the same PJRT artifacts the peers use).
+//! real code (the handlers execute the same PJRT artifacts the peers
+//! use). The [`executor`] worker pool makes Map-state fan-out physically
+//! concurrent while the modeled time accounting stays deterministic.
 
+pub mod executor;
 pub mod lambda;
 pub mod pricing;
 pub mod state_machine;
 
-pub use lambda::{FaasPlatform, FunctionSpec, Handler, Invocation, PlatformStats};
+pub use executor::{Executor, JobHandle, Semaphore};
+pub use lambda::{
+    report_unbilled, FaasPlatform, FunctionSpec, Handler, Invocation, PlatformStats,
+};
 pub use pricing::{invocation_cost, price_per_second, Arch};
 pub use state_machine::{schedule_wall, ExecutionReport, RetryPolicy, State, StateMachine};

@@ -7,16 +7,30 @@
 //! reproduces that: Task / Map / sequence states, bounded concurrency,
 //! retry policy, and wall-clock aggregation.
 //!
-//! Wall time of a Map state is computed by a deterministic greedy
-//! scheduler over the branch durations (`schedule_wall`): with enough
-//! concurrency it is the max branch; with bounded concurrency, waves
-//! form — exactly the behaviour that makes serverless fan-out beat the
-//! sequential instance loop in fig 3.
+//! Time accounting is dual:
+//!
+//! - **modeled wall** ([`ExecutionReport::wall`]) — a deterministic
+//!   greedy schedule over the branch durations (`schedule_wall`): with
+//!   enough concurrency it is the max branch; with bounded concurrency,
+//!   waves form — exactly the behaviour that makes serverless fan-out
+//!   beat the sequential instance loop in fig 3. Cold starts are
+//!   assigned per *wave*, not per pool probe: the first
+//!   `min(branches, max_concurrency)` branches each need their own
+//!   environment, so a fresh fan-out of N correctly takes N cold
+//!   starts. Because the split is decided up front, the modeled numbers
+//!   are byte-identical no matter how many worker threads execute the
+//!   branches.
+//! - **measured wall** ([`ExecutionReport::measured_wall`]) — the real
+//!   elapsed time of dispatching the branches across the
+//!   [`Executor`] worker pool. This is what shrinks as `--exec-threads`
+//!   grows; the modeled wall does not move.
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::util::Bytes;
 
+use super::executor::{Executor, Semaphore};
 use super::lambda::{FaasPlatform, Invocation};
 use crate::error::{Error, Result};
 
@@ -50,8 +64,11 @@ pub enum State {
 #[derive(Debug, Default)]
 pub struct ExecutionReport {
     pub outputs: Vec<Vec<Bytes>>,
-    /// Modeled wall-clock (parallel branches overlap).
+    /// Modeled wall-clock (parallel branches overlap under the greedy
+    /// `schedule_wall` scheduler; deterministic across pool sizes).
     pub wall: Duration,
+    /// Measured wall-clock of the real worker-pool dispatch.
+    pub measured_wall: Duration,
     /// Sum of billed durations (what AWS charges for).
     pub billed: Duration,
     pub cost_usd: f64,
@@ -114,30 +131,107 @@ impl StateMachine {
         self.states.len()
     }
 
-    /// Execute against a platform. Handlers run inline (they are already
-    /// fast or PJRT-bound); *modeled* parallelism is aggregated via
-    /// [`schedule_wall`].
-    pub fn execute(&self, platform: &FaasPlatform) -> Result<ExecutionReport> {
+    /// Execute against a platform on the process-wide worker pool.
+    pub fn execute(&self, platform: &Arc<FaasPlatform>) -> Result<ExecutionReport> {
+        self.execute_with(platform, Executor::global())
+    }
+
+    /// Execute against a platform, dispatching Map branches across
+    /// `pool`'s worker threads. Results are joined in branch order, so
+    /// modeled wall/billed/cost aggregation is deterministic regardless
+    /// of the pool size; `measured_wall` reflects the real concurrency.
+    pub fn execute_with(
+        &self,
+        platform: &Arc<FaasPlatform>,
+        pool: &Executor,
+    ) -> Result<ExecutionReport> {
         let mut report = ExecutionReport::default();
         for state in &self.states {
             match state {
                 State::Task { function, payload, modeled } => {
-                    let inv = self.invoke_retry(platform, function, payload, *modeled, &mut report)?;
+                    let t0 = Instant::now();
+                    let (result, attempts) =
+                        invoke_with_retry(platform, function, payload, *modeled, None, self.retry);
+                    report.measured_wall += t0.elapsed();
+                    report.retries += attempts.saturating_sub(1) as usize;
+                    let inv = result?;
+                    report.invocations += 1;
+                    if !inv.cold_start.is_zero() {
+                        report.cold_starts += 1;
+                    }
                     report.wall += inv.wall();
                     report.billed += inv.billed;
                     report.cost_usd += inv.cost_usd;
                     report.outputs.push(vec![inv.output]);
                 }
                 State::Map { function, items, modeled, max_concurrency } => {
+                    platform.get(function)?; // fail fast before reserving envs
+                    // first wave: every branch that may run before any
+                    // other finishes needs its own environment
+                    let first_wave = items.len().min(*max_concurrency);
+                    let warm = platform.acquire_environments(function, first_wave);
+                    // physical in-flight cap = the modeled Lambda
+                    // concurrency, so measured_wall cannot show more
+                    // parallelism than the platform would allow
+                    let gate = Arc::new(Semaphore::new(*max_concurrency));
+                    let t0 = Instant::now();
+                    let handles: Vec<_> = items
+                        .iter()
+                        .enumerate()
+                        .map(|(i, item)| {
+                            let platform = platform.clone();
+                            let function = function.clone();
+                            let payload = item.clone();
+                            let m = modeled.get(i).copied().flatten();
+                            let cold = i >= warm && i < first_wave;
+                            let retry = self.retry;
+                            let gate = gate.clone();
+                            pool.submit(move || {
+                                let _slot = gate.acquire();
+                                invoke_with_retry(
+                                    &platform,
+                                    &function,
+                                    &payload,
+                                    m,
+                                    Some(cold),
+                                    retry,
+                                )
+                            })
+                        })
+                        .collect();
                     let mut outs = Vec::with_capacity(items.len());
                     let mut walls = Vec::with_capacity(items.len());
-                    for (i, item) in items.iter().enumerate() {
-                        let m = modeled.get(i).copied().flatten();
-                        let inv = self.invoke_retry(platform, function, item, m, &mut report)?;
-                        walls.push(inv.wall());
-                        report.billed += inv.billed;
-                        report.cost_usd += inv.cost_usd;
-                        outs.push(inv.output);
+                    let mut first_err = None;
+                    for h in handles {
+                        match h.join() {
+                            Ok((Ok(inv), attempts)) => {
+                                report.invocations += 1;
+                                report.retries += attempts.saturating_sub(1) as usize;
+                                if !inv.cold_start.is_zero() {
+                                    report.cold_starts += 1;
+                                }
+                                walls.push(inv.wall());
+                                report.billed += inv.billed;
+                                report.cost_usd += inv.cost_usd;
+                                outs.push(inv.output);
+                            }
+                            Ok((Err(e), attempts)) => {
+                                report.retries += attempts.saturating_sub(1) as usize;
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                            Err(e) => {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                    }
+                    platform.release_environments(function, first_wave);
+                    report.measured_wall += t0.elapsed();
+                    if let Some(e) = first_err {
+                        return Err(e);
                     }
                     report.wall += schedule_wall(&walls, *max_concurrency);
                     report.outputs.push(outs);
@@ -146,34 +240,41 @@ impl StateMachine {
         }
         Ok(report)
     }
+}
 
-    fn invoke_retry(
-        &self,
-        platform: &FaasPlatform,
-        function: &str,
-        payload: &Bytes,
-        modeled: Option<Duration>,
-        report: &mut ExecutionReport,
-    ) -> Result<Invocation> {
-        let mut last_err = None;
-        for attempt in 0..self.retry.max_attempts.max(1) {
-            match platform.invoke(function, payload, modeled) {
-                Ok(inv) => {
-                    report.invocations += 1;
-                    if !inv.cold_start.is_zero() {
-                        report.cold_starts += 1;
-                    }
-                    if attempt > 0 {
-                        report.retries += attempt as usize;
-                    }
-                    return Ok(inv);
-                }
-                Err(e) => last_err = Some(e),
+/// Invoke with Step-Functions retry semantics. Returns the final result
+/// plus the number of attempts made (so callers record `attempts - 1`
+/// retries — a first try is not a retry, even on exhaustion).
+///
+/// `prepared_cold` carries the state machine's wave decision: the first
+/// attempt uses it, retry attempts always find the environment warm
+/// (the cold init already happened).
+fn invoke_with_retry(
+    platform: &FaasPlatform,
+    function: &str,
+    payload: &Bytes,
+    modeled: Option<Duration>,
+    prepared_cold: Option<bool>,
+    retry: RetryPolicy,
+) -> (Result<Invocation>, u32) {
+    let max = retry.max_attempts.max(1);
+    let mut last_err = None;
+    for attempt in 0..max {
+        let result = match prepared_cold {
+            None => platform.invoke(function, payload, modeled),
+            Some(cold) => {
+                platform.invoke_prepared(function, payload, modeled, cold && attempt == 0)
             }
+        };
+        match result {
+            Ok(inv) => return (Ok(inv), attempt + 1),
+            Err(e) => last_err = Some(e),
         }
-        report.retries += self.retry.max_attempts as usize;
-        Err(last_err.unwrap_or_else(|| Error::Faas("retry exhausted".into())))
     }
+    (
+        Err(last_err.unwrap_or_else(|| Error::Faas("retry exhausted".into()))),
+        max,
+    )
 }
 
 /// Greedy multi-worker makespan: dispatch durations in order onto
@@ -204,8 +305,8 @@ mod tests {
         Arc::new(|b: &Bytes| Ok(b.clone()))
     }
 
-    fn platform() -> FaasPlatform {
-        let p = FaasPlatform::new(Duration::from_millis(500));
+    fn platform() -> Arc<FaasPlatform> {
+        let p = Arc::new(FaasPlatform::new(Duration::from_millis(500)));
         p.register(FunctionSpec::new("grad", 1024, echo())).unwrap();
         p
     }
@@ -243,10 +344,34 @@ mod tests {
         let r = sm.execute(&p).unwrap();
         assert_eq!(r.invocations, 4);
         assert_eq!(r.billed, Duration::from_secs(40));
-        // wall: max(10s) + one cold start (first env) dominates waves;
-        // every branch may cold-start since invocations are recorded
-        // sequentially — wall must be far below the serial 40s.
-        assert!(r.wall < Duration::from_secs(12), "wall {:?}", r.wall);
+        // a fresh fan-out of 4 takes 4 cold starts (one env per branch)
+        assert_eq!(r.cold_starts, 4);
+        // wall: max(cold + 10s) — far below the serial 40s
+        assert_eq!(r.wall, Duration::from_millis(10_500));
+        // dispatch of no-op handlers is near-instant in real time
+        assert!(r.measured_wall < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn second_fanout_reuses_warm_envs() {
+        let p = platform();
+        let items: Vec<Bytes> = (0..3).map(|_| Bytes::from_static(b"b")).collect();
+        let sm = StateMachine::parallel_batches("e", "grad", items, vec![], 64);
+        let r1 = sm.execute(&p).unwrap();
+        assert_eq!(r1.cold_starts, 3);
+        let r2 = sm.execute(&p).unwrap();
+        assert_eq!(r2.cold_starts, 0, "second wave must be fully warm");
+    }
+
+    #[test]
+    fn bounded_concurrency_bounds_cold_wave() {
+        let p = platform();
+        let items: Vec<Bytes> = (0..8).map(|_| Bytes::from_static(b"b")).collect();
+        let sm = StateMachine::parallel_batches("e", "grad", items, vec![], 2);
+        let r = sm.execute(&p).unwrap();
+        // only 2 environments ever run concurrently; later branches reuse
+        assert_eq!(r.cold_starts, 2);
+        assert_eq!(r.invocations, 8);
     }
 
     #[test]
@@ -262,7 +387,7 @@ mod tests {
 
     #[test]
     fn retry_recovers_transient_failures() {
-        let p = FaasPlatform::new(Duration::ZERO);
+        let p = Arc::new(FaasPlatform::new(Duration::ZERO));
         let attempts = Arc::new(AtomicU32::new(0));
         let a2 = attempts.clone();
         let flaky: Handler = Arc::new(move |b: &Bytes| {
@@ -280,14 +405,62 @@ mod tests {
     }
 
     #[test]
+    fn map_retry_success_counted_once() {
+        // regression: a branch succeeding on its k-th attempt must add
+        // exactly k-1 retries, not double-count across the report
+        let p = Arc::new(FaasPlatform::new(Duration::ZERO));
+        let fails = Arc::new(AtomicU32::new(0));
+        let f2 = fails.clone();
+        let flaky: Handler = Arc::new(move |b: &Bytes| {
+            if &b[..] == b"flaky" && f2.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err(Error::Faas("transient".into()))
+            } else {
+                Ok(b.clone())
+            }
+        });
+        p.register(FunctionSpec::new("g", 512, flaky)).unwrap();
+        let items = vec![
+            Bytes::from_static(b"ok1"),
+            Bytes::from_static(b"flaky"),
+            Bytes::from_static(b"ok2"),
+        ];
+        let sm = StateMachine::parallel_batches("e", "g", items, vec![], 64);
+        let r = sm.execute(&p).unwrap();
+        assert_eq!(r.invocations, 3);
+        assert_eq!(r.retries, 2, "two failed attempts = two retries, counted once");
+        assert_eq!(r.outputs[0].len(), 3);
+    }
+
+    #[test]
     fn retry_exhaustion_propagates() {
-        let p = FaasPlatform::new(Duration::ZERO);
+        let p = Arc::new(FaasPlatform::new(Duration::ZERO));
         let failing: Handler = Arc::new(|_| Err(Error::Faas("always".into())));
         p.register(FunctionSpec::new("bad", 512, failing)).unwrap();
         let sm = StateMachine::new("r")
             .with_retry(RetryPolicy { max_attempts: 2 })
             .task("bad", Bytes::new(), None);
         assert!(sm.execute(&p).is_err());
+    }
+
+    #[test]
+    fn retry_exhaustion_counts_attempts_minus_one() {
+        // regression: exhausting max_attempts is max_attempts - 1
+        // retries (the first try is not a retry)
+        let p = FaasPlatform::new(Duration::ZERO);
+        let failing: Handler = Arc::new(|_| Err(Error::Faas("always".into())));
+        p.register(FunctionSpec::new("bad", 512, failing)).unwrap();
+        let (res, attempts) = invoke_with_retry(
+            &p,
+            "bad",
+            &Bytes::new(),
+            None,
+            None,
+            RetryPolicy { max_attempts: 3 },
+        );
+        assert!(res.is_err());
+        assert_eq!(attempts, 3, "3 attempts made");
+        assert_eq!(attempts - 1, 2, "recorded as 2 retries");
+        assert_eq!(p.stats().errors, 3);
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub fn fig3_cell(model: PaperModel, peers: usize, batch: usize) -> Result<Fig3Ce
     // serverless: dynamic Map state over nbatches modeled lambdas
     let mem = perfmodel::lambda_memory_for(spec, batch);
     let lam = perfmodel::lambda_batch_time(spec, mem, batch);
-    let platform = FaasPlatform::new(LAMBDA_COLD_START);
+    let platform = Arc::new(FaasPlatform::new(LAMBDA_COLD_START));
     let noop: Handler = Arc::new(|b: &Bytes| Ok(b.clone()));
     platform.register(FunctionSpec::new("grad", mem, noop))?;
     let items: Vec<Bytes> = (0..nbatches).map(|_| Bytes::new()).collect();

@@ -19,7 +19,10 @@
 //!   consume-without-delete, sync-barrier queue, 100 MB message cap).
 //! - [`store`] — S3-like object store (UUID-referenced large payloads).
 //! - [`faas`] — Lambda + Step Functions substrate (cold starts, memory
-//!   sizing, GB-second billing, parallel Map state, 15-min timeout).
+//!   sizing, GB-second billing, parallel Map state, 15-min timeout),
+//!   dispatched over a real worker pool ([`faas::executor`]) with dual
+//!   time accounting: a deterministic *modeled* wall for the paper
+//!   tables and a *measured* wall that shrinks with `--exec-threads`.
 //! - [`cloud`] — EC2 instance catalog (t2.*) with real AWS pricing.
 //! - [`compress`] — QSGD / top-k / delta gradient codecs.
 //! - [`runtime`] — PJRT engine executing the AOT-compiled JAX/Pallas

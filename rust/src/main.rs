@@ -38,6 +38,11 @@ TRAIN OPTIONS:
     --sync M                 sync | async
     --compression C          none | qsgd:S | topk:FRAC
     --lambda-memory MB       lambda memory (0 = paper Table II rule)
+    --exec-threads N         FaaS worker-pool threads (0 = machine size);
+                             physical fan-out concurrency only — the
+                             modeled accounting does not move with N
+    --exec-slots N           concurrent PJRT executions (0 = machine
+                             size, 1 = serialized honest-timing mode)
     --early-stop N           early-stopping patience (0 = off)
     --plateau N              ReduceLROnPlateau patience (0 = off)
     --seed N                 RNG seed
@@ -135,6 +140,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_num(args, "lambda-memory")? {
         cfg.lambda_memory_mb = v;
     }
+    if let Some(v) = parse_num(args, "exec-threads")? {
+        cfg.exec_threads = v;
+    }
+    if let Some(v) = parse_num(args, "exec-slots")? {
+        cfg.exec_slots = v;
+    }
     if let Some(v) = parse_num(args, "early-stop")? {
         cfg.early_stop_patience = v;
     }
@@ -191,6 +202,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.lambda_cost_usd,
         report.lambda_cold_starts
     );
+    if report.lambda_invocations > 0 {
+        println!(
+            "lambda fan-out measured wall (worker pool): {:?}",
+            report.lambda_measured_wall
+        );
+    }
     println!("wall: {:?}", report.wall);
     Ok(())
 }

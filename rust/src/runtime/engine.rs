@@ -12,13 +12,15 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::util::sync::Semaphore;
 
 /// Compiled executable wrapper.
 ///
 /// SAFETY: the PJRT C API is documented thread-safe (the CPU client
-/// serializes internally), and this crate additionally serializes every
-/// `execute` through [`Engine::exec_lock`]. The `xla` crate omits
-/// Send/Sync only because its wrappers hold raw pointers.
+/// serializes internally), and this crate additionally bounds concurrent
+/// `execute` calls through the [`Engine`]'s execution semaphore. The
+/// `xla` crate omits Send/Sync only because its wrappers hold raw
+/// pointers.
 pub struct Executable(xla::PjRtLoadedExecutable);
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
@@ -27,26 +29,58 @@ struct Client(xla::PjRtClient);
 unsafe impl Send for Client {}
 unsafe impl Sync for Client {}
 
+/// One execution's timing split: the PJRT run itself, and the time
+/// spent waiting for an execution slot. Callers that bill compute time
+/// (the FaaS gradient handler) must exclude the queue wait — a real
+/// per-environment Lambda never pays another invocation's queue.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecTiming {
+    pub exec: Duration,
+    pub queue_wait: Duration,
+}
+
 /// Process-wide PJRT client + compiled-executable cache.
 ///
-/// All executions are serialized through a mutex: the CPU PJRT client is
-/// single-device here, and serializing keeps wall-time measurements of
-/// individual grad steps honest on the 1-core testbed.
+/// Concurrent executions are bounded by a configurable semaphore
+/// (`exec_slots`): the default sizes it to the machine so parallel
+/// fan-out (worker-pool Lambda branches, multi-peer clusters) really
+/// overlaps, while `exec_slots = 1` reproduces the fully-serialized
+/// behaviour that keeps per-grad-step wall measurements honest for the
+/// paper tables.
 pub struct Engine {
     client: Client,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
-    exec_lock: Mutex<()>,
+    exec_sem: Semaphore,
+    exec_slots: usize,
     compile_ms: Mutex<HashMap<String, u64>>,
 }
 
 impl Engine {
+    /// Engine with `exec_slots` sized to the machine.
     pub fn new() -> Result<Self> {
+        Self::with_slots(0)
+    }
+
+    /// Engine with an explicit concurrent-execution bound; `0` sizes it
+    /// to `available_parallelism`, `1` serializes every execution.
+    pub fn with_slots(slots: usize) -> Result<Self> {
+        let slots = if slots == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            slots
+        };
         Ok(Self {
             client: Client(xla::PjRtClient::cpu()?),
             cache: Mutex::new(HashMap::new()),
-            exec_lock: Mutex::new(()),
+            exec_sem: Semaphore::new(slots),
+            exec_slots: slots,
             compile_ms: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// The concurrent-execution bound this engine was built with.
+    pub fn exec_slots(&self) -> usize {
+        self.exec_slots
     }
 
     pub fn platform(&self) -> String {
@@ -79,13 +113,17 @@ impl Engine {
     }
 
     /// Execute with literal inputs; unpacks the single tuple output into
-    /// its elements. Returns (outputs, execution wall time).
+    /// its elements. Returns (outputs, timing). The timing separates the
+    /// execution itself from the slot queue wait, which callers must not
+    /// bill as compute.
     pub fn run(
         &self,
         exe: &Executable,
         inputs: &[xla::Literal],
-    ) -> Result<(Vec<xla::Literal>, Duration)> {
-        let _guard = self.exec_lock.lock().unwrap();
+    ) -> Result<(Vec<xla::Literal>, ExecTiming)> {
+        let t_wait = Instant::now();
+        let _slot = self.exec_sem.acquire();
+        let queue_wait = t_wait.elapsed();
         let t0 = Instant::now();
         let result = exe.0.execute::<xla::Literal>(inputs)?;
         let out = result
@@ -96,7 +134,7 @@ impl Engine {
         let elapsed = t0.elapsed();
         // AOT artifacts are lowered with return_tuple=True.
         let parts = out.to_tuple()?;
-        Ok((parts, elapsed))
+        Ok((parts, ExecTiming { exec: elapsed, queue_wait }))
     }
 
     /// Total number of compiled executables resident.

@@ -18,7 +18,7 @@
 mod engine;
 mod manifest;
 
-pub use engine::{literal_f32, literal_i32, scalar_f32, Engine, Executable};
+pub use engine::{literal_f32, literal_i32, scalar_f32, Engine, ExecTiming, Executable};
 pub use manifest::{Manifest, ModelEntry, QsgdEntry};
 
 use std::sync::Arc;
@@ -118,7 +118,7 @@ impl ModelRuntime {
         let exe = self.engine.load(self.manifest.resolve(&file))?;
         let lp = literal_f32(params, &[params.len() as i64])?;
         let (lx, ly) = self.batch_literals(batch, x, y)?;
-        let (parts, wall) = self.engine.run(&exe, &[lp, lx, ly])?;
+        let (parts, timing) = self.engine.run(&exe, &[lp, lx, ly])?;
         if parts.len() != 2 {
             return Err(Error::Runtime(format!(
                 "grad artifact returned {} outputs, expected 2",
@@ -128,7 +128,8 @@ impl ModelRuntime {
         Ok(GradOutput {
             loss: scalar_f32(&parts[0])?,
             grads: parts[1].to_vec::<f32>()?,
-            wall,
+            wall: timing.exec,
+            queue_wait: timing.queue_wait,
         })
     }
 
@@ -199,6 +200,9 @@ pub struct GradOutput {
     pub grads: Vec<f32>,
     /// PJRT execution wall time (the measured Table-I compute stage).
     pub wall: Duration,
+    /// Time spent waiting for an engine execution slot — an artifact of
+    /// in-process concurrency that billing paths must exclude.
+    pub queue_wait: Duration,
 }
 
 /// The Pallas QSGD kernel pair, runnable from rust for codec

@@ -163,6 +163,37 @@ impl ObjectStore {
             .unwrap_or(0)
     }
 
+    /// Number of live objects in one bucket.
+    pub fn object_count(&self, bucket: &str) -> usize {
+        self.buckets
+            .read().unwrap()
+            .get(bucket)
+            .map(|b| b.len())
+            .unwrap_or(0)
+    }
+
+    /// Number of live objects across every bucket — the boundedness
+    /// check for the per-epoch serverless sweeps.
+    pub fn total_objects(&self) -> usize {
+        self.buckets.read().unwrap().values().map(|b| b.len()).sum()
+    }
+
+    /// Delete every object in `bucket` (the bucket itself survives);
+    /// returns how many objects were removed. Used as the per-epoch
+    /// sweep of serverless scratch uploads — it must run on error
+    /// paths too, where individual refs may be unknown.
+    pub fn clear_bucket(&self, bucket: &str) -> usize {
+        self.buckets
+            .write().unwrap()
+            .get_mut(bucket)
+            .map(|b| {
+                let n = b.len();
+                b.clear();
+                n
+            })
+            .unwrap_or(0)
+    }
+
     /// (puts, gets, bytes written).
     pub fn stats(&self) -> (u64, u64, u64) {
         (
@@ -254,6 +285,34 @@ mod tests {
         let (puts, _gets, bytes) = s.stats();
         assert_eq!(puts, 2);
         assert_eq!(bytes, 6);
+    }
+
+    #[test]
+    fn object_counts_track_deletes() {
+        let s = ObjectStore::new();
+        assert_eq!(s.total_objects(), 0);
+        s.put("a", "k1", Bytes::from_static(b"x")).unwrap();
+        s.put("b", "k2", Bytes::from_static(b"y")).unwrap();
+        assert_eq!(s.object_count("a"), 1);
+        assert_eq!(s.total_objects(), 2);
+        s.delete("a", "k1").unwrap();
+        assert_eq!(s.object_count("a"), 0);
+        assert_eq!(s.total_objects(), 1);
+    }
+
+    #[test]
+    fn clear_bucket_sweeps_only_that_bucket() {
+        let s = ObjectStore::new();
+        s.put("a", "k1", Bytes::from_static(b"x")).unwrap();
+        s.put("a", "k2", Bytes::from_static(b"y")).unwrap();
+        s.put("b", "k3", Bytes::from_static(b"z")).unwrap();
+        assert_eq!(s.clear_bucket("a"), 2);
+        assert_eq!(s.object_count("a"), 0);
+        assert_eq!(s.object_count("b"), 1);
+        assert_eq!(s.clear_bucket("missing"), 0);
+        // the bucket survives and stays writable
+        s.put("a", "k4", Bytes::from_static(b"w")).unwrap();
+        assert_eq!(s.object_count("a"), 1);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 pub mod bytes;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use bytes::Bytes;
 pub use json::Json;
 pub use rng::Rng;
+pub use sync::{Semaphore, SemaphorePermit};

@@ -1,0 +1,78 @@
+//! Small synchronization primitives the std library lacks.
+
+use std::sync::{Condvar, Mutex};
+
+/// Counting semaphore (Mutex + Condvar). Used to bound concurrent PJRT
+/// executions in the engine and in-flight branches of a FaaS fan-out.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    available: Condvar,
+}
+
+impl Semaphore {
+    /// A semaphore with `permits` slots (clamped to at least 1).
+    pub fn new(permits: usize) -> Self {
+        Self { permits: Mutex::new(permits.max(1)), available: Condvar::new() }
+    }
+
+    /// Block until a permit is free; the guard releases it on drop.
+    pub fn acquire(&self) -> SemaphorePermit<'_> {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.available.wait(p).unwrap();
+        }
+        *p -= 1;
+        SemaphorePermit { sem: self }
+    }
+}
+
+/// RAII permit from [`Semaphore::acquire`].
+pub struct SemaphorePermit<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemaphorePermit<'_> {
+    fn drop(&mut self) {
+        *self.sem.permits.lock().unwrap() += 1;
+        self.sem.available.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let sem = Arc::new(Semaphore::new(2));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let sem = sem.clone();
+                let live = live.clone();
+                let peak = peak.clone();
+                std::thread::spawn(move || {
+                    let _slot = sem.acquire();
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(5));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+
+    #[test]
+    fn zero_permits_clamps_to_one() {
+        let sem = Semaphore::new(0);
+        let _slot = sem.acquire(); // must not deadlock
+    }
+}

@@ -4,10 +4,13 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use p2pless::broker::FaultPlan;
 use p2pless::config::{Backend, Compression, SyncMode, TrainConfig};
 use p2pless::coordinator::Cluster;
 use p2pless::metrics::Stage;
+use p2pless::runtime::Engine;
 
 fn base_cfg() -> TrainConfig {
     TrainConfig {
@@ -84,6 +87,50 @@ fn serverless_backend_matches_instance_loss() {
             (li - ls).abs() < 1e-3,
             "instance {li} vs serverless {ls}"
         );
+    }
+}
+
+#[test]
+fn serverless_store_stays_bounded_across_epochs() {
+    require_artifacts!();
+    // every epoch uploads params + batches and parks per-batch
+    // gradients; the per-epoch sweep must delete all of them, so the
+    // store ends empty no matter how many epochs ran
+    let cfg = TrainConfig { backend: Backend::Serverless, epochs: 3, ..base_cfg() };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(rep.lambda_invocations > 0);
+    assert!(rep.lambda_measured_wall > std::time::Duration::ZERO);
+    assert_eq!(
+        rep.store_objects, 0,
+        "per-epoch sweep must leave the object store empty"
+    );
+}
+
+#[test]
+fn exec_slots_do_not_change_results() {
+    require_artifacts!();
+    // the engine semaphore bounds *physical* PJRT concurrency only:
+    // the same gradients flow either way, so the leader's verdict
+    // curve must match between serialized and parallel engines
+    let run = |slots: usize| {
+        let cfg = TrainConfig {
+            backend: Backend::Serverless,
+            exec_slots: slots,
+            ..base_cfg()
+        };
+        let engine = Arc::new(Engine::with_slots(slots).unwrap());
+        Cluster::with_engine(cfg, engine).unwrap().run().unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(8);
+    assert_eq!(serial.val_curve.len(), parallel.val_curve.len());
+    for ((e1, l1, a1), (e2, l2, a2)) in serial.val_curve.iter().zip(&parallel.val_curve) {
+        assert_eq!(e1, e2);
+        assert!((l1 - l2).abs() < 1e-5, "slots=1 {l1} vs slots=8 {l2}");
+        assert!((a1 - a2).abs() < 1e-5);
     }
 }
 

@@ -1,0 +1,215 @@
+//! The parallel execution fabric, end to end: worker-pool Map dispatch,
+//! platform counter consistency under thread pressure, modeled-time
+//! determinism across pool sizes, and the measured-speedup acceptance
+//! check (parallel fan-out < 0.7x the sequential measured wall).
+//!
+//! None of these need the PJRT artifacts — handlers are synthetic, so
+//! the fabric itself is what is under test.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use p2pless::faas::{
+    invocation_cost, Arch, Executor, FaasPlatform, FunctionSpec, Handler, StateMachine,
+};
+use p2pless::util::Bytes;
+
+fn echo() -> Handler {
+    Arc::new(|b: &Bytes| Ok(b.clone()))
+}
+
+fn sleepy(ms: u64) -> Handler {
+    Arc::new(move |b: &Bytes| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(b.clone())
+    })
+}
+
+/// N threads hammering one registered function: every platform counter
+/// and the accumulated cost must stay consistent.
+#[test]
+fn stress_platform_counters_consistent() {
+    const THREADS: usize = 8;
+    const ITERS: usize = 50;
+    let p = Arc::new(FaasPlatform::new(Duration::from_millis(100)));
+    p.register(FunctionSpec::new("grad", 1024, echo())).unwrap();
+    let modeled = Duration::from_secs(1);
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let p = p.clone();
+            std::thread::spawn(move || {
+                for _ in 0..ITERS {
+                    p.invoke("grad", &Bytes::from_static(b"x"), Some(modeled)).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = (THREADS * ITERS) as u64;
+    let stats = p.stats();
+    assert_eq!(stats.invocations, total);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.billed_ms, total * 1000);
+    // cold starts happen only while the warm pool ramps up
+    assert!(stats.cold_starts >= 1 && stats.cold_starts <= THREADS as u64);
+    let per_call = invocation_cost(1024, 1000, Arch::Arm64);
+    let want = per_call * total as f64;
+    // the accumulator truncates to microcents per call
+    assert!(
+        (p.total_cost_usd() - want).abs() < 1e-5,
+        "cost {} vs {}",
+        p.total_cost_usd(),
+        want
+    );
+}
+
+/// Modeled wall / billed / cost must be byte-identical whether the
+/// fan-out runs on 1 worker thread or 8 — the pool is physical
+/// concurrency only; the model is the paper's source of truth.
+#[test]
+fn modeled_outputs_identical_across_pool_sizes() {
+    let run = |threads: usize| {
+        let p = Arc::new(FaasPlatform::new(Duration::from_millis(2500)));
+        p.register(FunctionSpec::new("grad", 2048, echo())).unwrap();
+        let pool = Executor::new(threads);
+        let items: Vec<Bytes> = (0..16).map(|_| Bytes::from_static(b"b")).collect();
+        let modeled = (0..16).map(|i| Some(Duration::from_millis(900 + i * 7))).collect();
+        let sm = StateMachine::parallel_batches("det", "grad", items, modeled, 4);
+        let r = sm.execute_with(&p, &pool).unwrap();
+        (r.wall, r.billed, r.cost_usd, r.invocations, r.cold_starts, p.stats().cold_starts)
+    };
+    let a = run(1);
+    let b = run(8);
+    assert_eq!(a.0, b.0, "modeled wall must not depend on pool size");
+    assert_eq!(a.1, b.1, "billed must not depend on pool size");
+    assert_eq!(
+        a.2.to_bits(),
+        b.2.to_bits(),
+        "cost must be byte-identical: {} vs {}",
+        a.2,
+        b.2
+    );
+    assert_eq!(a.3, b.3);
+    assert_eq!((a.4, a.5), (b.4, b.5), "wave cold-start accounting must be deterministic");
+}
+
+/// Acceptance: with >= 8 branches, the measured wall of a parallel
+/// fan-out is < 0.7x the sequential (1-thread) measured wall.
+#[test]
+fn parallel_measured_wall_beats_sequential() {
+    let run = |threads: usize| {
+        let p = Arc::new(FaasPlatform::new(Duration::ZERO));
+        p.register(FunctionSpec::new("grad", 512, sleepy(40))).unwrap();
+        let pool = Executor::new(threads);
+        let items: Vec<Bytes> = (0..8).map(|_| Bytes::from_static(b"b")).collect();
+        let sm = StateMachine::parallel_batches("speed", "grad", items, vec![], 64);
+        sm.execute_with(&p, &pool).unwrap()
+    };
+    let seq = run(1);
+    let par = run(8);
+    assert_eq!(seq.invocations, 8);
+    assert_eq!(par.invocations, 8);
+    // 8 x 40 ms sequentially is >= 320 ms; 8 sleeping workers finish in
+    // roughly one 40 ms wave (sleeps do not contend for cores)
+    assert!(
+        par.measured_wall < seq.measured_wall.mul_f64(0.7),
+        "parallel {:?} vs sequential {:?}",
+        par.measured_wall,
+        seq.measured_wall
+    );
+}
+
+/// The *physical* in-flight branches are capped by the Map state's
+/// modeled max_concurrency, not just by the pool width — the measured
+/// wall must never show parallelism the platform would not allow.
+#[test]
+fn measured_wall_respects_modeled_concurrency_cap() {
+    let run = |max_concurrency: usize| {
+        let p = Arc::new(FaasPlatform::new(Duration::ZERO));
+        p.register(FunctionSpec::new("grad", 512, sleepy(30))).unwrap();
+        let pool = Executor::new(8);
+        let items: Vec<Bytes> = (0..8).map(|_| Bytes::from_static(b"b")).collect();
+        let sm = StateMachine::parallel_batches("cap", "grad", items, vec![], max_concurrency);
+        sm.execute_with(&p, &pool).unwrap()
+    };
+    // 8 branches of 30 ms at concurrency 2 need >= 4 physical waves —
+    // the sleeps guarantee this lower bound on any machine
+    let capped = run(2);
+    assert!(
+        capped.measured_wall >= Duration::from_millis(120),
+        "cap violated: {:?}",
+        capped.measured_wall
+    );
+    // uncapped, the same fan-out collapses toward one wave; compare
+    // against the capped run (a ratio is robust to machine load,
+    // an absolute bound is not)
+    let open = run(64);
+    assert!(
+        open.measured_wall < capped.measured_wall.mul_f64(0.7),
+        "uncapped {:?} vs capped {:?}",
+        open.measured_wall,
+        capped.measured_wall
+    );
+}
+
+/// A panicking handler must surface as an error from execute, leave the
+/// platform usable, and not poison the worker pool.
+#[test]
+fn handler_panic_is_contained() {
+    let p = Arc::new(FaasPlatform::new(Duration::ZERO));
+    let bomb: Handler = Arc::new(|b: &Bytes| {
+        if &b[..] == b"boom" {
+            panic!("handler exploded");
+        }
+        Ok(b.clone())
+    });
+    p.register(FunctionSpec::new("grad", 512, bomb)).unwrap();
+    let pool = Executor::new(4);
+
+    let items = vec![
+        Bytes::from_static(b"ok"),
+        Bytes::from_static(b"boom"),
+        Bytes::from_static(b"ok"),
+    ];
+    let sm = StateMachine::parallel_batches("panic", "grad", items, vec![], 64);
+    let err = sm.execute_with(&p, &pool).unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+
+    // platform and pool both keep serving
+    let items: Vec<Bytes> = (0..4).map(|_| Bytes::from_static(b"ok")).collect();
+    let sm = StateMachine::parallel_batches("after", "grad", items, vec![], 64);
+    let r = sm.execute_with(&p, &pool).unwrap();
+    assert_eq!(r.invocations, 4);
+}
+
+/// The shared pool serves interleaved fan-outs from several state
+/// machines at once (the multi-peer cluster shape).
+#[test]
+fn shared_pool_serves_concurrent_state_machines() {
+    let pool = Arc::new(Executor::new(4));
+    let p = Arc::new(FaasPlatform::new(Duration::ZERO));
+    p.register(FunctionSpec::new("grad", 512, sleepy(5))).unwrap();
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let pool = pool.clone();
+            let p = p.clone();
+            std::thread::spawn(move || {
+                let items: Vec<Bytes> = (0..6).map(|_| Bytes::from_static(b"b")).collect();
+                let sm = StateMachine::parallel_batches("peer", "grad", items, vec![], 64);
+                sm.execute_with(&p, &pool).unwrap()
+            })
+        })
+        .collect();
+    let mut total = 0;
+    for h in handles {
+        total += h.join().unwrap().invocations;
+    }
+    assert_eq!(total, 24);
+    assert_eq!(p.stats().invocations, 24);
+    assert_eq!(p.stats().errors, 0);
+}
