@@ -1,9 +1,12 @@
 //! L3 hot-path bench: broker publish/consume throughput at gradient
-//! payload sizes (perf target: >=10k msg/s — see DESIGN.md §Perf).
+//! payload sizes (perf target: >=10k msg/s — see DESIGN.md §Perf), plus
+//! the branch scheduler's admission path (fair vs greedy dispatch).
 
 use p2pless::broker::{Broker, Message, QueueMode};
+use p2pless::faas::{BranchScheduler, Executor};
 use p2pless::harness::bench::{header, Bench};
 use p2pless::util::Bytes;
+use std::sync::Arc;
 
 fn main() {
     header(
@@ -66,6 +69,33 @@ fn main() {
                                 }
                             }
                         })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            },
+        );
+    }
+
+    // scheduler admission: 4 peer lanes x 256 no-op branches through a
+    // 4-thread pool — the cost of the round-robin gate itself vs the
+    // greedy baseline (both must stay far above fan-out rates). The
+    // pool/scheduler live outside the timed closure so thread spawn and
+    // join never pollute the dispatch numbers.
+    let mut b = Bench::new("sched").with_samples(2, 8);
+    for &fair in &[true, false] {
+        let iters = 256usize;
+        let peers = 4usize;
+        let scheduler = BranchScheduler::new(Arc::new(Executor::new(4)), fair);
+        b.bench_throughput(
+            &format!("dispatch_4x256_fair_{fair}"),
+            (peers * iters) as f64,
+            "branch",
+            move || {
+                let handles: Vec<_> = (0..iters)
+                    .flat_map(|_| {
+                        (0..peers).map(|rank| scheduler.submit(rank, || ()))
                     })
                     .collect();
                 for h in handles {

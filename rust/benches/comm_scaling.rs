@@ -47,7 +47,7 @@ fn main() {
                                 continue;
                             }
                             let q = broker.get(&Broker::gradient_queue(p)).unwrap();
-                            let m = q.await_epoch(1);
+                            let m = q.await_epoch(1).unwrap();
                             total += wire.decode(&m.payload).unwrap().len();
                         }
                         total

@@ -1,11 +1,14 @@
 //! Fig-3 bench: the serverless-vs-instance comparison at both scales —
 //! modeled cloud cells (state-machine execution cost), the real
-//! worker-pool fan-out at several thread counts, and a real two-peer
-//! PJRT run per backend.
+//! worker-pool fan-out at several thread counts, the pipelined-vs-staged
+//! epoch dispatch, and a real two-peer PJRT run per backend and mode.
 
-use p2pless::config::{Backend, TrainConfig};
+use p2pless::config::{Backend, OffloadMode, TrainConfig};
 use p2pless::coordinator::Cluster;
-use p2pless::faas::{Executor, FaasPlatform, FunctionSpec, Handler, StateMachine};
+use p2pless::faas::{
+    BranchScheduler, Executor, FaasPlatform, FunctionSpec, Handler, PipelinedMap,
+    RetryPolicy, StateMachine,
+};
 use p2pless::harness::bench::{header, Bench};
 use p2pless::harness::cloud_exps::fig3_cell;
 use p2pless::perfmodel::PaperModel;
@@ -47,6 +50,57 @@ fn main() {
         });
     }
 
+    // staged vs pipelined epoch dispatch: 12 branches, a 8 ms simulated
+    // upload per batch on the caller thread, a 50 ms handler, 4-thread
+    // pool — the pipelined path hides later handler waves behind the
+    // uploads (modeled outputs are identical; only measured time moves)
+    let mut b = Bench::new("pipeline").with_samples(1, 5);
+    for &pipelined in &[false, true] {
+        let name = if pipelined {
+            "epoch_12x50ms_pipelined"
+        } else {
+            "epoch_12x50ms_staged"
+        };
+        let platform = Arc::new(FaasPlatform::new(Duration::ZERO));
+        let busy: Handler = Arc::new(|b: &Bytes| {
+            std::thread::sleep(Duration::from_millis(50));
+            Ok(b.clone())
+        });
+        platform.register(FunctionSpec::new("grad", 1024, busy)).unwrap();
+        let executor = Arc::new(Executor::new(4));
+        let scheduler = BranchScheduler::new(executor.clone(), true);
+        b.bench(name, move || {
+            if pipelined {
+                let mut pipe = PipelinedMap::new(
+                    scheduler.clone(),
+                    platform.clone(),
+                    0,
+                    "grad",
+                    12,
+                    64,
+                    RetryPolicy::default(),
+                )
+                .unwrap();
+                for _ in 0..12 {
+                    std::thread::sleep(Duration::from_millis(8)); // "upload"
+                    pipe.submit(Bytes::from_static(b"b"), None);
+                    while pipe.poll_output().is_some() {}
+                }
+                while pipe.next_output().is_some() {}
+                pipe.finish().unwrap()
+            } else {
+                let mut items = Vec::with_capacity(12);
+                for _ in 0..12 {
+                    std::thread::sleep(Duration::from_millis(8)); // "upload"
+                    items.push(Bytes::from_static(b"b"));
+                }
+                let sm =
+                    StateMachine::parallel_batches("bench", "grad", items, vec![], 64);
+                sm.execute_with(&platform, &executor).unwrap()
+            }
+        });
+    }
+
     // real execution (needs artifacts)
     let dir = if std::path::Path::new("artifacts/manifest.json").exists() {
         "artifacts"
@@ -69,11 +123,12 @@ fn main() {
         ..Default::default()
     };
     let mut b = Bench::new("real").with_samples(1, 2);
-    for (name, backend) in [
-        ("instance_epoch", Backend::Instance),
-        ("serverless_epoch", Backend::Serverless),
+    for (name, backend, mode) in [
+        ("instance_epoch", Backend::Instance, OffloadMode::Pipelined),
+        ("serverless_epoch_staged", Backend::Serverless, OffloadMode::Staged),
+        ("serverless_epoch_pipelined", Backend::Serverless, OffloadMode::Pipelined),
     ] {
-        let cfg = TrainConfig { backend, ..base.clone() };
+        let cfg = TrainConfig { backend, offload_mode: mode, ..base.clone() };
         let engine = engine.clone();
         b.bench(name, move || {
             Cluster::with_engine(cfg.clone(), engine.clone())

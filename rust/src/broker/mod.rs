@@ -17,7 +17,7 @@
 
 mod queue;
 
-pub use queue::{Message, Queue, QueueMode, QueueStats};
+pub use queue::{AbortState, Message, Queue, QueueMode, QueueStats};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,6 +44,7 @@ pub struct Broker {
     queues: Mutex<HashMap<String, Arc<Queue>>>,
     cap_bytes: usize,
     faults: FaultPlan,
+    abort: Arc<AbortState>,
     published: AtomicU64,
     published_bytes: AtomicU64,
 }
@@ -60,9 +61,31 @@ impl Broker {
             queues: Mutex::new(HashMap::new()),
             cap_bytes,
             faults,
+            abort: Arc::new(AbortState::default()),
             published: AtomicU64::new(0),
             published_bytes: AtomicU64::new(0),
         }
+    }
+
+    /// Abort the run: every consumer blocked on any of this broker's
+    /// queues (gradient waits, the epoch barrier) wakes with
+    /// [`crate::error::Error::Aborted`]. Idempotent; the first reason
+    /// wins. Used by the cluster to fail fast when one peer errors
+    /// instead of leaving the rest parked until a timeout.
+    pub fn abort(&self, reason: &str) {
+        if self.abort.trigger(reason) {
+            for q in self.queues.lock().unwrap().values() {
+                q.wake_all();
+            }
+        }
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.abort.is_aborted()
+    }
+
+    pub fn abort_reason(&self) -> Option<String> {
+        self.abort.reason()
     }
 
     /// Declare (or fetch) a queue. Mode must match an existing queue.
@@ -77,7 +100,13 @@ impl Broker {
             }
             return Ok(q.clone());
         }
-        let q = Arc::new(Queue::new(name, mode, self.cap_bytes, self.faults));
+        let q = Arc::new(Queue::new(
+            name,
+            mode,
+            self.cap_bytes,
+            self.faults,
+            self.abort.clone(),
+        ));
         map.insert(name.to_string(), q.clone());
         Ok(q)
     }
@@ -172,6 +201,24 @@ mod tests {
         b.declare("a", QueueMode::LatestOnly).unwrap();
         assert!(b.publish("a", msg(b"12345")).is_err());
         assert!(b.publish("a", msg(b"1234")).is_ok());
+    }
+
+    #[test]
+    fn broker_abort_reaches_every_queue() {
+        let b = Arc::new(Broker::default());
+        b.declare("a", QueueMode::Fifo).unwrap();
+        b.declare("b", QueueMode::LatestOnly).unwrap();
+        assert!(!b.is_aborted());
+        let qa = b.get("a").unwrap();
+        let qb = b.get("b").unwrap();
+        let wa = std::thread::spawn(move || qa.await_version(1));
+        let wb = std::thread::spawn(move || qb.await_epoch(1));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        b.abort("peer 1 failed: boom");
+        b.abort("second reason is ignored");
+        assert!(wa.join().unwrap().is_err());
+        assert!(wb.join().unwrap().is_err());
+        assert_eq!(b.abort_reason().as_deref(), Some("peer 1 failed: boom"));
     }
 
     #[test]

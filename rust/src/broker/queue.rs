@@ -5,13 +5,50 @@
 //! path.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::broker::FaultPlan;
 use crate::error::{Error, Result};
 use crate::util::Bytes;
+
+/// Broker-wide abort flag shared by every queue. When a peer fails, the
+/// cluster triggers it so peers parked on a gradient queue or the epoch
+/// barrier wake with [`Error::Aborted`] instead of waiting for a message
+/// that will never come.
+#[derive(Default)]
+pub struct AbortState {
+    flag: AtomicBool,
+    reason: Mutex<Option<String>>,
+}
+
+impl AbortState {
+    /// Raise the flag; the first reason wins. Returns whether this call
+    /// set it (callers then wake the sleepers).
+    pub fn trigger(&self, reason: &str) -> bool {
+        let mut r = self.reason.lock().unwrap();
+        if self.flag.load(Ordering::SeqCst) {
+            return false;
+        }
+        *r = Some(reason.to_string());
+        self.flag.store(true, Ordering::SeqCst);
+        true
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    pub fn reason(&self) -> Option<String> {
+        self.reason.lock().unwrap().clone()
+    }
+
+    /// The error blocked consumers surface.
+    pub fn error(&self) -> Error {
+        Error::Aborted(self.reason().unwrap_or_else(|| "unknown reason".into()))
+    }
+}
 
 /// Queue behaviour.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,6 +98,7 @@ pub struct Queue {
     mode: QueueMode,
     cap: usize,
     faults: FaultPlan,
+    abort: Arc<AbortState>,
     inner: Mutex<Inner>,
     cond: Condvar,
     stats_publishes: AtomicU64,
@@ -69,18 +107,33 @@ pub struct Queue {
 }
 
 impl Queue {
-    pub(crate) fn new(name: &str, mode: QueueMode, cap: usize, faults: FaultPlan) -> Self {
+    pub(crate) fn new(
+        name: &str,
+        mode: QueueMode,
+        cap: usize,
+        faults: FaultPlan,
+        abort: Arc<AbortState>,
+    ) -> Self {
         Self {
             name: name.to_string(),
             mode,
             cap,
             faults,
+            abort,
             inner: Mutex::new(Inner { latest: None, fifo: VecDeque::new(), version: 0 }),
             cond: Condvar::new(),
             stats_publishes: AtomicU64::new(0),
             stats_drops: AtomicU64::new(0),
             stats_consumes: AtomicU64::new(0),
         }
+    }
+
+    /// Wake every consumer parked on this queue (abort propagation).
+    /// The lock round-trip orders the wake after the abort flag: a
+    /// consumer either sees the flag before sleeping or is woken here.
+    pub(crate) fn wake_all(&self) {
+        let _guard = self.inner.lock().unwrap();
+        self.cond.notify_all();
     }
 
     pub fn name(&self) -> &str {
@@ -169,10 +222,15 @@ impl Queue {
 
     /// Block until a message with `epoch >= min_epoch` is available
     /// (sync-mode consumer: "WaitUntilReceptionDone"). Applies the
-    /// injected delivery delay.
-    pub fn await_epoch(&self, min_epoch: u64) -> Message {
+    /// injected delivery delay. Errors with [`Error::Aborted`] if the
+    /// run is aborted while waiting — a failed peer must not leave the
+    /// others parked forever.
+    pub fn await_epoch(&self, min_epoch: u64) -> Result<Message> {
         let mut inner = self.inner.lock().unwrap();
         loop {
+            if self.abort.is_aborted() {
+                return Err(self.abort.error());
+            }
             let hit = match self.mode {
                 QueueMode::LatestOnly => inner.latest.as_ref(),
                 QueueMode::Fifo => inner.fifo.back(),
@@ -183,37 +241,45 @@ impl Queue {
                 self.stats_consumes.fetch_add(1, Ordering::Relaxed);
                 drop(inner);
                 self.delay();
-                return m;
+                return Ok(m);
             }
             inner = self.cond.wait(inner).unwrap();
         }
     }
 
     /// Block until the accepted-publish counter reaches `count`
-    /// (barrier predicate).
-    pub fn await_version(&self, count: u64) {
+    /// (barrier predicate). Errors with [`Error::Aborted`] on abort.
+    pub fn await_version(&self, count: u64) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
         while inner.version < count {
+            if self.abort.is_aborted() {
+                return Err(self.abort.error());
+            }
             inner = self.cond.wait(inner).unwrap();
         }
+        Ok(())
     }
 
-    /// `await_version` with a timeout; returns false on timeout.
-    pub fn await_version_timeout(&self, count: u64, timeout: Duration) -> bool {
+    /// `await_version` with a timeout; `Ok(false)` on timeout, an
+    /// [`Error::Aborted`] if the run aborts first.
+    pub fn await_version_timeout(&self, count: u64, timeout: Duration) -> Result<bool> {
         let deadline = std::time::Instant::now() + timeout;
         let mut inner = self.inner.lock().unwrap();
         while inner.version < count {
+            if self.abort.is_aborted() {
+                return Err(self.abort.error());
+            }
             let now = std::time::Instant::now();
             if now >= deadline {
-                return false;
+                return Ok(false);
             }
             let (guard, res) = self.cond.wait_timeout(inner, deadline - now).unwrap();
             inner = guard;
-            if res.timed_out() && inner.version < count {
-                return false;
+            if res.timed_out() && inner.version < count && !self.abort.is_aborted() {
+                return Ok(false);
             }
         }
-        true
+        Ok(true)
     }
 
     fn delay(&self) {
@@ -229,7 +295,11 @@ mod tests {
     use std::sync::Arc;
 
     fn q(mode: QueueMode) -> Queue {
-        Queue::new("t", mode, 1024, FaultPlan::default())
+        Queue::new("t", mode, 1024, FaultPlan::default(), Arc::new(AbortState::default()))
+    }
+
+    fn q_with_abort(mode: QueueMode, abort: Arc<AbortState>) -> Queue {
+        Queue::new("t", mode, 1024, FaultPlan::default(), abort)
     }
 
     fn msg(sender: usize, epoch: u64, data: &'static [u8]) -> Message {
@@ -276,7 +346,13 @@ mod tests {
 
     #[test]
     fn fault_drop_every() {
-        let q = Queue::new("t", QueueMode::Fifo, 1024, FaultPlan { drop_every: 2, delay_us: 0 });
+        let q = Queue::new(
+            "t",
+            QueueMode::Fifo,
+            1024,
+            FaultPlan { drop_every: 2, delay_us: 0 },
+            Arc::new(AbortState::default()),
+        );
         for e in 0..6 {
             q.publish(msg(0, e, b"x")).unwrap();
         }
@@ -293,7 +369,7 @@ mod tests {
         q.publish(msg(0, 1, b"stale")).unwrap();
         std::thread::sleep(Duration::from_millis(10));
         q.publish(msg(0, 2, b"fresh")).unwrap();
-        let m = waiter.join().unwrap();
+        let m = waiter.join().unwrap().unwrap();
         assert_eq!(m.epoch, 2);
         assert_eq!(&m.payload[..], b"fresh");
     }
@@ -306,23 +382,69 @@ mod tests {
         for e in 0..3 {
             q.publish(msg(e, 0, b"done")).unwrap();
         }
-        waiter.join().unwrap();
+        waiter.join().unwrap().unwrap();
         assert_eq!(q.version(), 3);
     }
 
     #[test]
     fn await_version_timeout_expires() {
         let q = q(QueueMode::Fifo);
-        assert!(!q.await_version_timeout(1, Duration::from_millis(20)));
+        assert!(!q.await_version_timeout(1, Duration::from_millis(20)).unwrap());
         q.publish(msg(0, 0, b"x")).unwrap();
-        assert!(q.await_version_timeout(1, Duration::from_millis(20)));
+        assert!(q.await_version_timeout(1, Duration::from_millis(20)).unwrap());
     }
 
     #[test]
     fn dropped_publish_does_not_bump_version() {
-        let q = Queue::new("t", QueueMode::Fifo, 1024, FaultPlan { drop_every: 1, delay_us: 0 });
+        let q = Queue::new(
+            "t",
+            QueueMode::Fifo,
+            1024,
+            FaultPlan { drop_every: 1, delay_us: 0 },
+            Arc::new(AbortState::default()),
+        );
         q.publish(msg(0, 0, b"x")).unwrap();
         assert_eq!(q.version(), 0);
-        assert!(!q.await_version_timeout(1, Duration::from_millis(10)));
+        assert!(!q.await_version_timeout(1, Duration::from_millis(10)).unwrap());
+    }
+
+    #[test]
+    fn abort_unblocks_await_epoch() {
+        let abort = Arc::new(AbortState::default());
+        let q = Arc::new(q_with_abort(QueueMode::LatestOnly, abort.clone()));
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.await_epoch(1));
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(abort.trigger("peer 0 failed"));
+        q.wake_all();
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::Aborted(_)),
+            "expected Aborted, got {err}"
+        );
+        assert!(err.to_string().contains("peer 0 failed"), "{err}");
+    }
+
+    #[test]
+    fn abort_unblocks_await_version() {
+        let abort = Arc::new(AbortState::default());
+        let q = Arc::new(q_with_abort(QueueMode::Fifo, abort.clone()));
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.await_version(5));
+        std::thread::sleep(Duration::from_millis(10));
+        abort.trigger("boom");
+        q.wake_all();
+        assert!(waiter.join().unwrap().is_err());
+        // timed variant errors too, rather than reporting a timeout
+        assert!(q.await_version_timeout(5, Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn abort_first_reason_wins() {
+        let abort = AbortState::default();
+        assert!(!abort.is_aborted());
+        assert!(abort.trigger("first"));
+        assert!(!abort.trigger("second"));
+        assert_eq!(abort.reason().as_deref(), Some("first"));
     }
 }

@@ -38,6 +38,37 @@ impl Backend {
     }
 }
 
+/// How the serverless offload dispatches an epoch's branches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OffloadMode {
+    /// Upload everything, execute the Map state, then collect — the
+    /// reference implementation of the modeled wall.
+    Staged,
+    /// Stream each batch through the cluster-wide branch scheduler as
+    /// its upload lands; gradients fold in while later batches upload.
+    /// Modeled numbers are byte-identical to staged; the measured wall
+    /// shows the overlap.
+    #[default]
+    Pipelined,
+}
+
+impl OffloadMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "staged" => Ok(Self::Staged),
+            "pipelined" | "pipeline" => Ok(Self::Pipelined),
+            _ => Err(Error::Config(format!("unknown offload mode {s:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Staged => "staged",
+            Self::Pipelined => "pipelined",
+        }
+    }
+}
+
 /// Synchronisation mode for the gradient exchange (§III-B.6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SyncMode {
@@ -134,8 +165,14 @@ pub struct TrainConfig {
     /// Lambda memory (MB) for serverless gradient functions; 0 = derive
     /// from the paper's Table II sizing rule.
     pub lambda_memory_mb: u32,
-    /// Max concurrent lambda invocations per state machine.
+    /// Per-peer in-flight branch cap: the scheduler admission limit in
+    /// pipelined mode, the Map-state wave size in staged mode.
     pub lambda_concurrency: usize,
+    /// Round-robin fairness across peer lanes on the cluster scheduler
+    /// (false = greedy lowest-rank-first baseline).
+    pub sched_fair: bool,
+    /// Staged vs pipelined serverless dispatch.
+    pub offload_mode: OffloadMode,
     /// Worker threads in the FaaS execution fabric (0 = machine size).
     /// Physical concurrency only: the modeled accounting does not move.
     pub exec_threads: usize,
@@ -168,6 +205,8 @@ impl Default for TrainConfig {
             instance_type: "t2.medium".into(),
             lambda_memory_mb: 0,
             lambda_concurrency: 64,
+            sched_fair: true,
+            offload_mode: OffloadMode::default(),
             exec_threads: 0,
             exec_slots: 0,
             seed: 42,
@@ -211,6 +250,10 @@ impl TrainConfig {
                 "lambda_concurrency" => {
                     cfg.lambda_concurrency = v.as_usize().ok_or_else(missing)?
                 }
+                "sched_fair" => cfg.sched_fair = v.as_bool().ok_or_else(missing)?,
+                "offload_mode" => {
+                    cfg.offload_mode = OffloadMode::parse(v.as_str().ok_or_else(missing)?)?
+                }
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
                 "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
                 "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
@@ -242,6 +285,8 @@ impl TrainConfig {
             .set("instance_type", self.instance_type.as_str())
             .set("lambda_memory_mb", self.lambda_memory_mb as u64)
             .set("lambda_concurrency", self.lambda_concurrency)
+            .set("sched_fair", self.sched_fair)
+            .set("offload_mode", self.offload_mode.name())
             .set("exec_threads", self.exec_threads)
             .set("exec_slots", self.exec_slots)
             .set("seed", self.seed)
@@ -320,6 +365,22 @@ mod tests {
         // defaults are 0 = "size to the machine"
         assert_eq!(TrainConfig::default().exec_threads, 0);
         assert_eq!(TrainConfig::default().exec_slots, 0);
+    }
+
+    #[test]
+    fn scheduler_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            sched_fair: false,
+            offload_mode: OffloadMode::Staged,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(!back.sched_fair);
+        assert_eq!(back.offload_mode, OffloadMode::Staged);
+        // defaults: fair round-robin, pipelined dispatch
+        assert!(TrainConfig::default().sched_fair);
+        assert_eq!(TrainConfig::default().offload_mode, OffloadMode::Pipelined);
+        assert!(OffloadMode::parse("warp").is_err());
     }
 
     #[test]

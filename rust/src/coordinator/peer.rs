@@ -222,7 +222,7 @@ impl Peer {
                 let q = self.broker.get(&Broker::gradient_queue(peer))?;
                 match self.config.sync {
                     SyncMode::Synchronous => {
-                        let m = q.await_epoch(epoch);
+                        let m = q.await_epoch(epoch)?;
                         dict.insert(peer, self.wire.decode(&m.payload)?);
                     }
                     SyncMode::Asynchronous => {
@@ -269,7 +269,7 @@ impl Peer {
             if self.rank != 0 {
                 let ctl = self.broker.get(&control_queue())?;
                 let msg = match self.config.sync {
-                    SyncMode::Synchronous => Some(ctl.await_epoch(epoch)),
+                    SyncMode::Synchronous => Some(ctl.await_epoch(epoch)?),
                     SyncMode::Asynchronous => ctl.peek_latest(),
                 };
                 if let Some(m) = msg {

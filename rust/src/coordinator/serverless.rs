@@ -12,14 +12,30 @@
 //!    instance path runs), parks the gradient in S3 and returns its
 //!    UUID + loss;
 //! 4. the peer collects and averages the per-batch gradients.
+//!
+//! Two dispatch modes ([`OffloadMode`]):
+//!
+//! - **staged** — upload everything, execute the Map state, then
+//!   collect (the PR-1 shape; the modeled wall's reference
+//!   implementation);
+//! - **pipelined** — each batch's branch is submitted through the
+//!   cluster-wide [`BranchScheduler`] the moment its upload lands, and
+//!   gradients stream into the accumulator (in branch order, so the
+//!   math is bit-identical) while later batches are still uploading.
+//!   The *modeled* wall/billed/cost are byte-identical to the staged
+//!   path; only the *measured* wall shrinks with the overlap.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use super::gradient::GradAccumulator;
+use crate::config::OffloadMode;
 use crate::data::Batch;
 use crate::error::{Error, Result};
-use crate::faas::{Executor, FaasPlatform, FunctionSpec, Handler, StateMachine};
+use crate::faas::{
+    BranchScheduler, FaasPlatform, FunctionSpec, Handler, PipelinedMap, RetryPolicy,
+    StateMachine,
+};
 use crate::runtime::ModelRuntime;
 use crate::store::{ObjectRef, ObjectStore};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
@@ -84,15 +100,32 @@ fn ref_from_json(j: &Json) -> Result<ObjectRef> {
     })
 }
 
+/// Parse one gradient-Lambda response: `{"loss": <f64>, "grad": <ref>}`.
+/// A non-numeric loss is a handler bug and is surfaced as an error —
+/// folding `NaN` into the epoch mean would silently poison every
+/// downstream convergence decision.
+fn parse_branch_response(out: &[u8]) -> Result<(f64, ObjectRef)> {
+    let resp =
+        Json::parse(std::str::from_utf8(out).map_err(|e| Error::Faas(e.to_string()))?)?;
+    let loss = resp
+        .req("loss")?
+        .as_f64()
+        .ok_or_else(|| Error::Faas("handler response: \"loss\" is not a number".into()))?;
+    let grad_ref = ref_from_json(resp.req("grad")?)?;
+    Ok((loss, grad_ref))
+}
+
 /// The serverless offload engine bound to one peer.
 pub struct ServerlessOffload {
     platform: Arc<FaasPlatform>,
     store: Arc<ObjectStore>,
     runtime: Arc<ModelRuntime>,
-    executor: Arc<Executor>,
+    scheduler: Arc<BranchScheduler>,
     function: String,
     bucket: String,
+    peer: usize,
     concurrency: usize,
+    mode: OffloadMode,
 }
 
 /// Result of one serverless epoch fan-out.
@@ -105,7 +138,8 @@ pub struct OffloadResult {
     /// Modeled wall time of the fan-out (parallel branches overlap
     /// under the deterministic greedy schedule).
     pub wall: Duration,
-    /// Measured wall time of the real worker-pool dispatch.
+    /// Measured wall time: the Map dispatch alone in staged mode, the
+    /// whole upload/invoke/collect pipeline in pipelined mode.
     pub measured_wall: Duration,
     /// Billed lambda-seconds.
     pub billed: Duration,
@@ -116,19 +150,24 @@ pub struct OffloadResult {
 
 impl ServerlessOffload {
     /// Register the gradient Lambda for `peer_rank` and return the
-    /// offloader. `memory_mb` sizes the function (paper Table II rule).
+    /// offloader. `memory_mb` sizes the function (paper Table II rule);
+    /// `concurrency` becomes the peer's admission cap on the cluster
+    /// scheduler (and the Map concurrency in staged mode).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         platform: Arc<FaasPlatform>,
         store: Arc<ObjectStore>,
         runtime: Arc<ModelRuntime>,
-        executor: Arc<Executor>,
+        scheduler: Arc<BranchScheduler>,
         peer_rank: usize,
         memory_mb: u32,
         concurrency: usize,
+        mode: OffloadMode,
     ) -> Result<Self> {
         let function = format!("grad-{}-peer{}", runtime.entry.key, peer_rank);
         let bucket = crate::store::peer_bucket(peer_rank);
         store.create_bucket(&bucket);
+        scheduler.register_peer(peer_rank, concurrency);
 
         // The Lambda handler: parse refs, pull params + batch from S3,
         // run the AOT grad executable, park the gradient in S3.
@@ -161,15 +200,21 @@ impl ServerlessOffload {
             platform,
             store,
             runtime,
-            executor,
+            scheduler,
             function,
             bucket,
+            peer: peer_rank,
             concurrency,
+            mode,
         })
     }
 
     pub fn function_name(&self) -> &str {
         &self.function
+    }
+
+    pub fn mode(&self) -> OffloadMode {
+        self.mode
     }
 
     /// Run one epoch's batches through the dynamically-generated state
@@ -191,14 +236,45 @@ impl ServerlessOffload {
         // gradients — lives in this peer's scratch bucket, so whatever
         // happens below (success, branch failure, malformed handler
         // output) the bucket sweep keeps the store bounded
-        let outcome = self.fan_out_epoch(epoch, params, batches, elems);
+        let outcome = match self.mode {
+            OffloadMode::Staged => self.fan_out_epoch_staged(epoch, params, batches, elems),
+            OffloadMode::Pipelined => self.fan_out_epoch_pipelined(params, batches, elems),
+        };
         self.store.clear_bucket(&self.bucket);
         outcome
     }
 
-    /// Upload, fan out, collect. Scratch objects are swept by the
-    /// caller ([`Self::compute_epoch`]) on every exit path.
-    fn fan_out_epoch(
+    /// Encode one batch, upload it, and build the branch payload.
+    fn upload_batch(
+        &self,
+        params_ref: &ObjectRef,
+        batch: &Batch,
+        elems: usize,
+    ) -> Result<Bytes> {
+        let batch_ref = self
+            .store
+            .put_new(&self.bucket, Bytes::from(pack_batch(batch, elems)))?;
+        let mut req = Json::obj();
+        req.set("params", ref_to_json(params_ref))
+            .set("batch", ref_to_json(&batch_ref));
+        Ok(Bytes::from(req.to_string().into_bytes()))
+    }
+
+    /// Parse a branch response and fold it into the running epoch state.
+    fn fold_branch(
+        &self,
+        out: &[u8],
+        acc: &mut GradAccumulator,
+        loss_sum: &mut f64,
+    ) -> Result<()> {
+        let (loss, grad_ref) = parse_branch_response(out)?;
+        *loss_sum += loss;
+        acc.add(&bytes_to_f32s(&self.store.get_ref(&grad_ref)?))
+    }
+
+    /// Staged: upload everything, fan out, collect. Scratch objects are
+    /// swept by the caller ([`Self::compute_epoch`]) on every exit path.
+    fn fan_out_epoch_staged(
         &self,
         epoch: usize,
         params: &[f32],
@@ -212,13 +288,7 @@ impl ServerlessOffload {
         // 2. upload batches + build Map payloads
         let mut items = Vec::with_capacity(batches.len());
         for batch in batches {
-            let batch_ref = self
-                .store
-                .put_new(&self.bucket, Bytes::from(pack_batch(batch, elems)))?;
-            let mut req = Json::obj();
-            req.set("params", ref_to_json(&params_ref))
-                .set("batch", ref_to_json(&batch_ref));
-            items.push(Bytes::from(req.to_string().into_bytes()));
+            items.push(self.upload_batch(&params_ref, batch, elems)?);
         }
         // 3. dynamic state machine: one branch per batch, dispatched
         //    across the shared worker pool
@@ -229,7 +299,7 @@ impl ServerlessOffload {
             vec![],
             self.concurrency,
         );
-        let report = sm.execute_with(&self.platform, &self.executor)?;
+        let report = sm.execute_with(&self.platform, self.scheduler.executor())?;
         // 4. collect + average (streaming: one running sum instead of
         //    materializing every per-batch gradient)
         let outputs = report
@@ -239,16 +309,62 @@ impl ServerlessOffload {
         let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
         for out in outputs {
-            let resp =
-                Json::parse(std::str::from_utf8(out).map_err(|e| Error::Faas(e.to_string()))?)?;
-            loss_sum += resp.req("loss")?.as_f64().unwrap_or(f64::NAN);
-            let grad_ref = ref_from_json(resp.req("grad")?)?;
-            acc.add(&bytes_to_f32s(&self.store.get_ref(&grad_ref)?))?;
+            self.fold_branch(out, &mut acc, &mut loss_sum)?;
         }
         let avg = acc.mean()?;
         Ok(OffloadResult {
             loss: (loss_sum / outputs.len() as f64) as f32,
             grads: avg,
+            wall: report.wall,
+            measured_wall: report.measured_wall,
+            billed: report.billed,
+            cost_usd: report.cost_usd,
+            invocations: report.invocations,
+            cold_starts: report.cold_starts,
+        })
+    }
+
+    /// Pipelined: every batch's branch is admitted to the cluster
+    /// scheduler the moment its upload lands, and landed gradients fold
+    /// into the accumulator (in branch order — bit-identical math)
+    /// while later batches are still uploading. Modeled accounting is
+    /// byte-identical to the staged path; the measured wall shows the
+    /// real upload/invoke/collect overlap.
+    fn fan_out_epoch_pipelined(
+        &self,
+        params: &[f32],
+        batches: &[Batch],
+        elems: usize,
+    ) -> Result<OffloadResult> {
+        let params_ref = self
+            .store
+            .put_new(&self.bucket, Bytes::from(f32s_to_bytes(params)))?;
+        let mut pipe = PipelinedMap::new(
+            self.scheduler.clone(),
+            self.platform.clone(),
+            self.peer,
+            &self.function,
+            batches.len(),
+            self.concurrency,
+            RetryPolicy::default(),
+        )?;
+        let mut acc = GradAccumulator::new();
+        let mut loss_sum = 0f64;
+        for batch in batches {
+            let payload = self.upload_batch(&params_ref, batch, elems)?;
+            pipe.submit(payload, None);
+            // drain whatever already landed: collection overlaps upload
+            while let Some((_, out)) = pipe.poll_output() {
+                self.fold_branch(&out, &mut acc, &mut loss_sum)?;
+            }
+        }
+        while let Some((_, out)) = pipe.next_output() {
+            self.fold_branch(&out, &mut acc, &mut loss_sum)?;
+        }
+        let report = pipe.finish()?;
+        Ok(OffloadResult {
+            loss: (loss_sum / batches.len() as f64) as f32,
+            grads: acc.mean()?,
             wall: report.wall,
             measured_wall: report.measured_wall,
             billed: report.billed,
@@ -288,6 +404,35 @@ mod tests {
         let r = ObjectRef { bucket: "b".into(), key: "k-1".into(), size: 42 };
         let back = ref_from_json(&ref_to_json(&r)).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn branch_response_roundtrip() {
+        let r = ObjectRef { bucket: "b".into(), key: "k".into(), size: 8 };
+        let mut resp = Json::obj();
+        resp.set("loss", 0.25).set("grad", ref_to_json(&r));
+        let (loss, gref) =
+            parse_branch_response(resp.to_string().as_bytes()).unwrap();
+        assert_eq!(loss, 0.25);
+        assert_eq!(gref, r);
+    }
+
+    #[test]
+    fn non_numeric_loss_is_an_error_not_nan() {
+        // regression: a handler echoing a malformed loss used to fold
+        // f64::NAN into the epoch mean and silently poison it
+        let r = ObjectRef { bucket: "b".into(), key: "k".into(), size: 8 };
+        let mut resp = Json::obj();
+        resp.set("loss", "oops").set("grad", ref_to_json(&r));
+        let err = parse_branch_response(resp.to_string().as_bytes()).unwrap_err();
+        assert!(
+            err.to_string().contains("loss"),
+            "error must name the bad field: {err}"
+        );
+        // a missing loss is equally fatal
+        let mut resp = Json::obj();
+        resp.set("grad", ref_to_json(&r));
+        assert!(parse_branch_response(resp.to_string().as_bytes()).is_err());
     }
 
     // Full offload integration (real PJRT) lives in rust/tests/.

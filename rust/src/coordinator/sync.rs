@@ -27,15 +27,17 @@ impl EpochBarrier {
     }
 
     /// Signal that `rank` finished epoch `epoch` (1-based), then block
-    /// until all peers have.
+    /// until all peers have. Errors with [`crate::error::Error::Aborted`]
+    /// if the run aborts while parked — a failed peer must not leave the
+    /// rest at the barrier forever.
     pub fn arrive_and_wait(&self, rank: usize, epoch: u64) -> Result<()> {
         self.queue
             .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))?;
-        self.queue.await_version(epoch * self.peers as u64);
-        Ok(())
+        self.queue.await_version(epoch * self.peers as u64)
     }
 
-    /// As above but with a timeout; false if the barrier never filled.
+    /// As above but with a timeout; `Ok(false)` if the barrier never
+    /// filled, an abort error if the run aborted first.
     pub fn arrive_and_wait_timeout(
         &self,
         rank: usize,
@@ -44,9 +46,8 @@ impl EpochBarrier {
     ) -> Result<bool> {
         self.queue
             .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))?;
-        Ok(self
-            .queue
-            .await_version_timeout(epoch * self.peers as u64, timeout))
+        self.queue
+            .await_version_timeout(epoch * self.peers as u64, timeout)
     }
 
     /// Completed arrivals so far (all epochs).

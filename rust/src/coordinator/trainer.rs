@@ -17,7 +17,7 @@ use crate::compress::codec_for;
 use crate::config::{Backend, TrainConfig};
 use crate::data::{DatasetKind, SyntheticDataset};
 use crate::error::{Error, Result};
-use crate::faas::{Executor, FaasPlatform};
+use crate::faas::{BranchScheduler, Executor, FaasPlatform, SchedulerStats};
 use crate::metrics::{MetricsRegistry, Stage, StageSummary};
 use crate::perfmodel;
 use crate::runtime::{Engine, ModelRuntime};
@@ -46,6 +46,12 @@ pub struct TrainReport {
     /// Objects still live in the store at the end of the run — the
     /// per-epoch sweep must keep this at zero for serverless runs.
     pub store_objects: usize,
+    /// Cluster branch-scheduler utilization (queue depth, fairness,
+    /// per-peer branches served). All zeros for instance-backend runs.
+    pub sched: SchedulerStats,
+    /// Named utilization counters from the metrics registry
+    /// (`sched.*`, `exec.*`).
+    pub counters: Vec<(String, u64)>,
 }
 
 impl TrainReport {
@@ -125,8 +131,11 @@ impl Cluster {
         let broker = Arc::new(Broker::new(DEFAULT_MESSAGE_CAP, self.faults));
         let store = Arc::new(ObjectStore::new());
         let platform = Arc::new(FaasPlatform::default());
-        // one worker pool shared by every peer's fan-outs
+        // one worker pool shared by every peer's fan-outs, fronted by
+        // the cluster-wide admission scheduler (round-robin across
+        // peers, per-peer in-flight caps)
         let executor = Arc::new(Executor::new(cfg.exec_threads));
+        let scheduler = BranchScheduler::new(executor.clone(), cfg.sched_fair);
         let metrics = Arc::new(MetricsRegistry::new());
         let runtime = Arc::new(ModelRuntime::load(
             self.engine.clone(),
@@ -181,10 +190,11 @@ impl Cluster {
                         platform.clone(),
                         store.clone(),
                         runtime.clone(),
-                        executor.clone(),
+                        scheduler.clone(),
                         rank,
                         mem,
                         cfg.lambda_concurrency,
+                        cfg.offload_mode,
                     )?)
                 }
             };
@@ -200,15 +210,62 @@ impl Cluster {
                 barrier.clone(),
                 metrics.clone(),
             )?;
-            handles.push(std::thread::spawn(move || peer.run()));
+            // fail fast: a peer that errors (or panics) aborts the
+            // broker, so peers parked on gradient waits or the epoch
+            // barrier wake with Error::Aborted instead of hanging
+            let broker = broker.clone();
+            handles.push(std::thread::spawn(move || {
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || peer.run(),
+                ));
+                match outcome {
+                    Ok(result) => {
+                        if let Err(e) = &result {
+                            if !matches!(e, Error::Aborted(_)) {
+                                broker.abort(&format!("peer {rank} failed: {e}"));
+                            }
+                        }
+                        result
+                    }
+                    Err(_) => {
+                        broker.abort(&format!("peer {rank} panicked"));
+                        Err(Error::Broker(format!("peer {rank} thread panicked")))
+                    }
+                }
+            }));
         }
 
         let mut peers = Vec::with_capacity(cfg.peers);
+        // join everyone (threads exit promptly after an abort), then
+        // surface the root cause — not the secondary Aborted errors
+        let mut failure: Option<Error> = None;
+        let mut record = |failure: &mut Option<Error>, e: Error| {
+            // a real error supersedes a secondary Aborted; first wins
+            // otherwise
+            let supersedes = match (failure.as_ref(), &e) {
+                (None, _) => true,
+                (Some(Error::Aborted(_)), Error::Aborted(_)) => false,
+                (Some(Error::Aborted(_)), _) => true,
+                _ => false,
+            };
+            if supersedes {
+                *failure = Some(e);
+            }
+        };
         for h in handles {
-            peers.push(
-                h.join()
-                    .map_err(|_| Error::Broker("peer thread panicked".into()))??,
-            );
+            match h.join() {
+                Ok(Ok(p)) => peers.push(p),
+                Ok(Err(e)) => record(&mut failure, e),
+                // unreachable in practice: the spawn wrapper catches
+                // peer panics and returns them as Ok(Err(..))
+                Err(_) => record(
+                    &mut failure,
+                    Error::Broker("peer thread panicked".into()),
+                ),
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
         }
         let wall = t0.elapsed();
 
@@ -226,6 +283,19 @@ impl Cluster {
         let (broker_msgs, broker_bytes) = broker.stats();
         let fstats = platform.stats();
         let lambda_measured_wall = peers.iter().map(|p| p.lambda_measured_wall).sum();
+
+        // ---- scheduler / executor utilization ----------------------------
+        let sched = scheduler.stats();
+        metrics.set_counter("sched.branches_submitted", sched.submitted);
+        metrics.set_counter("sched.branches_completed", sched.completed);
+        metrics.set_counter("sched.peak_queue_depth", sched.peak_queued as u64);
+        metrics.set_counter("sched.peak_in_flight", sched.peak_in_flight as u64);
+        metrics.set_counter("exec.threads", executor.threads() as u64);
+        metrics.set_counter("exec.peak_busy", executor.peak_busy() as u64);
+        for &(rank, served) in &sched.per_peer_served {
+            metrics.set_counter(&format!("sched.peer{rank}.served"), served);
+        }
+
         Ok(TrainReport {
             config: cfg.clone(),
             peers,
@@ -239,6 +309,8 @@ impl Cluster {
             lambda_cold_starts: fstats.cold_starts,
             lambda_measured_wall,
             store_objects: store.total_objects(),
+            sched,
+            counters: metrics.counters(),
         })
     }
 }

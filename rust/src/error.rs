@@ -8,6 +8,9 @@ pub enum Error {
     #[error("broker: {0}")]
     Broker(String),
 
+    #[error("run aborted: {0}")]
+    Aborted(String),
+
     #[error("message of {size} bytes exceeds queue cap of {cap} bytes")]
     MessageTooLarge { size: usize, cap: usize },
 

@@ -21,7 +21,8 @@
 //! which never recurse.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -34,6 +35,8 @@ pub struct Executor {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    busy: Arc<AtomicUsize>,
+    peak_busy: Arc<AtomicUsize>,
 }
 
 impl Executor {
@@ -44,9 +47,13 @@ impl Executor {
         let threads = if threads == 0 { default_threads() } else { threads };
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let busy = Arc::new(AtomicUsize::new(0));
+        let peak_busy = Arc::new(AtomicUsize::new(0));
         let workers = (0..threads)
             .map(|i| {
                 let rx = rx.clone();
+                let busy = busy.clone();
+                let peak = peak_busy.clone();
                 std::thread::Builder::new()
                     .name(format!("faas-exec-{i}"))
                     .spawn(move || loop {
@@ -56,14 +63,19 @@ impl Executor {
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                let now = busy.fetch_add(1, Ordering::SeqCst) + 1;
+                                peak.fetch_max(now, Ordering::SeqCst);
+                                job();
+                                busy.fetch_sub(1, Ordering::SeqCst);
+                            }
                             Err(_) => break, // executor dropped
                         }
                     })
                     .expect("spawn faas executor worker")
             })
             .collect();
-        Self { tx: Some(tx), workers, threads }
+        Self { tx: Some(tx), workers, threads, busy, peak_busy }
     }
 
     /// The process-wide shared pool, sized to the machine. Used by
@@ -77,6 +89,16 @@ impl Executor {
     /// Number of worker threads (the physical concurrency bound).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Workers currently executing a job (utilization gauge).
+    pub fn busy_threads(&self) -> usize {
+        self.busy.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of simultaneously busy workers.
+    pub fn peak_busy(&self) -> usize {
+        self.peak_busy.load(Ordering::SeqCst)
     }
 
     /// Dispatch a job; the returned handle yields the result (or the
@@ -117,6 +139,13 @@ pub struct JobHandle<T> {
 }
 
 impl<T> JobHandle<T> {
+    /// A handle plus the sender that fulfils it — for schedulers that
+    /// queue jobs before releasing them to the pool.
+    pub(crate) fn channel() -> (SyncSender<std::result::Result<T, String>>, JobHandle<T>) {
+        let (tx, rx) = sync_channel(1);
+        (tx, JobHandle { rx })
+    }
+
     /// Block until the job finishes. A panic inside the job surfaces
     /// here as [`Error::Faas`]; the worker pool is unaffected.
     pub fn join(self) -> Result<T> {
@@ -132,7 +161,7 @@ impl<T> JobHandle<T> {
 // branches on a Map state's `max_concurrency` with it.
 pub use crate::util::sync::{Semaphore, SemaphorePermit};
 
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = p.downcast_ref::<String>() {
@@ -193,6 +222,22 @@ mod tests {
             h.join().unwrap();
         }
         assert!(peak.load(Ordering::SeqCst) <= 2, "peak {:?}", peak);
+    }
+
+    #[test]
+    fn busy_tracking_observes_utilization() {
+        let pool = Executor::new(2);
+        assert_eq!(pool.busy_threads(), 0);
+        assert_eq!(pool.peak_busy(), 0);
+        let handles: Vec<_> = (0..4)
+            .map(|_| pool.submit(|| std::thread::sleep(Duration::from_millis(10))))
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.busy_threads(), 0);
+        let peak = pool.peak_busy();
+        assert!(peak >= 1 && peak <= 2, "peak {peak}");
     }
 
     #[test]

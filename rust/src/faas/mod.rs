@@ -5,11 +5,14 @@
 //! layer rebuilt in-process so the gradient fan-out path is exercised by
 //! real code (the handlers execute the same PJRT artifacts the peers
 //! use). The [`executor`] worker pool makes Map-state fan-out physically
-//! concurrent while the modeled time accounting stays deterministic.
+//! concurrent while the modeled time accounting stays deterministic, and
+//! the [`scheduler`] admits every peer's branches onto that shared pool
+//! with round-robin fairness, per-peer caps, and streaming pipelines.
 
 pub mod executor;
 pub mod lambda;
 pub mod pricing;
+pub mod scheduler;
 pub mod state_machine;
 
 pub use executor::{Executor, JobHandle, Semaphore};
@@ -17,4 +20,5 @@ pub use lambda::{
     report_unbilled, FaasPlatform, FunctionSpec, Handler, Invocation, PlatformStats,
 };
 pub use pricing::{invocation_cost, price_per_second, Arch};
+pub use scheduler::{BranchScheduler, MapCollector, PipelinedMap, SchedulerStats};
 pub use state_machine::{schedule_wall, ExecutionReport, RetryPolicy, State, StateMachine};

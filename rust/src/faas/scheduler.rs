@@ -1,0 +1,722 @@
+//! The cluster-wide branch scheduler: every peer's Map branches are
+//! admitted onto the *shared* worker pool through one gate, instead of
+//! each peer fanning out independently and racing for workers.
+//!
+//! Motivation (SPIRT, arXiv 2309.14148; "Towards Demystifying Serverless
+//! ML Training", arXiv 2105.07806): end-to-end serverless training time
+//! is dominated by communication/staging overlap, and per-peer batch
+//! queues feeding a shared worker fleet beat lockstep per-peer waves.
+//! Two pieces implement that here:
+//!
+//! - [`BranchScheduler`] — per-peer admission lanes over the
+//!   [`Executor`]. Dispatch is round-robin across peers (`fair`), each
+//!   lane has an in-flight cap (the peer's `lambda_concurrency`, now an
+//!   *admission limit* rather than a per-fan-out wave size), and the
+//!   total released to the pool never exceeds the worker count — so the
+//!   scheduler, not the executor's FIFO, owns all queueing and the
+//!   queue-depth/utilization stats are meaningful.
+//! - [`PipelinedMap`] — a streaming Map state: branches are submitted
+//!   one by one as their inputs become ready (no "upload everything,
+//!   then invoke" barrier) and outputs are yielded *in branch order* as
+//!   they land, so collection overlaps the remaining uploads and
+//!   handler waves. The modeled accounting (wall / billed / cost /
+//!   cold-start waves) reproduces [`StateMachine::execute_with`]
+//!   byte-for-byte; only the measured wall changes.
+//!
+//! [`StateMachine::execute_with`]: super::state_machine::StateMachine::execute_with
+
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use super::executor::{panic_message, Executor, JobHandle};
+use super::lambda::{FaasPlatform, Invocation};
+use super::state_machine::{invoke_with_retry, schedule_wall, ExecutionReport, RetryPolicy};
+use crate::error::{Error, Result};
+use crate::util::Bytes;
+
+type DetachedJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// One peer's admission lane.
+struct Lane {
+    queue: VecDeque<DetachedJob>,
+    in_flight: usize,
+    cap: usize,
+    served: u64,
+}
+
+impl Lane {
+    fn new(cap: usize) -> Self {
+        Self { queue: VecDeque::new(), in_flight: 0, cap: cap.max(1), served: 0 }
+    }
+}
+
+struct SchedState {
+    lanes: BTreeMap<usize, Lane>,
+    /// Round-robin rotation of peer ranks (fair mode).
+    rr: VecDeque<usize>,
+    paused: bool,
+    submitted: u64,
+    completed: u64,
+    queued: usize,
+    peak_queued: usize,
+    in_flight_total: usize,
+    peak_in_flight: usize,
+    /// Peer rank per dispatch, in dispatch order (tests/fairness audits;
+    /// off by default — it grows with every branch).
+    dispatch_log: Option<Vec<usize>>,
+}
+
+impl SchedState {
+    /// Pop the next dispatchable job under the fairness policy, updating
+    /// lane + aggregate accounting. `pool_cap` bounds the total released
+    /// to the executor so the scheduler owns all queueing.
+    fn next_ready(&mut self, fair: bool, pool_cap: usize) -> Option<(usize, DetachedJob)> {
+        if self.in_flight_total >= pool_cap {
+            return None;
+        }
+        let eligible = |lane: &Lane| !lane.queue.is_empty() && lane.in_flight < lane.cap;
+        let pick = if fair {
+            let mut found = None;
+            for _ in 0..self.rr.len() {
+                let rank = self.rr.pop_front().unwrap();
+                self.rr.push_back(rank);
+                if self.lanes.get(&rank).map(eligible).unwrap_or(false) {
+                    found = Some(rank);
+                    break;
+                }
+            }
+            found
+        } else {
+            // unfair baseline: lowest rank with work always wins
+            self.lanes
+                .iter()
+                .find(|(_, lane)| eligible(lane))
+                .map(|(&rank, _)| rank)
+        }?;
+        let lane = self.lanes.get_mut(&pick).unwrap();
+        let job = lane.queue.pop_front().unwrap();
+        lane.in_flight += 1;
+        lane.served += 1;
+        self.queued -= 1;
+        self.in_flight_total += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight_total);
+        if let Some(log) = self.dispatch_log.as_mut() {
+            log.push(pick);
+        }
+        Some((pick, job))
+    }
+}
+
+/// Utilization snapshot of the scheduler (plus its executor).
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    /// Branches admitted into lanes so far.
+    pub submitted: u64,
+    /// Branches that finished executing.
+    pub completed: u64,
+    /// Branches currently queued in lanes (not yet on the pool).
+    pub queued: usize,
+    /// High-water mark of `queued`.
+    pub peak_queued: usize,
+    /// Branches currently released to the pool.
+    pub in_flight: usize,
+    /// High-water mark of `in_flight`.
+    pub peak_in_flight: usize,
+    /// (rank, branches served) per registered lane.
+    pub per_peer_served: Vec<(usize, u64)>,
+    /// Worker threads in the underlying executor.
+    pub exec_threads: usize,
+    /// High-water mark of simultaneously busy executor workers.
+    pub exec_peak_busy: usize,
+}
+
+/// Cluster-wide admission control over the shared [`Executor`].
+pub struct BranchScheduler {
+    executor: Arc<Executor>,
+    fair: bool,
+    /// Self-handle: dispatched jobs carry a strong clone so completion
+    /// bookkeeping can re-pump the queue from a worker thread.
+    me: Weak<BranchScheduler>,
+    state: Mutex<SchedState>,
+}
+
+impl BranchScheduler {
+    /// `fair = true` dispatches round-robin across peer lanes; `false`
+    /// is the greedy lowest-rank-first baseline (observably unfair).
+    pub fn new(executor: Arc<Executor>, fair: bool) -> Arc<Self> {
+        Arc::new_cyclic(|me| Self {
+            executor,
+            fair,
+            me: me.clone(),
+            state: Mutex::new(SchedState {
+                lanes: BTreeMap::new(),
+                rr: VecDeque::new(),
+                paused: false,
+                submitted: 0,
+                completed: 0,
+                queued: 0,
+                peak_queued: 0,
+                in_flight_total: 0,
+                peak_in_flight: 0,
+                dispatch_log: None,
+            }),
+        })
+    }
+
+    /// Record the peer rank of every dispatch (fairness audits / tests).
+    /// Enable before submitting; the log grows with every branch.
+    pub fn enable_dispatch_log(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.dispatch_log.is_none() {
+            st.dispatch_log = Some(Vec::new());
+        }
+    }
+
+    pub fn is_fair(&self) -> bool {
+        self.fair
+    }
+
+    /// The pool this scheduler admits onto.
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.executor
+    }
+
+    /// Declare `rank`'s lane with an in-flight admission cap (clamped to
+    /// >= 1). Submitting to an undeclared rank auto-registers the lane
+    /// with an unbounded cap (the pool width still binds).
+    pub fn register_peer(&self, rank: usize, cap: usize) {
+        let mut st = self.state.lock().unwrap();
+        match st.lanes.get_mut(&rank) {
+            Some(lane) => lane.cap = cap.max(1),
+            None => {
+                st.lanes.insert(rank, Lane::new(cap));
+                st.rr.push_back(rank);
+            }
+        }
+    }
+
+    /// Hold all dispatch (queued branches accumulate in lanes).
+    pub fn pause(&self) {
+        self.state.lock().unwrap().paused = true;
+    }
+
+    /// Resume dispatch and drain whatever is eligible.
+    pub fn resume(&self) {
+        self.state.lock().unwrap().paused = false;
+        self.pump();
+    }
+
+    /// Admit a fire-and-forget branch into `rank`'s lane. The job runs
+    /// on the shared pool once admission (per-peer cap, pool width,
+    /// round-robin turn) allows; panics inside `f` are contained.
+    pub fn submit_detached(&self, rank: usize, f: impl FnOnce() + Send + 'static) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if !st.lanes.contains_key(&rank) {
+                st.lanes.insert(rank, Lane::new(usize::MAX));
+                st.rr.push_back(rank);
+            }
+            st.lanes.get_mut(&rank).unwrap().queue.push_back(Box::new(f));
+            st.submitted += 1;
+            st.queued += 1;
+            st.peak_queued = st.peak_queued.max(st.queued);
+        }
+        self.pump();
+    }
+
+    /// Admit a branch and get a handle for its result (panics surface as
+    /// [`Error::Faas`] on join, matching [`Executor::submit`]).
+    pub fn submit<T, F>(&self, rank: usize, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, handle) = JobHandle::channel();
+        self.submit_detached(rank, move || {
+            let out = catch_unwind(AssertUnwindSafe(f)).map_err(|p| panic_message(&*p));
+            // receiver may have been dropped by an abandoning caller
+            let _ = tx.send(out);
+        });
+        handle
+    }
+
+    /// Release every eligible queued branch to the pool.
+    fn pump(&self) {
+        loop {
+            let (rank, job) = {
+                let mut st = self.state.lock().unwrap();
+                if st.paused {
+                    return;
+                }
+                match st.next_ready(self.fair, self.executor.threads()) {
+                    Some(next) => next,
+                    None => return,
+                }
+            };
+            let sched = self.me.upgrade().expect("scheduler alive while dispatching");
+            // the handle is dropped: completion bookkeeping happens in
+            // the wrapper, and result delivery (if any) inside `job`
+            drop(self.executor.submit(move || {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+                sched.complete(rank);
+            }));
+        }
+    }
+
+    fn complete(&self, rank: usize) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(lane) = st.lanes.get_mut(&rank) {
+                lane.in_flight -= 1;
+            }
+            st.in_flight_total -= 1;
+            st.completed += 1;
+        }
+        self.pump();
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        let st = self.state.lock().unwrap();
+        SchedulerStats {
+            submitted: st.submitted,
+            completed: st.completed,
+            queued: st.queued,
+            peak_queued: st.peak_queued,
+            in_flight: st.in_flight_total,
+            peak_in_flight: st.peak_in_flight,
+            per_peer_served: st.lanes.iter().map(|(&r, l)| (r, l.served)).collect(),
+            exec_threads: self.executor.threads(),
+            exec_peak_busy: self.executor.peak_busy(),
+        }
+    }
+
+    /// Dispatch order (peer rank per dispatch); empty unless
+    /// [`Self::enable_dispatch_log`] was called.
+    pub fn dispatch_log(&self) -> Vec<usize> {
+        self.state
+            .lock()
+            .unwrap()
+            .dispatch_log
+            .clone()
+            .unwrap_or_default()
+    }
+}
+
+/// Deterministic aggregation of Map-branch landings. Branches may land
+/// in any order; consumption ([`Self::pop_ready`]) is forced into branch
+/// -index order, so the fold of billed / cost / wall / retries is the
+/// exact sequence [`StateMachine::execute_with`] produces when joining
+/// handles in submission order — byte-identical modeled numbers.
+///
+/// [`StateMachine::execute_with`]: super::state_machine::StateMachine::execute_with
+#[derive(Default)]
+pub struct MapCollector {
+    concurrency: usize,
+    pending: BTreeMap<usize, (Result<Invocation>, u32)>,
+    next: usize,
+    landed: usize,
+    walls: Vec<Duration>,
+    billed: Duration,
+    cost_usd: f64,
+    invocations: usize,
+    cold_starts: usize,
+    retries: usize,
+    first_err: Option<Error>,
+}
+
+impl MapCollector {
+    pub fn new(concurrency: usize) -> Self {
+        Self { concurrency: concurrency.max(1), ..Default::default() }
+    }
+
+    /// Branches landed so far (any order).
+    pub fn landed(&self) -> usize {
+        self.landed
+    }
+
+    /// Record branch `idx`'s outcome (`attempts` as returned by the
+    /// retry loop).
+    pub fn push(&mut self, idx: usize, outcome: (Result<Invocation>, u32)) {
+        self.landed += 1;
+        self.pending.insert(idx, outcome);
+    }
+
+    /// Yield the next in-order successful output, folding its stats.
+    /// Failed branches are folded (retries, first error) and skipped.
+    /// `None` means the next branch has not landed yet (or everything
+    /// landed so far is consumed).
+    pub fn pop_ready(&mut self) -> Option<(usize, Bytes)> {
+        loop {
+            let (res, attempts) = self.pending.remove(&self.next)?;
+            let idx = self.next;
+            self.next += 1;
+            self.retries += attempts.saturating_sub(1) as usize;
+            match res {
+                Ok(inv) => {
+                    self.invocations += 1;
+                    if !inv.cold_start.is_zero() {
+                        self.cold_starts += 1;
+                    }
+                    self.walls.push(inv.wall());
+                    self.billed += inv.billed;
+                    self.cost_usd += inv.cost_usd;
+                    return Some((idx, inv.output));
+                }
+                Err(e) => {
+                    if self.first_err.is_none() {
+                        self.first_err = Some(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consume any un-popped outputs and produce the aggregate report
+    /// (`measured_wall` is left zero — the caller owns that clock).
+    /// The first branch error, if any, wins over the report.
+    pub fn finish(mut self) -> Result<ExecutionReport> {
+        while self.pop_ready().is_some() {}
+        if let Some(e) = self.first_err.take() {
+            return Err(e);
+        }
+        Ok(ExecutionReport {
+            outputs: Vec::new(),
+            wall: schedule_wall(&self.walls, self.concurrency),
+            measured_wall: Duration::ZERO,
+            billed: self.billed,
+            cost_usd: self.cost_usd,
+            invocations: self.invocations,
+            cold_starts: self.cold_starts,
+            retries: self.retries,
+        })
+    }
+}
+
+type Landing = (usize, (Result<Invocation>, u32));
+
+/// A streaming Map state over the [`BranchScheduler`]: submit branch
+/// payloads as their inputs become ready, consume outputs (in branch
+/// order) while later branches are still uploading or executing.
+///
+/// Cold-start accounting matches the staged Map exactly: the first
+/// `min(total, concurrency)` branches form the cold wave, decided up
+/// front — so modeled numbers do not depend on pool size or timing.
+pub struct PipelinedMap {
+    scheduler: Arc<BranchScheduler>,
+    platform: Arc<FaasPlatform>,
+    function: String,
+    peer: usize,
+    retry: RetryPolicy,
+    total: usize,
+    first_wave: usize,
+    warm: usize,
+    submitted: usize,
+    tx: Sender<Landing>,
+    rx: Receiver<Landing>,
+    collector: MapCollector,
+    t0: Instant,
+    finished: bool,
+}
+
+impl PipelinedMap {
+    /// Start a pipelined fan-out of `total` branches of `function` for
+    /// peer `rank`. Reserves the cold/warm wave split immediately
+    /// (fail-fast on unknown functions, before touching the warm pool).
+    pub fn new(
+        scheduler: Arc<BranchScheduler>,
+        platform: Arc<FaasPlatform>,
+        rank: usize,
+        function: &str,
+        total: usize,
+        concurrency: usize,
+        retry: RetryPolicy,
+    ) -> Result<Self> {
+        platform.get(function)?;
+        let first_wave = total.min(concurrency.max(1));
+        let warm = platform.acquire_environments(function, first_wave);
+        let (tx, rx) = channel();
+        Ok(Self {
+            scheduler,
+            platform,
+            function: function.to_string(),
+            peer: rank,
+            retry,
+            total,
+            first_wave,
+            warm,
+            submitted: 0,
+            tx,
+            rx,
+            collector: MapCollector::new(concurrency),
+            t0: Instant::now(),
+            finished: false,
+        })
+    }
+
+    /// Branches submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    /// Submit the next branch (branch index = call order). `modeled`
+    /// overrides billed time for perfmodel-driven runs, exactly like the
+    /// Map state's modeled vector.
+    pub fn submit(&mut self, payload: Bytes, modeled: Option<Duration>) {
+        assert!(self.submitted < self.total, "more submissions than declared");
+        let i = self.submitted;
+        self.submitted += 1;
+        let cold = i >= self.warm && i < self.first_wave;
+        let platform = self.platform.clone();
+        let function = self.function.clone();
+        let retry = self.retry;
+        let tx = self.tx.clone();
+        self.scheduler.submit_detached(self.peer, move || {
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                invoke_with_retry(&platform, &function, &payload, modeled, Some(cold), retry)
+            }))
+            .unwrap_or_else(|p| {
+                (
+                    Err(Error::Faas(format!(
+                        "invocation worker panicked: {}",
+                        panic_message(&*p)
+                    ))),
+                    1,
+                )
+            });
+            // receiver gone = the fan-out was abandoned mid-epoch
+            let _ = tx.send((i, out));
+        });
+    }
+
+    /// Non-blocking: the next in-order output if it already landed.
+    pub fn poll_output(&mut self) -> Option<(usize, Bytes)> {
+        while let Ok((i, out)) = self.rx.try_recv() {
+            self.collector.push(i, out);
+        }
+        self.collector.pop_ready()
+    }
+
+    /// Blocking: the next in-order output, or `None` once every
+    /// submitted branch has landed and been yielded.
+    pub fn next_output(&mut self) -> Option<(usize, Bytes)> {
+        loop {
+            if let Some(out) = self.collector.pop_ready() {
+                return Some(out);
+            }
+            if self.collector.landed() >= self.submitted {
+                return None;
+            }
+            match self.rx.recv() {
+                Ok((i, out)) => self.collector.push(i, out),
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Wait for all outstanding branches, release the warm wave, and
+    /// produce the aggregate report. `measured_wall` spans from
+    /// construction to the last landing — the true pipelined epoch time,
+    /// uploads and collection included.
+    pub fn finish(mut self) -> Result<ExecutionReport> {
+        while self.collector.landed() < self.submitted {
+            match self.rx.recv() {
+                Ok((i, out)) => self.collector.push(i, out),
+                Err(_) => break,
+            }
+        }
+        self.platform
+            .release_environments(&self.function, self.first_wave);
+        self.finished = true;
+        let measured = self.t0.elapsed();
+        let mut report = std::mem::take(&mut self.collector).finish()?;
+        report.measured_wall = measured;
+        Ok(report)
+    }
+}
+
+impl Drop for PipelinedMap {
+    fn drop(&mut self) {
+        // abandoned mid-epoch (error between submit and finish): the
+        // reserved wave must go back or later fan-outs over-count colds
+        if !self.finished {
+            self.platform
+                .release_environments(&self.function, self.first_wave);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::lambda::{FunctionSpec, Handler};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn echo() -> Handler {
+        Arc::new(|b: &Bytes| Ok(b.clone()))
+    }
+
+    fn platform_with(name: &str, h: Handler) -> Arc<FaasPlatform> {
+        let p = Arc::new(FaasPlatform::new(Duration::ZERO));
+        p.register(FunctionSpec::new(name, 512, h)).unwrap();
+        p
+    }
+
+    /// Completion bookkeeping runs *after* result delivery, so tests
+    /// that assert on `completed` must wait for it to catch up.
+    fn await_completed(sched: &BranchScheduler, n: u64) {
+        for _ in 0..500 {
+            if sched.stats().completed >= n {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("scheduler never completed {n} branches: {:?}", sched.stats());
+    }
+
+    #[test]
+    fn typed_submit_returns_result() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        let h = sched.submit(0, || 21 * 2);
+        assert_eq!(h.join().unwrap(), 42);
+        let s = sched.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.per_peer_served, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn panic_in_branch_is_contained() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        let bad = sched.submit(0, || -> u32 { panic!("branch exploded") });
+        let err = bad.join().unwrap_err();
+        assert!(err.to_string().contains("branch exploded"), "{err}");
+        // the lane slot was returned: the scheduler keeps serving
+        assert_eq!(sched.submit(0, || 7).join().unwrap(), 7);
+        await_completed(&sched, 2);
+        assert_eq!(sched.stats().in_flight, 0);
+    }
+
+    #[test]
+    fn per_peer_cap_bounds_in_flight() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(8)), true);
+        sched.register_peer(0, 2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let live = live.clone();
+                let peak = peak.clone();
+                sched.submit(0, move || {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(10));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "cap violated: {peak:?}");
+        await_completed(&sched, 8);
+        assert!(sched.stats().peak_in_flight <= 2);
+    }
+
+    #[test]
+    fn pause_holds_resume_drains() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        sched.pause();
+        let handles: Vec<_> = (0..4).map(|i| sched.submit(0, move || i)).collect();
+        std::thread::sleep(Duration::from_millis(10));
+        let s = sched.stats();
+        assert_eq!(s.queued, 4, "paused scheduler must not dispatch");
+        assert_eq!(s.completed, 0);
+        sched.resume();
+        let got: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn collector_orders_and_aggregates() {
+        let mut c = MapCollector::new(4);
+        let inv = |billed_ms: u64| Invocation {
+            function: "f".into(),
+            output: Bytes::from_static(b"o"),
+            measured: Duration::from_millis(billed_ms),
+            billed: Duration::from_millis(billed_ms),
+            cold_start: Duration::ZERO,
+            memory_mb: 512,
+            cost_usd: 0.0,
+        };
+        // branches land out of order
+        c.push(1, (Ok(inv(20)), 1));
+        assert!(c.pop_ready().is_none(), "branch 0 has not landed");
+        c.push(0, (Ok(inv(10)), 2));
+        assert_eq!(c.pop_ready().unwrap().0, 0);
+        assert_eq!(c.pop_ready().unwrap().0, 1);
+        c.push(2, (Err(Error::Faas("boom".into())), 3));
+        let report = c.finish();
+        assert!(report.is_err(), "branch error must win over the report");
+    }
+
+    #[test]
+    fn pipelined_map_streams_in_order() {
+        let p = platform_with("grad", echo());
+        let sched = BranchScheduler::new(Arc::new(Executor::new(4)), true);
+        let mut pipe = PipelinedMap::new(
+            sched,
+            p.clone(),
+            0,
+            "grad",
+            6,
+            64,
+            RetryPolicy::default(),
+        )
+        .unwrap();
+        for i in 0..6u8 {
+            pipe.submit(Bytes::from(vec![i]), None);
+        }
+        let mut seen = Vec::new();
+        while let Some((idx, out)) = pipe.next_output() {
+            assert_eq!(out[0] as usize, idx);
+            seen.push(idx);
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        let report = pipe.finish().unwrap();
+        assert_eq!(report.invocations, 6);
+        assert_eq!(report.cold_starts, 6, "fresh fan-out: one env per branch");
+        // the wave went back warm
+        assert_eq!(p.acquire_environments("grad", 6), 6);
+    }
+
+    #[test]
+    fn pipelined_map_unknown_function_fails_fast() {
+        let p = platform_with("grad", echo());
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        assert!(PipelinedMap::new(sched, p, 0, "nope", 3, 4, RetryPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn abandoned_pipeline_releases_wave() {
+        let p = platform_with("grad", echo());
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        {
+            let _pipe = PipelinedMap::new(
+                sched,
+                p.clone(),
+                0,
+                "grad",
+                4,
+                8,
+                RetryPolicy::default(),
+            )
+            .unwrap();
+            // dropped without finish (simulates an error mid-epoch)
+        }
+        // the reserved wave went back to the warm pool, exactly as the
+        // staged Map's unconditional release does on its error paths
+        assert_eq!(p.acquire_environments("grad", 4), 4);
+    }
+}

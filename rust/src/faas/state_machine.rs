@@ -249,7 +249,7 @@ impl StateMachine {
 /// `prepared_cold` carries the state machine's wave decision: the first
 /// attempt uses it, retry attempts always find the environment warm
 /// (the cold init already happened).
-fn invoke_with_retry(
+pub(crate) fn invoke_with_retry(
     platform: &FaasPlatform,
     function: &str,
     payload: &Bytes,

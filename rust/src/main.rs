@@ -10,7 +10,7 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use p2pless::config::{Backend, Compression, SyncMode, TrainConfig};
+use p2pless::config::{Backend, Compression, OffloadMode, SyncMode, TrainConfig};
 use p2pless::coordinator::Cluster;
 use p2pless::error::{Error, Result};
 use p2pless::harness;
@@ -38,6 +38,17 @@ TRAIN OPTIONS:
     --sync M                 sync | async
     --compression C          none | qsgd:S | topk:FRAC
     --lambda-memory MB       lambda memory (0 = paper Table II rule)
+    --lambda-concurrency N   per-peer in-flight branch cap: scheduler
+                             admission limit (pipelined) / Map wave
+                             size (staged); default 64
+    --offload-mode M         staged | pipelined (default pipelined):
+                             staged uploads everything then fans out;
+                             pipelined streams each batch through the
+                             cluster scheduler as its upload lands.
+                             Modeled walls are byte-identical either way
+    --sched-fair B           true | false (default true): round-robin
+                             branch dispatch across peers vs the greedy
+                             lowest-rank-first baseline
     --exec-threads N         FaaS worker-pool threads (0 = machine size);
                              physical fan-out concurrency only — the
                              modeled accounting does not move with N
@@ -99,6 +110,15 @@ fn parse_num<T: std::str::FromStr>(args: &Args, key: &str) -> Result<Option<T>> 
     }
 }
 
+fn parse_bool(args: &Args, key: &str) -> Result<Option<bool>> {
+    match args.flags.get(key).map(|s| s.as_str()) {
+        None => Ok(None),
+        Some("true" | "on" | "yes" | "1") => Ok(Some(true)),
+        Some("false" | "off" | "no" | "0") => Ok(Some(false)),
+        Some(v) => Err(Error::Config(format!("--{key}: bad boolean {v:?}"))),
+    }
+}
+
 fn build_config(args: &Args) -> Result<TrainConfig> {
     let mut cfg = match args.flags.get("config") {
         Some(path) => TrainConfig::from_json_file(path)?,
@@ -139,6 +159,15 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(v) = parse_num(args, "lambda-memory")? {
         cfg.lambda_memory_mb = v;
+    }
+    if let Some(v) = parse_num(args, "lambda-concurrency")? {
+        cfg.lambda_concurrency = v;
+    }
+    if let Some(v) = args.flags.get("offload-mode") {
+        cfg.offload_mode = OffloadMode::parse(v)?;
+    }
+    if let Some(v) = parse_bool(args, "sched-fair")? {
+        cfg.sched_fair = v;
     }
     if let Some(v) = parse_num(args, "exec-threads")? {
         cfg.exec_threads = v;
@@ -207,6 +236,21 @@ fn cmd_train(args: &Args) -> Result<()> {
             "lambda fan-out measured wall (worker pool): {:?}",
             report.lambda_measured_wall
         );
+        let s = &report.sched;
+        println!(
+            "scheduler ({} dispatch, {} mode): {} branches, peak queue {}, peak in-flight {}; \
+             pool {} threads (peak busy {})",
+            if report.config.sched_fair { "round-robin" } else { "greedy" },
+            report.config.offload_mode.name(),
+            s.submitted,
+            s.peak_queued,
+            s.peak_in_flight,
+            s.exec_threads,
+            s.exec_peak_busy,
+        );
+        for &(rank, served) in &s.per_peer_served {
+            println!("  peer {rank}: {served} branches served");
+        }
     }
     println!("wall: {:?}", report.wall);
     Ok(())

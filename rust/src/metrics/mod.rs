@@ -6,7 +6,7 @@
 //! `/proc/self/stat`, like psutil) and RSS (from `/proc/self/statm`,
 //! like tracemalloc's high-water proxy) around a stage.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 use std::time::{Duration, Instant};
 
@@ -126,10 +126,13 @@ impl StageTimer {
     }
 }
 
-/// Thread-safe per-stage aggregation.
+/// Thread-safe per-stage aggregation, plus named utilization counters
+/// (scheduler queue depth, executor busy threads, per-peer branches
+/// served) so fairness regressions are observable in the run report.
 #[derive(Default)]
 pub struct MetricsRegistry {
     stages: Mutex<HashMap<Stage, StageSummary>>,
+    counters: Mutex<BTreeMap<String, u64>>,
 }
 
 impl MetricsRegistry {
@@ -160,6 +163,31 @@ impl MetricsRegistry {
         Stage::ALL
             .iter()
             .map(|&s| (s, self.summary(s)))
+            .collect()
+    }
+
+    /// Set a named utilization counter (gauge semantics: last write
+    /// wins).
+    pub fn set_counter(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Add to a named counter (creates it at zero).
+    pub fn add_counter(&self, name: &str, delta: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.lock().unwrap().get(name).copied()
+    }
+
+    /// All named counters, sorted by name.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &v)| (k.clone(), v))
             .collect()
     }
 
@@ -229,6 +257,22 @@ mod tests {
     #[test]
     fn empty_registry_has_no_dominant() {
         assert_eq!(MetricsRegistry::new().dominant_stage(), None);
+    }
+
+    #[test]
+    fn counters_set_add_list() {
+        let reg = MetricsRegistry::new();
+        assert_eq!(reg.counter("sched.peak_queue_depth"), None);
+        reg.set_counter("sched.peak_queue_depth", 7);
+        reg.set_counter("sched.peak_queue_depth", 5); // gauge: last wins
+        reg.add_counter("sched.peer0.served", 3);
+        reg.add_counter("sched.peer0.served", 2);
+        assert_eq!(reg.counter("sched.peak_queue_depth"), Some(5));
+        assert_eq!(reg.counter("sched.peer0.served"), Some(5));
+        let all = reg.counters();
+        assert_eq!(all.len(), 2);
+        // sorted by name
+        assert_eq!(all[0].0, "sched.peak_queue_depth");
     }
 
     #[test]

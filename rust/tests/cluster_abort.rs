@@ -1,0 +1,101 @@
+//! Fail-fast abort propagation: when one peer dies, the rest must not
+//! stay parked on the epoch barrier or a gradient queue until the run
+//! drags to an end — the broker-wide abort wakes them with
+//! `Error::Aborted`. These tests exercise the mechanism the cluster
+//! wires up (`Cluster::run` aborts the broker when a peer thread errors
+//! or panics); no PJRT artifacts are needed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use p2pless::broker::{Broker, Message, QueueMode};
+use p2pless::coordinator::EpochBarrier;
+use p2pless::error::Error;
+use p2pless::util::Bytes;
+
+/// The satellite's regression shape: rank 0 "fails" before arriving at
+/// the epoch barrier; rank 1 is already parked there. The abort must
+/// release rank 1 promptly with the failing peer's reason.
+#[test]
+fn barrier_waiter_released_when_peer_fails() {
+    let broker = Arc::new(Broker::default());
+    let barrier = Arc::new(EpochBarrier::new(&broker, 2).unwrap());
+
+    let b = barrier.clone();
+    let parked = std::thread::spawn(move || b.arrive_and_wait(1, 1));
+
+    // give rank 1 time to actually park
+    std::thread::sleep(Duration::from_millis(20));
+    // rank 0 errors instead of arriving; the cluster aborts the broker
+    broker.abort("peer 0 failed: faas: no batches to offload");
+
+    let err = parked.join().unwrap().unwrap_err();
+    assert!(matches!(err, Error::Aborted(_)), "expected Aborted, got {err}");
+    assert!(err.to_string().contains("peer 0 failed"), "{err}");
+}
+
+/// A synchronous consumer blocked on a dead peer's gradient queue is
+/// released the same way.
+#[test]
+fn gradient_waiter_released_when_peer_fails() {
+    let broker = Arc::new(Broker::default());
+    broker
+        .declare(&Broker::gradient_queue(0), QueueMode::LatestOnly)
+        .unwrap();
+    let q = broker.get(&Broker::gradient_queue(0)).unwrap();
+    let parked = std::thread::spawn(move || q.await_epoch(3));
+
+    std::thread::sleep(Duration::from_millis(20));
+    broker.abort("peer 0 panicked");
+
+    let err = parked.join().unwrap().unwrap_err();
+    assert!(matches!(err, Error::Aborted(_)), "expected Aborted, got {err}");
+}
+
+/// Abort releases *every* parked peer of a larger cluster, not just one
+/// (notify-all, not notify-one).
+#[test]
+fn abort_releases_all_parked_peers() {
+    let peers = 4;
+    let broker = Arc::new(Broker::default());
+    let barrier = Arc::new(EpochBarrier::new(&broker, peers).unwrap());
+
+    // peers 1..4 arrive; peer 0 never does
+    let parked: Vec<_> = (1..peers)
+        .map(|rank| {
+            let b = barrier.clone();
+            std::thread::spawn(move || b.arrive_and_wait(rank, 1))
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(20));
+    broker.abort("peer 0 failed");
+
+    for h in parked {
+        assert!(h.join().unwrap().is_err());
+    }
+}
+
+/// An abort raised *before* a peer reaches the barrier still stops it —
+/// no lost-wakeup window between the flag and the condvar.
+#[test]
+fn abort_before_arrival_is_not_lost() {
+    let broker = Arc::new(Broker::default());
+    let barrier = EpochBarrier::new(&broker, 2).unwrap();
+    broker.abort("early failure");
+    let err = barrier.arrive_and_wait(0, 1).unwrap_err();
+    assert!(matches!(err, Error::Aborted(_)));
+}
+
+/// Publishing still works after an abort (late peers flushing state must
+/// not panic), and non-blocking consumption is unaffected.
+#[test]
+fn abort_does_not_break_publish_or_peek() {
+    let broker = Arc::new(Broker::default());
+    broker.declare("q", QueueMode::LatestOnly).unwrap();
+    broker.abort("stop");
+    broker
+        .publish("q", Message::new(0, 1, Bytes::from_static(b"late")))
+        .unwrap();
+    let q = broker.get("q").unwrap();
+    assert_eq!(&q.peek_latest().unwrap().payload[..], b"late");
+}
