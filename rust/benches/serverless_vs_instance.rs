@@ -4,7 +4,8 @@
 //! epoch dispatch, and a real two-peer PJRT run per backend and mode.
 
 use p2pless::config::{Backend, OffloadMode, TrainConfig};
-use p2pless::coordinator::Cluster;
+use p2pless::coordinator::{Cluster, ServerlessOffload};
+use p2pless::data::{Batcher, DatasetKind, SyntheticDataset};
 use p2pless::faas::{
     BranchScheduler, Executor, FaasPlatform, FunctionSpec, Handler, PipelinedMap,
     RetryPolicy, StateMachine,
@@ -12,7 +13,8 @@ use p2pless::faas::{
 use p2pless::harness::bench::{header, Bench};
 use p2pless::harness::cloud_exps::fig3_cell;
 use p2pless::perfmodel::PaperModel;
-use p2pless::runtime::Engine;
+use p2pless::runtime::{Engine, ModelRuntime};
+use p2pless::store::{DecodedCache, ObjectStore};
 use p2pless::util::Bytes;
 use std::sync::Arc;
 use std::time::Duration;
@@ -137,4 +139,87 @@ fn main() {
                 .unwrap()
         });
     }
+
+    // warm vs cold data plane: a *cold* epoch pays the one-time batch
+    // pack + upload before fanning out; a *warm* epoch reuses the
+    // epoch-persistent refs and uploads only the params object. Store
+    // puts per epoch are reported alongside the timings — the win the
+    // zero-redundancy plane buys is both visible numbers shrinking.
+    let runtime = Arc::new(
+        ModelRuntime::load(engine.clone(), dir, "mini_squeezenet_mnist").unwrap(),
+    );
+    let data = SyntheticDataset::new(DatasetKind::Mnist, 11).generate(16 * 4);
+    let batches = Batcher::new(16, 11).epoch_batches(&data, 0);
+    let params = Arc::new(runtime.init_params().unwrap());
+    let offloader = |store: &Arc<ObjectStore>| {
+        ServerlessOffload::new(
+            Arc::new(FaasPlatform::new(Duration::ZERO)),
+            store.clone(),
+            runtime.clone(),
+            BranchScheduler::new(Arc::new(Executor::new(4)), true),
+            Arc::new(DecodedCache::new(16)),
+            0,
+            1769,
+            64,
+            OffloadMode::Pipelined,
+            true,
+        )
+        .unwrap()
+    };
+
+    let mut b = Bench::new("data_plane").with_samples(1, 4);
+    {
+        let batches = batches.clone();
+        let params = params.clone();
+        let runtime = runtime.clone();
+        b.bench("epoch_cold_reupload_batches", move || {
+            // fresh store + offloader: every "epoch" re-packs and
+            // re-uploads the batch objects (the pre-PR shape)
+            let store = Arc::new(ObjectStore::new());
+            let off = ServerlessOffload::new(
+                Arc::new(FaasPlatform::new(Duration::ZERO)),
+                store.clone(),
+                runtime.clone(),
+                BranchScheduler::new(Arc::new(Executor::new(4)), true),
+                Arc::new(DecodedCache::new(16)),
+                0,
+                1769,
+                64,
+                OffloadMode::Pipelined,
+                true,
+            )
+            .unwrap();
+            off.upload_batches(&batches).unwrap();
+            off.compute_epoch(1, &params).unwrap()
+        });
+    }
+    let warm_store = Arc::new(ObjectStore::new());
+    let warm = Arc::new(offloader(&warm_store));
+    warm.upload_batches(&batches).unwrap();
+    {
+        let warm = warm.clone();
+        let params = params.clone();
+        let mut epoch = 0usize;
+        b.bench("epoch_warm_cached_batches", move || {
+            epoch += 1;
+            warm.compute_epoch(epoch, &params).unwrap()
+        });
+    }
+    // per-epoch store put counts (one extra epoch each, counted exactly)
+    let cold_store = Arc::new(ObjectStore::new());
+    let cold = offloader(&cold_store);
+    let p0 = cold_store.stats().0;
+    cold.upload_batches(&batches).unwrap();
+    cold.compute_epoch(1, &params).unwrap();
+    let cold_puts = cold_store.stats().0 - p0;
+    let p0 = warm_store.stats().0;
+    warm.compute_epoch(1000, &params).unwrap();
+    let warm_puts = warm_store.stats().0 - p0;
+    println!(
+        "data_plane: store puts per epoch — cold {} (batch upload + params + {} parked \
+         grads), warm {} (params + parked grads only)",
+        cold_puts,
+        batches.len(),
+        warm_puts,
+    );
 }

@@ -173,6 +173,14 @@ pub struct TrainConfig {
     pub sched_fair: bool,
     /// Staged vs pipelined serverless dispatch.
     pub offload_mode: OffloadMode,
+    /// Entries in the decoded-object cache memoizing params decodes
+    /// across Lambda branches (0 disables; each entry is one params
+    /// vector).
+    pub decode_cache: usize,
+    /// Sweep each epoch's store scratch (params, parked gradients) by
+    /// generation after the fan-out. `false` keeps it all — a debugging
+    /// aid that lets the store grow with the epoch count.
+    pub sweep_scratch: bool,
     /// Worker threads in the FaaS execution fabric (0 = machine size).
     /// Physical concurrency only: the modeled accounting does not move.
     pub exec_threads: usize,
@@ -207,6 +215,8 @@ impl Default for TrainConfig {
             lambda_concurrency: 64,
             sched_fair: true,
             offload_mode: OffloadMode::default(),
+            decode_cache: 16,
+            sweep_scratch: true,
             exec_threads: 0,
             exec_slots: 0,
             seed: 42,
@@ -254,6 +264,8 @@ impl TrainConfig {
                 "offload_mode" => {
                     cfg.offload_mode = OffloadMode::parse(v.as_str().ok_or_else(missing)?)?
                 }
+                "decode_cache" => cfg.decode_cache = v.as_usize().ok_or_else(missing)?,
+                "sweep_scratch" => cfg.sweep_scratch = v.as_bool().ok_or_else(missing)?,
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
                 "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
                 "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
@@ -287,6 +299,8 @@ impl TrainConfig {
             .set("lambda_concurrency", self.lambda_concurrency)
             .set("sched_fair", self.sched_fair)
             .set("offload_mode", self.offload_mode.name())
+            .set("decode_cache", self.decode_cache)
+            .set("sweep_scratch", self.sweep_scratch)
             .set("exec_threads", self.exec_threads)
             .set("exec_slots", self.exec_slots)
             .set("seed", self.seed)
@@ -381,6 +395,21 @@ mod tests {
         assert!(TrainConfig::default().sched_fair);
         assert_eq!(TrainConfig::default().offload_mode, OffloadMode::Pipelined);
         assert!(OffloadMode::parse("warp").is_err());
+    }
+
+    #[test]
+    fn data_plane_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            decode_cache: 3,
+            sweep_scratch: false,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.decode_cache, 3);
+        assert!(!back.sweep_scratch);
+        // defaults: a small cache, scratch swept every epoch
+        assert_eq!(TrainConfig::default().decode_cache, 16);
+        assert!(TrainConfig::default().sweep_scratch);
     }
 
     #[test]

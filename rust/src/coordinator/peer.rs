@@ -144,6 +144,15 @@ impl Peer {
         &self.params
     }
 
+    fn no_batch_error(&self) -> Error {
+        Error::Data(format!(
+            "peer {}: partition of {} samples yields no batch of {}",
+            self.rank,
+            self.partition.len(),
+            self.config.batch_size
+        ))
+    }
+
     /// Run Algorithm 1. Returns the per-peer report.
     pub fn run(&mut self) -> Result<PeerReport> {
         let batcher = Batcher::new(self.config.batch_size, self.config.seed ^ self.rank as u64);
@@ -168,25 +177,43 @@ impl Peer {
             lambda_measured_wall: std::time::Duration::ZERO,
         };
 
+        // Serverless fidelity (paper §III-B): the partition is batched
+        // once and uploaded to the peer's bucket *before* training;
+        // every epoch re-reads the same batch objects, so steady-state
+        // epochs upload only the params. The instance path keeps
+        // Algorithm 1's per-epoch reshuffle (batch membership there is
+        // ephemeral — nothing is uploaded).
+        if let GradBackend::Serverless(offload) = &self.backend {
+            let batches = batcher.epoch_batches(&self.partition, 0);
+            if batches.is_empty() {
+                return Err(self.no_batch_error());
+            }
+            offload.upload_batches(&batches)?;
+        }
+
         for epoch in 1..=self.config.epochs as u64 {
             // ---- 1. per-batch gradients + average ---------------------
-            let batches = batcher.epoch_batches(&self.partition, epoch as usize);
-            if batches.is_empty() {
-                return Err(Error::Data(format!(
-                    "peer {}: partition of {} samples yields no batch of {}",
-                    self.rank,
-                    self.partition.len(),
-                    self.config.batch_size
-                )));
-            }
+            // (instance path) materialize this epoch's reshuffled
+            // batches outside the timed compute stage
+            let local_batches = match &self.backend {
+                GradBackend::Local { .. } => {
+                    let b = batcher.epoch_batches(&self.partition, epoch as usize);
+                    if b.is_empty() {
+                        return Err(self.no_batch_error());
+                    }
+                    Some(b)
+                }
+                GradBackend::Serverless(_) => None,
+            };
             let t = StageTimer::start(Stage::ComputeGradients);
             let (epoch_loss, my_grad) = match &self.backend {
                 GradBackend::Local { pallas } => {
+                    let batches = local_batches.as_deref().unwrap_or_default();
                     // streaming mean: one running sum, O(params) memory
                     // no matter how many batches the partition yields
                     let mut acc = GradAccumulator::new();
                     let mut loss_sum = 0f64;
-                    for b in &batches {
+                    for b in batches {
                         let out = self.runtime.grad(b.size, &self.params, &b.x, &b.y, *pallas)?;
                         loss_sum += out.loss as f64;
                         acc.add(&out.grads)?;
@@ -194,7 +221,7 @@ impl Peer {
                     ((loss_sum / batches.len() as f64) as f32, acc.mean()?)
                 }
                 GradBackend::Serverless(offload) => {
-                    let out = offload.compute_epoch(epoch as usize, &self.params, &batches)?;
+                    let out = offload.compute_epoch(epoch as usize, &self.params)?;
                     report.lambda_cost_usd += out.cost_usd;
                     report.lambda_invocations += out.invocations;
                     report.lambda_measured_wall += out.measured_wall;

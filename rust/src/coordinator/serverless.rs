@@ -3,29 +3,39 @@
 //! functions through a dynamically-generated Step Functions Map state.
 //!
 //! Faithful to the paper's dataflow:
-//! 1. the peer uploads its (pre-processed, batched) data to S3 and the
-//!    current model parameters alongside;
+//! 1. the peer uploads its pre-processed, **pre-batched** data partition
+//!    to S3 *once, before training* ([`ServerlessOffload::upload_batches`]);
+//!    every epoch re-reads the same batch objects, so a steady-state
+//!    epoch uploads exactly one object — the current params;
 //! 2. a state machine is generated *from the batch count* — one Map
 //!    branch per batch;
-//! 3. each Lambda pulls its batch + params from S3, computes the
-//!    gradient with the AOT PJRT executable (the same artifact the
+//! 3. each Lambda pulls its batch + params from S3 (the params decode is
+//!    memoized in a [`DecodedCache`], so N branches decode once), computes
+//!    the gradient with the AOT PJRT executable (the same artifact the
 //!    instance path runs), parks the gradient in S3 and returns its
 //!    UUID + loss;
 //! 4. the peer collects and averages the per-batch gradients.
 //!
+//! Per-epoch scratch (the params object, the parked gradients) is tagged
+//! with the epoch's **generation** and reclaimed by a generation-scoped
+//! sweep after the fan-out — success or failure — while the persistent
+//! batch objects survive for the next epoch. The generation rides inside
+//! every branch payload, doubling as the param-version tag cross-epoch
+//! pipelining will key on.
+//!
 //! Two dispatch modes ([`OffloadMode`]):
 //!
-//! - **staged** — upload everything, execute the Map state, then
-//!   collect (the PR-1 shape; the modeled wall's reference
+//! - **staged** — build every branch payload, execute the Map state,
+//!   then collect (the PR-1 shape; the modeled wall's reference
 //!   implementation);
 //! - **pipelined** — each batch's branch is submitted through the
-//!   cluster-wide [`BranchScheduler`] the moment its upload lands, and
+//!   cluster-wide [`BranchScheduler`] as soon as it is built, and
 //!   gradients stream into the accumulator (in branch order, so the
-//!   math is bit-identical) while later batches are still uploading.
-//!   The *modeled* wall/billed/cost are byte-identical to the staged
-//!   path; only the *measured* wall shrinks with the overlap.
+//!   math is bit-identical) while later branches dispatch. The *modeled*
+//!   wall/billed/cost are byte-identical to the staged path; only the
+//!   *measured* wall shrinks with the overlap.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::gradient::GradAccumulator;
@@ -37,7 +47,7 @@ use crate::faas::{
     StateMachine,
 };
 use crate::runtime::ModelRuntime;
-use crate::store::{ObjectRef, ObjectStore};
+use crate::store::{DecodedCache, ObjectRef, ObjectStore};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use crate::util::{Bytes, Json};
 
@@ -100,6 +110,16 @@ fn ref_from_json(j: &Json) -> Result<ObjectRef> {
     })
 }
 
+/// Build one branch request: cached batch ref + this epoch's params ref
+/// + the generation tag the handler scopes its scratch writes to.
+fn branch_payload(params_ref: &ObjectRef, batch_ref: &ObjectRef, generation: u64) -> Bytes {
+    let mut req = Json::obj();
+    req.set("params", ref_to_json(params_ref))
+        .set("batch", ref_to_json(batch_ref))
+        .set("gen", generation);
+    Bytes::from(req.to_string().into_bytes())
+}
+
 /// Parse one gradient-Lambda response: `{"loss": <f64>, "grad": <ref>}`.
 /// A non-numeric loss is a handler bug and is surfaced as an error —
 /// folding `NaN` into the epoch mean would silently poison every
@@ -121,11 +141,17 @@ pub struct ServerlessOffload {
     store: Arc<ObjectStore>,
     runtime: Arc<ModelRuntime>,
     scheduler: Arc<BranchScheduler>,
+    decode_cache: Arc<DecodedCache>,
     function: String,
     bucket: String,
     peer: usize,
     concurrency: usize,
     mode: OffloadMode,
+    sweep_scratch: bool,
+    /// Epoch-persistent batch objects, uploaded once by
+    /// [`Self::upload_batches`] and referenced by every epoch's branch
+    /// payloads thereafter.
+    batch_refs: Mutex<Vec<ObjectRef>>,
 }
 
 /// Result of one serverless epoch fan-out.
@@ -139,7 +165,7 @@ pub struct OffloadResult {
     /// under the deterministic greedy schedule).
     pub wall: Duration,
     /// Measured wall time: the Map dispatch alone in staged mode, the
-    /// whole upload/invoke/collect pipeline in pipelined mode.
+    /// whole submit/invoke/collect pipeline in pipelined mode.
     pub measured_wall: Duration,
     /// Billed lambda-seconds.
     pub billed: Duration,
@@ -152,35 +178,46 @@ impl ServerlessOffload {
     /// Register the gradient Lambda for `peer_rank` and return the
     /// offloader. `memory_mb` sizes the function (paper Table II rule);
     /// `concurrency` becomes the peer's admission cap on the cluster
-    /// scheduler (and the Map concurrency in staged mode).
+    /// scheduler (and the Map concurrency in staged mode);
+    /// `decode_cache` memoizes the params decode across branches;
+    /// `sweep_scratch = false` keeps per-epoch scratch alive (debugging
+    /// aid — the store then grows with the epoch count).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         platform: Arc<FaasPlatform>,
         store: Arc<ObjectStore>,
         runtime: Arc<ModelRuntime>,
         scheduler: Arc<BranchScheduler>,
+        decode_cache: Arc<DecodedCache>,
         peer_rank: usize,
         memory_mb: u32,
         concurrency: usize,
         mode: OffloadMode,
+        sweep_scratch: bool,
     ) -> Result<Self> {
         let function = format!("grad-{}-peer{}", runtime.entry.key, peer_rank);
         let bucket = crate::store::peer_bucket(peer_rank);
         store.create_bucket(&bucket);
         scheduler.register_peer(peer_rank, concurrency);
 
-        // The Lambda handler: parse refs, pull params + batch from S3,
-        // run the AOT grad executable, park the gradient in S3.
+        // The Lambda handler: parse refs, pull params (via the decoded
+        // cache) + batch from S3, run the AOT grad executable, park the
+        // gradient in S3 under the request's generation tag.
         let h_store = store.clone();
         let h_runtime = runtime.clone();
         let h_bucket = bucket.clone();
+        let h_cache = decode_cache.clone();
         let handler: Handler = Arc::new(move |payload: &Bytes| {
             let req = Json::parse(
                 std::str::from_utf8(payload).map_err(|e| Error::Faas(e.to_string()))?,
             )?;
             let params_ref = ref_from_json(req.req("params")?)?;
             let batch_ref = ref_from_json(req.req("batch")?)?;
-            let params = bytes_to_f32s(&h_store.get_ref(&params_ref)?);
+            let generation = req
+                .req("gen")?
+                .as_u64()
+                .ok_or_else(|| Error::Faas("branch request: \"gen\" is not a number".into()))?;
+            let params = h_cache.get_or_decode(&params_ref, &h_store)?;
             let batch = unpack_batch(&h_store.get_ref(&batch_ref)?)?;
             let out = h_runtime.grad(batch.size, &params, &batch.x, &batch.y, true)?;
             // a real Lambda has its own environment: the time this
@@ -188,8 +225,11 @@ impl ServerlessOffload {
             // and must not be billed (the handler's own work — S3 I/O,
             // decode, execution — stays billed)
             crate::faas::report_unbilled(out.queue_wait);
-            let grad_ref =
-                h_store.put_new(&h_bucket, Bytes::from(f32s_to_bytes(&out.grads)))?;
+            let grad_ref = h_store.put_new_gen(
+                &h_bucket,
+                Bytes::from(f32s_to_bytes(&out.grads)),
+                generation,
+            )?;
             let mut resp = Json::obj();
             resp.set("loss", out.loss as f64)
                 .set("grad", ref_to_json(&grad_ref));
@@ -201,11 +241,14 @@ impl ServerlessOffload {
             store,
             runtime,
             scheduler,
+            decode_cache,
             function,
             bucket,
             peer: peer_rank,
             concurrency,
             mode,
+            sweep_scratch,
+            batch_refs: Mutex::new(Vec::new()),
         })
     }
 
@@ -217,14 +260,17 @@ impl ServerlessOffload {
         self.mode
     }
 
-    /// Run one epoch's batches through the dynamically-generated state
-    /// machine and average the gradients.
-    pub fn compute_epoch(
-        &self,
-        epoch: usize,
-        params: &[f32],
-        batches: &[Batch],
-    ) -> Result<OffloadResult> {
+    /// Batch objects currently uploaded (0 before [`Self::upload_batches`]).
+    pub fn num_batches(&self) -> usize {
+        self.batch_refs.lock().unwrap().len()
+    }
+
+    /// Pack and upload the peer's pre-batched partition *once*, before
+    /// training (paper §III-B). The refs persist across epochs; a
+    /// steady-state epoch then uploads only the params object. Calling
+    /// this twice is a contract violation, not an idempotent refresh —
+    /// the batch objects are immutable for the life of the run.
+    pub fn upload_batches(&self, batches: &[Batch]) -> Result<usize> {
         if batches.is_empty() {
             return Err(Error::Faas("no batches to offload".into()));
         }
@@ -232,32 +278,59 @@ impl ServerlessOffload {
             let (h, w, c) = self.runtime.input_shape();
             h * w * c
         };
-        // everything this epoch writes — params, packed batches, parked
-        // gradients — lives in this peer's scratch bucket, so whatever
-        // happens below (success, branch failure, malformed handler
-        // output) the bucket sweep keeps the store bounded
-        let outcome = match self.mode {
-            OffloadMode::Staged => self.fan_out_epoch_staged(epoch, params, batches, elems),
-            OffloadMode::Pipelined => self.fan_out_epoch_pipelined(params, batches, elems),
-        };
-        self.store.clear_bucket(&self.bucket);
-        outcome
+        let mut refs = self.batch_refs.lock().unwrap();
+        if !refs.is_empty() {
+            return Err(Error::Faas(format!(
+                "peer {}: batch objects already uploaded ({})",
+                self.peer,
+                refs.len()
+            )));
+        }
+        for batch in batches {
+            refs.push(
+                self.store
+                    .put_new(&self.bucket, Bytes::from(pack_batch(batch, elems)))?,
+            );
+        }
+        Ok(refs.len())
     }
 
-    /// Encode one batch, upload it, and build the branch payload.
-    fn upload_batch(
-        &self,
-        params_ref: &ObjectRef,
-        batch: &Batch,
-        elems: usize,
-    ) -> Result<Bytes> {
-        let batch_ref = self
-            .store
-            .put_new(&self.bucket, Bytes::from(pack_batch(batch, elems)))?;
-        let mut req = Json::obj();
-        req.set("params", ref_to_json(params_ref))
-            .set("batch", ref_to_json(&batch_ref));
-        Ok(Bytes::from(req.to_string().into_bytes()))
+    /// Run one epoch's batches through the dynamically-generated state
+    /// machine and average the gradients. Uploads exactly one object —
+    /// the params, tagged with this epoch's generation — and sweeps that
+    /// generation (params + parked gradients) on every exit path, so the
+    /// store stays bounded while the batch objects persist.
+    pub fn compute_epoch(&self, epoch: usize, params: &[f32]) -> Result<OffloadResult> {
+        let batch_refs = self.batch_refs.lock().unwrap().clone();
+        if batch_refs.is_empty() {
+            return Err(Error::Faas(
+                "no batch objects uploaded — call upload_batches first".into(),
+            ));
+        }
+        // the epoch number is the generation (== the param version the
+        // branch payloads advertise); GEN_PERSISTENT is u64::MAX so any
+        // realistic epoch index is a valid scratch generation
+        let generation = epoch as u64;
+        let params_ref = self.store.put_new_gen(
+            &self.bucket,
+            Bytes::from(f32s_to_bytes(params)),
+            generation,
+        )?;
+        let outcome = match self.mode {
+            OffloadMode::Staged => {
+                self.fan_out_epoch_staged(epoch, &params_ref, &batch_refs, generation)
+            }
+            OffloadMode::Pipelined => {
+                self.fan_out_epoch_pipelined(&params_ref, &batch_refs, generation)
+            }
+        };
+        if self.sweep_scratch {
+            self.store.sweep_generation(&self.bucket, generation);
+        }
+        // the params key is never read again (next epoch gets a fresh
+        // key), so its cache entry is dead weight either way
+        self.decode_cache.invalidate(&params_ref);
+        outcome
     }
 
     /// Parse a branch response and fold it into the running epoch state.
@@ -272,26 +345,22 @@ impl ServerlessOffload {
         acc.add(&bytes_to_f32s(&self.store.get_ref(&grad_ref)?))
     }
 
-    /// Staged: upload everything, fan out, collect. Scratch objects are
-    /// swept by the caller ([`Self::compute_epoch`]) on every exit path.
+    /// Staged: build every payload, fan out, collect. Scratch objects
+    /// are swept by the caller ([`Self::compute_epoch`]) on every exit
+    /// path.
     fn fan_out_epoch_staged(
         &self,
         epoch: usize,
-        params: &[f32],
-        batches: &[Batch],
-        elems: usize,
+        params_ref: &ObjectRef,
+        batch_refs: &[ObjectRef],
+        generation: u64,
     ) -> Result<OffloadResult> {
-        // 1. upload params once per epoch
-        let params_ref = self
-            .store
-            .put_new(&self.bucket, Bytes::from(f32s_to_bytes(params)))?;
-        // 2. upload batches + build Map payloads
-        let mut items = Vec::with_capacity(batches.len());
-        for batch in batches {
-            items.push(self.upload_batch(&params_ref, batch, elems)?);
-        }
-        // 3. dynamic state machine: one branch per batch, dispatched
-        //    across the shared worker pool
+        let items: Vec<Bytes> = batch_refs
+            .iter()
+            .map(|r| branch_payload(params_ref, r, generation))
+            .collect();
+        // dynamic state machine: one branch per batch, dispatched
+        // across the shared worker pool
         let sm = StateMachine::parallel_batches(
             format!("{}-epoch{epoch}", self.function),
             &self.function,
@@ -300,8 +369,8 @@ impl ServerlessOffload {
             self.concurrency,
         );
         let report = sm.execute_with(&self.platform, self.scheduler.executor())?;
-        // 4. collect + average (streaming: one running sum instead of
-        //    materializing every per-batch gradient)
+        // collect + average (streaming: one running sum instead of
+        // materializing every per-batch gradient)
         let outputs = report
             .outputs
             .first()
@@ -324,36 +393,32 @@ impl ServerlessOffload {
         })
     }
 
-    /// Pipelined: every batch's branch is admitted to the cluster
-    /// scheduler the moment its upload lands, and landed gradients fold
-    /// into the accumulator (in branch order — bit-identical math)
-    /// while later batches are still uploading. Modeled accounting is
+    /// Pipelined: every branch is admitted to the cluster scheduler as
+    /// soon as its payload is built, and landed gradients fold into the
+    /// accumulator (in branch order — bit-identical math) while later
+    /// branches are still dispatching. Modeled accounting is
     /// byte-identical to the staged path; the measured wall shows the
-    /// real upload/invoke/collect overlap.
+    /// real submit/invoke/collect overlap.
     fn fan_out_epoch_pipelined(
         &self,
-        params: &[f32],
-        batches: &[Batch],
-        elems: usize,
+        params_ref: &ObjectRef,
+        batch_refs: &[ObjectRef],
+        generation: u64,
     ) -> Result<OffloadResult> {
-        let params_ref = self
-            .store
-            .put_new(&self.bucket, Bytes::from(f32s_to_bytes(params)))?;
         let mut pipe = PipelinedMap::new(
             self.scheduler.clone(),
             self.platform.clone(),
             self.peer,
             &self.function,
-            batches.len(),
+            batch_refs.len(),
             self.concurrency,
             RetryPolicy::default(),
         )?;
         let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
-        for batch in batches {
-            let payload = self.upload_batch(&params_ref, batch, elems)?;
-            pipe.submit(payload, None);
-            // drain whatever already landed: collection overlaps upload
+        for batch_ref in batch_refs {
+            pipe.submit(branch_payload(params_ref, batch_ref, generation), None);
+            // drain whatever already landed: collection overlaps dispatch
             while let Some((_, out)) = pipe.poll_output() {
                 self.fold_branch(&out, &mut acc, &mut loss_sum)?;
             }
@@ -363,7 +428,7 @@ impl ServerlessOffload {
         }
         let report = pipe.finish()?;
         Ok(OffloadResult {
-            loss: (loss_sum / batches.len() as f64) as f32,
+            loss: (loss_sum / batch_refs.len() as f64) as f32,
             grads: acc.mean()?,
             wall: report.wall,
             measured_wall: report.measured_wall,
@@ -404,6 +469,17 @@ mod tests {
         let r = ObjectRef { bucket: "b".into(), key: "k-1".into(), size: 42 };
         let back = ref_from_json(&ref_to_json(&r)).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn branch_payload_carries_generation() {
+        let p = ObjectRef { bucket: "b".into(), key: "params".into(), size: 8 };
+        let b = ObjectRef { bucket: "b".into(), key: "batch".into(), size: 16 };
+        let payload = branch_payload(&p, &b, 7);
+        let req = Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
+        assert_eq!(req.req("gen").unwrap().as_u64(), Some(7));
+        assert_eq!(ref_from_json(req.req("params").unwrap()).unwrap(), p);
+        assert_eq!(ref_from_json(req.req("batch").unwrap()).unwrap(), b);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::faas::{BranchScheduler, Executor, FaasPlatform, SchedulerStats};
 use crate::metrics::{MetricsRegistry, Stage, StageSummary};
 use crate::perfmodel;
 use crate::runtime::{Engine, ModelRuntime};
-use crate::store::ObjectStore;
+use crate::store::{peer_bucket, DecodedCache, ObjectStore, GEN_PERSISTENT};
 
 /// Everything a finished run reports.
 #[derive(Debug)]
@@ -57,6 +57,15 @@ pub struct TrainReport {
 impl TrainReport {
     pub fn epochs_run(&self) -> usize {
         self.peers.iter().map(|p| p.epochs_run).max().unwrap_or(0)
+    }
+
+    /// Look up a named utilization counter (`sched.*`, `exec.*`,
+    /// `store.*`).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
     }
 
     pub fn final_val_loss(&self) -> Option<f32> {
@@ -136,6 +145,9 @@ impl Cluster {
         // peers, per-peer in-flight caps)
         let executor = Arc::new(Executor::new(cfg.exec_threads));
         let scheduler = BranchScheduler::new(executor.clone(), cfg.sched_fair);
+        // shared across every peer's handlers: the params object each
+        // epoch's branches read is decoded once, not once per branch
+        let decode_cache = Arc::new(DecodedCache::new(cfg.decode_cache));
         let metrics = Arc::new(MetricsRegistry::new());
         let runtime = Arc::new(ModelRuntime::load(
             self.engine.clone(),
@@ -191,10 +203,12 @@ impl Cluster {
                         store.clone(),
                         runtime.clone(),
                         scheduler.clone(),
+                        decode_cache.clone(),
                         rank,
                         mem,
                         cfg.lambda_concurrency,
                         cfg.offload_mode,
+                        cfg.sweep_scratch,
                     )?)
                 }
             };
@@ -284,6 +298,14 @@ impl Cluster {
         let fstats = platform.stats();
         let lambda_measured_wall = peers.iter().map(|p| p.lambda_measured_wall).sum();
 
+        // ---- store teardown ----------------------------------------------
+        // training is over: drop the epoch-persistent batch objects so
+        // `store_objects` measures per-epoch sweep hygiene only — any
+        // scratch generation a sweep missed stays visible
+        for rank in 0..cfg.peers {
+            store.sweep_generation(&peer_bucket(rank), GEN_PERSISTENT);
+        }
+
         // ---- scheduler / executor utilization ----------------------------
         let sched = scheduler.stats();
         metrics.set_counter("sched.branches_submitted", sched.submitted);
@@ -295,6 +317,12 @@ impl Cluster {
         for &(rank, served) in &sched.per_peer_served {
             metrics.set_counter(&format!("sched.peer{rank}.served"), served);
         }
+        let (store_puts, store_gets, store_bytes) = store.stats();
+        metrics.set_counter("store.puts", store_puts);
+        metrics.set_counter("store.gets", store_gets);
+        metrics.set_counter("store.bytes_in", store_bytes);
+        metrics.set_counter("store.decode_hits", decode_cache.hits());
+        metrics.set_counter("store.decode_misses", decode_cache.misses());
 
         Ok(TrainReport {
             config: cfg.clone(),

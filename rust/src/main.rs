@@ -49,6 +49,13 @@ TRAIN OPTIONS:
     --sched-fair B           true | false (default true): round-robin
                              branch dispatch across peers vs the greedy
                              lowest-rank-first baseline
+    --decode-cache N         decoded-object cache entries (params
+                             decoded once per epoch instead of once per
+                             branch; 0 disables, default 16)
+    --sweep-scratch B        true | false (default true): reclaim each
+                             epoch's store scratch (params, parked
+                             gradients) by generation after the fan-out;
+                             persistent batch objects always survive
     --exec-threads N         FaaS worker-pool threads (0 = machine size);
                              physical fan-out concurrency only — the
                              modeled accounting does not move with N
@@ -169,6 +176,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_bool(args, "sched-fair")? {
         cfg.sched_fair = v;
     }
+    if let Some(v) = parse_num(args, "decode-cache")? {
+        cfg.decode_cache = v;
+    }
+    if let Some(v) = parse_bool(args, "sweep-scratch")? {
+        cfg.sweep_scratch = v;
+    }
     if let Some(v) = parse_num(args, "exec-threads")? {
         cfg.exec_threads = v;
     }
@@ -251,6 +264,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         for &(rank, served) in &s.per_peer_served {
             println!("  peer {rank}: {served} branches served");
         }
+        let c = |name| report.counter(name).unwrap_or(0);
+        println!(
+            "store: {} puts / {} gets / {} bytes in; decode cache: {} hits / {} misses; \
+             {} objects left",
+            c("store.puts"),
+            c("store.gets"),
+            c("store.bytes_in"),
+            c("store.decode_hits"),
+            c("store.decode_misses"),
+            report.store_objects,
+        );
     }
     println!("wall: {:?}", report.wall);
     Ok(())

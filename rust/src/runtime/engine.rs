@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -39,6 +40,11 @@ pub struct ExecTiming {
     pub queue_wait: Duration,
 }
 
+/// One artifact's compile slot: the inner mutex is held across the
+/// compile itself, so concurrent loaders of the same key block on the
+/// *slot* (not the whole cache) and exactly one of them compiles.
+type CompileSlot = Arc<Mutex<Option<Arc<Executable>>>>;
+
 /// Process-wide PJRT client + compiled-executable cache.
 ///
 /// Concurrent executions are bounded by a configurable semaphore
@@ -49,10 +55,11 @@ pub struct ExecTiming {
 /// paper tables.
 pub struct Engine {
     client: Client,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    cache: Mutex<HashMap<String, CompileSlot>>,
     exec_sem: Semaphore,
     exec_slots: usize,
     compile_ms: Mutex<HashMap<String, u64>>,
+    compiles: AtomicU64,
 }
 
 impl Engine {
@@ -75,6 +82,7 @@ impl Engine {
             exec_sem: Semaphore::new(slots),
             exec_slots: slots,
             compile_ms: Mutex::new(HashMap::new()),
+            compiles: AtomicU64::new(0),
         })
     }
 
@@ -88,10 +96,27 @@ impl Engine {
     }
 
     /// Load + compile an HLO text file (cached by absolute path).
+    ///
+    /// Concurrency contract: each artifact compiles **exactly once**.
+    /// Two threads missing the cache for the same key used to both
+    /// compile it (wasted seconds of XLA work, and the second insert
+    /// silently dropped the first executable); now a per-key slot is
+    /// claimed under the cache lock and the compile happens under the
+    /// slot's own lock, so racing loaders block on the slot and reuse
+    /// the winner's executable. A failed load leaves the slot empty for
+    /// a later retry.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
         let path = path.as_ref();
         let key = path.to_string_lossy().to_string();
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+        let slot: CompileSlot = self
+            .cache
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_default()
+            .clone();
+        let mut compiled = slot.lock().unwrap();
+        if let Some(exe) = &*compiled {
             return Ok(exe.clone());
         }
         if !path.exists() {
@@ -104,11 +129,12 @@ impl Engine {
         let proto = xla::HloModuleProto::from_text_file(path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Arc::new(Executable(self.client.0.compile(&comp)?));
+        self.compiles.fetch_add(1, Ordering::Relaxed);
         self.compile_ms
             .lock()
             .unwrap()
-            .insert(key.clone(), t0.elapsed().as_millis() as u64);
-        self.cache.lock().unwrap().insert(key, exe.clone());
+            .insert(key, t0.elapsed().as_millis() as u64);
+        *compiled = Some(exe.clone());
         Ok(exe)
     }
 
@@ -139,7 +165,19 @@ impl Engine {
 
     /// Total number of compiled executables resident.
     pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|slot| slot.lock().unwrap().is_some())
+            .count()
+    }
+
+    /// Number of XLA compiles actually performed (the compile-once
+    /// contract: stays equal to the distinct artifact count no matter
+    /// how many threads race on [`Self::load`]).
+    pub fn compile_count(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
     }
 
     /// Compile-time log (path -> ms), for EXPERIMENTS.md.

@@ -4,14 +4,34 @@
 //! dedicated bucket of pre-batched objects the Lambda functions read;
 //! (b) gradients above Amazon MQ's 100 MB message cap are stored here and
 //! referenced by UUID in the queue message (§III-B.3).
+//!
+//! Objects carry a **generation** tag: [`GEN_PERSISTENT`] marks run-long
+//! objects (the pre-batched dataset partitions, uploaded once before
+//! training), any other value scopes the object to one epoch's scratch
+//! (params, parked gradients). [`ObjectStore::sweep_generation`] reclaims
+//! exactly one generation, so the per-epoch sweep cannot eat the
+//! persistent batch objects — and the tag doubles as the param-version
+//! id for cross-epoch pipelining.
+//!
+//! [`DecodedCache`] sits next to the store and memoizes the
+//! object-bytes → `Vec<f32>` decode of hot objects (the params object
+//! every branch of an epoch reads), with a per-key in-flight guard so N
+//! concurrent branches decode once, not N times.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
+use crate::util::bytes::bytes_to_f32s;
 use crate::util::Bytes;
 use std::sync::RwLock;
 
 use crate::error::{Error, Result};
+
+/// Generation tag for objects that live for the whole run (the paper's
+/// pre-batched dataset partitions). Never matched by an epoch sweep
+/// unless explicitly requested at teardown.
+pub const GEN_PERSISTENT: u64 = u64::MAX;
 
 /// A pointer to a stored object, sendable through the broker in place of
 /// an oversized payload.
@@ -75,6 +95,15 @@ impl ObjectRef {
         let size = data
             .get(i..i + 8)
             .ok_or_else(|| Error::Store("truncated ObjectRef".into()))?;
+        i += 8;
+        // a wire message is exactly the layout — trailing bytes mean a
+        // corrupted or smuggled frame, not padding
+        if data.len() != i {
+            return Err(Error::Store(format!(
+                "ObjectRef wire message has {} trailing bytes",
+                data.len() - i
+            )));
+        }
         Ok(Self {
             bucket,
             key,
@@ -83,10 +112,16 @@ impl ObjectRef {
     }
 }
 
-/// In-process S3: buckets of key→bytes with monotonic usage stats.
+/// One stored object: payload bytes plus its generation tag.
+struct Object {
+    data: Bytes,
+    generation: u64,
+}
+
+/// In-process S3: buckets of key→object with monotonic usage stats.
 #[derive(Default)]
 pub struct ObjectStore {
-    buckets: RwLock<HashMap<String, HashMap<String, Bytes>>>,
+    buckets: RwLock<HashMap<String, HashMap<String, Object>>>,
     puts: AtomicU64,
     gets: AtomicU64,
     bytes_in: AtomicU64,
@@ -102,23 +137,40 @@ impl ObjectStore {
         self.buckets.write().unwrap().entry(bucket.to_string()).or_default();
     }
 
+    /// Store a run-long (persistent-generation) object.
     pub fn put(&self, bucket: &str, key: &str, data: Bytes) -> Result<ObjectRef> {
+        self.put_gen(bucket, key, data, GEN_PERSISTENT)
+    }
+
+    /// Store an object tagged with `generation`.
+    pub fn put_gen(
+        &self,
+        bucket: &str,
+        key: &str,
+        data: Bytes,
+        generation: u64,
+    ) -> Result<ObjectRef> {
         let size = data.len();
         let mut buckets = self.buckets.write().unwrap();
         buckets
             .entry(bucket.to_string())
             .or_default()
-            .insert(key.to_string(), data);
+            .insert(key.to_string(), Object { data, generation });
         self.puts.fetch_add(1, Ordering::Relaxed);
         self.bytes_in.fetch_add(size as u64, Ordering::Relaxed);
         Ok(ObjectRef { bucket: bucket.to_string(), key: key.to_string(), size })
     }
 
     /// Store under a freshly generated UUID-ish key (the paper's
-    /// large-gradient path).
+    /// large-gradient path). Persistent generation.
     pub fn put_new(&self, bucket: &str, data: Bytes) -> Result<ObjectRef> {
+        self.put_new_gen(bucket, data, GEN_PERSISTENT)
+    }
+
+    /// Store under a fresh key, tagged with `generation` (epoch scratch).
+    pub fn put_new_gen(&self, bucket: &str, data: Bytes, generation: u64) -> Result<ObjectRef> {
         let key = self.new_key();
-        self.put(bucket, &key, data)
+        self.put_gen(bucket, &key, data, generation)
     }
 
     pub fn get(&self, bucket: &str, key: &str) -> Result<Bytes> {
@@ -126,12 +178,20 @@ impl ObjectStore {
         self.buckets
             .read().unwrap()
             .get(bucket)
-            .and_then(|b| b.get(key).cloned())
+            .and_then(|b| b.get(key).map(|o| o.data.clone()))
             .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))
     }
 
     pub fn get_ref(&self, r: &ObjectRef) -> Result<Bytes> {
         self.get(&r.bucket, &r.key)
+    }
+
+    /// The generation an object was stored with (None if missing).
+    pub fn generation_of(&self, r: &ObjectRef) -> Option<u64> {
+        self.buckets
+            .read().unwrap()
+            .get(&r.bucket)
+            .and_then(|b| b.get(&r.key).map(|o| o.generation))
     }
 
     pub fn delete(&self, bucket: &str, key: &str) -> Result<()> {
@@ -159,7 +219,7 @@ impl ObjectStore {
         self.buckets
             .read().unwrap()
             .get(bucket)
-            .map(|b| b.values().map(|v| v.len()).sum())
+            .map(|b| b.values().map(|o| o.data.len()).sum())
             .unwrap_or(0)
     }
 
@@ -178,10 +238,25 @@ impl ObjectStore {
         self.buckets.read().unwrap().values().map(|b| b.len()).sum()
     }
 
-    /// Delete every object in `bucket` (the bucket itself survives);
-    /// returns how many objects were removed. Used as the per-epoch
-    /// sweep of serverless scratch uploads — it must run on error
-    /// paths too, where individual refs may be unknown.
+    /// Delete every object in `bucket` tagged with `generation`; returns
+    /// how many were removed. The per-epoch sweep: reclaims one epoch's
+    /// scratch (params, parked gradients) while the epoch-persistent
+    /// batch objects survive. Runs on error paths too, where individual
+    /// refs may be unknown. Pass [`GEN_PERSISTENT`] only at teardown.
+    pub fn sweep_generation(&self, bucket: &str, generation: u64) -> usize {
+        self.buckets
+            .write().unwrap()
+            .get_mut(bucket)
+            .map(|b| {
+                let before = b.len();
+                b.retain(|_, o| o.generation != generation);
+                before - b.len()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Delete every object in `bucket` regardless of generation (the
+    /// bucket itself survives); returns how many objects were removed.
     pub fn clear_bucket(&self, bucket: &str) -> usize {
         self.buckets
             .write().unwrap()
@@ -228,6 +303,111 @@ fn splitmix64(mut x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One cache entry. The value mutex is held across the decode, so every
+/// concurrent reader of a missing key blocks on the *entry* (not the
+/// whole cache) and exactly one of them performs the decode.
+struct DecodeSlot {
+    value: Mutex<Option<Arc<Vec<f32>>>>,
+}
+
+struct DecodedCacheState {
+    slots: HashMap<(String, String), Arc<DecodeSlot>>,
+    /// Insertion order for FIFO eviction (epoch params objects arrive
+    /// one per epoch; old epochs' entries age out naturally).
+    order: VecDeque<(String, String)>,
+}
+
+/// Memoizes object-bytes → `Vec<f32>` decodes, keyed by (bucket, key).
+///
+/// The serverless gradient handler reads the *same* params object in
+/// every branch of an epoch; without this cache each of the N branches
+/// pays a store get plus a full f32 decode. With it, an epoch costs one
+/// miss and N-1 hits — guaranteed even under concurrent branches by the
+/// per-key in-flight guard. `capacity` bounds live entries (FIFO
+/// eviction); 0 disables caching entirely.
+pub struct DecodedCache {
+    capacity: usize,
+    state: Mutex<DecodedCacheState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DecodedCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            state: Mutex::new(DecodedCacheState {
+                slots: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The decoded f32 view of `r`, from cache or via one store
+    /// get + decode. Failures (missing object) leave the entry empty so
+    /// a later call can retry.
+    pub fn get_or_decode(&self, r: &ObjectRef, store: &ObjectStore) -> Result<Arc<Vec<f32>>> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::new(bytes_to_f32s(&store.get_ref(r)?)));
+        }
+        let slot = {
+            let mut st = self.state.lock().unwrap();
+            let key = (r.bucket.clone(), r.key.clone());
+            match st.slots.get(&key) {
+                Some(s) => s.clone(),
+                None => {
+                    while st.order.len() >= self.capacity {
+                        let old = st.order.pop_front().unwrap();
+                        st.slots.remove(&old);
+                    }
+                    let s = Arc::new(DecodeSlot { value: Mutex::new(None) });
+                    st.slots.insert(key.clone(), s.clone());
+                    st.order.push_back(key);
+                    s
+                }
+            }
+        };
+        let mut value = slot.value.lock().unwrap();
+        if let Some(v) = &*value {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let decoded = Arc::new(bytes_to_f32s(&store.get_ref(r)?));
+        *value = Some(decoded.clone());
+        Ok(decoded)
+    }
+
+    /// Drop `r`'s entry (the object was swept; the key is never reused).
+    pub fn invalidate(&self, r: &ObjectRef) {
+        let mut st = self.state.lock().unwrap();
+        let key = (r.bucket.clone(), r.key.clone());
+        if st.slots.remove(&key).is_some() {
+            st.order.retain(|k| k != &key);
+        }
+    }
+
+    /// Live entries (filled or in flight).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
 /// Conventional bucket name for peer `r`'s batch storage.
 pub fn peer_bucket(r: usize) -> String {
     format!("peer-{r}-batches")
@@ -239,6 +419,7 @@ pub const GRADIENT_BUCKET: &str = "gradient-overflow";
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bytes::f32s_to_bytes;
 
     #[test]
     fn put_get_roundtrip() {
@@ -316,6 +497,28 @@ mod tests {
     }
 
     #[test]
+    fn generation_sweep_spares_persistent_and_other_generations() {
+        let s = ObjectStore::new();
+        let batch = s.put_new("b", Bytes::from_static(b"batch")).unwrap();
+        let params1 = s.put_new_gen("b", Bytes::from_static(b"p1"), 1).unwrap();
+        let grad1 = s.put_new_gen("b", Bytes::from_static(b"g1"), 1).unwrap();
+        let params2 = s.put_new_gen("b", Bytes::from_static(b"p2"), 2).unwrap();
+        assert_eq!(s.generation_of(&batch), Some(GEN_PERSISTENT));
+        assert_eq!(s.generation_of(&params1), Some(1));
+        assert_eq!(s.sweep_generation("b", 1), 2);
+        assert!(s.get_ref(&params1).is_err());
+        assert!(s.get_ref(&grad1).is_err());
+        assert!(s.get_ref(&batch).is_ok(), "persistent object swept");
+        assert!(s.get_ref(&params2).is_ok(), "other generation swept");
+        // sweeping an empty generation / missing bucket is a no-op
+        assert_eq!(s.sweep_generation("b", 1), 0);
+        assert_eq!(s.sweep_generation("missing", 1), 0);
+        // teardown: the persistent generation is itself sweepable
+        assert_eq!(s.sweep_generation("b", GEN_PERSISTENT), 1);
+        assert_eq!(s.object_count("b"), 1); // params2 remains
+    }
+
+    #[test]
     fn object_ref_wire_roundtrip() {
         let r = ObjectRef { bucket: "b".into(), key: "k".into(), size: 9 };
         let back = ObjectRef::from_wire(&r.to_wire()).unwrap();
@@ -328,11 +531,89 @@ mod tests {
     }
 
     #[test]
+    fn object_ref_wire_rejects_trailing_garbage() {
+        // regression: a wire frame longer than its decoded layout used
+        // to parse successfully, silently dropping the tail
+        let r = ObjectRef { bucket: "bk".into(), key: "key-1".into(), size: 7 };
+        let mut wire = r.to_wire();
+        assert!(ObjectRef::from_wire(&wire).is_ok());
+        wire.push(0xAB);
+        let err = ObjectRef::from_wire(&wire).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+        wire.extend_from_slice(b"more");
+        assert!(ObjectRef::from_wire(&wire).is_err());
+    }
+
+    #[test]
     fn overwrite_replaces() {
         let s = ObjectStore::new();
         s.put("b", "k", Bytes::from_static(b"old")).unwrap();
         s.put("b", "k", Bytes::from_static(b"new")).unwrap();
         assert_eq!(&s.get("b", "k").unwrap()[..], b"new");
         assert_eq!(s.list("b").len(), 1);
+    }
+
+    #[test]
+    fn decoded_cache_hits_after_first_decode() {
+        let s = ObjectStore::new();
+        let v = vec![1.0f32, -2.5, 3.25];
+        let r = s.put_new("b", Bytes::from(f32s_to_bytes(&v))).unwrap();
+        let c = DecodedCache::new(4);
+        let gets_before = s.stats().1;
+        assert_eq!(*c.get_or_decode(&r, &s).unwrap(), v);
+        assert_eq!(*c.get_or_decode(&r, &s).unwrap(), v);
+        assert_eq!(*c.get_or_decode(&r, &s).unwrap(), v);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.hits(), 2);
+        // the store was touched exactly once
+        assert_eq!(s.stats().1 - gets_before, 1);
+    }
+
+    #[test]
+    fn decoded_cache_capacity_evicts_fifo() {
+        let s = ObjectStore::new();
+        let refs: Vec<ObjectRef> = (0..3)
+            .map(|i| s.put_new("b", Bytes::from(f32s_to_bytes(&[i as f32]))).unwrap())
+            .collect();
+        let c = DecodedCache::new(2);
+        c.get_or_decode(&refs[0], &s).unwrap();
+        c.get_or_decode(&refs[1], &s).unwrap();
+        assert_eq!(c.len(), 2);
+        c.get_or_decode(&refs[2], &s).unwrap(); // evicts refs[0]
+        assert_eq!(c.len(), 2);
+        c.get_or_decode(&refs[0], &s).unwrap(); // re-decoded
+        assert_eq!(c.misses(), 4);
+        assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn decoded_cache_invalidate_and_disabled_mode() {
+        let s = ObjectStore::new();
+        let r = s.put_new("b", Bytes::from(f32s_to_bytes(&[4.0]))).unwrap();
+        let c = DecodedCache::new(4);
+        c.get_or_decode(&r, &s).unwrap();
+        c.invalidate(&r);
+        assert!(c.is_empty());
+        c.get_or_decode(&r, &s).unwrap();
+        assert_eq!(c.misses(), 2);
+        // capacity 0 = disabled: every call decodes, nothing is retained
+        let off = DecodedCache::new(0);
+        off.get_or_decode(&r, &s).unwrap();
+        off.get_or_decode(&r, &s).unwrap();
+        assert_eq!(off.misses(), 2);
+        assert_eq!(off.hits(), 0);
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn decoded_cache_miss_on_absent_object_can_retry() {
+        let s = ObjectStore::new();
+        let c = DecodedCache::new(4);
+        let r = ObjectRef { bucket: "b".into(), key: "nope".into(), size: 4 };
+        assert!(c.get_or_decode(&r, &s).is_err());
+        // the object appears later under the same key: the empty slot
+        // must not pin the failure
+        s.put("b", "nope", Bytes::from(f32s_to_bytes(&[9.0]))).unwrap();
+        assert_eq!(*c.get_or_decode(&r, &s).unwrap(), vec![9.0]);
     }
 }

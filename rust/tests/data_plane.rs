@@ -1,0 +1,233 @@
+//! The zero-redundancy serverless data plane:
+//!
+//! - store semantics (no PJRT needed): generation-scoped sweeps keep
+//!   persistent batch objects and reclaim epoch scratch, the store stays
+//!   bounded over many generations, and the decoded-object cache decodes
+//!   a hot key exactly once under concurrency;
+//! - cluster acceptance (real PJRT, artifact-gated): steady-state epochs
+//!   perform O(1) store puts for inputs (the params object only) instead
+//!   of O(batches), decode hit/miss counters match branch counts, and
+//!   the `--sweep-scratch` knob behaves as documented.
+//!
+//! The modeled wall/billed/cost invariance across thread counts and
+//! offload modes is pinned at the faas layer by
+//! `rust/tests/pipeline_scheduler.rs`; nothing in the data plane touches
+//! that aggregation.
+
+mod common;
+
+use std::sync::{Arc, Barrier};
+
+use p2pless::config::{Backend, OffloadMode, TrainConfig};
+use p2pless::coordinator::Cluster;
+use p2pless::store::{DecodedCache, ObjectStore, GEN_PERSISTENT};
+use p2pless::util::bytes::f32s_to_bytes;
+use p2pless::util::Bytes;
+
+// ---------------------------------------------------------------- store
+
+#[test]
+fn generation_sweep_keeps_persistent_reclaims_scratch() {
+    let s = ObjectStore::new();
+    // the run-long batch objects
+    let batches: Vec<_> = (0..4)
+        .map(|i| s.put_new("peer-0-batches", Bytes::from(vec![i as u8])).unwrap())
+        .collect();
+    // epoch 1 scratch: params + parked gradients
+    let params = s.put_new_gen("peer-0-batches", Bytes::from_static(b"p1"), 1).unwrap();
+    let grads: Vec<_> = (0..4)
+        .map(|_| s.put_new_gen("peer-0-batches", Bytes::from_static(b"g"), 1).unwrap())
+        .collect();
+    assert_eq!(s.total_objects(), 9);
+    assert_eq!(s.sweep_generation("peer-0-batches", 1), 5);
+    assert_eq!(s.total_objects(), 4);
+    for b in &batches {
+        assert!(s.get_ref(b).is_ok(), "persistent batch object swept");
+        assert_eq!(s.generation_of(b), Some(GEN_PERSISTENT));
+    }
+    assert!(s.get_ref(&params).is_err());
+    for g in &grads {
+        assert!(s.get_ref(g).is_err());
+    }
+}
+
+#[test]
+fn store_stays_bounded_over_many_generations() {
+    let s = ObjectStore::new();
+    let n_batches = 6usize;
+    for i in 0..n_batches {
+        s.put_new("b", Bytes::from(vec![i as u8])).unwrap();
+    }
+    for generation in 1..=200u64 {
+        s.put_new_gen("b", Bytes::from_static(b"params"), generation).unwrap();
+        for _ in 0..n_batches {
+            s.put_new_gen("b", Bytes::from_static(b"grad"), generation).unwrap();
+        }
+        assert_eq!(s.total_objects(), n_batches + 1 + n_batches);
+        assert_eq!(s.sweep_generation("b", generation), 1 + n_batches);
+        assert_eq!(
+            s.total_objects(),
+            n_batches,
+            "generation {generation}: store must hold exactly the persistent objects"
+        );
+    }
+    let (puts, _, _) = s.stats();
+    assert_eq!(puts as usize, n_batches + 200 * (1 + n_batches));
+}
+
+#[test]
+fn decoded_cache_decodes_once_under_concurrency() {
+    let store = Arc::new(ObjectStore::new());
+    let v: Vec<f32> = (0..1024).map(|i| i as f32 * 0.5).collect();
+    let r = store.put_new("b", Bytes::from(f32s_to_bytes(&v))).unwrap();
+    let cache = Arc::new(DecodedCache::new(8));
+
+    const THREADS: usize = 8;
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let store = store.clone();
+            let cache = cache.clone();
+            let r = r.clone();
+            let barrier = barrier.clone();
+            let want = v.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                let got = cache.get_or_decode(&r, &store).unwrap();
+                assert_eq!(*got, want);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // the per-key in-flight guard makes the counts exact, not racy:
+    // one miss, everyone else a hit, one store get total
+    assert_eq!(cache.misses(), 1, "concurrent branches must decode once");
+    assert_eq!(cache.hits(), (THREADS - 1) as u64);
+    assert_eq!(store.stats().1, 1, "one store get for {THREADS} readers");
+
+    // a second "epoch" (fresh params key) costs exactly one more miss
+    let r2 = store.put_new("b", Bytes::from(f32s_to_bytes(&v))).unwrap();
+    for _ in 0..THREADS {
+        cache.get_or_decode(&r2, &store).unwrap();
+    }
+    assert_eq!(cache.misses(), 2);
+    assert_eq!(cache.hits(), (2 * (THREADS - 1)) as u64);
+}
+
+// -------------------------------------------------------------- cluster
+
+fn serverless_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 3,
+        lr: 0.05,
+        train_samples: 2 * 16 * 3, // 3 full batches per peer, no remainder
+        val_samples: 64,
+        backend: Backend::Serverless,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+/// The acceptance bar: with epoch-persistent batch objects, a
+/// steady-state epoch puts exactly one input object (the params) plus
+/// the parked per-batch gradients — the per-epoch batch re-upload is
+/// gone, and the decode cache turns N params reads into one decode.
+#[test]
+fn steady_state_epochs_put_only_params() {
+    require_artifacts!();
+    let cfg = serverless_cfg();
+    let (peers, epochs, batches) = (cfg.peers as u64, cfg.epochs as u64, 3u64);
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let branches = peers * epochs * batches;
+    assert_eq!(rep.lambda_invocations, branches);
+
+    // puts: batch objects once per peer, then per epoch per peer one
+    // params object + one parked gradient per branch. The old plane
+    // paid an extra `batches` puts per peer per epoch.
+    let want_puts = peers * batches + epochs * peers * (1 + batches);
+    assert_eq!(
+        rep.counter("store.puts"),
+        Some(want_puts),
+        "steady-state epochs must upload params only (O(1) input puts)"
+    );
+
+    // decode counters: one miss per (peer, epoch) params object, every
+    // other branch is a hit — exact even under concurrent branches
+    let want_misses = peers * epochs;
+    assert_eq!(rep.counter("store.decode_misses"), Some(want_misses));
+    assert_eq!(rep.counter("store.decode_hits"), Some(branches - want_misses));
+
+    // generation sweeps + teardown leave nothing behind
+    assert_eq!(rep.store_objects, 0);
+}
+
+/// `--sweep-scratch false` keeps every epoch's scratch: the store grows
+/// with the epoch count (the knob exists exactly to make leaks visible).
+#[test]
+fn sweep_scratch_off_accumulates_epoch_scratch() {
+    require_artifacts!();
+    let cfg = TrainConfig { sweep_scratch: false, ..serverless_cfg() };
+    let (peers, epochs, batches) = (cfg.peers, cfg.epochs, 3usize);
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    // teardown removes the persistent batch objects; the unswept
+    // scratch (params + parked gradients per peer per epoch) remains
+    assert_eq!(rep.store_objects, epochs * peers * (1 + batches));
+}
+
+/// Staged and pipelined dispatch consume the same cached batch refs and
+/// fold in the same branch order, so the leader's validation curve must
+/// match between the modes.
+#[test]
+fn staged_and_pipelined_val_curves_match() {
+    require_artifacts!();
+    let run = |mode: OffloadMode| {
+        let cfg = TrainConfig { offload_mode: mode, ..serverless_cfg() };
+        Cluster::with_engine(cfg, common::engine())
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let staged = run(OffloadMode::Staged);
+    let pipelined = run(OffloadMode::Pipelined);
+    assert_eq!(staged.val_curve.len(), pipelined.val_curve.len());
+    for ((e1, l1, a1), (e2, l2, a2)) in staged.val_curve.iter().zip(&pipelined.val_curve) {
+        assert_eq!(e1, e2);
+        assert!((l1 - l2).abs() < 1e-6, "staged {l1} vs pipelined {l2}");
+        assert!((a1 - a2).abs() < 1e-6);
+    }
+    // both paths drove the same number of branches through the platform
+    assert_eq!(staged.lambda_invocations, pipelined.lambda_invocations);
+}
+
+/// Disabling the decode cache changes counters only — the math and the
+/// store's boundedness are untouched.
+#[test]
+fn decode_cache_disabled_still_trains_and_sweeps() {
+    require_artifacts!();
+    let cfg = TrainConfig { decode_cache: 0, epochs: 2, ..serverless_cfg() };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(rep.lambda_invocations > 0);
+    assert_eq!(rep.counter("store.decode_hits"), Some(0));
+    assert_eq!(
+        rep.counter("store.decode_misses"),
+        Some(rep.lambda_invocations),
+        "disabled cache: every branch decodes"
+    );
+    assert_eq!(rep.store_objects, 0);
+    assert!(rep.mean_train_loss_last_epoch().unwrap().is_finite());
+}

@@ -222,8 +222,8 @@ fn unfair_dispatch_starves_higher_ranks() {
     }
     let log = sched.dispatch_log();
     assert_eq!(
-        &log[..PER_PEER],
-        vec![0usize; PER_PEER].as_slice(),
+        log[..PER_PEER],
+        [0usize; PER_PEER],
         "greedy mode must drain peer 0 first: {log:?}"
     );
 }

@@ -143,6 +143,57 @@ fn sgd_step_reduces_loss_on_fixed_batch() {
 }
 
 #[test]
+fn concurrent_loads_compile_once() {
+    require_artifacts!();
+    // regression: two threads missing the executable cache for the same
+    // artifact both compiled it — seconds of duplicated XLA work per
+    // racer, and the loser's executable was silently dropped. The
+    // per-key in-flight guard must collapse the race to one compile.
+    use p2pless::runtime::Engine;
+    use std::sync::{Arc, Barrier};
+
+    // a fresh engine: the shared `common::engine()` may already have
+    // cached this artifact from another test
+    let engine = Arc::new(Engine::new().expect("PJRT CPU client"));
+    let rt = ModelRuntime::load(
+        engine.clone(),
+        &common::artifacts_dir(),
+        "mini_squeezenet_mnist",
+    )
+    .unwrap();
+    let params = rt.init_params().unwrap();
+    let (x, y) = batch(DatasetKind::Mnist, 16, 4);
+
+    const THREADS: usize = 8;
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let rt = Arc::new(rt);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let rt = rt.clone();
+            let barrier = barrier.clone();
+            let (params, x, y) = (params.clone(), x.clone(), y.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                // every thread races Engine::load for the same grad
+                // artifact on a cold cache
+                rt.grad(16, &params, &x, &y, true).unwrap().loss
+            })
+        })
+        .collect();
+    let losses: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // everyone got a working executable for the same (params, batch)
+    for l in &losses {
+        assert!((l - losses[0]).abs() < 1e-5, "{l} vs {}", losses[0]);
+    }
+    assert_eq!(
+        engine.compile_count(),
+        1,
+        "concurrent loaders must share one compile"
+    );
+    assert_eq!(engine.cached_executables(), 1);
+}
+
+#[test]
 fn wrong_shapes_are_rejected() {
     require_artifacts!();
     let rt = ModelRuntime::load(
