@@ -143,6 +143,18 @@ impl Broker {
         )
     }
 
+    /// Total out-of-epoch-order publishes suppressed across every
+    /// LatestOnly queue (see [`QueueStats::stale_drops`]). Zero in a
+    /// healthy run — overlapping epochs make it observable, not normal.
+    pub fn stale_drops(&self) -> u64 {
+        self.queues
+            .lock()
+            .unwrap()
+            .values()
+            .map(|q| q.stats().stale_drops)
+            .sum()
+    }
+
     /// Conventional queue name for peer `r`'s gradient queue.
     pub fn gradient_queue(r: usize) -> String {
         format!("peer.{r}.gradients")

@@ -81,6 +81,11 @@ pub struct QueueStats {
     pub publishes: u64,
     pub drops: u64,
     pub consumes: u64,
+    /// LatestOnly publishes suppressed because a *newer* epoch's message
+    /// was already resident — out-of-epoch-order completions (possible
+    /// once epochs overlap in cross-epoch offload mode) must never
+    /// roll a gradient queue backwards.
+    pub stale_drops: u64,
 }
 
 struct Inner {
@@ -104,6 +109,7 @@ pub struct Queue {
     stats_publishes: AtomicU64,
     stats_drops: AtomicU64,
     stats_consumes: AtomicU64,
+    stats_stale_drops: AtomicU64,
 }
 
 impl Queue {
@@ -125,6 +131,7 @@ impl Queue {
             stats_publishes: AtomicU64::new(0),
             stats_drops: AtomicU64::new(0),
             stats_consumes: AtomicU64::new(0),
+            stats_stale_drops: AtomicU64::new(0),
         }
     }
 
@@ -155,10 +162,20 @@ impl Queue {
             publishes: self.stats_publishes.load(Ordering::Relaxed),
             drops: self.stats_drops.load(Ordering::Relaxed),
             consumes: self.stats_consumes.load(Ordering::Relaxed),
+            stale_drops: self.stats_stale_drops.load(Ordering::Relaxed),
         }
     }
 
     /// Publish; replaces in LatestOnly mode, appends in Fifo mode.
+    ///
+    /// LatestOnly ordering guard: a message carrying an *older* epoch
+    /// than the resident one is suppressed (counted in
+    /// [`QueueStats::stale_drops`]) rather than replacing it. Epoch
+    /// completions can arrive out of order once cross-epoch offload
+    /// overlaps epochs; replacing a fresh gradient with a stale one
+    /// would silently poison every consumer that polls `peek_latest`.
+    /// Equal epochs still replace (a re-publish is a refresh, not a
+    /// regression).
     pub fn publish(&self, msg: Message) -> Result<()> {
         if msg.payload.len() > self.cap {
             return Err(Error::MessageTooLarge { size: msg.payload.len(), cap: self.cap });
@@ -172,7 +189,13 @@ impl Queue {
         {
             let mut inner = self.inner.lock().unwrap();
             match self.mode {
-                QueueMode::LatestOnly => inner.latest = Some(msg),
+                QueueMode::LatestOnly => {
+                    if inner.latest.as_ref().is_some_and(|cur| cur.epoch > msg.epoch) {
+                        self.stats_stale_drops.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    inner.latest = Some(msg);
+                }
                 QueueMode::Fifo => inner.fifo.push_back(msg),
             }
             inner.version += 1;
@@ -324,6 +347,29 @@ mod tests {
         assert_eq!(q.len(), 5);
         assert_eq!(q.version(), 5);
         assert_eq!(q.snapshot().len(), 5);
+    }
+
+    #[test]
+    fn latest_only_rejects_out_of_epoch_order_publish() {
+        // out-of-order completion accounting: an older epoch's gradient
+        // must never replace a newer one on a LatestOnly queue
+        let lq = q(QueueMode::LatestOnly);
+        lq.publish(msg(0, 2, b"fresh")).unwrap();
+        lq.publish(msg(0, 1, b"stale")).unwrap();
+        assert_eq!(&lq.peek_latest().unwrap().payload[..], b"fresh");
+        assert_eq!(lq.stats().stale_drops, 1);
+        assert_eq!(lq.version(), 1, "a suppressed publish is not accepted");
+        // an equal epoch is a refresh, not a regression
+        lq.publish(msg(0, 2, b"refresh")).unwrap();
+        assert_eq!(&lq.peek_latest().unwrap().payload[..], b"refresh");
+        assert_eq!(lq.stats().stale_drops, 1);
+        assert_eq!(lq.version(), 2);
+        // FIFO queues (the barrier) are append-only and never suppress
+        let f = q(QueueMode::Fifo);
+        f.publish(msg(0, 2, b"a")).unwrap();
+        f.publish(msg(0, 1, b"b")).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.stats().stale_drops, 0);
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub enum OffloadMode {
     /// shows the overlap.
     #[default]
     Pipelined,
+    /// Cross-epoch pipelining: epoch e+1's params upload and branch
+    /// dispatch happen *before* the epoch-e convergence eval / barrier /
+    /// verdict wait, keyed by the generation tag so folds never mix
+    /// param versions, and the scratch sweep lags one live generation.
+    /// The pool stays fed across the epoch boundary; modeled numbers
+    /// remain byte-identical to staged at any `pipeline_depth`.
+    CrossEpoch,
 }
 
 impl OffloadMode {
@@ -57,6 +64,7 @@ impl OffloadMode {
         match s {
             "staged" => Ok(Self::Staged),
             "pipelined" | "pipeline" => Ok(Self::Pipelined),
+            "cross-epoch" | "cross_epoch" | "crossepoch" => Ok(Self::CrossEpoch),
             _ => Err(Error::Config(format!("unknown offload mode {s:?}"))),
         }
     }
@@ -65,6 +73,7 @@ impl OffloadMode {
         match self {
             Self::Staged => "staged",
             Self::Pipelined => "pipelined",
+            Self::CrossEpoch => "cross-epoch",
         }
     }
 }
@@ -171,8 +180,14 @@ pub struct TrainConfig {
     /// Round-robin fairness across peer lanes on the cluster scheduler
     /// (false = greedy lowest-rank-first baseline).
     pub sched_fair: bool,
-    /// Staged vs pipelined serverless dispatch.
+    /// Staged vs pipelined vs cross-epoch serverless dispatch.
     pub offload_mode: OffloadMode,
+    /// Cross-epoch window: how many epochs may be in flight on the
+    /// scheduler at once (cross-epoch mode only; 1 disables the
+    /// pre-dispatch and behaves like pipelined at the boundary).
+    /// Synchronous training uses at most 2 — deeper windows are the
+    /// hook for stale-tolerant modes.
+    pub pipeline_depth: usize,
     /// Entries in the decoded-object cache memoizing params decodes
     /// across Lambda branches (0 disables; each entry is one params
     /// vector).
@@ -215,6 +230,7 @@ impl Default for TrainConfig {
             lambda_concurrency: 64,
             sched_fair: true,
             offload_mode: OffloadMode::default(),
+            pipeline_depth: 2,
             decode_cache: 16,
             sweep_scratch: true,
             exec_threads: 0,
@@ -264,6 +280,7 @@ impl TrainConfig {
                 "offload_mode" => {
                     cfg.offload_mode = OffloadMode::parse(v.as_str().ok_or_else(missing)?)?
                 }
+                "pipeline_depth" => cfg.pipeline_depth = v.as_usize().ok_or_else(missing)?,
                 "decode_cache" => cfg.decode_cache = v.as_usize().ok_or_else(missing)?,
                 "sweep_scratch" => cfg.sweep_scratch = v.as_bool().ok_or_else(missing)?,
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
@@ -299,6 +316,7 @@ impl TrainConfig {
             .set("lambda_concurrency", self.lambda_concurrency)
             .set("sched_fair", self.sched_fair)
             .set("offload_mode", self.offload_mode.name())
+            .set("pipeline_depth", self.pipeline_depth)
             .set("decode_cache", self.decode_cache)
             .set("sweep_scratch", self.sweep_scratch)
             .set("exec_threads", self.exec_threads)
@@ -330,6 +348,9 @@ impl TrainConfig {
         }
         if !(self.lr > 0.0) {
             return Err(Error::Config("lr must be > 0".into()));
+        }
+        if self.pipeline_depth == 0 {
+            return Err(Error::Config("pipeline_depth must be >= 1".into()));
         }
         if let Compression::Qsgd { s } = self.compression {
             if s < 1 {
@@ -395,6 +416,27 @@ mod tests {
         assert!(TrainConfig::default().sched_fair);
         assert_eq!(TrainConfig::default().offload_mode, OffloadMode::Pipelined);
         assert!(OffloadMode::parse("warp").is_err());
+    }
+
+    #[test]
+    fn cross_epoch_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            offload_mode: OffloadMode::CrossEpoch,
+            pipeline_depth: 1,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.offload_mode, OffloadMode::CrossEpoch);
+        assert_eq!(back.pipeline_depth, 1);
+        // default: a two-epoch window (one epoch pre-dispatched)
+        assert_eq!(TrainConfig::default().pipeline_depth, 2);
+        for spec in ["cross-epoch", "cross_epoch", "crossepoch"] {
+            assert_eq!(OffloadMode::parse(spec).unwrap(), OffloadMode::CrossEpoch);
+        }
+        assert_eq!(OffloadMode::CrossEpoch.name(), "cross-epoch");
+        // a zero-depth window cannot hold even the current epoch
+        let bad = TrainConfig { pipeline_depth: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -13,6 +13,16 @@
 //!
 //! Every stage is timed into the shared [`MetricsRegistry`] under its
 //! Table-I stage name.
+//!
+//! **Cross-epoch offload mode** reorders the serverless boundary: right
+//! after step 4 produces params v(e+1), the peer *dispatches* epoch
+//! e+1's fan-out (params upload + branch submission, generation-tagged)
+//! and only then runs steps 5–6 — so the convergence eval, the barrier
+//! wait and the verdict read all overlap epoch e+1's execution on the
+//! pool, and step 1 of the next iteration merely collects. The
+//! pre-dispatch is gated off when early stopping is enabled: a verdict
+//! that can say "stop" would make the speculative epoch's invocations
+//! and cost diverge from the staged reference.
 
 use std::sync::Arc;
 
@@ -21,7 +31,7 @@ use super::gradient::{GradAccumulator, GradientDict, GradientWire};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
 use crate::broker::{Broker, Message, QueueMode};
-use crate::config::{SyncMode, TrainConfig};
+use crate::config::{OffloadMode, SyncMode, TrainConfig};
 use crate::data::{Batcher, Dataset};
 use crate::error::{Error, Result};
 use crate::metrics::{MetricsRegistry, Stage, StageTimer};
@@ -90,6 +100,12 @@ pub struct PeerReport {
     /// Real wall time of this peer's fan-outs across the worker pool
     /// (vs the modeled wall the paper tables use).
     pub lambda_measured_wall: std::time::Duration,
+    /// Cross-epoch mode: epochs whose fan-out was dispatched before the
+    /// previous epoch's convergence eval / barrier / verdict wait.
+    pub predispatched_epochs: usize,
+    /// Cross-epoch mode: summed overlap windows — how long pre-dispatched
+    /// epochs ran on the pool before their collection began.
+    pub overlap_wall: std::time::Duration,
 }
 
 /// One peer of the cluster.
@@ -175,6 +191,8 @@ impl Peer {
             lambda_cost_usd: 0.0,
             lambda_invocations: 0,
             lambda_measured_wall: std::time::Duration::ZERO,
+            predispatched_epochs: 0,
+            overlap_wall: std::time::Duration::ZERO,
         };
 
         // Serverless fidelity (paper §III-B): the partition is batched
@@ -191,124 +209,193 @@ impl Peer {
             offload.upload_batches(&batches)?;
         }
 
-        for epoch in 1..=self.config.epochs as u64 {
-            // ---- 1. per-batch gradients + average ---------------------
-            // (instance path) materialize this epoch's reshuffled
-            // batches outside the timed compute stage
-            let local_batches = match &self.backend {
-                GradBackend::Local { .. } => {
-                    let b = batcher.epoch_batches(&self.partition, epoch as usize);
-                    if b.is_empty() {
-                        return Err(self.no_batch_error());
-                    }
-                    Some(b)
-                }
-                GradBackend::Serverless(_) => None,
-            };
-            let t = StageTimer::start(Stage::ComputeGradients);
-            let (epoch_loss, my_grad) = match &self.backend {
-                GradBackend::Local { pallas } => {
-                    let batches = local_batches.as_deref().unwrap_or_default();
-                    // streaming mean: one running sum, O(params) memory
-                    // no matter how many batches the partition yields
-                    let mut acc = GradAccumulator::new();
-                    let mut loss_sum = 0f64;
-                    for b in batches {
-                        let out = self.runtime.grad(b.size, &self.params, &b.x, &b.y, *pallas)?;
-                        loss_sum += out.loss as f64;
-                        acc.add(&out.grads)?;
-                    }
-                    ((loss_sum / batches.len() as f64) as f32, acc.mean()?)
-                }
-                GradBackend::Serverless(offload) => {
-                    let out = offload.compute_epoch(epoch as usize, &self.params)?;
-                    report.lambda_cost_usd += out.cost_usd;
-                    report.lambda_invocations += out.invocations;
-                    report.lambda_measured_wall += out.measured_wall;
-                    (out.loss, out.grads)
-                }
-            };
-            t.stop(&self.metrics);
+        // Cross-epoch pre-dispatch is only sound when the verdict can
+        // never say "stop": a speculatively dispatched epoch that early
+        // stopping then cancels would burn invocations/cost the staged
+        // reference never pays. With early stopping disabled (the
+        // default) the epoch count is fixed and speculation is exact.
+        let speculate = match &self.backend {
+            GradBackend::Serverless(offload) => {
+                offload.mode() == OffloadMode::CrossEpoch
+                    && offload.pipeline_depth() >= 2
+                    && self.config.early_stop_patience == 0
+            }
+            GradBackend::Local { .. } => false,
+        };
+        // epoch number whose fan-out is already running on the pool
+        let mut predispatched: Option<u64> = None;
 
-            // ---- 2. publish to own queue ------------------------------
-            let t = StageTimer::start(Stage::SendGradients);
-            let sent = self
-                .wire
-                .publish(&self.broker, self.rank, epoch, &my_grad)?;
-            t.stop(&self.metrics);
-            report.sent_bytes.push(sent);
-
-            // ---- 3. consume all other queues --------------------------
-            let t = StageTimer::start(Stage::ReceiveGradients);
-            let mut dict = GradientDict::new();
-            dict.insert(self.rank, my_grad);
-            for peer in 0..self.config.peers {
-                if peer == self.rank {
-                    continue;
-                }
-                let q = self.broker.get(&Broker::gradient_queue(peer))?;
-                match self.config.sync {
-                    SyncMode::Synchronous => {
-                        let m = q.await_epoch(epoch)?;
-                        dict.insert(peer, self.wire.decode(&m.payload)?);
+        // The epoch loop runs inside a closure so the cross-epoch
+        // teardown below executes on *every* exit path — an abort or a
+        // refused fold mid-loop must not leak in-flight branches,
+        // pinned cache entries, or unswept generations. The immediate
+        // call is the point: `?` must propagate to `epochs_outcome`,
+        // not past the teardown.
+        #[allow(clippy::redundant_closure_call)]
+        let epochs_outcome = (|| -> Result<()> {
+            for epoch in 1..=self.config.epochs as u64 {
+                // ---- 1. per-batch gradients + average ---------------------
+                // (instance path) materialize this epoch's reshuffled
+                // batches outside the timed compute stage
+                let local_batches = match &self.backend {
+                    GradBackend::Local { .. } => {
+                        let b = batcher.epoch_batches(&self.partition, epoch as usize);
+                        if b.is_empty() {
+                            return Err(self.no_batch_error());
+                        }
+                        Some(b)
                     }
-                    SyncMode::Asynchronous => {
-                        // take whatever is freshest, even stale; skip if
-                        // the peer has not published yet
-                        if let Some(m) = q.peek_latest() {
+                    GradBackend::Serverless(_) => None,
+                };
+                let t = StageTimer::start(Stage::ComputeGradients);
+                let (epoch_loss, my_grad) = match &self.backend {
+                    GradBackend::Local { pallas } => {
+                        let batches = local_batches.as_deref().unwrap_or_default();
+                        // streaming mean: one running sum, O(params) memory
+                        // no matter how many batches the partition yields
+                        let mut acc = GradAccumulator::new();
+                        let mut loss_sum = 0f64;
+                        for b in batches {
+                            let out = self.runtime.grad(b.size, &self.params, &b.x, &b.y, *pallas)?;
+                            loss_sum += out.loss as f64;
+                            acc.add(&out.grads)?;
+                        }
+                        ((loss_sum / batches.len() as f64) as f32, acc.mean()?)
+                    }
+                    GradBackend::Serverless(offload) => {
+                        let out = if predispatched.take() == Some(epoch) {
+                            // the fan-out has been executing since before
+                            // last epoch's barrier — just fold it
+                            let (collected, out) = offload.collect_epoch()?;
+                            if collected as u64 != epoch {
+                                // out-of-epoch-order completion: cannot
+                                // happen at window <= 2, but deeper
+                                // (stale-tolerant) windows must not fold a
+                                // mismatched param version silently
+                                return Err(Error::Faas(format!(
+                                    "peer {}: collected epoch {collected} while \
+                                     expecting {epoch} — generation-keyed fold refused",
+                                    self.rank
+                                )));
+                            }
+                            report.overlap_wall += out.overlap;
+                            out
+                        } else {
+                            offload.compute_epoch(epoch as usize, &self.params)?
+                        };
+                        report.lambda_cost_usd += out.cost_usd;
+                        report.lambda_invocations += out.invocations;
+                        report.lambda_measured_wall += out.measured_wall;
+                        (out.loss, out.grads)
+                    }
+                };
+                t.stop(&self.metrics);
+
+                // ---- 2. publish to own queue ------------------------------
+                let t = StageTimer::start(Stage::SendGradients);
+                let sent = self
+                    .wire
+                    .publish(&self.broker, self.rank, epoch, &my_grad)?;
+                t.stop(&self.metrics);
+                report.sent_bytes.push(sent);
+
+                // ---- 3. consume all other queues --------------------------
+                let t = StageTimer::start(Stage::ReceiveGradients);
+                let mut dict = GradientDict::new();
+                dict.insert(self.rank, my_grad);
+                for peer in 0..self.config.peers {
+                    if peer == self.rank {
+                        continue;
+                    }
+                    let q = self.broker.get(&Broker::gradient_queue(peer))?;
+                    match self.config.sync {
+                        SyncMode::Synchronous => {
+                            let m = q.await_epoch(epoch)?;
                             dict.insert(peer, self.wire.decode(&m.payload)?);
+                        }
+                        SyncMode::Asynchronous => {
+                            // take whatever is freshest, even stale; skip if
+                            // the peer has not published yet
+                            if let Some(m) = q.peek_latest() {
+                                dict.insert(peer, self.wire.decode(&m.payload)?);
+                            }
                         }
                     }
                 }
-            }
-            t.stop(&self.metrics);
-
-            // ---- 4. average + model update ----------------------------
-            let avg = dict.average()?;
-            let t = StageTimer::start(Stage::ModelUpdate);
-            self.params = self.runtime.update(&self.params, &avg, lr)?;
-            t.stop(&self.metrics);
-
-            report.train_loss.push(epoch_loss);
-            report.epochs_run = epoch as usize;
-
-            // ---- 5. convergence detection (leader broadcasts) ---------
-            let mut stop = false;
-            if self.rank == 0 {
-                let t = StageTimer::start(Stage::ConvergenceDetection);
-                let (val_loss, val_acc) = self.runtime.eval_dataset(&self.params, &self.val)?;
-                stop = early.observe(val_loss);
-                lr = plateau.observe(val_loss);
-                let verdict = Verdict { epoch, stop, lr, val_loss, val_acc };
-                self.broker.publish(
-                    &control_queue(),
-                    Message::new(0, epoch, verdict.to_payload()),
-                )?;
                 t.stop(&self.metrics);
-            }
 
-            // ---- 6. barrier (synchronous mode) ------------------------
-            if self.config.sync == SyncMode::Synchronous {
-                self.barrier.arrive_and_wait(self.rank, epoch)?;
-            }
+                // ---- 4. average + model update ----------------------------
+                let avg = dict.average()?;
+                let t = StageTimer::start(Stage::ModelUpdate);
+                self.params = self.runtime.update(&self.params, &avg, lr)?;
+                t.stop(&self.metrics);
 
-            // follow the leader's verdict
-            if self.rank != 0 {
-                let ctl = self.broker.get(&control_queue())?;
-                let msg = match self.config.sync {
-                    SyncMode::Synchronous => Some(ctl.await_epoch(epoch)?),
-                    SyncMode::Asynchronous => ctl.peek_latest(),
-                };
-                if let Some(m) = msg {
-                    let v = Verdict::from_message(&m)?;
-                    lr = if v.lr > 0.0 { v.lr } else { lr };
-                    stop = v.stop;
+                report.train_loss.push(epoch_loss);
+                report.epochs_run = epoch as usize;
+
+                // ---- 4b. cross-epoch pre-dispatch -------------------------
+                // params v(e+1) exist now; ship epoch e+1's fan-out to the
+                // pool *before* the eval/barrier/verdict stages below, so
+                // the pool never drains at the epoch boundary
+                if speculate && epoch < self.config.epochs as u64 {
+                    if let GradBackend::Serverless(offload) = &self.backend {
+                        let t = StageTimer::start(Stage::ComputeGradients);
+                        offload.dispatch_epoch((epoch + 1) as usize, &self.params)?;
+                        t.stop(&self.metrics);
+                        predispatched = Some(epoch + 1);
+                        report.predispatched_epochs += 1;
+                    }
+                }
+
+                // ---- 5. convergence detection (leader broadcasts) ---------
+                let mut stop = false;
+                if self.rank == 0 {
+                    let t = StageTimer::start(Stage::ConvergenceDetection);
+                    let (val_loss, val_acc) = self.runtime.eval_dataset(&self.params, &self.val)?;
+                    stop = early.observe(val_loss);
+                    lr = plateau.observe(val_loss);
+                    let verdict = Verdict { epoch, stop, lr, val_loss, val_acc };
+                    self.broker.publish(
+                        &control_queue(),
+                        Message::new(0, epoch, verdict.to_payload()),
+                    )?;
+                    t.stop(&self.metrics);
+                }
+
+                // ---- 6. barrier (synchronous mode) ------------------------
+                if self.config.sync == SyncMode::Synchronous {
+                    self.barrier.arrive_and_wait(self.rank, epoch)?;
+                }
+
+                // follow the leader's verdict
+                if self.rank != 0 {
+                    let ctl = self.broker.get(&control_queue())?;
+                    let msg = match self.config.sync {
+                        SyncMode::Synchronous => Some(ctl.await_epoch(epoch)?),
+                        SyncMode::Asynchronous => ctl.peek_latest(),
+                    };
+                    if let Some(m) = msg {
+                        let v = Verdict::from_message(&m)?;
+                        lr = if v.lr > 0.0 { v.lr } else { lr };
+                        stop = v.stop;
+                    }
+                }
+                if stop {
+                    break;
                 }
             }
-            if stop {
-                break;
+            Ok(())
+        })();
+        // cross-epoch teardown: drain any abandoned in-flight epoch and
+        // sweep the lagged generations — on success *and* on failure,
+        // matching the sweep-on-every-exit-path contract of the
+        // staged/pipelined modes
+        if let GradBackend::Serverless(offload) = &self.backend {
+            if offload.mode() == OffloadMode::CrossEpoch {
+                offload.finish_run();
             }
         }
+        epochs_outcome?;
         Ok(report)
     }
 }

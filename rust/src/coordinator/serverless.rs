@@ -23,7 +23,7 @@
 //! every branch payload, doubling as the param-version tag cross-epoch
 //! pipelining will key on.
 //!
-//! Two dispatch modes ([`OffloadMode`]):
+//! Three dispatch modes ([`OffloadMode`]):
 //!
 //! - **staged** — build every branch payload, execute the Map state,
 //!   then collect (the PR-1 shape; the modeled wall's reference
@@ -34,9 +34,59 @@
 //!   math is bit-identical) while later branches dispatch. The *modeled*
 //!   wall/billed/cost are byte-identical to the staged path; only the
 //!   *measured* wall shrinks with the overlap.
+//! - **cross-epoch** — pipelined, plus the epoch boundary itself is
+//!   overlapped: the fan-out is split into
+//!   [`ServerlessOffload::dispatch_epoch`] (upload params v(e),
+//!   generation-tag and submit every branch) and
+//!   [`ServerlessOffload::collect_epoch`] (fold the oldest in-flight
+//!   epoch, in branch order). The peer dispatches epoch e+1 right after
+//!   its model update — *before* the convergence eval, the barrier wait
+//!   and the verdict read — so the pool keeps executing e+1 branches
+//!   while inter-peer coordination for epoch e completes. Folds are
+//!   keyed by the generation tag and can never mix param versions; the
+//!   scratch sweep **lags one live generation** (gen e is reclaimed
+//!   when e+2 dispatches, at the latest at run teardown) so a
+//!   stale-tolerant tail branch of epoch e can always re-read params
+//!   v(e); the live params versions are pinned in the [`DecodedCache`].
+//!   Modeled wall/billed/cost remain byte-identical to staged at any
+//!   `pipeline_depth`; only the measured wall shrinks.
+//!
+//! Generation lifecycle in cross-epoch mode (one peer, depth 2):
+//!
+//! ```text
+//!   dispatch(e)          collect(e)      dispatch(e+1)      dispatch(e+2)
+//!   ──────────▶ in-flight ─────────▶ retired(lagged) ─────────▶ swept
+//!   put params v(e)      fold all       params v(e) kept       drain barrier,
+//!   pin cache entry      branches in    + pinned while         sweep gen e,
+//!   submit N branches    gen order      e+1 runs (lag=1)       drop entry+pin
+//! ```
+//!
+//! Driving a cross-epoch cluster (needs the AOT artifacts on disk):
+//!
+//! ```no_run
+//! use p2pless::config::{Backend, OffloadMode, TrainConfig};
+//! use p2pless::coordinator::Cluster;
+//!
+//! # fn main() -> p2pless::Result<()> {
+//! let cfg = TrainConfig {
+//!     peers: 2,
+//!     backend: Backend::Serverless,
+//!     offload_mode: OffloadMode::CrossEpoch,
+//!     pipeline_depth: 2,
+//!     ..Default::default()
+//! };
+//! let report = Cluster::new(cfg)?.run()?;
+//! println!(
+//!     "epochs pre-dispatched ahead of the boundary: {:?}",
+//!     report.counter("offload.predispatched_epochs"),
+//! );
+//! # Ok(())
+//! # }
+//! ```
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::gradient::GradAccumulator;
 use crate::config::OffloadMode;
@@ -135,6 +185,16 @@ fn parse_branch_response(out: &[u8]) -> Result<(f64, ObjectRef)> {
     Ok((loss, grad_ref))
 }
 
+/// One dispatched-but-not-yet-collected epoch (cross-epoch mode).
+struct InflightEpoch {
+    epoch: usize,
+    generation: u64,
+    params_ref: ObjectRef,
+    pipe: PipelinedMap,
+    batches: usize,
+    dispatched_at: Instant,
+}
+
 /// The serverless offload engine bound to one peer.
 pub struct ServerlessOffload {
     platform: Arc<FaasPlatform>,
@@ -148,10 +208,17 @@ pub struct ServerlessOffload {
     concurrency: usize,
     mode: OffloadMode,
     sweep_scratch: bool,
+    /// Cross-epoch window: max epochs in flight at once (>= 1).
+    pipeline_depth: usize,
     /// Epoch-persistent batch objects, uploaded once by
     /// [`Self::upload_batches`] and referenced by every epoch's branch
     /// payloads thereafter.
     batch_refs: Mutex<Vec<ObjectRef>>,
+    /// Cross-epoch mode: dispatched epochs, oldest first.
+    inflight: Mutex<VecDeque<InflightEpoch>>,
+    /// Cross-epoch mode: collected generations whose scratch sweep is
+    /// lagged (the newest entry stays alive while the next epoch runs).
+    retired: Mutex<VecDeque<(u64, ObjectRef)>>,
 }
 
 /// Result of one serverless epoch fan-out.
@@ -172,6 +239,11 @@ pub struct OffloadResult {
     pub cost_usd: f64,
     pub invocations: usize,
     pub cold_starts: usize,
+    /// Cross-epoch mode: how long this epoch had been dispatched before
+    /// collection began — the overlap window the pre-dispatch bought
+    /// (zero in staged/pipelined modes and for non-pre-dispatched
+    /// epochs).
+    pub overlap: Duration,
 }
 
 impl ServerlessOffload {
@@ -181,7 +253,9 @@ impl ServerlessOffload {
     /// scheduler (and the Map concurrency in staged mode);
     /// `decode_cache` memoizes the params decode across branches;
     /// `sweep_scratch = false` keeps per-epoch scratch alive (debugging
-    /// aid — the store then grows with the epoch count).
+    /// aid — the store then grows with the epoch count);
+    /// `pipeline_depth` bounds the cross-epoch in-flight window
+    /// (ignored by staged/pipelined modes; clamped to >= 1).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         platform: Arc<FaasPlatform>,
@@ -194,6 +268,7 @@ impl ServerlessOffload {
         concurrency: usize,
         mode: OffloadMode,
         sweep_scratch: bool,
+        pipeline_depth: usize,
     ) -> Result<Self> {
         let function = format!("grad-{}-peer{}", runtime.entry.key, peer_rank);
         let bucket = crate::store::peer_bucket(peer_rank);
@@ -248,7 +323,10 @@ impl ServerlessOffload {
             concurrency,
             mode,
             sweep_scratch,
+            pipeline_depth: pipeline_depth.max(1),
             batch_refs: Mutex::new(Vec::new()),
+            inflight: Mutex::new(VecDeque::new()),
+            retired: Mutex::new(VecDeque::new()),
         })
     }
 
@@ -258,6 +336,16 @@ impl ServerlessOffload {
 
     pub fn mode(&self) -> OffloadMode {
         self.mode
+    }
+
+    /// Cross-epoch in-flight window (meaningful in cross-epoch mode).
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    /// Epochs dispatched but not yet collected (cross-epoch mode).
+    pub fn inflight_epochs(&self) -> usize {
+        self.inflight.lock().unwrap().len()
     }
 
     /// Batch objects currently uploaded (0 before [`Self::upload_batches`]).
@@ -297,10 +385,31 @@ impl ServerlessOffload {
 
     /// Run one epoch's batches through the dynamically-generated state
     /// machine and average the gradients. Uploads exactly one object —
-    /// the params, tagged with this epoch's generation — and sweeps that
-    /// generation (params + parked gradients) on every exit path, so the
-    /// store stays bounded while the batch objects persist.
+    /// the params, tagged with this epoch's generation. Staged and
+    /// pipelined modes sweep that generation (params + parked gradients)
+    /// on every exit path; cross-epoch mode delegates to
+    /// [`Self::dispatch_epoch`] + [`Self::collect_epoch`], whose sweep
+    /// lags one live generation (reclaimed on a later dispatch or at
+    /// [`Self::finish_run`]). Either way the store stays bounded while
+    /// the batch objects persist.
     pub fn compute_epoch(&self, epoch: usize, params: &[f32]) -> Result<OffloadResult> {
+        if self.mode == OffloadMode::CrossEpoch {
+            // the non-pre-dispatched path (first epoch, or depth 1):
+            // dispatch and collect back to back. Collection yields the
+            // *oldest* in-flight epoch — if a caller interleaved a bare
+            // dispatch_epoch, returning its fold labeled as `epoch`
+            // would silently mix param versions, so refuse instead.
+            self.dispatch_epoch(epoch, params)?;
+            let (collected, result) = self.collect_epoch()?;
+            if collected != epoch {
+                return Err(Error::Faas(format!(
+                    "peer {}: collected epoch {collected} while expecting {epoch} — \
+                     generation-keyed fold refused",
+                    self.peer
+                )));
+            }
+            return Ok(result);
+        }
         let batch_refs = self.batch_refs.lock().unwrap().clone();
         if batch_refs.is_empty() {
             return Err(Error::Faas(
@@ -316,21 +425,199 @@ impl ServerlessOffload {
             Bytes::from(f32s_to_bytes(params)),
             generation,
         )?;
+        // the live params version must survive cache pressure for the
+        // whole fan-out, whatever the mode — without the pin, a small
+        // shared cache lets another peer's params insertion evict this
+        // epoch's entry mid-fan-out and break the one-decode-per-epoch
+        // invariant
+        self.decode_cache.pin(&params_ref);
         let outcome = match self.mode {
             OffloadMode::Staged => {
                 self.fan_out_epoch_staged(epoch, &params_ref, &batch_refs, generation)
             }
-            OffloadMode::Pipelined => {
+            OffloadMode::Pipelined | OffloadMode::CrossEpoch => {
                 self.fan_out_epoch_pipelined(&params_ref, &batch_refs, generation)
             }
         };
+        // the params key is never read again (next epoch gets a fresh
+        // key): reclaim the scratch and drop the cache entry (clearing
+        // its pin) on every exit path
+        self.retire_generation(generation, &params_ref);
+        outcome
+    }
+
+    /// Cross-epoch mode: upload params v(`epoch`), pin their decoded
+    /// view, tag and submit every branch through the cluster scheduler,
+    /// and return immediately — the fan-out executes while the caller
+    /// does inter-epoch coordination (convergence eval, barrier,
+    /// verdict). Also reclaims lagged scratch: every retired generation
+    /// except the most recent one is swept here, which is exactly the
+    /// "sweep lags one live generation" contract.
+    pub fn dispatch_epoch(&self, epoch: usize, params: &[f32]) -> Result<()> {
+        if self.mode != OffloadMode::CrossEpoch {
+            return Err(Error::Faas(format!(
+                "dispatch_epoch requires cross-epoch offload mode (peer {} is {})",
+                self.peer,
+                self.mode.name()
+            )));
+        }
+        let batch_refs = self.batch_refs.lock().unwrap().clone();
+        if batch_refs.is_empty() {
+            return Err(Error::Faas(
+                "no batch objects uploaded — call upload_batches first".into(),
+            ));
+        }
+        {
+            let inflight = self.inflight.lock().unwrap();
+            if inflight.len() >= self.pipeline_depth {
+                return Err(Error::Faas(format!(
+                    "peer {}: pipeline window full ({} epochs in flight, depth {})",
+                    self.peer,
+                    inflight.len(),
+                    self.pipeline_depth
+                )));
+            }
+        }
+        self.sweep_lagged();
+        let generation = epoch as u64;
+        // build the fan-out *before* uploading the params: if the
+        // constructor fails (unknown function), nothing has been
+        // uploaded or pinned yet, so the generation cannot leak past
+        // the sweep
+        let mut pipe = PipelinedMap::new(
+            self.scheduler.clone(),
+            self.platform.clone(),
+            self.peer,
+            &self.function,
+            batch_refs.len(),
+            self.concurrency,
+            RetryPolicy::default(),
+        )?
+        .with_generation(generation);
+        let params_ref = self.store.put_new_gen(
+            &self.bucket,
+            Bytes::from(f32s_to_bytes(params)),
+            generation,
+        )?;
+        // the live params version must survive cache pressure until its
+        // generation retires — tail branches re-reading an evicted entry
+        // would still be *correct* (the lagged sweep keeps the object),
+        // but the exactly-one-decode-per-epoch invariant would not hold
+        self.decode_cache.pin(&params_ref);
+        for batch_ref in &batch_refs {
+            pipe.submit(branch_payload(&params_ref, batch_ref, generation), None);
+        }
+        self.inflight.lock().unwrap().push_back(InflightEpoch {
+            epoch,
+            generation,
+            params_ref,
+            pipe,
+            batches: batch_refs.len(),
+            dispatched_at: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// Cross-epoch mode: fold the *oldest* in-flight epoch — in branch
+    /// order, so the f64 gradient/loss folds are byte-identical to the
+    /// staged path — and retire its generation into the lagged-sweep
+    /// queue. Returns the collected epoch number with the result, so
+    /// callers can account for completions that arrive out of epoch
+    /// order once deeper windows (stale-tolerant modes) land.
+    pub fn collect_epoch(&self) -> Result<(usize, OffloadResult)> {
+        let ep = self
+            .inflight
+            .lock()
+            .unwrap()
+            .pop_front()
+            .ok_or_else(|| {
+                Error::Faas(format!("peer {}: no epoch in flight to collect", self.peer))
+            })?;
+        let InflightEpoch { epoch, generation, params_ref, mut pipe, batches, dispatched_at } =
+            ep;
+        let overlap = dispatched_at.elapsed();
+        let mut acc = GradAccumulator::new();
+        let mut loss_sum = 0f64;
+        let mut fold_err: Option<Error> = None;
+        while let Some((_, out)) = pipe.next_output() {
+            if let Err(e) = self.fold_branch(&out, &mut acc, &mut loss_sum) {
+                fold_err = Some(e);
+                break;
+            }
+        }
+        // finish() waits for any branches the fold loop did not consume
+        // (error path), so a sweep below cannot race a live handler
+        let finish = pipe.finish();
+        let report = match (fold_err, finish) {
+            (Some(e), _) | (None, Err(e)) => {
+                // failed epochs are retired immediately — there is no
+                // later dispatch to lag behind
+                self.retire_generation(generation, &params_ref);
+                return Err(e);
+            }
+            (None, Ok(r)) => r,
+        };
+        // the generation stays pinned through its lag window: a
+        // stale-tolerant tail branch must find params v(e) both in the
+        // store *and* still memoized while epoch e+1 runs
+        self.retired.lock().unwrap().push_back((generation, params_ref));
+        Ok((
+            epoch,
+            OffloadResult {
+                loss: (loss_sum / batches as f64) as f32,
+                grads: acc.mean()?,
+                wall: report.wall,
+                measured_wall: report.measured_wall,
+                billed: report.billed,
+                cost_usd: report.cost_usd,
+                invocations: report.invocations,
+                cold_starts: report.cold_starts,
+                overlap,
+            },
+        ))
+    }
+
+    /// Retire one generation: wait out any straggler branches (drain
+    /// barrier — a collected generation has none today, but a
+    /// stale-tolerant mode may retire one with stragglers, and a sweep
+    /// must never run under a live branch), reclaim its store scratch
+    /// (honoring `sweep_scratch`), and drop its params cache entry —
+    /// which also clears the entry's pin.
+    fn retire_generation(&self, generation: u64, params_ref: &ObjectRef) {
+        self.scheduler.await_generation_drained(self.peer, generation);
         if self.sweep_scratch {
             self.store.sweep_generation(&self.bucket, generation);
         }
-        // the params key is never read again (next epoch gets a fresh
-        // key), so its cache entry is dead weight either way
-        self.decode_cache.invalidate(&params_ref);
-        outcome
+        self.decode_cache.invalidate(params_ref);
+    }
+
+    /// Sweep every retired generation except the newest (the lag).
+    fn sweep_lagged(&self) {
+        let mut retired = self.retired.lock().unwrap();
+        while retired.len() > 1 {
+            let (generation, params_ref) = retired.pop_front().unwrap();
+            self.retire_generation(generation, &params_ref);
+        }
+    }
+
+    /// Cross-epoch teardown: drain any still-in-flight epochs (their
+    /// branches are allowed to finish, their results are discarded) and
+    /// retire every remaining generation, lagged or not. Called by the
+    /// peer when the training loop exits — on success and on failure;
+    /// idempotent.
+    pub fn finish_run(&self) {
+        loop {
+            let ep = self.inflight.lock().unwrap().pop_front();
+            let Some(ep) = ep else { break };
+            let InflightEpoch { generation, params_ref, mut pipe, .. } = ep;
+            while pipe.next_output().is_some() {}
+            let _ = pipe.finish();
+            self.retire_generation(generation, &params_ref);
+        }
+        let mut retired = self.retired.lock().unwrap();
+        while let Some((generation, params_ref)) = retired.pop_front() {
+            self.retire_generation(generation, &params_ref);
+        }
     }
 
     /// Parse a branch response and fold it into the running epoch state.
@@ -390,6 +677,7 @@ impl ServerlessOffload {
             cost_usd: report.cost_usd,
             invocations: report.invocations,
             cold_starts: report.cold_starts,
+            overlap: Duration::ZERO,
         })
     }
 
@@ -413,7 +701,8 @@ impl ServerlessOffload {
             batch_refs.len(),
             self.concurrency,
             RetryPolicy::default(),
-        )?;
+        )?
+        .with_generation(generation);
         let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
         for batch_ref in batch_refs {
@@ -436,6 +725,7 @@ impl ServerlessOffload {
             cost_usd: report.cost_usd,
             invocations: report.invocations,
             cold_starts: report.cold_starts,
+            overlap: Duration::ZERO,
         })
     }
 }

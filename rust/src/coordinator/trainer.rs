@@ -209,6 +209,7 @@ impl Cluster {
                         cfg.lambda_concurrency,
                         cfg.offload_mode,
                         cfg.sweep_scratch,
+                        cfg.pipeline_depth,
                     )?)
                 }
             };
@@ -312,6 +313,10 @@ impl Cluster {
         metrics.set_counter("sched.branches_completed", sched.completed);
         metrics.set_counter("sched.peak_queue_depth", sched.peak_queued as u64);
         metrics.set_counter("sched.peak_in_flight", sched.peak_in_flight as u64);
+        metrics.set_counter(
+            "sched.peak_inflight_generations",
+            sched.peak_inflight_generations as u64,
+        );
         metrics.set_counter("exec.threads", executor.threads() as u64);
         metrics.set_counter("exec.peak_busy", executor.peak_busy() as u64);
         for &(rank, served) in &sched.per_peer_served {
@@ -323,6 +328,14 @@ impl Cluster {
         metrics.set_counter("store.bytes_in", store_bytes);
         metrics.set_counter("store.decode_hits", decode_cache.hits());
         metrics.set_counter("store.decode_misses", decode_cache.misses());
+        // cross-epoch overlap accounting: how many epoch fan-outs were
+        // pre-dispatched ahead of the boundary, and for how long they
+        // executed before collection began
+        let predispatched: usize = peers.iter().map(|p| p.predispatched_epochs).sum();
+        let overlap: Duration = peers.iter().map(|p| p.overlap_wall).sum();
+        metrics.set_counter("offload.predispatched_epochs", predispatched as u64);
+        metrics.set_counter("offload.overlap_wall_us", overlap.as_micros() as u64);
+        metrics.set_counter("broker.stale_drops", broker.stale_drops());
 
         Ok(TrainReport {
             config: cfg.clone(),

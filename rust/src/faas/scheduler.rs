@@ -23,12 +23,32 @@
 //!   cold-start waves) reproduces [`StateMachine::execute_with`]
 //!   byte-for-byte; only the measured wall changes.
 //!
+//! Branches may carry a **generation** tag (the epoch / param version —
+//! see [`PipelinedMap::with_generation`]). Once epochs overlap in
+//! cross-epoch offload mode, a peer's lane can hold branches of two
+//! generations at once; lanes stay FIFO (a new epoch can never overtake
+//! the old epoch's tail within a lane), round-robin fairness across
+//! peers is generation-agnostic, and the per-generation occupancy is
+//! tracked so [`BranchScheduler::await_generation_drained`] can act as
+//! a drain barrier before a generation's scratch is swept.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use p2pless::faas::{BranchScheduler, Executor};
+//!
+//! let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+//! sched.register_peer(0, 4); // lane with an in-flight cap of 4
+//! let answer = sched.submit(0, || 21 * 2);
+//! assert_eq!(answer.join().unwrap(), 42);
+//! assert_eq!(sched.stats().per_peer_served, vec![(0, 1)]);
+//! ```
+//!
 //! [`StateMachine::execute_with`]: super::state_machine::StateMachine::execute_with
 
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use super::executor::{panic_message, Executor, JobHandle};
@@ -39,17 +59,37 @@ use crate::util::Bytes;
 
 type DetachedJob = Box<dyn FnOnce() + Send + 'static>;
 
-/// One peer's admission lane.
+/// One peer's admission lane. Jobs carry an optional generation tag
+/// (the epoch / param version) so overlapping epochs are observable and
+/// drainable per generation; the queue itself stays FIFO, which is what
+/// keeps an old epoch's tail ahead of a newly dispatched epoch.
 struct Lane {
-    queue: VecDeque<DetachedJob>,
+    queue: VecDeque<(Option<u64>, DetachedJob)>,
     in_flight: usize,
     cap: usize,
     served: u64,
+    /// Queued branches per generation (tagged submissions only).
+    gen_queued: BTreeMap<u64, usize>,
+    /// Released-to-pool branches per generation (tagged only).
+    gen_inflight: BTreeMap<u64, usize>,
 }
 
 impl Lane {
     fn new(cap: usize) -> Self {
-        Self { queue: VecDeque::new(), in_flight: 0, cap: cap.max(1), served: 0 }
+        Self {
+            queue: VecDeque::new(),
+            in_flight: 0,
+            cap: cap.max(1),
+            served: 0,
+            gen_queued: BTreeMap::new(),
+            gen_inflight: BTreeMap::new(),
+        }
+    }
+
+    /// Branches of `generation` still queued or in flight on this lane.
+    fn generation_live(&self, generation: u64) -> usize {
+        self.gen_queued.get(&generation).copied().unwrap_or(0)
+            + self.gen_inflight.get(&generation).copied().unwrap_or(0)
     }
 }
 
@@ -64,6 +104,12 @@ struct SchedState {
     peak_queued: usize,
     in_flight_total: usize,
     peak_in_flight: usize,
+    /// In-flight branches per generation, across every lane. The map's
+    /// cardinality is "how many epochs overlap on the pool right now".
+    inflight_gens: BTreeMap<u64, usize>,
+    /// High-water mark of distinct generations simultaneously in flight
+    /// (1 in steady state; 2 once cross-epoch dispatch overlaps epochs).
+    peak_inflight_gens: usize,
     /// Peer rank per dispatch, in dispatch order (tests/fairness audits;
     /// off by default — it grows with every branch).
     dispatch_log: Option<Vec<usize>>,
@@ -73,7 +119,11 @@ impl SchedState {
     /// Pop the next dispatchable job under the fairness policy, updating
     /// lane + aggregate accounting. `pool_cap` bounds the total released
     /// to the executor so the scheduler owns all queueing.
-    fn next_ready(&mut self, fair: bool, pool_cap: usize) -> Option<(usize, DetachedJob)> {
+    fn next_ready(
+        &mut self,
+        fair: bool,
+        pool_cap: usize,
+    ) -> Option<(usize, Option<u64>, DetachedJob)> {
         if self.in_flight_total >= pool_cap {
             return None;
         }
@@ -97,16 +147,29 @@ impl SchedState {
                 .map(|(&rank, _)| rank)
         }?;
         let lane = self.lanes.get_mut(&pick).unwrap();
-        let job = lane.queue.pop_front().unwrap();
+        let (generation, job) = lane.queue.pop_front().unwrap();
         lane.in_flight += 1;
         lane.served += 1;
+        if let Some(g) = generation {
+            if let Some(c) = lane.gen_queued.get_mut(&g) {
+                *c -= 1;
+                if *c == 0 {
+                    lane.gen_queued.remove(&g);
+                }
+            }
+            *lane.gen_inflight.entry(g).or_insert(0) += 1;
+        }
         self.queued -= 1;
         self.in_flight_total += 1;
         self.peak_in_flight = self.peak_in_flight.max(self.in_flight_total);
+        if let Some(g) = generation {
+            *self.inflight_gens.entry(g).or_insert(0) += 1;
+            self.peak_inflight_gens = self.peak_inflight_gens.max(self.inflight_gens.len());
+        }
         if let Some(log) = self.dispatch_log.as_mut() {
             log.push(pick);
         }
-        Some((pick, job))
+        Some((pick, generation, job))
     }
 }
 
@@ -127,6 +190,11 @@ pub struct SchedulerStats {
     pub peak_in_flight: usize,
     /// (rank, branches served) per registered lane.
     pub per_peer_served: Vec<(usize, u64)>,
+    /// Distinct generations currently in flight (tagged branches only).
+    pub inflight_generations: usize,
+    /// High-water mark of distinct generations simultaneously in flight
+    /// — the cross-epoch overlap witness (2 when epochs overlap).
+    pub peak_inflight_generations: usize,
     /// Worker threads in the underlying executor.
     pub exec_threads: usize,
     /// High-water mark of simultaneously busy executor workers.
@@ -141,6 +209,9 @@ pub struct BranchScheduler {
     /// bookkeeping can re-pump the queue from a worker thread.
     me: Weak<BranchScheduler>,
     state: Mutex<SchedState>,
+    /// Signalled on every branch completion; the generation drain
+    /// barrier parks here.
+    drained: Condvar,
 }
 
 impl BranchScheduler {
@@ -161,8 +232,11 @@ impl BranchScheduler {
                 peak_queued: 0,
                 in_flight_total: 0,
                 peak_in_flight: 0,
+                inflight_gens: BTreeMap::new(),
+                peak_inflight_gens: 0,
                 dispatch_log: None,
             }),
+            drained: Condvar::new(),
         })
     }
 
@@ -213,18 +287,65 @@ impl BranchScheduler {
     /// on the shared pool once admission (per-peer cap, pool width,
     /// round-robin turn) allows; panics inside `f` are contained.
     pub fn submit_detached(&self, rank: usize, f: impl FnOnce() + Send + 'static) {
+        self.submit_detached_tagged(rank, None, f)
+    }
+
+    /// [`Self::submit_detached`] with a generation tag (the epoch /
+    /// param version). Tagged branches are counted per generation so
+    /// overlapping epochs show up in [`SchedulerStats`] and can be
+    /// awaited by [`Self::await_generation_drained`].
+    pub fn submit_detached_tagged(
+        &self,
+        rank: usize,
+        generation: Option<u64>,
+        f: impl FnOnce() + Send + 'static,
+    ) {
         {
             let mut st = self.state.lock().unwrap();
             if !st.lanes.contains_key(&rank) {
                 st.lanes.insert(rank, Lane::new(usize::MAX));
                 st.rr.push_back(rank);
             }
-            st.lanes.get_mut(&rank).unwrap().queue.push_back(Box::new(f));
+            let lane = st.lanes.get_mut(&rank).unwrap();
+            lane.queue.push_back((generation, Box::new(f)));
+            if let Some(g) = generation {
+                *lane.gen_queued.entry(g).or_insert(0) += 1;
+            }
             st.submitted += 1;
             st.queued += 1;
             st.peak_queued = st.peak_queued.max(st.queued);
         }
         self.pump();
+    }
+
+    /// Drain barrier: block until none of `rank`'s branches tagged with
+    /// `generation` are queued or in flight. Cross-epoch mode uses this
+    /// before sweeping a generation's store scratch, so the sweep can
+    /// never race a tail branch that still reads the old params.
+    /// Returns immediately for unknown lanes or already-drained
+    /// generations.
+    pub fn await_generation_drained(&self, rank: usize, generation: u64) {
+        let mut st = self.state.lock().unwrap();
+        while st
+            .lanes
+            .get(&rank)
+            .map(|lane| lane.generation_live(generation))
+            .unwrap_or(0)
+            > 0
+        {
+            st = self.drained.wait(st).unwrap();
+        }
+    }
+
+    /// Branches of `(rank, generation)` still queued or in flight.
+    pub fn generation_live(&self, rank: usize, generation: u64) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .lanes
+            .get(&rank)
+            .map(|lane| lane.generation_live(generation))
+            .unwrap_or(0)
     }
 
     /// Admit a branch and get a handle for its result (panics surface as
@@ -246,7 +367,7 @@ impl BranchScheduler {
     /// Release every eligible queued branch to the pool.
     fn pump(&self) {
         loop {
-            let (rank, job) = {
+            let (rank, generation, job) = {
                 let mut st = self.state.lock().unwrap();
                 if st.paused {
                     return;
@@ -261,20 +382,39 @@ impl BranchScheduler {
             // the wrapper, and result delivery (if any) inside `job`
             drop(self.executor.submit(move || {
                 let _ = catch_unwind(AssertUnwindSafe(job));
-                sched.complete(rank);
+                sched.complete(rank, generation);
             }));
         }
     }
 
-    fn complete(&self, rank: usize) {
+    fn complete(&self, rank: usize, generation: Option<u64>) {
         {
             let mut st = self.state.lock().unwrap();
             if let Some(lane) = st.lanes.get_mut(&rank) {
                 lane.in_flight -= 1;
+                if let Some(g) = generation {
+                    if let Some(c) = lane.gen_inflight.get_mut(&g) {
+                        *c -= 1;
+                        if *c == 0 {
+                            lane.gen_inflight.remove(&g);
+                        }
+                    }
+                }
             }
             st.in_flight_total -= 1;
             st.completed += 1;
+            if let Some(g) = generation {
+                if let Some(c) = st.inflight_gens.get_mut(&g) {
+                    *c -= 1;
+                    if *c == 0 {
+                        st.inflight_gens.remove(&g);
+                    }
+                }
+            }
         }
+        // wake any drain barrier, then hand the freed slot to the next
+        // eligible branch
+        self.drained.notify_all();
         self.pump();
     }
 
@@ -288,6 +428,8 @@ impl BranchScheduler {
             in_flight: st.in_flight_total,
             peak_in_flight: st.peak_in_flight,
             per_peer_served: st.lanes.iter().map(|(&r, l)| (r, l.served)).collect(),
+            inflight_generations: st.inflight_gens.len(),
+            peak_inflight_generations: st.peak_inflight_gens,
             exec_threads: self.executor.threads(),
             exec_peak_busy: self.executor.peak_busy(),
         }
@@ -395,7 +537,11 @@ impl MapCollector {
     }
 }
 
-type Landing = (usize, (Result<Invocation>, u32));
+/// One branch landing: index, the moment the worker finished it (so the
+/// measured wall ends at the last landing even when the caller collects
+/// much later — cross-epoch mode drains the channel only after the
+/// inter-epoch coordination gap), and the invocation outcome.
+type Landing = (usize, Instant, (Result<Invocation>, u32));
 
 /// A streaming Map state over the [`BranchScheduler`]: submit branch
 /// payloads as their inputs become ready, consume outputs (in branch
@@ -414,10 +560,15 @@ pub struct PipelinedMap {
     first_wave: usize,
     warm: usize,
     submitted: usize,
+    /// Generation tag stamped on every scheduler submission (the epoch
+    /// / param version in cross-epoch mode; None = untagged).
+    generation: Option<u64>,
     tx: Sender<Landing>,
     rx: Receiver<Landing>,
     collector: MapCollector,
     t0: Instant,
+    /// Latest branch-landing instant seen so far (drives measured_wall).
+    last_landing: Option<Instant>,
     finished: bool,
 }
 
@@ -448,12 +599,25 @@ impl PipelinedMap {
             first_wave,
             warm,
             submitted: 0,
+            generation: None,
             tx,
             rx,
             collector: MapCollector::new(concurrency),
             t0: Instant::now(),
+            last_landing: None,
             finished: false,
         })
+    }
+
+    /// Tag every branch of this fan-out with `generation` (the epoch /
+    /// param version). Must be set before the first [`Self::submit`];
+    /// the scheduler then tracks this fan-out's queue/in-flight
+    /// occupancy per generation, which is what makes cross-epoch
+    /// overlap observable and drainable.
+    pub fn with_generation(mut self, generation: u64) -> Self {
+        assert_eq!(self.submitted, 0, "set the generation before submitting");
+        self.generation = Some(generation);
+        self
     }
 
     /// Branches submitted so far.
@@ -473,7 +637,7 @@ impl PipelinedMap {
         let function = self.function.clone();
         let retry = self.retry;
         let tx = self.tx.clone();
-        self.scheduler.submit_detached(self.peer, move || {
+        self.scheduler.submit_detached_tagged(self.peer, self.generation, move || {
             let out = catch_unwind(AssertUnwindSafe(|| {
                 invoke_with_retry(&platform, &function, &payload, modeled, Some(cold), retry)
             }))
@@ -487,14 +651,24 @@ impl PipelinedMap {
                 )
             });
             // receiver gone = the fan-out was abandoned mid-epoch
-            let _ = tx.send((i, out));
+            let _ = tx.send((i, Instant::now(), out));
         });
+    }
+
+    /// Record one landing into the collector, advancing the last-landing
+    /// clock.
+    fn land(&mut self, i: usize, at: Instant, out: (Result<Invocation>, u32)) {
+        self.last_landing = Some(match self.last_landing {
+            Some(t) => t.max(at),
+            None => at,
+        });
+        self.collector.push(i, out);
     }
 
     /// Non-blocking: the next in-order output if it already landed.
     pub fn poll_output(&mut self) -> Option<(usize, Bytes)> {
-        while let Ok((i, out)) = self.rx.try_recv() {
-            self.collector.push(i, out);
+        while let Ok((i, at, out)) = self.rx.try_recv() {
+            self.land(i, at, out);
         }
         self.collector.pop_ready()
     }
@@ -510,7 +684,7 @@ impl PipelinedMap {
                 return None;
             }
             match self.rx.recv() {
-                Ok((i, out)) => self.collector.push(i, out),
+                Ok((i, at, out)) => self.land(i, at, out),
                 Err(_) => return None,
             }
         }
@@ -518,19 +692,25 @@ impl PipelinedMap {
 
     /// Wait for all outstanding branches, release the warm wave, and
     /// produce the aggregate report. `measured_wall` spans from
-    /// construction to the last landing — the true pipelined epoch time,
-    /// uploads and collection included.
+    /// construction to the *last branch landing* — the true pipelined
+    /// epoch time, uploads and collection included, but not any idle
+    /// gap between the landing and a late `finish()` call (cross-epoch
+    /// collection happens after the inter-epoch coordination wait, and
+    /// that wait must not inflate the epoch's measured wall).
     pub fn finish(mut self) -> Result<ExecutionReport> {
         while self.collector.landed() < self.submitted {
             match self.rx.recv() {
-                Ok((i, out)) => self.collector.push(i, out),
+                Ok((i, at, out)) => self.land(i, at, out),
                 Err(_) => break,
             }
         }
         self.platform
             .release_environments(&self.function, self.first_wave);
         self.finished = true;
-        let measured = self.t0.elapsed();
+        let measured = self
+            .last_landing
+            .map(|t| t.duration_since(self.t0))
+            .unwrap_or_default();
         let mut report = std::mem::take(&mut self.collector).finish()?;
         report.measured_wall = measured;
         Ok(report)
@@ -636,6 +816,81 @@ mod tests {
         sched.resume();
         let got: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn generation_drain_barrier_waits_for_tail() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        sched.register_peer(0, 4);
+        // nothing submitted: an unknown generation is already drained
+        sched.await_generation_drained(0, 7);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let done = done.clone();
+            sched.submit_detached_tagged(0, Some(7), move || {
+                std::thread::sleep(Duration::from_millis(5));
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert!(sched.generation_live(0, 7) > 0);
+        sched.await_generation_drained(0, 7);
+        assert_eq!(done.load(Ordering::SeqCst), 4, "barrier released early");
+        assert_eq!(sched.generation_live(0, 7), 0);
+        // unknown lane: immediate return, no panic
+        sched.await_generation_drained(99, 7);
+    }
+
+    #[test]
+    fn overlapping_generations_are_counted() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(4)), true);
+        sched.register_peer(0, 4);
+        sched.register_peer(1, 4);
+        // peer 0 runs generation 1 branches while peer 1 runs
+        // generation 2 — the cross-epoch boundary shape
+        let mut handles = Vec::new();
+        for (rank, gen) in [(0usize, 1u64), (1, 2)] {
+            for _ in 0..3 {
+                let (tx, handle) = JobHandle::<()>::channel();
+                sched.submit_detached_tagged(rank, Some(gen), move || {
+                    std::thread::sleep(Duration::from_millis(10));
+                    let _ = tx.send(Ok(()));
+                });
+                handles.push(handle);
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        await_completed(&sched, 6);
+        let s = sched.stats();
+        assert_eq!(s.peak_inflight_generations, 2, "both epochs must overlap");
+        assert_eq!(s.inflight_generations, 0, "everything drained");
+    }
+
+    #[test]
+    fn pipelined_map_generation_tags_reach_the_scheduler() {
+        let p = platform_with("grad", echo());
+        let sched = BranchScheduler::new(Arc::new(Executor::new(1)), true);
+        sched.pause();
+        let mut pipe = PipelinedMap::new(
+            sched.clone(),
+            p,
+            0,
+            "grad",
+            2,
+            8,
+            RetryPolicy::default(),
+        )
+        .unwrap()
+        .with_generation(5);
+        pipe.submit(Bytes::from_static(b"a"), None);
+        pipe.submit(Bytes::from_static(b"b"), None);
+        assert_eq!(sched.generation_live(0, 5), 2, "queued branches are tagged");
+        sched.resume();
+        while pipe.next_output().is_some() {}
+        pipe.finish().unwrap();
+        sched.await_generation_drained(0, 5);
+        assert_eq!(sched.stats().peak_inflight_generations, 1);
     }
 
     #[test]

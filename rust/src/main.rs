@@ -41,11 +41,18 @@ TRAIN OPTIONS:
     --lambda-concurrency N   per-peer in-flight branch cap: scheduler
                              admission limit (pipelined) / Map wave
                              size (staged); default 64
-    --offload-mode M         staged | pipelined (default pipelined):
-                             staged uploads everything then fans out;
-                             pipelined streams each batch through the
-                             cluster scheduler as its upload lands.
-                             Modeled walls are byte-identical either way
+    --offload-mode M         staged | pipelined | cross-epoch (default
+                             pipelined): staged uploads everything then
+                             fans out; pipelined streams each batch
+                             through the cluster scheduler as its upload
+                             lands; cross-epoch additionally dispatches
+                             epoch e+1 before epoch e's barrier/verdict
+                             wait so the pool never drains at the epoch
+                             boundary. Modeled walls are byte-identical
+                             in all three modes
+    --pipeline-depth N       cross-epoch in-flight epoch window
+                             (default 2; 1 disables the pre-dispatch;
+                             >2 is reserved for stale-tolerant modes)
     --sched-fair B           true | false (default true): round-robin
                              branch dispatch across peers vs the greedy
                              lowest-rank-first baseline
@@ -173,6 +180,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.flags.get("offload-mode") {
         cfg.offload_mode = OffloadMode::parse(v)?;
     }
+    if let Some(v) = parse_num(args, "pipeline-depth")? {
+        cfg.pipeline_depth = v;
+    }
     if let Some(v) = parse_bool(args, "sched-fair")? {
         cfg.sched_fair = v;
     }
@@ -275,6 +285,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             c("store.decode_misses"),
             report.store_objects,
         );
+        if report.config.offload_mode == OffloadMode::CrossEpoch {
+            println!(
+                "cross-epoch: {} epochs pre-dispatched, {:.1} ms total overlap window, \
+                 peak {} generations in flight, {} stale publishes suppressed",
+                c("offload.predispatched_epochs"),
+                c("offload.overlap_wall_us") as f64 / 1e3,
+                c("sched.peak_inflight_generations"),
+                c("broker.stale_drops"),
+            );
+        }
     }
     println!("wall: {:?}", report.wall);
     Ok(())

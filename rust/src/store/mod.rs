@@ -11,14 +11,46 @@
 //! (params, parked gradients). [`ObjectStore::sweep_generation`] reclaims
 //! exactly one generation, so the per-epoch sweep cannot eat the
 //! persistent batch objects — and the tag doubles as the param-version
-//! id for cross-epoch pipelining.
+//! id the cross-epoch offload mode keys its folds on. Under cross-epoch
+//! pipelining the sweep *lags* one live generation: params v(e) stay in
+//! the store while epoch e+1 is in flight, so a stale-tolerant tail
+//! branch of epoch e can always re-read them.
 //!
 //! [`DecodedCache`] sits next to the store and memoizes the
 //! object-bytes → `Vec<f32>` decode of hot objects (the params object
 //! every branch of an epoch reads), with a per-key in-flight guard so N
-//! concurrent branches decode once, not N times.
+//! concurrent branches decode once, not N times. Live params versions
+//! are **pinned** ([`DecodedCache::pin`]) while their epoch is in
+//! flight: FIFO eviction skips pinned entries, so a small cache shared
+//! by many peers (or by two overlapping epochs) can never evict a
+//! params version that tail branches still need.
+//!
+//! ```
+//! use p2pless::store::{DecodedCache, ObjectStore, GEN_PERSISTENT};
+//! use p2pless::util::Bytes;
+//!
+//! let store = ObjectStore::new();
+//! store.create_bucket("peer-0-batches");
+//! // a run-long batch object and one epoch's scratch params
+//! let batch = store.put_new("peer-0-batches", Bytes::from_static(b"batch")).unwrap();
+//! let params = store
+//!     .put_new_gen("peer-0-batches", Bytes::from_static(b"\x00\x00\x80\x3f"), 1)
+//!     .unwrap();
+//! assert_eq!(store.generation_of(&batch), Some(GEN_PERSISTENT));
+//!
+//! // the decode cache turns N reads of the params into one decode
+//! let cache = DecodedCache::new(4);
+//! let v1 = cache.get_or_decode(&params, &store).unwrap();
+//! let v2 = cache.get_or_decode(&params, &store).unwrap();
+//! assert_eq!(v1, v2);
+//! assert_eq!((cache.misses(), cache.hits()), (1, 1));
+//!
+//! // the epoch-1 sweep reclaims the scratch, never the batch objects
+//! assert_eq!(store.sweep_generation("peer-0-batches", 1), 1);
+//! assert!(store.get_ref(&batch).is_ok());
+//! ```
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -315,6 +347,10 @@ struct DecodedCacheState {
     /// Insertion order for FIFO eviction (epoch params objects arrive
     /// one per epoch; old epochs' entries age out naturally).
     order: VecDeque<(String, String)>,
+    /// Keys exempt from eviction: the live params generations. FIFO
+    /// used to evict the previous epoch's params while tail branches
+    /// still needed it when `capacity` was small — pinning is the fix.
+    pinned: HashSet<(String, String)>,
 }
 
 /// Memoizes object-bytes → `Vec<f32>` decodes, keyed by (bucket, key).
@@ -324,7 +360,9 @@ struct DecodedCacheState {
 /// pays a store get plus a full f32 decode. With it, an epoch costs one
 /// miss and N-1 hits — guaranteed even under concurrent branches by the
 /// per-key in-flight guard. `capacity` bounds live entries (FIFO
-/// eviction); 0 disables caching entirely.
+/// eviction; pinned keys are skipped, so live params versions can
+/// temporarily push residency past `capacity` rather than be evicted
+/// mid-epoch); 0 disables caching entirely.
 pub struct DecodedCache {
     capacity: usize,
     state: Mutex<DecodedCacheState>,
@@ -339,6 +377,7 @@ impl DecodedCache {
             state: Mutex::new(DecodedCacheState {
                 slots: HashMap::new(),
                 order: VecDeque::new(),
+                pinned: HashSet::new(),
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -360,8 +399,16 @@ impl DecodedCache {
                 Some(s) => s.clone(),
                 None => {
                     while st.order.len() >= self.capacity {
-                        let old = st.order.pop_front().unwrap();
-                        st.slots.remove(&old);
+                        // evict the oldest *unpinned* entry; if every
+                        // resident entry is pinned (live generations),
+                        // admit over capacity instead of evicting one
+                        match st.order.iter().position(|k| !st.pinned.contains(k)) {
+                            Some(pos) => {
+                                let old = st.order.remove(pos).unwrap();
+                                st.slots.remove(&old);
+                            }
+                            None => break,
+                        }
                     }
                     let s = Arc::new(DecodeSlot { value: Mutex::new(None) });
                     st.slots.insert(key.clone(), s.clone());
@@ -381,10 +428,40 @@ impl DecodedCache {
         Ok(decoded)
     }
 
+    /// Exempt `r`'s entry from FIFO eviction while its generation is
+    /// live (in-flight or lagged, in cross-epoch mode). Pinning a key
+    /// that is not cached yet is fine — the pin takes effect when the
+    /// first branch decodes it. No-op when caching is disabled.
+    pub fn pin(&self, r: &ObjectRef) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.pinned.insert((r.bucket.clone(), r.key.clone()));
+    }
+
+    /// Make `r`'s entry evictable again while keeping it resident (a
+    /// later insert evicts it in FIFO order). The offload retirement
+    /// path doesn't need this — [`Self::invalidate`] drops the entry
+    /// *and* its pin in one step — but a caller that wants a formerly
+    /// live generation to age out naturally instead of being dropped
+    /// uses unpin.
+    pub fn unpin(&self, r: &ObjectRef) {
+        let mut st = self.state.lock().unwrap();
+        st.pinned.remove(&(r.bucket.clone(), r.key.clone()));
+    }
+
+    /// Keys currently pinned (live params generations).
+    pub fn pinned_len(&self) -> usize {
+        self.state.lock().unwrap().pinned.len()
+    }
+
     /// Drop `r`'s entry (the object was swept; the key is never reused).
+    /// Clears any pin — a swept generation must not keep a ghost pin.
     pub fn invalidate(&self, r: &ObjectRef) {
         let mut st = self.state.lock().unwrap();
         let key = (r.bucket.clone(), r.key.clone());
+        st.pinned.remove(&key);
         if st.slots.remove(&key).is_some() {
             st.order.retain(|k| k != &key);
         }
@@ -584,6 +661,55 @@ mod tests {
         c.get_or_decode(&refs[0], &s).unwrap(); // re-decoded
         assert_eq!(c.misses(), 4);
         assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn decoded_cache_pin_survives_eviction() {
+        // regression: with a small capacity, inserting the next epoch's
+        // params used to evict the previous epoch's entry while tail
+        // branches still needed it — pinned entries must survive FIFO
+        let s = ObjectStore::new();
+        let refs: Vec<ObjectRef> = (0..3)
+            .map(|i| s.put_new("b", Bytes::from(f32s_to_bytes(&[i as f32]))).unwrap())
+            .collect();
+        let c = DecodedCache::new(1);
+        c.pin(&refs[0]);
+        c.get_or_decode(&refs[0], &s).unwrap();
+        // a new insert cannot evict the pinned live generation: the
+        // cache admits over capacity instead
+        c.get_or_decode(&refs[1], &s).unwrap();
+        assert_eq!(c.len(), 2);
+        c.get_or_decode(&refs[0], &s).unwrap();
+        assert_eq!(c.hits(), 1, "pinned entry must still be resident");
+        assert_eq!(c.misses(), 2);
+        // unpinned, it ages out in FIFO order like any other entry
+        c.unpin(&refs[0]);
+        assert_eq!(c.pinned_len(), 0);
+        c.get_or_decode(&refs[2], &s).unwrap();
+        c.get_or_decode(&refs[0], &s).unwrap();
+        assert_eq!(c.misses(), 4, "unpinned entry was evicted and re-decoded");
+    }
+
+    #[test]
+    fn decoded_cache_pin_before_first_decode_and_invalidate_clears_pin() {
+        let s = ObjectStore::new();
+        let a = s.put_new("b", Bytes::from(f32s_to_bytes(&[1.0]))).unwrap();
+        let b = s.put_new("b", Bytes::from(f32s_to_bytes(&[2.0]))).unwrap();
+        let c = DecodedCache::new(1);
+        // pinning an uncached key marks it ahead of the first decode
+        c.pin(&a);
+        assert_eq!(c.pinned_len(), 1);
+        c.get_or_decode(&a, &s).unwrap();
+        c.get_or_decode(&b, &s).unwrap();
+        assert_eq!(*c.get_or_decode(&a, &s).unwrap(), vec![1.0]);
+        assert_eq!(c.hits(), 1);
+        // invalidate (the sweep path) drops both the entry and the pin
+        c.invalidate(&a);
+        assert_eq!(c.pinned_len(), 0);
+        // disabled cache: pin is a no-op, nothing is retained
+        let off = DecodedCache::new(0);
+        off.pin(&a);
+        assert_eq!(off.pinned_len(), 0);
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! Cross-epoch pipelining, end to end:
+//!
+//! - modeled determinism: a multi-epoch cross-epoch dispatch sequence
+//!   produces wall/billed/cost/cold-start numbers byte-identical to the
+//!   staged `StateMachine` reference at pipeline depths 1/2 and thread
+//!   counts 1/2/8 (the acceptance bar for paper tables);
+//! - generation-keyed folds: the per-epoch f64 gradient folds are
+//!   bit-identical to a sequential reference no matter the mode, depth
+//!   or pool size — overlapping epochs never mix param versions;
+//! - boundary overlap: with a simulated inter-epoch coordination gap,
+//!   the cross-epoch dispatch order beats the pipelined order on
+//!   measured wall (the pool keeps executing across the boundary);
+//! - cluster acceptance (real PJRT, artifact-gated): cross-epoch runs
+//!   match staged validation curves, pre-dispatch counters fire, the
+//!   sweep lag keeps the store bounded and empty at teardown.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use p2pless::config::{Backend, OffloadMode, TrainConfig};
+use p2pless::coordinator::{Cluster, GradAccumulator};
+use p2pless::faas::{
+    BranchScheduler, Executor, FaasPlatform, FunctionSpec, Handler, PipelinedMap,
+    RetryPolicy, StateMachine,
+};
+use p2pless::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+use p2pless::util::Bytes;
+
+const GRAD_DIM: usize = 16;
+
+/// Deterministic pseudo-gradient for (generation, branch index): what a
+/// gradient Lambda would compute from params v(gen) on batch idx.
+fn pseudo_grad(generation: u64, idx: usize) -> Vec<f32> {
+    (0..GRAD_DIM)
+        .map(|k| {
+            let x = generation.wrapping_mul(31) + (idx as u64) * 7 + k as u64;
+            (x as f32) * 0.001953125 - 0.5
+        })
+        .collect()
+}
+
+/// Branch payload: `[u64 generation][u32 idx]`, little endian.
+fn grad_payload(generation: u64, idx: usize) -> Bytes {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(&generation.to_le_bytes());
+    out.extend_from_slice(&(idx as u32).to_le_bytes());
+    Bytes::from(out)
+}
+
+/// Handler computing [`pseudo_grad`] from the payload tags.
+fn grad_handler() -> Handler {
+    Arc::new(|b: &Bytes| {
+        assert_eq!(b.len(), 12, "payload is [gen u64][idx u32]");
+        let generation = u64::from_le_bytes(b[0..8].try_into().unwrap());
+        let idx = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+        Ok(Bytes::from(f32s_to_bytes(&pseudo_grad(generation, idx))))
+    })
+}
+
+fn platform(cold_ms: u64, handler: Handler) -> Arc<FaasPlatform> {
+    let p = Arc::new(FaasPlatform::new(Duration::from_millis(cold_ms)));
+    p.register(FunctionSpec::new("grad", 1024, handler)).unwrap();
+    p
+}
+
+/// Per-epoch modeled branch durations (vary by epoch and branch so an
+/// aggregation mix-up cannot cancel out).
+fn modeled(epoch: usize, n: usize) -> Vec<Option<Duration>> {
+    (0..n)
+        .map(|i| Some(Duration::from_millis(700 + 13 * epoch as u64 + 7 * i as u64)))
+        .collect()
+}
+
+type Modeled = (Duration, Duration, u64, usize, usize);
+/// One epoch's outcome: modeled fingerprint + folded mean bit pattern.
+type EpochOutcome = (Modeled, Vec<u32>);
+
+fn fingerprint(r: &p2pless::faas::ExecutionReport) -> Modeled {
+    (r.wall, r.billed, r.cost_usd.to_bits(), r.invocations, r.cold_starts)
+}
+
+/// The staged reference: one fresh platform, `epochs` sequential Map
+/// states. Returns per-epoch modeled fingerprints + per-epoch folded
+/// mean bit patterns.
+fn staged_reference(epochs: usize, n: usize, concurrency: usize) -> Vec<EpochOutcome> {
+    let p = platform(2500, grad_handler());
+    let pool = Executor::new(1);
+    let mut out = Vec::new();
+    for epoch in 1..=epochs {
+        let generation = epoch as u64;
+        let items: Vec<Bytes> = (0..n).map(|i| grad_payload(generation, i)).collect();
+        let sm = StateMachine::parallel_batches(
+            "ref",
+            "grad",
+            items,
+            modeled(epoch, n),
+            concurrency,
+        );
+        let r = sm.execute_with(&p, &pool).unwrap();
+        let mut acc = GradAccumulator::new();
+        for branch in &r.outputs[0] {
+            acc.add(&bytes_to_f32s(branch)).unwrap();
+        }
+        let mean: Vec<u32> = acc.mean().unwrap().iter().map(|v| v.to_bits()).collect();
+        out.push((fingerprint(&r), mean));
+    }
+    out
+}
+
+/// The cross-epoch shape: keep up to `depth` epochs in flight, always
+/// dispatching epoch e+1 after collecting epoch e (the synchronous
+/// peer's order), with an optional coordination gap after dispatch.
+fn cross_epoch_run(
+    epochs: usize,
+    n: usize,
+    concurrency: usize,
+    threads: usize,
+    depth: usize,
+    coord: Duration,
+) -> Vec<EpochOutcome> {
+    let p = platform(2500, grad_handler());
+    let sched = BranchScheduler::new(Arc::new(Executor::new(threads)), true);
+    let dispatch = |epoch: usize| {
+        let generation = epoch as u64;
+        let mut pipe = PipelinedMap::new(
+            sched.clone(),
+            p.clone(),
+            0,
+            "grad",
+            n,
+            concurrency,
+            RetryPolicy::default(),
+        )
+        .unwrap()
+        .with_generation(generation);
+        for (i, m) in modeled(epoch, n).into_iter().enumerate() {
+            pipe.submit(grad_payload(generation, i), m);
+        }
+        pipe
+    };
+    let collect = |mut pipe: PipelinedMap| {
+        let mut acc = GradAccumulator::new();
+        while let Some((_, branch)) = pipe.next_output() {
+            acc.add(&bytes_to_f32s(&branch)).unwrap();
+        }
+        let r = pipe.finish().unwrap();
+        let mean: Vec<u32> = acc.mean().unwrap().iter().map(|v| v.to_bits()).collect();
+        (fingerprint(&r), mean)
+    };
+    let mut out = Vec::new();
+    if depth >= 2 {
+        // the synchronous peer's order: collect(e) → dispatch(e+1) →
+        // coordination gap (eval/barrier) overlapping e+1's execution
+        let mut pending = Some(dispatch(1));
+        for epoch in 1..=epochs {
+            if !coord.is_zero() {
+                std::thread::sleep(coord);
+            }
+            out.push(collect(pending.take().unwrap()));
+            if epoch < epochs {
+                pending = Some(dispatch(epoch + 1));
+            }
+        }
+    } else {
+        for epoch in 1..=epochs {
+            let pipe = dispatch(epoch);
+            if !coord.is_zero() {
+                std::thread::sleep(coord);
+            }
+            out.push(collect(pipe));
+        }
+    }
+    out
+}
+
+/// Acceptance bar: modeled fingerprints and folded gradient bits from
+/// the cross-epoch dispatch order equal the staged reference at any
+/// depth/thread combination.
+#[test]
+fn cross_epoch_modeled_outputs_and_folds_match_staged() {
+    let (epochs, n, concurrency) = (3usize, 8usize, 4usize);
+    let reference = staged_reference(epochs, n, concurrency);
+    for depth in [1usize, 2] {
+        for threads in [1usize, 2, 8] {
+            let got = cross_epoch_run(epochs, n, concurrency, threads, depth, Duration::ZERO);
+            assert_eq!(got.len(), epochs);
+            for (e, (got_ep, want_ep)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    got_ep.0,
+                    want_ep.0,
+                    "modeled fingerprint diverged: depth {depth}, threads {threads}, \
+                     epoch {}",
+                    e + 1
+                );
+                assert_eq!(
+                    got_ep.1,
+                    want_ep.1,
+                    "gradient fold bits diverged: depth {depth}, threads {threads}, \
+                     epoch {}",
+                    e + 1
+                );
+            }
+        }
+    }
+}
+
+/// The folds stay generation-pure even when a coordination gap lets the
+/// pre-dispatched epoch race ahead on the pool while nothing collects.
+#[test]
+fn generation_keyed_folds_survive_boundary_overlap() {
+    let (epochs, n, concurrency) = (4usize, 6usize, 8usize);
+    let reference = staged_reference(epochs, n, concurrency);
+    let got = cross_epoch_run(
+        epochs,
+        n,
+        concurrency,
+        4,
+        2,
+        Duration::from_millis(20),
+    );
+    for ((got_m, got_bits), (want_m, want_bits)) in got.iter().zip(&reference) {
+        assert_eq!(got_m, want_m);
+        assert_eq!(got_bits, want_bits);
+    }
+}
+
+/// Boundary overlap acceptance: with a real coordination gap between
+/// epochs, the cross-epoch dispatch order (dispatch e+1 before the gap)
+/// must beat the pipelined order (pool idle through the gap).
+#[test]
+fn cross_epoch_measured_wall_beats_pipelined_at_the_boundary() {
+    const EPOCHS: usize = 3;
+    const N: usize = 8;
+    const HANDLER_MS: u64 = 40;
+    const COORD_MS: u64 = 80;
+    let run = |cross: bool| {
+        let p = platform(0, sleepy(HANDLER_MS));
+        let sched = BranchScheduler::new(Arc::new(Executor::new(4)), true);
+        let dispatch = |epoch: usize| {
+            let mut pipe = PipelinedMap::new(
+                sched.clone(),
+                p.clone(),
+                0,
+                "grad",
+                N,
+                64,
+                RetryPolicy::default(),
+            )
+            .unwrap()
+            .with_generation(epoch as u64);
+            for i in 0..N {
+                pipe.submit(grad_payload(epoch as u64, i), None);
+            }
+            pipe
+        };
+        let collect = |mut pipe: PipelinedMap| {
+            while pipe.next_output().is_some() {}
+            pipe.finish().unwrap();
+        };
+        let t0 = Instant::now();
+        if cross {
+            let mut pending = dispatch(1);
+            for epoch in 1..=EPOCHS {
+                std::thread::sleep(Duration::from_millis(COORD_MS));
+                collect(pending);
+                pending = dispatch(epoch + 1);
+            }
+            collect(pending);
+        } else {
+            for epoch in 1..=EPOCHS + 1 {
+                collect(dispatch(epoch));
+                if epoch <= EPOCHS {
+                    std::thread::sleep(Duration::from_millis(COORD_MS));
+                }
+            }
+        }
+        t0.elapsed()
+    };
+    let pipelined = run(false);
+    let cross = run(true);
+    // pipelined pays the full gap (pool idle); cross-epoch hides the
+    // epoch execution behind it. Sleeps don't contend for cores, so a
+    // 15% margin is comfortably stable.
+    assert!(
+        cross < pipelined.mul_f64(0.85),
+        "cross-epoch {cross:?} did not beat pipelined {pipelined:?} at the boundary"
+    );
+}
+
+fn sleepy(ms: u64) -> Handler {
+    Arc::new(move |b: &Bytes| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(b.clone())
+    })
+}
+
+// -------------------------------------------------------------- cluster
+
+fn serverless_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 3,
+        lr: 0.05,
+        train_samples: 2 * 16 * 3, // 3 full batches per peer, no remainder
+        val_samples: 64,
+        backend: Backend::Serverless,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+/// Cross-epoch training must reproduce the staged validation curve at
+/// any pipeline depth — the generation-keyed folds make the math
+/// independent of the dispatch overlap.
+#[test]
+fn cross_epoch_val_curve_matches_staged_at_depths_1_and_2() {
+    require_artifacts!();
+    let run = |mode: OffloadMode, depth: usize| {
+        let cfg = TrainConfig {
+            offload_mode: mode,
+            pipeline_depth: depth,
+            ..serverless_cfg()
+        };
+        Cluster::with_engine(cfg, common::engine())
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let staged = run(OffloadMode::Staged, 2);
+    for depth in [1usize, 2] {
+        let cross = run(OffloadMode::CrossEpoch, depth);
+        assert_eq!(staged.val_curve.len(), cross.val_curve.len());
+        for ((e1, l1, a1), (e2, l2, a2)) in staged.val_curve.iter().zip(&cross.val_curve) {
+            assert_eq!(e1, e2);
+            assert!(
+                (l1 - l2).abs() < 1e-6,
+                "staged {l1} vs cross-epoch {l2} at depth {depth}"
+            );
+            assert!((a1 - a2).abs() < 1e-6);
+        }
+        assert_eq!(staged.lambda_invocations, cross.lambda_invocations);
+        // the sweep lag still leaves nothing behind at teardown
+        assert_eq!(cross.store_objects, 0, "depth {depth} leaked store objects");
+        // no out-of-order gradient publish ever fired
+        assert_eq!(cross.counter("broker.stale_drops"), Some(0));
+    }
+}
+
+/// The pre-dispatch actually fires: every epoch but the last is
+/// dispatched ahead of the boundary on every peer, the overlap window
+/// is measured, and both generations coexist on the scheduler.
+#[test]
+fn cross_epoch_predispatches_and_overlaps_generations() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        offload_mode: OffloadMode::CrossEpoch,
+        ..serverless_cfg()
+    };
+    let (peers, epochs) = (cfg.peers, cfg.epochs);
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        rep.counter("offload.predispatched_epochs"),
+        Some((peers * (epochs - 1)) as u64),
+        "every epoch but the first (never speculative) and last must pre-dispatch"
+    );
+    assert!(
+        rep.counter("offload.overlap_wall_us").unwrap_or(0) > 0,
+        "pre-dispatched epochs must report a non-zero overlap window"
+    );
+    let peak = rep.counter("sched.peak_inflight_generations").unwrap_or(0);
+    assert!(
+        (1..=2).contains(&peak),
+        "peak in-flight generations {peak} out of the synchronous window"
+    );
+    assert_eq!(rep.store_objects, 0);
+}
+
+/// Depth 1 disables the pre-dispatch but keeps cross-epoch collection
+/// and the lagged sweep working.
+#[test]
+fn cross_epoch_depth_1_never_predispatches() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        offload_mode: OffloadMode::CrossEpoch,
+        pipeline_depth: 1,
+        epochs: 2,
+        ..serverless_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.counter("offload.predispatched_epochs"), Some(0));
+    assert_eq!(rep.store_objects, 0);
+    assert!(rep.mean_train_loss_last_epoch().unwrap().is_finite());
+}
+
+/// `--sweep-scratch false` composes with the lagged sweep: nothing is
+/// reclaimed, so the scratch of every epoch survives to teardown.
+#[test]
+fn cross_epoch_sweep_off_accumulates_scratch() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        offload_mode: OffloadMode::CrossEpoch,
+        sweep_scratch: false,
+        ..serverless_cfg()
+    };
+    let (peers, epochs, batches) = (cfg.peers, cfg.epochs, 3usize);
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    // teardown removes the persistent batch objects; the unswept
+    // scratch (params + parked gradients per peer per epoch) remains
+    assert_eq!(rep.store_objects, epochs * peers * (1 + batches));
+}
