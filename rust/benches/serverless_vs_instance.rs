@@ -10,21 +10,26 @@ use p2pless::faas::{
     BranchScheduler, Executor, FaasPlatform, FunctionSpec, Handler, PipelinedMap,
     RetryPolicy, StateMachine,
 };
+use p2pless::faas::Semaphore;
 use p2pless::harness::bench::{header, Bench};
 use p2pless::harness::cloud_exps::fig3_cell;
 use p2pless::perfmodel::PaperModel;
-use p2pless::runtime::{Engine, ModelRuntime};
+use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey, ModelRuntime};
 use p2pless::store::{DecodedCache, ObjectStore};
-use p2pless::util::Bytes;
+use p2pless::util::{Bytes, Json};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     header(
         "serverless_vs_instance",
         "modeled fig-3 cells + real worker-pool fan-out + real two-peer runs per backend",
     );
+    // CI sets BENCH_FUSED_ONLY to skip the sleep-driven synthetic
+    // sections and go straight to the fused-exec comparison + JSON
+    let fused_only = std::env::var_os("BENCH_FUSED_ONLY").is_some();
 
+    if !fused_only {
     // cost of evaluating a modeled cell (orchestration overhead itself)
     let mut b = Bench::new("modeled").with_samples(3, 10);
     for &(peers, batch) in &[(4usize, 64usize), (12, 1024)] {
@@ -182,6 +187,93 @@ fn main() {
             }
         });
     }
+    }
+
+    // fused micro-batched execution, synthetic: the real ExecBatcher
+    // grouping machinery under a serialized execution slot — the shape
+    // where per-dispatch overhead (slot round-trips, worker wakeups)
+    // dominates. Unbatched = every branch pays its own dispatch;
+    // batched = up to 8 branches ride one.
+    let fused_synth = {
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 32;
+        let run = |exec_batch: usize| {
+            let batcher =
+                Arc::new(ExecBatcher::new(exec_batch, Duration::from_micros(300)));
+            let sem = Arc::new(Semaphore::new(1));
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let batcher = batcher.clone();
+                    let sem = sem.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..PER_THREAD {
+                            let data: Vec<f32> =
+                                (0..64).map(|k| (t * 1000 + i + k) as f32).collect();
+                            let inputs =
+                                vec![literal_f32(&data, &[64]).unwrap()];
+                            let key = FuseKey {
+                                exe: 1,
+                                batch: 64,
+                                params: 0,
+                                version: 1,
+                            };
+                            batcher
+                                .run(key, inputs, &sem, |ins| {
+                                    let v = ins[0].to_vec::<f32>()?;
+                                    let s: f32 = v.iter().sum();
+                                    Ok(vec![literal_f32(&[s], &[1])?])
+                                })
+                                .unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            (t0.elapsed(), batcher.batched_execs(), batcher.fused_branches())
+        };
+        // warm-up, then best-of-3 per mode
+        let _ = run(1);
+        let best = |exec_batch: usize| {
+            (0..3).map(|_| run(exec_batch)).min_by_key(|r| r.0).unwrap()
+        };
+        let (un_wall, un_execs, _) = best(1);
+        let (fu_wall, fu_execs, fu_branches) = best(8);
+        println!(
+            "fused_exec(synthetic, slot=1): unbatched {un_wall:?} ({un_execs} \
+             dispatches) vs batched {fu_wall:?} ({fu_execs} dispatches for \
+             {fu_branches} branches)"
+        );
+        if fu_wall >= un_wall {
+            eprintln!(
+                "WARN fused_exec(synthetic): batched did not beat unbatched \
+                 ({fu_wall:?} vs {un_wall:?}) — perf trajectory regression"
+            );
+        }
+        let mut j = Json::obj();
+        j.set("threads", THREADS)
+            .set("branches", THREADS * PER_THREAD)
+            .set("exec_batch", 8usize)
+            .set("unbatched_wall_us", un_wall.as_micros() as u64)
+            .set("batched_wall_us", fu_wall.as_micros() as u64)
+            .set("unbatched_dispatches", un_execs)
+            .set("batched_dispatches", fu_execs)
+            .set("batched_faster", fu_wall < un_wall);
+        j
+    };
+    let write_fused_json = |synth: &Json, real: Option<Json>| {
+        let mut j = Json::obj();
+        j.set("bench", "fused_exec").set("synthetic", synth.clone());
+        match real {
+            Some(r) => j.set("real", r),
+            None => j.set("real_skipped", true),
+        };
+        if let Err(e) = std::fs::write("BENCH_fused_exec.json", j.to_string()) {
+            eprintln!("could not write BENCH_fused_exec.json: {e}");
+        }
+    };
 
     // real execution (needs artifacts)
     let dir = if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -190,6 +282,7 @@ fn main() {
         "../artifacts"
     } else {
         eprintln!("SKIP real backend bench: run `make artifacts`");
+        write_fused_json(&fused_synth, None);
         return;
     };
     let engine = Arc::new(Engine::new().unwrap());
@@ -305,4 +398,92 @@ fn main() {
         batches.len(),
         warm_puts,
     );
+
+    // fused micro-batched execution, real PJRT: an 8-branch single-peer
+    // run under a serialized execution slot, batched vs unbatched. The
+    // modeled numbers are byte-identical by contract; what moves is the
+    // measured fan-out wall (one fused dispatch per epoch instead of 8
+    // slot round-trips through 8 worker wakeups).
+    let real_fused = {
+        let epochs = 3usize;
+        let run = |exec_batch: usize| {
+            let cfg = TrainConfig {
+                peers: 1,
+                batch_size: 16,
+                epochs,
+                train_samples: 8 * 16, // 8 branches per epoch
+                val_samples: 64,
+                backend: Backend::Serverless,
+                exec_threads: 8,
+                exec_slots: 1,
+                exec_batch,
+                exec_batch_wait_us: 100_000,
+                artifacts_dir: dir.into(),
+                ..Default::default()
+            };
+            let engine = Arc::new(
+                Engine::with_exec_batching(1, exec_batch, Duration::from_micros(100_000))
+                    .unwrap(),
+            );
+            let warmup = Cluster::with_engine(cfg.clone(), engine.clone())
+                .unwrap()
+                .run()
+                .unwrap();
+            let mut best = warmup;
+            for _ in 0..2 {
+                let rep = Cluster::with_engine(cfg.clone(), engine.clone())
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                if rep.lambda_measured_wall < best.lambda_measured_wall {
+                    best = rep;
+                }
+            }
+            best
+        };
+        let unbatched = run(1);
+        let batched = run(8);
+        println!(
+            "fused_exec(real, 8 branches x {epochs} epochs, slot=1): measured fan-out \
+             wall {:?} unbatched vs {:?} batched ({} fused dispatches, {}% fill)",
+            unbatched.lambda_measured_wall,
+            batched.lambda_measured_wall,
+            batched.counter("engine.batched_execs").unwrap_or(0),
+            batched.counter("engine.batch_fill").unwrap_or(0),
+        );
+        if batched.lambda_measured_wall >= unbatched.lambda_measured_wall {
+            eprintln!(
+                "WARN fused_exec(real): batched did not beat unbatched ({:?} vs {:?}) \
+                 — perf trajectory regression",
+                batched.lambda_measured_wall, unbatched.lambda_measured_wall,
+            );
+        }
+        let mut j = Json::obj();
+        j.set("branches_per_epoch", 8usize)
+            .set("epochs", epochs)
+            .set("exec_slots", 1usize)
+            .set(
+                "unbatched_measured_wall_us",
+                unbatched.lambda_measured_wall.as_micros() as u64,
+            )
+            .set(
+                "batched_measured_wall_us",
+                batched.lambda_measured_wall.as_micros() as u64,
+            )
+            .set(
+                "batched_execs",
+                batched.counter("engine.batched_execs").unwrap_or(0),
+            )
+            .set(
+                "fused_branches",
+                batched.counter("engine.fused_branches").unwrap_or(0),
+            )
+            .set("batch_fill", batched.counter("engine.batch_fill").unwrap_or(0))
+            .set(
+                "batched_faster",
+                batched.lambda_measured_wall < unbatched.lambda_measured_wall,
+            );
+        j
+    };
+    write_fused_json(&fused_synth, Some(real_fused));
 }

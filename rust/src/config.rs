@@ -202,6 +202,17 @@ pub struct TrainConfig {
     /// Concurrent PJRT executions the engine allows (0 = machine size,
     /// 1 = fully serialized — the honest single-core timing mode).
     pub exec_slots: usize,
+    /// Fused-execution batch: up to this many concurrent gradient
+    /// branches holding the same executable + params version coalesce
+    /// into one engine dispatch (1 disables fusion). Fusion never
+    /// changes the math or the modeled accounting — only the measured
+    /// wall moves, shrinking when per-dispatch overhead dominates
+    /// (`exec_slots = 1`, many small branches) and costing intra-group
+    /// parallelism when slots are plentiful.
+    pub exec_batch: usize,
+    /// How long a fused-execution group collects members before
+    /// dispatching partially filled, in microseconds.
+    pub exec_batch_wait_us: u64,
     pub seed: u64,
     /// Where the AOT artifacts live.
     pub artifacts_dir: String,
@@ -235,6 +246,8 @@ impl Default for TrainConfig {
             sweep_scratch: true,
             exec_threads: 0,
             exec_slots: 0,
+            exec_batch: 1,
+            exec_batch_wait_us: 500,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             early_stop_patience: 0,
@@ -285,6 +298,10 @@ impl TrainConfig {
                 "sweep_scratch" => cfg.sweep_scratch = v.as_bool().ok_or_else(missing)?,
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
                 "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
+                "exec_batch" => cfg.exec_batch = v.as_usize().ok_or_else(missing)?,
+                "exec_batch_wait_us" => {
+                    cfg.exec_batch_wait_us = v.as_u64().ok_or_else(missing)?
+                }
                 "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
                 "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(missing)?.into(),
                 "early_stop_patience" => {
@@ -321,6 +338,8 @@ impl TrainConfig {
             .set("sweep_scratch", self.sweep_scratch)
             .set("exec_threads", self.exec_threads)
             .set("exec_slots", self.exec_slots)
+            .set("exec_batch", self.exec_batch)
+            .set("exec_batch_wait_us", self.exec_batch_wait_us)
             .set("seed", self.seed)
             .set("artifacts_dir", self.artifacts_dir.as_str())
             .set("early_stop_patience", self.early_stop_patience)
@@ -351,6 +370,11 @@ impl TrainConfig {
         }
         if self.pipeline_depth == 0 {
             return Err(Error::Config("pipeline_depth must be >= 1".into()));
+        }
+        if self.exec_batch == 0 {
+            return Err(Error::Config(
+                "exec_batch must be >= 1 (1 disables fusion)".into(),
+            ));
         }
         if let Compression::Qsgd { s } = self.compression {
             if s < 1 {
@@ -400,6 +424,24 @@ mod tests {
         // defaults are 0 = "size to the machine"
         assert_eq!(TrainConfig::default().exec_threads, 0);
         assert_eq!(TrainConfig::default().exec_slots, 0);
+    }
+
+    #[test]
+    fn exec_batch_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            exec_batch: 8,
+            exec_batch_wait_us: 250,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.exec_batch, 8);
+        assert_eq!(back.exec_batch_wait_us, 250);
+        // defaults: fusion off, a half-millisecond collect window
+        assert_eq!(TrainConfig::default().exec_batch, 1);
+        assert_eq!(TrainConfig::default().exec_batch_wait_us, 500);
+        // a zero batch can hold no branch at all — config error
+        let bad = TrainConfig { exec_batch: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

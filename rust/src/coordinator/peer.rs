@@ -386,14 +386,13 @@ impl Peer {
             }
             Ok(())
         })();
-        // cross-epoch teardown: drain any abandoned in-flight epoch and
-        // sweep the lagged generations — on success *and* on failure,
-        // matching the sweep-on-every-exit-path contract of the
-        // staged/pipelined modes
+        // offload teardown, every mode: drain any abandoned in-flight
+        // epoch (cross-epoch), sweep lagged generations, and release
+        // the one-epoch-late shared-params reference staged/pipelined
+        // epochs park — on success *and* on failure, so the store ends
+        // empty on every exit path
         if let GradBackend::Serverless(offload) = &self.backend {
-            if offload.mode() == OffloadMode::CrossEpoch {
-                offload.finish_run();
-            }
+            offload.finish_run();
         }
         epochs_outcome?;
         Ok(report)

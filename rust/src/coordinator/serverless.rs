@@ -6,22 +6,35 @@
 //! 1. the peer uploads its pre-processed, **pre-batched** data partition
 //!    to S3 *once, before training* ([`ServerlessOffload::upload_batches`]);
 //!    every epoch re-reads the same batch objects, so a steady-state
-//!    epoch uploads exactly one object — the current params;
+//!    epoch uploads exactly one object — the current params. That upload
+//!    is content-deduplicated through the shared [`PARAMS_BUCKET`]:
+//!    synchronous peers produce identical params bytes every epoch, so
+//!    the *cluster* stores one params object per epoch and each peer
+//!    merely holds a reference (released when its generation retires);
 //! 2. a state machine is generated *from the batch count* — one Map
 //!    branch per batch;
 //! 3. each Lambda pulls its batch + params from S3 (the params decode is
-//!    memoized in a [`DecodedCache`], so N branches decode once), computes
-//!    the gradient with the AOT PJRT executable (the same artifact the
-//!    instance path runs), parks the gradient in S3 and returns its
-//!    UUID + loss;
+//!    memoized in a [`DecodedCache`], so N branches decode once — and the
+//!    batch object's input literals are checked out of the cache's packed
+//!    sidecar, so they are packed once per object, not once per branch),
+//!    computes the gradient with the AOT PJRT executable (the same
+//!    artifact the instance path runs) — routed through the engine's
+//!    execution batcher, so concurrent branches of the same params
+//!    version fuse into one engine dispatch — parks the gradient in S3
+//!    and returns its UUID + loss;
 //! 4. the peer collects and averages the per-batch gradients.
 //!
-//! Per-epoch scratch (the params object, the parked gradients) is tagged
-//! with the epoch's **generation** and reclaimed by a generation-scoped
-//! sweep after the fan-out — success or failure — while the persistent
-//! batch objects survive for the next epoch. The generation rides inside
-//! every branch payload, doubling as the param-version tag cross-epoch
-//! pipelining will key on.
+//! Per-epoch scratch is tagged with the epoch's **generation**: the
+//! peer's parked gradients are reclaimed by a generation-scoped sweep
+//! right after the fan-out — success or failure — while the persistent
+//! batch objects survive for the next epoch. The *shared* params
+//! reference is released **one epoch late** (or at teardown): another
+//! peer may still be uploading the identical bytes for the same epoch,
+//! and the epoch barrier guarantees every peer has uploaded v(e) before
+//! anyone computes e+1, so the lag is exactly what keeps the refcounted
+//! dedupe — and its counters — deterministic. The generation rides
+//! inside every branch payload, doubling as the param-version tag
+//! cross-epoch pipelining keys on.
 //!
 //! Three dispatch modes ([`OffloadMode`]):
 //!
@@ -96,8 +109,8 @@ use crate::faas::{
     BranchScheduler, FaasPlatform, FunctionSpec, Handler, PipelinedMap, RetryPolicy,
     StateMachine,
 };
-use crate::runtime::ModelRuntime;
-use crate::store::{DecodedCache, ObjectRef, ObjectStore};
+use crate::runtime::{ModelRuntime, PackedBatch};
+use crate::store::{DecodedCache, ObjectRef, ObjectStore, PARAMS_BUCKET};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use crate::util::{Bytes, Json};
 
@@ -219,6 +232,16 @@ pub struct ServerlessOffload {
     /// Cross-epoch mode: collected generations whose scratch sweep is
     /// lagged (the newest entry stays alive while the next epoch runs).
     retired: Mutex<VecDeque<(u64, ObjectRef)>>,
+    /// Staged/pipelined modes: the previous epoch's params reference,
+    /// released one epoch late. A fast peer finishing its fan-out must
+    /// not drive the shared deduplicated params object's refcount to
+    /// zero while a slower peer's *same-epoch* upload is still on its
+    /// way — deferring the release past the epoch barrier makes the
+    /// dedup/decode counters exact instead of timing-dependent. The
+    /// parked generation's drain and gradient sweep already happened
+    /// when its epoch completed; only the params release remains.
+    /// Drained by the next epoch's fan-out or [`Self::finish_run`].
+    pending_release: Mutex<Option<ObjectRef>>,
 }
 
 /// Result of one serverless epoch fan-out.
@@ -273,11 +296,15 @@ impl ServerlessOffload {
         let function = format!("grad-{}-peer{}", runtime.entry.key, peer_rank);
         let bucket = crate::store::peer_bucket(peer_rank);
         store.create_bucket(&bucket);
+        store.create_bucket(PARAMS_BUCKET);
         scheduler.register_peer(peer_rank, concurrency);
 
         // The Lambda handler: parse refs, pull params (via the decoded
-        // cache) + batch from S3, run the AOT grad executable, park the
-        // gradient in S3 under the request's generation tag.
+        // cache) + batch from S3, run the AOT grad executable — through
+        // the engine's execution batcher, tagged with the request's
+        // params version so concurrent same-version branches fuse into
+        // one engine dispatch — and park the gradient in S3 under the
+        // request's generation tag.
         let h_store = store.clone();
         let h_runtime = runtime.clone();
         let h_bucket = bucket.clone();
@@ -293,12 +320,28 @@ impl ServerlessOffload {
                 .as_u64()
                 .ok_or_else(|| Error::Faas("branch request: \"gen\" is not a number".into()))?;
             let params = h_cache.get_or_decode(&params_ref, &h_store)?;
-            let batch = unpack_batch(&h_store.get_ref(&batch_ref)?)?;
-            let out = h_runtime.grad(batch.size, &params, &batch.x, &batch.y, true)?;
+            // cached-literal fast path: the batch object is immutable
+            // and read by exactly one branch per epoch, so its input
+            // literals are packed once per object and checked out /
+            // back in around the execution — a miss (first epoch, or a
+            // rare cross-epoch overlap on the same branch index) pays
+            // the full unpack + pack
+            let packed = match h_cache.take_packed::<PackedBatch>(&batch_ref) {
+                Some(p) => *p,
+                None => {
+                    let batch = unpack_batch(&h_store.get_ref(&batch_ref)?)?;
+                    h_runtime.pack_batch_literals(&batch)?
+                }
+            };
+            let (out, packed) =
+                h_runtime.grad_packed(&params, packed, true, Some(generation))?;
+            h_cache.put_packed(&batch_ref, Box::new(packed));
             // a real Lambda has its own environment: the time this
-            // branch queued for an engine slot is a simulation artifact
-            // and must not be billed (the handler's own work — S3 I/O,
-            // decode, execution — stays billed)
+            // branch queued for an engine slot — and, fused, the batch
+            // collect window plus the other members' turns — is a
+            // simulation artifact and must not be billed (the handler's
+            // own work — S3 I/O, decode, its own execution — stays
+            // billed)
             crate::faas::report_unbilled(out.queue_wait);
             let grad_ref = h_store.put_new_gen(
                 &h_bucket,
@@ -327,6 +370,7 @@ impl ServerlessOffload {
             batch_refs: Mutex::new(Vec::new()),
             inflight: Mutex::new(VecDeque::new()),
             retired: Mutex::new(VecDeque::new()),
+            pending_release: Mutex::new(None),
         })
     }
 
@@ -418,10 +462,14 @@ impl ServerlessOffload {
         }
         // the epoch number is the generation (== the param version the
         // branch payloads advertise); GEN_PERSISTENT is u64::MAX so any
-        // realistic epoch index is a valid scratch generation
+        // realistic epoch index is a valid scratch generation. The
+        // upload is content-deduplicated through the shared params
+        // bucket: in synchronous mode every peer's params bytes are
+        // identical, so the cluster stores one object per epoch and
+        // each peer holds a reference
         let generation = epoch as u64;
-        let params_ref = self.store.put_new_gen(
-            &self.bucket,
+        let params_ref = self.store.put_dedup(
+            PARAMS_BUCKET,
             Bytes::from(f32s_to_bytes(params)),
             generation,
         )?;
@@ -439,10 +487,21 @@ impl ServerlessOffload {
                 self.fan_out_epoch_pipelined(&params_ref, &batch_refs, generation)
             }
         };
-        // the params key is never read again (next epoch gets a fresh
-        // key): reclaim the scratch and drop the cache entry (clearing
-        // its pin) on every exit path
-        self.retire_generation(generation, &params_ref);
+        // this peer's own scratch (parked gradients) is reclaimed
+        // immediately on every exit path; the *shared* params reference
+        // is parked and released one epoch late — other peers may still
+        // be uploading the identical bytes for this very epoch, and a
+        // premature refs-to-zero would force them to re-store and
+        // re-decode (the epoch barrier guarantees every peer has
+        // uploaded v(e) before anyone computes e+1)
+        self.scheduler.await_generation_drained(self.peer, generation);
+        if self.sweep_scratch {
+            self.store.sweep_generation(&self.bucket, generation);
+        }
+        let lagged = self.pending_release.lock().unwrap().replace(params_ref);
+        if let Some(lagged_ref) = lagged {
+            self.release_params(&lagged_ref);
+        }
         outcome
     }
 
@@ -494,8 +553,8 @@ impl ServerlessOffload {
             RetryPolicy::default(),
         )?
         .with_generation(generation);
-        let params_ref = self.store.put_new_gen(
-            &self.bucket,
+        let params_ref = self.store.put_dedup(
+            PARAMS_BUCKET,
             Bytes::from(f32s_to_bytes(params)),
             generation,
         )?;
@@ -581,12 +640,28 @@ impl ServerlessOffload {
     /// barrier — a collected generation has none today, but a
     /// stale-tolerant mode may retire one with stragglers, and a sweep
     /// must never run under a live branch), reclaim its store scratch
-    /// (honoring `sweep_scratch`), and drop its params cache entry —
-    /// which also clears the entry's pin.
+    /// (honoring `sweep_scratch`) — the per-peer parked gradients by
+    /// generation sweep, this peer's reference on the shared params
+    /// object by refcounted release (the object goes when the *last*
+    /// peer retires the generation) — and drop this peer's claim on the
+    /// params cache entry, which also clears its pin.
     fn retire_generation(&self, generation: u64, params_ref: &ObjectRef) {
         self.scheduler.await_generation_drained(self.peer, generation);
         if self.sweep_scratch {
             self.store.sweep_generation(&self.bucket, generation);
+        }
+        self.release_params(params_ref);
+    }
+
+    /// Drop this peer's claims on a generation's shared params: the
+    /// store reference (honoring `sweep_scratch` — the object goes when
+    /// the *last* peer releases) and the decode-cache pin/entry. Used
+    /// alone by the one-epoch-late staged/pipelined path, whose
+    /// generation was already drained and swept when its epoch
+    /// completed.
+    fn release_params(&self, params_ref: &ObjectRef) {
+        if self.sweep_scratch {
+            self.store.release(params_ref);
         }
         self.decode_cache.invalidate(params_ref);
     }
@@ -600,11 +675,12 @@ impl ServerlessOffload {
         }
     }
 
-    /// Cross-epoch teardown: drain any still-in-flight epochs (their
+    /// Offload teardown: drain any still-in-flight epochs (their
     /// branches are allowed to finish, their results are discarded) and
-    /// retire every remaining generation, lagged or not. Called by the
-    /// peer when the training loop exits — on success and on failure;
-    /// idempotent.
+    /// retire every remaining generation — cross-epoch's lagged sweeps
+    /// and staged/pipelined's one-epoch-late params release alike.
+    /// Called by the peer when the training loop exits, whatever the
+    /// mode — on success and on failure; idempotent.
     pub fn finish_run(&self) {
         loop {
             let ep = self.inflight.lock().unwrap().pop_front();
@@ -614,9 +690,15 @@ impl ServerlessOffload {
             let _ = pipe.finish();
             self.retire_generation(generation, &params_ref);
         }
-        let mut retired = self.retired.lock().unwrap();
-        while let Some((generation, params_ref)) = retired.pop_front() {
-            self.retire_generation(generation, &params_ref);
+        {
+            let mut retired = self.retired.lock().unwrap();
+            while let Some((generation, params_ref)) = retired.pop_front() {
+                self.retire_generation(generation, &params_ref);
+            }
+        }
+        let pending = self.pending_release.lock().unwrap().take();
+        if let Some(params_ref) = pending {
+            self.release_params(&params_ref);
         }
     }
 

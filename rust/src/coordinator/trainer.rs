@@ -60,7 +60,7 @@ impl TrainReport {
     }
 
     /// Look up a named utilization counter (`sched.*`, `exec.*`,
-    /// `store.*`).
+    /// `store.*`, `engine.*`).
     pub fn counter(&self, name: &str) -> Option<u64> {
         self.counters
             .iter()
@@ -100,14 +100,20 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(config: TrainConfig) -> Result<Self> {
         config.validate()?;
-        let engine = Arc::new(Engine::with_slots(config.exec_slots)?);
+        let engine = Arc::new(Engine::with_exec_batching(
+            config.exec_slots,
+            config.exec_batch,
+            Duration::from_micros(config.exec_batch_wait_us),
+        )?);
         Ok(Self { config, engine, faults: FaultPlan::default() })
     }
 
     /// Reuse an existing engine (avoids re-creating the PJRT client).
-    /// The engine's execution-slot bound is fixed at construction, so a
-    /// config that demands a different `exec_slots` is an error — not a
-    /// silently ignored knob.
+    /// The engine's execution-slot bound, fused-batch size and collect
+    /// window are fixed at construction, so a config that demands a
+    /// different `exec_slots`, `exec_batch`, or (with fusion on) a
+    /// different `exec_batch_wait_us` is an error — not a silently
+    /// ignored knob.
     pub fn with_engine(config: TrainConfig, engine: Arc<Engine>) -> Result<Self> {
         config.validate()?;
         if config.exec_slots != 0 && config.exec_slots != engine.exec_slots() {
@@ -115,6 +121,26 @@ impl Cluster {
                 "config wants exec_slots={} but the provided engine was built with {}",
                 config.exec_slots,
                 engine.exec_slots()
+            )));
+        }
+        if config.exec_batch != engine.exec_batch() {
+            return Err(Error::Config(format!(
+                "config wants exec_batch={} but the provided engine was built with {}",
+                config.exec_batch,
+                engine.exec_batch()
+            )));
+        }
+        // the collect window is equally engine-fixed, but only matters
+        // once fusion is on — a mismatched window on a non-fusing
+        // engine has no observable effect
+        if config.exec_batch > 1
+            && Duration::from_micros(config.exec_batch_wait_us) != engine.exec_batch_wait()
+        {
+            return Err(Error::Config(format!(
+                "config wants exec_batch_wait_us={} but the provided engine was built \
+                 with {} us",
+                config.exec_batch_wait_us,
+                engine.exec_batch_wait().as_micros()
             )));
         }
         Ok(Self { config, engine, faults: FaultPlan::default() })
@@ -145,6 +171,9 @@ impl Cluster {
         // peers, per-peer in-flight caps)
         let executor = Arc::new(Executor::new(cfg.exec_threads));
         let scheduler = BranchScheduler::new(executor.clone(), cfg.sched_fair);
+        // with execution fusion on, release a peer's same-generation
+        // branches in bursts so they meet in the engine batcher
+        scheduler.set_coalesce(cfg.exec_batch);
         // shared across every peer's handlers: the params object each
         // epoch's branches read is decoded once, not once per branch
         let decode_cache = Arc::new(DecodedCache::new(cfg.decode_cache));
@@ -175,6 +204,9 @@ impl Cluster {
         let barrier = Arc::new(EpochBarrier::new(&broker, cfg.peers)?);
 
         // ---- spawn peers --------------------------------------------------
+        // engine fusion counters are engine-lifetime monotonic and the
+        // engine may be shared across runs: report this run's delta
+        let (batched0, fused0) = self.engine.batch_stats();
         let t0 = Instant::now();
         let mut handles = Vec::with_capacity(cfg.peers);
         let mut partitions = partitions.into_iter();
@@ -326,8 +358,23 @@ impl Cluster {
         metrics.set_counter("store.puts", store_puts);
         metrics.set_counter("store.gets", store_gets);
         metrics.set_counter("store.bytes_in", store_bytes);
+        metrics.set_counter("store.dedup_hits", store.dedup_hits());
         metrics.set_counter("store.decode_hits", decode_cache.hits());
         metrics.set_counter("store.decode_misses", decode_cache.misses());
+        metrics.set_counter("store.pack_hits", decode_cache.pack_hits());
+        metrics.set_counter("store.pack_misses", decode_cache.pack_misses());
+        // execution fusion: fused dispatches, branches that rode them,
+        // and the mean group fill as a percentage of --exec-batch
+        let (batched, fused) = self.engine.batch_stats();
+        let (batched, fused) = (batched - batched0, fused - fused0);
+        metrics.set_counter("engine.batched_execs", batched);
+        metrics.set_counter("engine.fused_branches", fused);
+        let fill = if batched > 0 {
+            fused * 100 / (batched * self.engine.exec_batch() as u64)
+        } else {
+            0
+        };
+        metrics.set_counter("engine.batch_fill", fill);
         // cross-epoch overlap accounting: how many epoch fan-outs were
         // pre-dispatched ahead of the boundary, and for how long they
         // executed before collection began

@@ -18,7 +18,11 @@
 //!
 //! Jobs must not submit-and-join on the same pool (a saturated pool
 //! would deadlock); the state machine only dispatches leaf invocations,
-//! which never recurse.
+//! which never recurse. Leaf invocations *may* block briefly inside the
+//! engine's fused-execution collector (`--exec-batch`): that wait is
+//! bounded by the collect window and resolved by a group leader that is
+//! itself a pool worker making progress, so it cannot deadlock the
+//! pool — only trade a window's latency for fewer engine dispatches.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};

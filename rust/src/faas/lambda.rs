@@ -43,11 +43,15 @@ thread_local! {
 /// Called from *inside* a handler to report time that must be excluded
 /// from measured billing — in-process simulation artifacts like the
 /// engine-semaphore queue wait, which a real per-environment Lambda
-/// never pays (it has its own compute). Accumulates across calls within
-/// one invocation; without this, billed seconds and cost would grow
-/// with `--exec-threads` as branches queue behind each other. Real
-/// handler work (S3 I/O, decode, the execution itself) stays billed,
-/// and an explicit `modeled` duration wins outright.
+/// never pays (it has its own compute). The engine's execution batcher
+/// reports through the same channel: a fused branch's collect window
+/// and the other group members' turns are artifacts of coalescing
+/// in-process executions, not this invocation's compute. Accumulates
+/// across calls within one invocation; without this, billed seconds and
+/// cost would grow with `--exec-threads` (or `--exec-batch`) as
+/// branches queue behind each other. Real handler work (S3 I/O, decode,
+/// the branch's own execution) stays billed, and an explicit `modeled`
+/// duration wins outright.
 pub fn report_unbilled(d: Duration) {
     UNBILLED.with(|c| c.set(c.get() + d));
 }

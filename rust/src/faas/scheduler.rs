@@ -30,7 +30,12 @@
 //! the old epoch's tail within a lane), round-robin fairness across
 //! peers is generation-agnostic, and the per-generation occupancy is
 //! tracked so [`BranchScheduler::await_generation_drained`] can act as
-//! a drain barrier before a generation's scratch is swept.
+//! a drain barrier before a generation's scratch is swept. With the
+//! engine's execution batcher on (`--exec-batch > 1`), the scheduler
+//! additionally **coalesces releases** ([`BranchScheduler::set_coalesce`]):
+//! up to a burst of same-generation branches from one lane go to the
+//! pool back-to-back, so they meet in the batcher and fuse instead of
+//! arriving interleaved with other generations.
 //!
 //! ```
 //! use std::sync::Arc;
@@ -47,6 +52,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
@@ -110,6 +116,9 @@ struct SchedState {
     /// High-water mark of distinct generations simultaneously in flight
     /// (1 in steady state; 2 once cross-epoch dispatch overlaps epochs).
     peak_inflight_gens: usize,
+    /// Active same-generation release burst: (rank, generation,
+    /// releases left). See [`BranchScheduler::set_coalesce`].
+    burst: Option<(usize, u64, usize)>,
     /// Peer rank per dispatch, in dispatch order (tests/fairness audits;
     /// off by default — it grows with every branch).
     dispatch_log: Option<Vec<usize>>,
@@ -118,34 +127,64 @@ struct SchedState {
 impl SchedState {
     /// Pop the next dispatchable job under the fairness policy, updating
     /// lane + aggregate accounting. `pool_cap` bounds the total released
-    /// to the executor so the scheduler owns all queueing.
+    /// to the executor so the scheduler owns all queueing; `burst_cap`
+    /// (> 1) keeps releasing same-generation branches from the last
+    /// picked lane so they reach the engine's execution batcher together.
     fn next_ready(
         &mut self,
         fair: bool,
         pool_cap: usize,
+        burst_cap: usize,
     ) -> Option<(usize, Option<u64>, DetachedJob)> {
         if self.in_flight_total >= pool_cap {
             return None;
         }
         let eligible = |lane: &Lane| !lane.queue.is_empty() && lane.in_flight < lane.cap;
-        let pick = if fair {
-            let mut found = None;
-            for _ in 0..self.rr.len() {
-                let rank = self.rr.pop_front().unwrap();
-                self.rr.push_back(rank);
-                if self.lanes.get(&rank).map(eligible).unwrap_or(false) {
-                    found = Some(rank);
-                    break;
+        // coalescing hint: if the last release opened a same-generation
+        // burst and the lane's next branch continues it, skip the
+        // rotation — one epoch's branches then hit the worker pool (and
+        // the engine batcher) back-to-back instead of interleaved with
+        // other peers' generations
+        let mut continued = false;
+        let mut pick = None;
+        if burst_cap > 1 {
+            if let Some((rank, generation, left)) = self.burst {
+                let continues = left > 0
+                    && self
+                        .lanes
+                        .get(&rank)
+                        .filter(|lane| eligible(lane))
+                        .and_then(|lane| lane.queue.front())
+                        .map(|(g, _)| *g == Some(generation))
+                        .unwrap_or(false);
+                if continues {
+                    pick = Some(rank);
+                    continued = true;
                 }
             }
-            found
-        } else {
-            // unfair baseline: lowest rank with work always wins
-            self.lanes
-                .iter()
-                .find(|(_, lane)| eligible(lane))
-                .map(|(&rank, _)| rank)
-        }?;
+        }
+        if pick.is_none() {
+            self.burst = None;
+            pick = if fair {
+                let mut found = None;
+                for _ in 0..self.rr.len() {
+                    let rank = self.rr.pop_front().unwrap();
+                    self.rr.push_back(rank);
+                    if self.lanes.get(&rank).map(eligible).unwrap_or(false) {
+                        found = Some(rank);
+                        break;
+                    }
+                }
+                found
+            } else {
+                // unfair baseline: lowest rank with work always wins
+                self.lanes
+                    .iter()
+                    .find(|(_, lane)| eligible(lane))
+                    .map(|(&rank, _)| rank)
+            };
+        }
+        let pick = pick?;
         let lane = self.lanes.get_mut(&pick).unwrap();
         let (generation, job) = lane.queue.pop_front().unwrap();
         lane.in_flight += 1;
@@ -169,6 +208,20 @@ impl SchedState {
         if let Some(log) = self.dispatch_log.as_mut() {
             log.push(pick);
         }
+        // open (or continue) the same-generation burst for the next call
+        self.burst = match generation {
+            Some(g) if burst_cap > 1 => {
+                let left = if continued {
+                    self.burst
+                        .map(|(_, _, l)| l.saturating_sub(1))
+                        .unwrap_or(0)
+                } else {
+                    burst_cap - 1
+                };
+                Some((pick, g, left))
+            }
+            _ => None,
+        };
         Some((pick, generation, job))
     }
 }
@@ -205,6 +258,9 @@ pub struct SchedulerStats {
 pub struct BranchScheduler {
     executor: Arc<Executor>,
     fair: bool,
+    /// Same-generation release burst size (<= 1 off). See
+    /// [`Self::set_coalesce`].
+    coalesce: AtomicUsize,
     /// Self-handle: dispatched jobs carry a strong clone so completion
     /// bookkeeping can re-pump the queue from a worker thread.
     me: Weak<BranchScheduler>,
@@ -221,6 +277,7 @@ impl BranchScheduler {
         Arc::new_cyclic(|me| Self {
             executor,
             fair,
+            coalesce: AtomicUsize::new(1),
             me: me.clone(),
             state: Mutex::new(SchedState {
                 lanes: BTreeMap::new(),
@@ -234,10 +291,24 @@ impl BranchScheduler {
                 peak_in_flight: 0,
                 inflight_gens: BTreeMap::new(),
                 peak_inflight_gens: 0,
+                burst: None,
                 dispatch_log: None,
             }),
             drained: Condvar::new(),
         })
+    }
+
+    /// Enable same-generation branch coalescing: once a tagged branch of
+    /// `(rank, generation)` is released, up to `burst - 1` further
+    /// branches continuing that generation on the same lane are released
+    /// before the round-robin rotation resumes. The cluster sets this to
+    /// `--exec-batch`, so a peer's Map branches arrive at the engine's
+    /// execution batcher together instead of interleaved with other
+    /// peers' generations — which is what lets fused groups fill.
+    /// Fairness degrades gracefully from per-branch to per-burst
+    /// rotation; `burst <= 1` (the default) is strict round-robin.
+    pub fn set_coalesce(&self, burst: usize) {
+        self.coalesce.store(burst.max(1), Ordering::Relaxed);
     }
 
     /// Record the peer rank of every dispatch (fairness audits / tests).
@@ -372,7 +443,8 @@ impl BranchScheduler {
                 if st.paused {
                     return;
                 }
-                match st.next_ready(self.fair, self.executor.threads()) {
+                let burst = self.coalesce.load(Ordering::Relaxed);
+                match st.next_ready(self.fair, self.executor.threads(), burst) {
                     Some(next) => next,
                     None => return,
                 }
@@ -838,6 +910,50 @@ mod tests {
         assert_eq!(sched.generation_live(0, 7), 0);
         // unknown lane: immediate return, no panic
         sched.await_generation_drained(99, 7);
+    }
+
+    #[test]
+    fn coalesce_bursts_release_same_generation_together() {
+        // two peers, four tagged branches each, a 1-thread pool so the
+        // dispatch order is exactly the release order: with a burst of
+        // 4 the scheduler drains one peer's generation before rotating,
+        // instead of strict per-branch alternation
+        let sched = BranchScheduler::new(Arc::new(Executor::new(1)), true);
+        sched.set_coalesce(4);
+        sched.enable_dispatch_log();
+        sched.register_peer(0, 8);
+        sched.register_peer(1, 8);
+        sched.pause();
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            for (rank, generation) in [(0usize, 10u64), (1, 20)] {
+                let done = done.clone();
+                sched.submit_detached_tagged(rank, Some(generation), move || {
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }
+        sched.resume();
+        await_completed(&sched, 8);
+        assert_eq!(
+            sched.dispatch_log(),
+            vec![0, 0, 0, 0, 1, 1, 1, 1],
+            "a burst must drain one generation before rotating"
+        );
+        // burst off: strict alternation comes back
+        let sched = BranchScheduler::new(Arc::new(Executor::new(1)), true);
+        sched.enable_dispatch_log();
+        sched.register_peer(0, 8);
+        sched.register_peer(1, 8);
+        sched.pause();
+        for _ in 0..2 {
+            for rank in 0..2usize {
+                sched.submit_detached_tagged(rank, Some(1), || {});
+            }
+        }
+        sched.resume();
+        await_completed(&sched, 4);
+        assert_eq!(sched.dispatch_log(), vec![0, 1, 0, 1]);
     }
 
     #[test]

@@ -68,6 +68,19 @@ TRAIN OPTIONS:
                              modeled accounting does not move with N
     --exec-slots N           concurrent PJRT executions (0 = machine
                              size, 1 = serialized honest-timing mode)
+    --exec-batch N           fused-execution batch: up to N concurrent
+                             gradient branches of the same executable +
+                             params version coalesce into one engine
+                             dispatch (default 1 = fusion off). Math and
+                             modeled accounting are byte-identical at
+                             any N; only the measured wall moves — it
+                             shrinks when dispatch overhead dominates
+                             (best with --exec-slots 1), but a fused
+                             group runs on one slot, so wide-open slots
+                             lose intra-group parallelism
+    --exec-batch-wait-us N   fused-group collect window in microseconds
+                             (default 500): how long a group waits to
+                             fill before dispatching partial
     --early-stop N           early-stopping patience (0 = off)
     --plateau N              ReduceLROnPlateau patience (0 = off)
     --seed N                 RNG seed
@@ -198,6 +211,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_num(args, "exec-slots")? {
         cfg.exec_slots = v;
     }
+    if let Some(v) = parse_num(args, "exec-batch")? {
+        cfg.exec_batch = v;
+    }
+    if let Some(v) = parse_num(args, "exec-batch-wait-us")? {
+        cfg.exec_batch_wait_us = v;
+    }
     if let Some(v) = parse_num(args, "early-stop")? {
         cfg.early_stop_patience = v;
     }
@@ -276,15 +295,29 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         let c = |name| report.counter(name).unwrap_or(0);
         println!(
-            "store: {} puts / {} gets / {} bytes in; decode cache: {} hits / {} misses; \
+            "store: {} puts ({} deduped) / {} gets / {} bytes in; decode cache: \
+             {} hits / {} misses; packed literals: {} hits / {} misses; \
              {} objects left",
             c("store.puts"),
+            c("store.dedup_hits"),
             c("store.gets"),
             c("store.bytes_in"),
             c("store.decode_hits"),
             c("store.decode_misses"),
+            c("store.pack_hits"),
+            c("store.pack_misses"),
             report.store_objects,
         );
+        if report.config.exec_batch > 1 {
+            println!(
+                "fused exec (batch {}): {} fused dispatches / {} branches fused / \
+                 {}% mean fill",
+                report.config.exec_batch,
+                c("engine.batched_execs"),
+                c("engine.fused_branches"),
+                c("engine.batch_fill"),
+            );
+        }
         if report.config.offload_mode == OffloadMode::CrossEpoch {
             println!(
                 "cross-epoch: {} epochs pre-dispatched, {:.1} ms total overlap window, \

@@ -1,0 +1,593 @@
+//! Engine-level execution batcher: coalesces concurrent [`Engine::run`]
+//! callers holding the *same executable, compatible input shapes and the
+//! same params version* into one fused engine dispatch.
+//!
+//! Motivation ("Towards Demystifying Serverless ML Training", SPIRT):
+//! per-invocation compute overhead dominates serverless training at
+//! scale. Our hot path paid it N times per epoch — N branches against
+//! the same params version meant N slot acquisitions, N worker wakeups
+//! and N independent PJRT dispatches serialized through `exec_slots`.
+//! The batcher turns those into one *fused run*: callers enqueue
+//! `(inputs, reply channel)` under a [`FuseKey`]; the first caller
+//! becomes the group **leader** and collects up to `--exec-batch`
+//! members within the `--exec-batch-wait-us` window (closing early the
+//! moment the group fills); the leader then acquires a single execution
+//! slot and drives every member's literals through the executable
+//! back-to-back, splitting the outputs back per caller.
+//!
+//! ## The byte-identity contract
+//!
+//! Fusion must never change the math or the modeled accounting:
+//!
+//! - **gradient/loss folds** — each member executes on *its own*
+//!   literals against the shared executable; nothing is summed or
+//!   averaged across members, so every caller receives bit-identical
+//!   outputs to an unbatched run. Members are grouped strictly by
+//!   [`FuseKey`] (executable identity + batch/param shapes + params
+//!   version), so cross-generation branches — whose inputs come from
+//!   different params versions — can never share a group;
+//! - **modeled wall / billed / cost** — each member's [`ExecTiming`]
+//!   reports its *own* sub-execution as `exec` and everything else
+//!   (group collect wait, slot wait, the other members' turns) as
+//!   `queue_wait`, which the FaaS billing path already excludes as an
+//!   in-process artifact. Modeled numbers therefore stay byte-identical
+//!   at any `--exec-batch`; only the *measured* wall moves.
+//!
+//! ## What "fused" means here — and the performance tradeoff
+//!
+//! A fused dispatch is one *engine* dispatch: one slot acquisition, one
+//! worker wakeup chain, the members' literals executed back-to-back on
+//! the leader's thread. It is **not** a single XLA execution over
+//! stacked inputs — the AOT artifacts are shape-specialized to one
+//! batch size, and a stacked execution would reduce loss/gradient over
+//! the combined batch, which cannot be split back per caller
+//! byte-identically. (Lowering batch-size-`B·k` artifacts with
+//! per-branch outputs is the ROADMAP follow-up that would turn a group
+//! into literally one execution.)
+//!
+//! Consequently fusion amortizes the *per-dispatch* costs — slot
+//! round-trips, cross-thread wakeups, cache-cold parameter reloads —
+//! and that is a win exactly when those dominate: small/serialized
+//! `--exec-slots` (the paper tables' honest-timing mode) or many tiny
+//! branches. With `--exec-slots` at machine size and heavy branches,
+//! the group runs sequentially under its single slot while other slots
+//! idle, trading away intra-group parallelism: measured wall can then
+//! *grow*. This is why the knob defaults to off and the bench pins
+//! `--exec-slots 1` for the batched-vs-unbatched comparison.
+//!
+//! ## Liveness
+//!
+//! The leader never waits while holding an execution slot, followers
+//! never hold one at all, and the collect wait is bounded by the window
+//! — so the worst case under starved concurrency (fewer concurrent
+//! same-key callers than `--exec-batch`) is a window's delay per group,
+//! never a deadlock. A leader that dies mid-group drops its members'
+//! reply channels, which surfaces as an error on their side rather than
+//! a hang. Effective fill is bounded by how many same-key branches are
+//! actually concurrent: `min(--exec-batch, --exec-threads, per-peer
+//! admission cap)`.
+//!
+//! [`Engine::run`]: super::Engine::run
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::engine::{ExecTiming, Executable};
+use crate::error::{Error, Result};
+use crate::util::sync::Semaphore;
+
+/// Default collect window: long enough for a worker-pool wave of
+/// same-epoch branches to meet in the batcher, short enough to be
+/// invisible next to a PJRT gradient execution.
+pub const DEFAULT_EXEC_BATCH_WAIT: Duration = Duration::from_micros(500);
+
+/// Fusion group key: only callers agreeing on every field may share a
+/// fused dispatch.
+///
+/// `exe` (the compiled executable's address) already implies the full
+/// input signature — artifacts are shape-specialized — but the logical
+/// batch size and param count are kept as an explicit shape-compat
+/// guard, and `version` carries the params generation so branches of
+/// different param versions (overlapping epochs in cross-epoch mode)
+/// never fuse.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct FuseKey {
+    /// Executable identity (stable: the engine caches executables for
+    /// the life of the process).
+    pub exe: usize,
+    /// Logical batch size the artifact is specialized to.
+    pub batch: usize,
+    /// Parameter vector length.
+    pub params: usize,
+    /// Params version (the offload generation tag).
+    pub version: u64,
+}
+
+impl FuseKey {
+    pub fn for_exe(exe: &Arc<Executable>, batch: usize, params: usize, version: u64) -> Self {
+        Self { exe: Arc::as_ptr(exe) as usize, batch, params, version }
+    }
+}
+
+/// Owned input/output literals crossing threads between a follower and
+/// its group leader.
+///
+/// SAFETY: mirrors [`Executable`]'s rationale — PJRT literals are
+/// host-side buffers whose wrappers omit `Send` only because they hold
+/// raw pointers. Each literal vector has exactly one owner at any time:
+/// a follower moves its inputs into the group under the group mutex,
+/// the leader takes them, executes, and moves them (plus the outputs)
+/// back through the reply channel.
+struct LitVec(Vec<xla::Literal>);
+unsafe impl Send for LitVec {}
+
+/// What a leader sends each member back: outputs, the member's own
+/// input literals (returned so callers can re-use cached packings), and
+/// the member's own sub-execution duration.
+type MemberReply = Result<(LitVec, LitVec, Duration)>;
+
+struct Member {
+    inputs: LitVec,
+    reply: SyncSender<MemberReply>,
+}
+
+struct GroupState {
+    members: Vec<Member>,
+    /// Set once the leader has taken the members: late arrivals must
+    /// start a fresh group instead of enqueueing into a dead one.
+    closed: bool,
+}
+
+struct Group {
+    state: Mutex<GroupState>,
+    /// Signalled when the group fills; the leader parks here.
+    filled: Condvar,
+}
+
+impl Group {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(GroupState { members: Vec::new(), closed: false }),
+            filled: Condvar::new(),
+        }
+    }
+}
+
+enum Role {
+    /// This caller opened the group; its own inputs ride along.
+    Leader(Arc<Group>, Vec<xla::Literal>),
+    /// This caller enqueued into an open group; the reply arrives here.
+    Follower(Receiver<MemberReply>),
+}
+
+/// The coalescing core. Owned by the [`Engine`]; exposed publicly so
+/// benches and tests can exercise the grouping machinery with synthetic
+/// execution closures (no artifacts needed).
+///
+/// [`Engine`]: super::Engine
+pub struct ExecBatcher {
+    max: usize,
+    wait: Duration,
+    groups: Mutex<HashMap<FuseKey, Arc<Group>>>,
+    batched_execs: AtomicU64,
+    fused_branches: AtomicU64,
+}
+
+impl ExecBatcher {
+    /// `max` members per fused run (`<= 1` disables fusion at the
+    /// engine level — [`Engine::run_fused`] then takes the plain path);
+    /// `wait` bounds how long a leader collects before dispatching a
+    /// partial group.
+    ///
+    /// [`Engine::run_fused`]: super::Engine::run_fused
+    pub fn new(max: usize, wait: Duration) -> Self {
+        Self {
+            max: max.max(1),
+            wait,
+            groups: Mutex::new(HashMap::new()),
+            batched_execs: AtomicU64::new(0),
+            fused_branches: AtomicU64::new(0),
+        }
+    }
+
+    /// Maximum members per fused run.
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// The collect window.
+    pub fn wait(&self) -> Duration {
+        self.wait
+    }
+
+    /// Fused dispatches performed (each group run counts once, whatever
+    /// its fill).
+    pub fn batched_execs(&self) -> u64 {
+        self.batched_execs.load(Ordering::Relaxed)
+    }
+
+    /// Total branches that went through fused dispatches.
+    pub fn fused_branches(&self) -> u64 {
+        self.fused_branches.load(Ordering::Relaxed)
+    }
+
+    /// Join (or lead) the fused run for `key`. Blocks until this
+    /// caller's inputs have executed; returns `(outputs, inputs back,
+    /// timing)` — `timing.exec` is this caller's own sub-execution,
+    /// `timing.queue_wait` everything else (collect window, slot wait,
+    /// other members' turns).
+    ///
+    /// `exec` runs one input list against the shared executable; only
+    /// the *leader's* closure is ever invoked (for every member), which
+    /// is sound because the key pins the executable identity.
+    pub fn run<E>(
+        &self,
+        key: FuseKey,
+        inputs: Vec<xla::Literal>,
+        sem: &Semaphore,
+        exec: E,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)>
+    where
+        E: Fn(&[xla::Literal]) -> Result<Vec<xla::Literal>>,
+    {
+        let t_start = Instant::now();
+        match self.enlist(key, inputs) {
+            Role::Follower(rx) => match rx.recv() {
+                Ok(Ok((outs, ins, exec))) => {
+                    let queue_wait = t_start.elapsed().saturating_sub(exec);
+                    Ok((outs.0, ins.0, ExecTiming { exec, queue_wait }))
+                }
+                Ok(Err(e)) => Err(e),
+                // the leader died between taking the group and replying
+                // (a panic inside the handler stack): fail this branch
+                // loudly instead of hanging — the FaaS retry policy owns
+                // what happens next
+                Err(_) => Err(Error::Runtime(
+                    "fused execution leader vanished before replying".into(),
+                )),
+            },
+            Role::Leader(group, own) => self.lead(key, group, own, t_start, sem, exec),
+        }
+    }
+
+    /// Become a follower of an open group, or the leader of a fresh one.
+    fn enlist(&self, key: FuseKey, inputs: Vec<xla::Literal>) -> Role {
+        let mut groups = self.groups.lock().unwrap();
+        if let Some(group) = groups.get(&key) {
+            let group = group.clone();
+            // lock order is always map -> group
+            let mut st = group.state.lock().unwrap();
+            // joinable iff still open and there is room left beside the
+            // leader: total occupancy is members + 1
+            if !st.closed && st.members.len() + 2 <= self.max {
+                let (tx, rx) = sync_channel(1);
+                st.members.push(Member { inputs: LitVec(inputs), reply: tx });
+                let full = st.members.len() + 1 >= self.max;
+                drop(st);
+                drop(groups);
+                if full {
+                    group.filled.notify_all();
+                }
+                return Role::Follower(rx);
+            }
+            // closed (leader already collecting) or full (leader not
+            // yet woken): fall through and replace it — the old
+            // leader's cleanup is pointer-checked, so it will not
+            // remove the replacement
+        }
+        let fresh = Arc::new(Group::new());
+        groups.insert(key, fresh.clone());
+        Role::Leader(fresh, inputs)
+    }
+
+    /// Leader phase: collect members until full or the window expires,
+    /// close the group, then run everyone under one execution slot.
+    fn lead<E>(
+        &self,
+        key: FuseKey,
+        group: Arc<Group>,
+        own_inputs: Vec<xla::Literal>,
+        t_start: Instant,
+        sem: &Semaphore,
+        exec: E,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)>
+    where
+        E: Fn(&[xla::Literal]) -> Result<Vec<xla::Literal>>,
+    {
+        // collect: park on the condvar until the group fills or the
+        // window runs out (no lock held besides the group's own, and
+        // no execution slot — a starved group can never block the
+        // engine)
+        let deadline = Instant::now() + self.wait;
+        {
+            let mut st = group.state.lock().unwrap();
+            while st.members.len() + 1 < self.max {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) =
+                    group.filled.wait_timeout(st, deadline - now).unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        // close: retire the group from the map (unless a racing joiner
+        // already replaced a full group with a fresh one), then take
+        // the members. Joiners that slipped in between the wake-up and
+        // this close are included — the close is what makes the member
+        // set final.
+        let members = {
+            let mut groups = self.groups.lock().unwrap();
+            if let Some(current) = groups.get(&key) {
+                if Arc::ptr_eq(current, &group) {
+                    groups.remove(&key);
+                }
+            }
+            let mut st = group.state.lock().unwrap();
+            st.closed = true;
+            std::mem::take(&mut st.members)
+        };
+
+        // fused dispatch: one execution slot for the whole group
+        let _slot = sem.acquire();
+        self.batched_execs.fetch_add(1, Ordering::Relaxed);
+        self.fused_branches
+            .fetch_add(1 + members.len() as u64, Ordering::Relaxed);
+
+        // the leader's own turn first, then every member in arrival
+        // order; each turn is timed individually so billing stays
+        // per-branch
+        let t0 = Instant::now();
+        let own_result = exec(&own_inputs);
+        let own_exec = t0.elapsed();
+        for Member { inputs, reply } in members {
+            let t0 = Instant::now();
+            let result = exec(&inputs.0);
+            let exec_dur = t0.elapsed();
+            // a receiver can only be gone if the follower's thread died
+            let _ = reply
+                .send(result.map(|outs| (LitVec(outs), inputs, exec_dur)));
+        }
+        let outs = own_result?;
+        // the leader's queue_wait is computed exactly like a follower's:
+        // everything that is not its own turn — collect window, slot
+        // wait, AND the member turns it served — is a fusion artifact.
+        // Snapshotting before the member loop would leak the other
+        // members' executions into the leader's billed handler time.
+        let queue_wait = t_start.elapsed().saturating_sub(own_exec);
+        Ok((outs, own_inputs, ExecTiming { exec: own_exec, queue_wait }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::literal_f32;
+    use std::sync::Barrier;
+
+    /// A deterministic synthetic "execution": reads the single rank-1
+    /// f32 input and returns `[2x + 1]` — pure data movement through
+    /// the batcher, bitwise checkable.
+    fn double_plus_one(ins: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let v = ins[0].to_vec::<f32>()?;
+        let out: Vec<f32> = v.iter().map(|x| 2.0 * x + 1.0).collect();
+        Ok(vec![literal_f32(&out, &[out.len() as i64])?])
+    }
+
+    fn key(version: u64) -> FuseKey {
+        FuseKey { exe: 0xDEAD, batch: 4, params: 8, version }
+    }
+
+    fn input(seed: f32) -> Vec<xla::Literal> {
+        vec![literal_f32(&[seed, seed + 0.25, seed * 3.0, -seed], &[4]).unwrap()]
+    }
+
+    /// Run `n` concurrent callers of `version_of(i)` through one
+    /// batcher; returns per-caller output bits.
+    fn fan_in(
+        batcher: &Arc<ExecBatcher>,
+        n: usize,
+        version_of: impl Fn(usize) -> u64 + Copy + Send + 'static,
+    ) -> Vec<Vec<u32>> {
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let batcher = batcher.clone();
+                let sem = sem.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let inputs = input(i as f32);
+                    let want_back: Vec<u32> = inputs[0]
+                        .to_vec::<f32>()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    barrier.wait();
+                    let (outs, ins, _timing) = batcher
+                        .run(key(version_of(i)), inputs, &sem, double_plus_one)
+                        .unwrap();
+                    // the caller's own literals come back for re-use
+                    let got_back: Vec<u32> = ins[0]
+                        .to_vec::<f32>()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    assert_eq!(got_back, want_back, "inputs must round-trip");
+                    outs[0]
+                        .to_vec::<f32>()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn expected(i: usize) -> Vec<u32> {
+        let seed = i as f32;
+        [seed, seed + 0.25, seed * 3.0, -seed]
+            .iter()
+            .map(|x| (2.0 * x + 1.0f32).to_bits())
+            .collect()
+    }
+
+    #[test]
+    fn full_group_fuses_into_one_dispatch() {
+        let b = Arc::new(ExecBatcher::new(8, Duration::from_millis(500)));
+        let got = fan_in(&b, 8, |_| 7);
+        for (i, bits) in got.iter().enumerate() {
+            assert_eq!(bits, &expected(i), "member {i} got someone else's output");
+        }
+        assert_eq!(b.batched_execs(), 1, "8 callers at batch 8 = one fused run");
+        assert_eq!(b.fused_branches(), 8);
+    }
+
+    #[test]
+    fn cross_version_callers_never_fuse() {
+        // two params versions, four callers each: exactly two groups,
+        // never a mixed one — the cross-generation contract
+        let b = Arc::new(ExecBatcher::new(4, Duration::from_millis(500)));
+        let got = fan_in(&b, 8, |i| (i % 2) as u64);
+        for (i, bits) in got.iter().enumerate() {
+            assert_eq!(bits, &expected(i));
+        }
+        assert_eq!(
+            b.batched_execs(),
+            2,
+            "4+4 callers of two versions must form exactly two fused runs"
+        );
+        assert_eq!(b.fused_branches(), 8);
+    }
+
+    #[test]
+    fn window_expiry_dispatches_partial_group() {
+        // a lone caller cannot fill the group: the window bounds its
+        // wait and the singleton still executes
+        let b = Arc::new(ExecBatcher::new(8, Duration::from_millis(5)));
+        let got = fan_in(&b, 1, |_| 1);
+        assert_eq!(got[0], expected(0));
+        assert_eq!(b.batched_execs(), 1);
+        assert_eq!(b.fused_branches(), 1);
+    }
+
+    #[test]
+    fn sequential_callers_form_sequential_groups() {
+        // no concurrency: each call leads its own group (fill 1) —
+        // correctness never depends on arrival luck
+        let b = Arc::new(ExecBatcher::new(4, Duration::from_millis(1)));
+        let sem = Semaphore::new(1);
+        for i in 0..3usize {
+            let (outs, _, _) = b
+                .run(key(9), input(i as f32), &sem, double_plus_one)
+                .unwrap();
+            let bits: Vec<u32> = outs[0]
+                .to_vec::<f32>()
+                .unwrap()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(bits, expected(i));
+        }
+        assert_eq!(b.batched_execs(), 3);
+        assert_eq!(b.fused_branches(), 3);
+    }
+
+    #[test]
+    fn billed_exec_is_one_turn_for_every_member_including_the_leader() {
+        // 4 callers, each turn ~20 ms: every caller's `exec` must cover
+        // its own turn only — the rest of the group's work lands in
+        // queue_wait, which billing excludes. A leader that billed its
+        // members' turns would report ~80 ms here (regression: its
+        // queue_wait used to be snapshotted before the member loop).
+        const TURN_MS: u64 = 20;
+        let b = Arc::new(ExecBatcher::new(4, Duration::from_millis(500)));
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let b = b.clone();
+                let sem = sem.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let t0 = Instant::now();
+                    let (_, _, timing) = b
+                        .run(key(11), input(i as f32), &sem, |ins| {
+                            std::thread::sleep(Duration::from_millis(TURN_MS));
+                            double_plus_one(ins)
+                        })
+                        .unwrap();
+                    (timing, t0.elapsed())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (timing, wall) = h.join().unwrap();
+            // what the FaaS layer would bill is the caller's handler
+            // wall minus the reported queue_wait — it must stay ~one
+            // turn (generous slack, but far below the 3-extra-turns a
+            // leaked group would add)
+            let billed = wall.saturating_sub(timing.queue_wait);
+            assert!(
+                billed < Duration::from_millis(3 * TURN_MS),
+                "a member would bill more than its own turn: {billed:?} \
+                 (wall {wall:?}, queue_wait {:?})",
+                timing.queue_wait
+            );
+            assert!(
+                timing.exec < Duration::from_millis(3 * TURN_MS),
+                "a member's own-execution report exceeds its turn: {:?}",
+                timing.exec
+            );
+        }
+        assert_eq!(b.batched_execs(), 1);
+    }
+
+    #[test]
+    fn member_error_is_delivered_to_that_member_only() {
+        // an exec failure for one member's inputs must not poison the
+        // others: encode "fail" as a NaN marker the closure rejects
+        let b = Arc::new(ExecBatcher::new(2, Duration::from_millis(500)));
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(2));
+        let spawn = |poison: bool| {
+            let b = b.clone();
+            let sem = sem.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let inputs = if poison {
+                    vec![literal_f32(&[f32::NAN], &[1]).unwrap()]
+                } else {
+                    input(1.0)
+                };
+                barrier.wait();
+                b.run(key(3), inputs, &sem, |ins| {
+                    let v = ins[0].to_vec::<f32>()?;
+                    if v.iter().any(|x| x.is_nan()) {
+                        return Err(Error::Runtime("poisoned member".into()));
+                    }
+                    double_plus_one(ins)
+                })
+                .map(|(outs, _, _)| outs[0].to_vec::<f32>().unwrap())
+            })
+        };
+        let ok = spawn(false);
+        let bad = spawn(true);
+        let results = [ok.join().unwrap(), bad.join().unwrap()];
+        let (oks, errs): (Vec<_>, Vec<_>) = results.into_iter().partition(|r| r.is_ok());
+        assert_eq!(oks.len(), 1, "the healthy member must succeed");
+        assert_eq!(errs.len(), 1, "the poisoned member must fail alone");
+        assert!(errs[0].as_ref().unwrap_err().to_string().contains("poisoned"));
+    }
+}

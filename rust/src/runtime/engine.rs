@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::batcher::{ExecBatcher, FuseKey, DEFAULT_EXEC_BATCH_WAIT};
 use crate::error::{Error, Result};
 use crate::util::sync::Semaphore;
 
@@ -58,19 +59,33 @@ pub struct Engine {
     cache: Mutex<HashMap<String, CompileSlot>>,
     exec_sem: Semaphore,
     exec_slots: usize,
+    batcher: ExecBatcher,
     compile_ms: Mutex<HashMap<String, u64>>,
     compiles: AtomicU64,
 }
 
 impl Engine {
-    /// Engine with `exec_slots` sized to the machine.
+    /// Engine with `exec_slots` sized to the machine (fusion off).
     pub fn new() -> Result<Self> {
         Self::with_slots(0)
     }
 
     /// Engine with an explicit concurrent-execution bound; `0` sizes it
     /// to `available_parallelism`, `1` serializes every execution.
+    /// Execution fusion stays off (`exec_batch = 1`).
     pub fn with_slots(slots: usize) -> Result<Self> {
+        Self::with_exec_batching(slots, 1, DEFAULT_EXEC_BATCH_WAIT)
+    }
+
+    /// Engine with both the execution-slot bound and the fused-batch
+    /// knobs: up to `exec_batch` concurrent same-key [`Self::run_fused`]
+    /// callers coalesce into one dispatch, each group collecting for at
+    /// most `batch_wait`. `exec_batch <= 1` disables fusion.
+    pub fn with_exec_batching(
+        slots: usize,
+        exec_batch: usize,
+        batch_wait: Duration,
+    ) -> Result<Self> {
         let slots = if slots == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -81,6 +96,7 @@ impl Engine {
             cache: Mutex::new(HashMap::new()),
             exec_sem: Semaphore::new(slots),
             exec_slots: slots,
+            batcher: ExecBatcher::new(exec_batch, batch_wait),
             compile_ms: Mutex::new(HashMap::new()),
             compiles: AtomicU64::new(0),
         })
@@ -89,6 +105,26 @@ impl Engine {
     /// The concurrent-execution bound this engine was built with.
     pub fn exec_slots(&self) -> usize {
         self.exec_slots
+    }
+
+    /// The fused-batch size this engine was built with (`1` = fusion
+    /// off).
+    pub fn exec_batch(&self) -> usize {
+        self.batcher.max()
+    }
+
+    /// The fused-group collect window this engine was built with
+    /// (irrelevant while `exec_batch() == 1`).
+    pub fn exec_batch_wait(&self) -> Duration {
+        self.batcher.wait()
+    }
+
+    /// `(batched_execs, fused_branches)`: fused dispatches performed
+    /// and total branches that rode them. Monotonic for the life of the
+    /// engine — callers that report per-run numbers (the trainer)
+    /// snapshot and diff.
+    pub fn batch_stats(&self) -> (u64, u64) {
+        (self.batcher.batched_execs(), self.batcher.fused_branches())
     }
 
     pub fn platform(&self) -> String {
@@ -151,25 +187,51 @@ impl Engine {
         let _slot = self.exec_sem.acquire();
         let queue_wait = t_wait.elapsed();
         let t0 = Instant::now();
-        let result = exe.0.execute::<xla::Literal>(inputs)?;
-        let out = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| Error::Runtime("executable produced no output".into()))?
-            .to_literal_sync()?;
+        let parts = execute_literals(exe, inputs)?;
         let elapsed = t0.elapsed();
-        // AOT artifacts are lowered with return_tuple=True.
-        let parts = out.to_tuple()?;
         Ok((parts, ExecTiming { exec: elapsed, queue_wait }))
+    }
+
+    /// [`Self::run`], but eligible for execution fusion: concurrent
+    /// callers whose `key` matches (same executable, same shapes, same
+    /// params version) coalesce into one engine dispatch — one slot
+    /// acquisition, the group's literals executed back-to-back — with
+    /// outputs split back per caller. Takes the inputs by value (they
+    /// may cross to the group leader's thread) and hands them back so
+    /// cached packings survive the call. With `exec_batch <= 1` this is
+    /// exactly [`Self::run`].
+    ///
+    /// The per-caller timing keeps billing honest: `exec` is the
+    /// caller's own sub-execution, `queue_wait` is the collect window +
+    /// slot wait + the other members' turns — all in-process artifacts
+    /// the FaaS layer excludes from billed time.
+    pub fn run_fused(
+        &self,
+        exe: &Arc<Executable>,
+        inputs: Vec<xla::Literal>,
+        key: FuseKey,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)> {
+        if self.batcher.max() <= 1 {
+            let (parts, timing) = self.run(exe, &inputs)?;
+            return Ok((parts, inputs, timing));
+        }
+        self.batcher
+            .run(key, inputs, &self.exec_sem, |ins| execute_literals(exe, ins))
     }
 
     /// Total number of compiled executables resident.
     pub fn cached_executables(&self) -> usize {
-        self.cache
-            .lock()
-            .unwrap()
-            .values()
-            .filter(|slot| slot.lock().unwrap().is_some())
+        // snapshot the slots under the cache lock, then inspect them
+        // without it: holding the cache lock while locking every slot
+        // could stall behind a loader that holds its slot across a slow
+        // XLA compile — and with it every other `load` in the process.
+        // A slot whose lock is busy is mid-compile, i.e. not resident
+        // yet, so `try_lock` misses count as absent.
+        let slots: Vec<CompileSlot> =
+            self.cache.lock().unwrap().values().cloned().collect();
+        slots
+            .iter()
+            .filter(|slot| slot.try_lock().map(|c| c.is_some()).unwrap_or(false))
             .count()
     }
 
@@ -192,6 +254,24 @@ impl Engine {
         v.sort();
         v
     }
+}
+
+/// One raw PJRT dispatch: execute `inputs`, sync the single tuple
+/// output back to host, unpack it. Shared by the direct path
+/// ([`Engine::run`]) and the fused path (where the group leader calls
+/// it once per member under a single execution slot).
+pub(crate) fn execute_literals(
+    exe: &Executable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.0.execute::<xla::Literal>(inputs)?;
+    let out = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| Error::Runtime("executable produced no output".into()))?
+        .to_literal_sync()?;
+    // AOT artifacts are lowered with return_tuple=True.
+    Ok(out.to_tuple()?)
 }
 
 /// Pack an f32 slice as a rank-N literal.

@@ -15,16 +15,48 @@
 //! Python never runs here: the binary is self-contained given the
 //! artifacts directory.
 
+mod batcher;
 mod engine;
 mod manifest;
 
+pub use batcher::{ExecBatcher, FuseKey, DEFAULT_EXEC_BATCH_WAIT};
 pub use engine::{literal_f32, literal_i32, scalar_f32, Engine, ExecTiming, Executable};
 pub use manifest::{Manifest, ModelEntry, QsgdEntry};
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::data::Batch;
 use crate::error::{Error, Result};
+
+/// PJRT input literals for one batch object, packed once and reused
+/// across epochs instead of being re-copied (`vec1` + reshape) on every
+/// branch invocation.
+///
+/// Single-occupancy checkout protocol: the one branch per epoch that
+/// reads a batch object takes the packed literals out of the
+/// [`DecodedCache`] sidecar, executes with them, and checks them back
+/// in — [`ModelRuntime::grad_packed`] returns them for exactly that.
+///
+/// SAFETY: mirrors [`Executable`]'s rationale — literals are host-side
+/// buffers whose wrapper omits `Send` only because it holds a raw
+/// pointer; the checkout protocol hands the value to one thread at a
+/// time.
+///
+/// [`DecodedCache`]: crate::store::DecodedCache
+pub struct PackedBatch {
+    batch: usize,
+    x: xla::Literal,
+    y: xla::Literal,
+}
+unsafe impl Send for PackedBatch {}
+
+impl PackedBatch {
+    /// Logical batch size these literals were packed for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
 
 /// A model's compiled entry points, bound to one (model, dataset) pair.
 pub struct ModelRuntime {
@@ -103,7 +135,37 @@ impl ModelRuntime {
         y: &[i32],
         pallas: bool,
     ) -> Result<GradOutput> {
+        let packed = self.pack_batch_literals_raw(batch, x, y)?;
+        Ok(self.grad_packed(params, packed, pallas, None)?.0)
+    }
+
+    /// Pack a batch's input literals once, for reuse across epochs (see
+    /// [`PackedBatch`]).
+    pub fn pack_batch_literals(&self, batch: &Batch) -> Result<PackedBatch> {
+        self.pack_batch_literals_raw(batch.size, &batch.x, &batch.y)
+    }
+
+    fn pack_batch_literals_raw(&self, batch: usize, x: &[f32], y: &[i32]) -> Result<PackedBatch> {
+        let (lx, ly) = self.batch_literals(batch, x, y)?;
+        Ok(PackedBatch { batch, x: lx, y: ly })
+    }
+
+    /// [`Self::grad`] over pre-packed batch literals, returning them to
+    /// the caller afterwards (cache check-in). `fuse_version` is the
+    /// params version tag: `Some(v)` routes the execution through the
+    /// engine's [`ExecBatcher`], fusing it with concurrent same-artifact
+    /// same-version branches into one engine dispatch; `None` always
+    /// dispatches alone. Either way the math is bit-identical — fusion
+    /// never mixes members' literals.
+    pub fn grad_packed(
+        &self,
+        params: &[f32],
+        packed: PackedBatch,
+        pallas: bool,
+        fuse_version: Option<u64>,
+    ) -> Result<(GradOutput, PackedBatch)> {
         self.check_params(params)?;
+        let batch = packed.batch;
         let file = if pallas {
             self.entry.grad_for(batch)?.to_string()
         } else {
@@ -117,20 +179,41 @@ impl ModelRuntime {
         };
         let exe = self.engine.load(self.manifest.resolve(&file))?;
         let lp = literal_f32(params, &[params.len() as i64])?;
-        let (lx, ly) = self.batch_literals(batch, x, y)?;
-        let (parts, timing) = self.engine.run(&exe, &[lp, lx, ly])?;
+        let PackedBatch { x: lx, y: ly, .. } = packed;
+        let inputs = vec![lp, lx, ly];
+        let (parts, mut inputs, timing) = match fuse_version {
+            Some(version) => self.engine.run_fused(
+                &exe,
+                inputs,
+                FuseKey::for_exe(&exe, batch, params.len(), version),
+            )?,
+            None => {
+                let (parts, timing) = self.engine.run(&exe, &inputs)?;
+                (parts, inputs, timing)
+            }
+        };
         if parts.len() != 2 {
             return Err(Error::Runtime(format!(
                 "grad artifact returned {} outputs, expected 2",
                 parts.len()
             )));
         }
-        Ok(GradOutput {
+        let out = GradOutput {
             loss: scalar_f32(&parts[0])?,
             grads: parts[1].to_vec::<f32>()?,
             wall: timing.exec,
             queue_wait: timing.queue_wait,
-        })
+        };
+        // recover the batch literals for the caller's cache check-in
+        // (inputs were [params, x, y]; the params literal is per-epoch
+        // scratch and simply drops)
+        let ly = inputs
+            .pop()
+            .ok_or_else(|| Error::Runtime("fused run returned no input literals".into()))?;
+        let lx = inputs
+            .pop()
+            .ok_or_else(|| Error::Runtime("fused run returned no input literals".into()))?;
+        Ok((out, PackedBatch { batch, x: lx, y: ly }))
     }
 
     /// SGD apply: params' = params - lr * grads.

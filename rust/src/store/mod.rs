@@ -16,6 +16,14 @@
 //! the store while epoch e+1 is in flight, so a stale-tolerant tail
 //! branch of epoch e can always re-read them.
 //!
+//! Identical payloads can be **deduplicated**: [`ObjectStore::put_dedup`]
+//! content-hashes the bytes and answers a repeat put of the same
+//! (bucket, generation, bytes) with the existing object's ref instead
+//! of storing a copy — reference-counted, released per holder via
+//! [`ObjectStore::release`]. Synchronous training uses this for the
+//! per-epoch params upload ([`PARAMS_BUCKET`]): every peer's params
+//! bytes are identical, so N peers put **one** object per epoch.
+//!
 //! [`DecodedCache`] sits next to the store and memoizes the
 //! object-bytes → `Vec<f32>` decode of hot objects (the params object
 //! every branch of an epoch reads), with a per-key in-flight guard so N
@@ -23,7 +31,12 @@
 //! are **pinned** ([`DecodedCache::pin`]) while their epoch is in
 //! flight: FIFO eviction skips pinned entries, so a small cache shared
 //! by many peers (or by two overlapping epochs) can never evict a
-//! params version that tail branches still need.
+//! params version that tail branches still need. Pins are counted per
+//! holder, because deduplicated params give every peer the *same*
+//! entry. A typed **packed sidecar** ([`DecodedCache::take_packed`] /
+//! [`DecodedCache::put_packed`]) additionally lets the runtime check
+//! its per-object PJRT input literals in and out, so batch literals are
+//! packed once per object instead of once per invocation.
 //!
 //! ```
 //! use p2pless::store::{DecodedCache, ObjectStore, GEN_PERSISTENT};
@@ -50,7 +63,8 @@
 //! assert!(store.get_ref(&batch).is_ok());
 //! ```
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -64,6 +78,13 @@ use crate::error::{Error, Result};
 /// pre-batched dataset partitions). Never matched by an epoch sweep
 /// unless explicitly requested at teardown.
 pub const GEN_PERSISTENT: u64 = u64::MAX;
+
+/// Shared bucket for deduplicated per-epoch params uploads: in
+/// synchronous training every peer's params bytes are identical, so N
+/// peers putting through [`ObjectStore::put_dedup`] store **one**
+/// object here (reference-counted; released per peer via
+/// [`ObjectStore::release`]).
+pub const PARAMS_BUCKET: &str = "shared-params";
 
 /// A pointer to a stored object, sendable through the broker in place of
 /// an oversized payload.
@@ -144,19 +165,55 @@ impl ObjectRef {
     }
 }
 
-/// One stored object: payload bytes plus its generation tag.
+/// One stored object: payload bytes, generation tag, and — for
+/// deduplicated objects — a reference count plus the content hash its
+/// dedup-index entry is filed under.
 struct Object {
     data: Bytes,
     generation: u64,
+    /// Holders of this object ([`ObjectStore::put_dedup`] increments,
+    /// [`ObjectStore::release`] decrements; plain puts have one
+    /// implicit holder).
+    refs: usize,
+    /// Content hash, for cleaning the dedup index on removal (None for
+    /// non-deduplicated objects).
+    content_hash: Option<u64>,
+}
+
+impl Object {
+    fn plain(data: Bytes, generation: u64) -> Self {
+        Self { data, generation, refs: 1, content_hash: None }
+    }
+}
+
+/// FNV-1a over the object bytes — the dedup content hash. Collisions
+/// are guarded by a full byte comparison before any ref is shared.
+fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[derive(Default)]
+struct StoreInner {
+    buckets: HashMap<String, HashMap<String, Object>>,
+    /// Dedup index: (bucket, generation, content hash) → key of the
+    /// canonical object. Entries are removed together with their
+    /// object (release to zero, sweep, delete, clear).
+    dedup: HashMap<(String, u64, u64), String>,
 }
 
 /// In-process S3: buckets of key→object with monotonic usage stats.
 #[derive(Default)]
 pub struct ObjectStore {
-    buckets: RwLock<HashMap<String, HashMap<String, Object>>>,
+    inner: RwLock<StoreInner>,
     puts: AtomicU64,
     gets: AtomicU64,
     bytes_in: AtomicU64,
+    dedup_hits: AtomicU64,
     key_counter: AtomicU64,
 }
 
@@ -166,7 +223,12 @@ impl ObjectStore {
     }
 
     pub fn create_bucket(&self, bucket: &str) {
-        self.buckets.write().unwrap().entry(bucket.to_string()).or_default();
+        self.inner
+            .write()
+            .unwrap()
+            .buckets
+            .entry(bucket.to_string())
+            .or_default();
     }
 
     /// Store a run-long (persistent-generation) object.
@@ -183,11 +245,12 @@ impl ObjectStore {
         generation: u64,
     ) -> Result<ObjectRef> {
         let size = data.len();
-        let mut buckets = self.buckets.write().unwrap();
-        buckets
+        let mut inner = self.inner.write().unwrap();
+        inner
+            .buckets
             .entry(bucket.to_string())
             .or_default()
-            .insert(key.to_string(), Object { data, generation });
+            .insert(key.to_string(), Object::plain(data, generation));
         self.puts.fetch_add(1, Ordering::Relaxed);
         self.bytes_in.fetch_add(size as u64, Ordering::Relaxed);
         Ok(ObjectRef { bucket: bucket.to_string(), key: key.to_string(), size })
@@ -205,10 +268,93 @@ impl ObjectStore {
         self.put_gen(bucket, &key, data, generation)
     }
 
+    /// Content-hash-deduplicated put under a fresh key: if an object
+    /// with identical bytes and the same generation already lives in
+    /// `bucket`, no new object is stored — the existing ref is returned
+    /// with its reference count bumped (and `dedup_hits` incremented;
+    /// `puts`/`bytes_in` count *stored* objects only). Every holder must
+    /// [`Self::release`] its reference; the object is removed when the
+    /// last one does. This is how N peers uploading identical per-epoch
+    /// params bytes end up putting one object (ROADMAP follow-up from
+    /// the zero-redundancy data plane).
+    pub fn put_dedup(&self, bucket: &str, data: Bytes, generation: u64) -> Result<ObjectRef> {
+        let hash = fnv1a64(&data);
+        let mut inner = self.inner.write().unwrap();
+        let dkey = (bucket.to_string(), generation, hash);
+        if let Some(key) = inner.dedup.get(&dkey).cloned() {
+            if let Some(obj) = inner.buckets.get_mut(bucket).and_then(|b| b.get_mut(&key)) {
+                // hash match alone is not identity — compare the bytes
+                if obj.data == data {
+                    obj.refs += 1;
+                    let size = obj.data.len();
+                    self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(ObjectRef { bucket: bucket.to_string(), key, size });
+                }
+            }
+            // hash collision with different bytes: fall through and
+            // store separately (the collider keeps the index entry)
+        }
+        let key = self.new_key();
+        let size = data.len();
+        inner.buckets.entry(bucket.to_string()).or_default().insert(
+            key.clone(),
+            Object { data, generation, refs: 1, content_hash: Some(hash) },
+        );
+        // a hash-colliding earlier object keeps its index entry; only a
+        // vacant slot is claimed
+        inner.dedup.entry(dkey).or_insert_with(|| key.clone());
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(size as u64, Ordering::Relaxed);
+        Ok(ObjectRef { bucket: bucket.to_string(), key, size })
+    }
+
+    /// Drop one reference to `r`; removes the object (and its dedup
+    /// index entry) when the last reference goes. Objects stored by the
+    /// plain puts carry one implicit reference, so `release` doubles as
+    /// a refcount-aware delete. Returns whether the object was removed;
+    /// missing objects are a no-op (a generation sweep may already have
+    /// reclaimed them wholesale).
+    pub fn release(&self, r: &ObjectRef) -> bool {
+        let mut inner = self.inner.write().unwrap();
+        let removed = {
+            let Some(b) = inner.buckets.get_mut(&r.bucket) else {
+                return false;
+            };
+            match b.get_mut(&r.key) {
+                None => return false,
+                Some(obj) if obj.refs > 1 => {
+                    obj.refs -= 1;
+                    return false;
+                }
+                Some(obj) => {
+                    let meta = (obj.generation, obj.content_hash);
+                    b.remove(&r.key);
+                    meta
+                }
+            }
+        };
+        if let (generation, Some(hash)) = removed {
+            let dkey = (r.bucket.clone(), generation, hash);
+            // a hash-colliding sibling may own the index entry: drop it
+            // only if it points at the key being removed
+            if inner.dedup.get(&dkey) == Some(&r.key) {
+                inner.dedup.remove(&dkey);
+            }
+        }
+        true
+    }
+
+    /// Total dedup hits: puts that were answered by an existing
+    /// identical object instead of storing a new one.
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits.load(Ordering::Relaxed)
+    }
+
     pub fn get(&self, bucket: &str, key: &str) -> Result<Bytes> {
         self.gets.fetch_add(1, Ordering::Relaxed);
-        self.buckets
+        self.inner
             .read().unwrap()
+            .buckets
             .get(bucket)
             .and_then(|b| b.get(key).map(|o| o.data.clone()))
             .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))
@@ -220,26 +366,41 @@ impl ObjectStore {
 
     /// The generation an object was stored with (None if missing).
     pub fn generation_of(&self, r: &ObjectRef) -> Option<u64> {
-        self.buckets
+        self.inner
             .read().unwrap()
+            .buckets
             .get(&r.bucket)
             .and_then(|b| b.get(&r.key).map(|o| o.generation))
     }
 
+    /// Unconditional delete — ignores reference counts (the store-level
+    /// force path; refcounted holders use [`Self::release`]).
     pub fn delete(&self, bucket: &str, key: &str) -> Result<()> {
-        let mut buckets = self.buckets.write().unwrap();
-        let b = buckets
-            .get_mut(bucket)
-            .ok_or_else(|| Error::Store(format!("missing bucket {bucket}")))?;
-        b.remove(key)
-            .map(|_| ())
-            .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))
+        let mut inner = self.inner.write().unwrap();
+        let removed = {
+            let b = inner
+                .buckets
+                .get_mut(bucket)
+                .ok_or_else(|| Error::Store(format!("missing bucket {bucket}")))?;
+            let obj = b
+                .remove(key)
+                .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))?;
+            (obj.generation, obj.content_hash)
+        };
+        if let (generation, Some(hash)) = removed {
+            let dkey = (bucket.to_string(), generation, hash);
+            if inner.dedup.get(&dkey).map(String::as_str) == Some(key) {
+                inner.dedup.remove(&dkey);
+            }
+        }
+        Ok(())
     }
 
     pub fn list(&self, bucket: &str) -> Vec<String> {
         let mut keys: Vec<String> = self
-            .buckets
+            .inner
             .read().unwrap()
+            .buckets
             .get(bucket)
             .map(|b| b.keys().cloned().collect())
             .unwrap_or_default();
@@ -248,8 +409,9 @@ impl ObjectStore {
     }
 
     pub fn bucket_size(&self, bucket: &str) -> usize {
-        self.buckets
+        self.inner
             .read().unwrap()
+            .buckets
             .get(bucket)
             .map(|b| b.values().map(|o| o.data.len()).sum())
             .unwrap_or(0)
@@ -257,8 +419,9 @@ impl ObjectStore {
 
     /// Number of live objects in one bucket.
     pub fn object_count(&self, bucket: &str) -> usize {
-        self.buckets
+        self.inner
             .read().unwrap()
+            .buckets
             .get(bucket)
             .map(|b| b.len())
             .unwrap_or(0)
@@ -267,21 +430,38 @@ impl ObjectStore {
     /// Number of live objects across every bucket — the boundedness
     /// check for the per-epoch serverless sweeps.
     pub fn total_objects(&self) -> usize {
-        self.buckets.read().unwrap().values().map(|b| b.len()).sum()
+        self.inner
+            .read()
+            .unwrap()
+            .buckets
+            .values()
+            .map(|b| b.len())
+            .sum()
     }
 
     /// Delete every object in `bucket` tagged with `generation`; returns
     /// how many were removed. The per-epoch sweep: reclaims one epoch's
     /// scratch (params, parked gradients) while the epoch-persistent
     /// batch objects survive. Runs on error paths too, where individual
-    /// refs may be unknown. Pass [`GEN_PERSISTENT`] only at teardown.
+    /// refs may be unknown; reference counts are ignored — a generation
+    /// sweep is wholesale by contract. Pass [`GEN_PERSISTENT`] only at
+    /// teardown.
     pub fn sweep_generation(&self, bucket: &str, generation: u64) -> usize {
-        self.buckets
-            .write().unwrap()
+        let mut inner = self.inner.write().unwrap();
+        let StoreInner { buckets, dedup } = &mut *inner;
+        buckets
             .get_mut(bucket)
             .map(|b| {
                 let before = b.len();
-                b.retain(|_, o| o.generation != generation);
+                b.retain(|_, o| {
+                    if o.generation != generation {
+                        return true;
+                    }
+                    if let Some(hash) = o.content_hash {
+                        dedup.remove(&(bucket.to_string(), generation, hash));
+                    }
+                    false
+                });
                 before - b.len()
             })
             .unwrap_or(0)
@@ -290,15 +470,18 @@ impl ObjectStore {
     /// Delete every object in `bucket` regardless of generation (the
     /// bucket itself survives); returns how many objects were removed.
     pub fn clear_bucket(&self, bucket: &str) -> usize {
-        self.buckets
-            .write().unwrap()
+        let mut inner = self.inner.write().unwrap();
+        let n = inner
+            .buckets
             .get_mut(bucket)
             .map(|b| {
                 let n = b.len();
                 b.clear();
                 n
             })
-            .unwrap_or(0)
+            .unwrap_or(0);
+        inner.dedup.retain(|(bkt, _, _), _| bkt != bucket);
+        n
     }
 
     /// (puts, gets, bytes written).
@@ -347,10 +530,38 @@ struct DecodedCacheState {
     /// Insertion order for FIFO eviction (epoch params objects arrive
     /// one per epoch; old epochs' entries age out naturally).
     order: VecDeque<(String, String)>,
-    /// Keys exempt from eviction: the live params generations. FIFO
-    /// used to evict the previous epoch's params while tail branches
-    /// still needed it when `capacity` was small — pinning is the fix.
-    pinned: HashSet<(String, String)>,
+    /// Keys exempt from eviction, with a holder count: the live params
+    /// generations. FIFO used to evict the previous epoch's params
+    /// while tail branches still needed it when `capacity` was small —
+    /// pinning is the fix. The count matters since the shared-params
+    /// dedup landed: N peers pin the *same* deduplicated params entry,
+    /// and the first peer to retire its generation must not drop an
+    /// entry the other peers' tail branches still read.
+    pinned: HashMap<(String, String), usize>,
+    /// Packed-view sidecar: per-key, single-occupancy slots holding an
+    /// opaque packed representation of the object (the runtime checks
+    /// its PJRT batch literals in and out here, so they are packed once
+    /// per object instead of once per invocation). Entries live until
+    /// [`DecodedCache::invalidate`]; in practice only the run-long
+    /// batch objects are ever packed, so residency is bounded by the
+    /// dataset partition.
+    packed: HashMap<(String, String), Box<dyn Any + Send>>,
+}
+
+impl DecodedCacheState {
+    /// Drop one holder's pin on `key`; returns `true` while other
+    /// holders' pins remain (the single shared copy of the per-holder
+    /// pin-count protocol — both unpin and invalidate go through it).
+    fn drop_pin(&mut self, key: &(String, String)) -> bool {
+        if let Some(n) = self.pinned.get_mut(key) {
+            *n -= 1;
+            if *n > 0 {
+                return true;
+            }
+            self.pinned.remove(key);
+        }
+        false
+    }
 }
 
 /// Memoizes object-bytes → `Vec<f32>` decodes, keyed by (bucket, key).
@@ -368,6 +579,8 @@ pub struct DecodedCache {
     state: Mutex<DecodedCacheState>,
     hits: AtomicU64,
     misses: AtomicU64,
+    pack_hits: AtomicU64,
+    pack_misses: AtomicU64,
 }
 
 impl DecodedCache {
@@ -377,10 +590,13 @@ impl DecodedCache {
             state: Mutex::new(DecodedCacheState {
                 slots: HashMap::new(),
                 order: VecDeque::new(),
-                pinned: HashSet::new(),
+                pinned: HashMap::new(),
+                packed: HashMap::new(),
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            pack_hits: AtomicU64::new(0),
+            pack_misses: AtomicU64::new(0),
         }
     }
 
@@ -402,7 +618,7 @@ impl DecodedCache {
                         // evict the oldest *unpinned* entry; if every
                         // resident entry is pinned (live generations),
                         // admit over capacity instead of evicting one
-                        match st.order.iter().position(|k| !st.pinned.contains(k)) {
+                        match st.order.iter().position(|k| !st.pinned.contains_key(k)) {
                             Some(pos) => {
                                 let old = st.order.remove(pos).unwrap();
                                 st.slots.remove(&old);
@@ -429,26 +645,31 @@ impl DecodedCache {
     }
 
     /// Exempt `r`'s entry from FIFO eviction while its generation is
-    /// live (in-flight or lagged, in cross-epoch mode). Pinning a key
-    /// that is not cached yet is fine — the pin takes effect when the
-    /// first branch decodes it. No-op when caching is disabled.
+    /// live (in-flight or lagged, in cross-epoch mode). Pins are
+    /// counted: each holder (one per peer sharing a deduplicated params
+    /// object) pins once and the entry stays exempt until every pin is
+    /// dropped. Pinning a key that is not cached yet is fine — the pin
+    /// takes effect when the first branch decodes it. No-op when
+    /// caching is disabled.
     pub fn pin(&self, r: &ObjectRef) {
         if self.capacity == 0 {
             return;
         }
         let mut st = self.state.lock().unwrap();
-        st.pinned.insert((r.bucket.clone(), r.key.clone()));
+        *st.pinned.entry((r.bucket.clone(), r.key.clone())).or_insert(0) += 1;
     }
 
-    /// Make `r`'s entry evictable again while keeping it resident (a
-    /// later insert evicts it in FIFO order). The offload retirement
-    /// path doesn't need this — [`Self::invalidate`] drops the entry
-    /// *and* its pin in one step — but a caller that wants a formerly
-    /// live generation to age out naturally instead of being dropped
-    /// uses unpin.
+    /// Drop one pin from `r`'s entry while keeping it resident (once
+    /// the last pin is gone, a later insert evicts it in FIFO order).
+    /// The offload retirement path doesn't need this —
+    /// [`Self::invalidate`] drops a pin *and*, when it was the last,
+    /// the entry in one step — but a caller that wants a formerly live
+    /// generation to age out naturally instead of being dropped uses
+    /// unpin.
     pub fn unpin(&self, r: &ObjectRef) {
         let mut st = self.state.lock().unwrap();
-        st.pinned.remove(&(r.bucket.clone(), r.key.clone()));
+        let key = (r.bucket.clone(), r.key.clone());
+        st.drop_pin(&key);
     }
 
     /// Keys currently pinned (live params generations).
@@ -456,15 +677,81 @@ impl DecodedCache {
         self.state.lock().unwrap().pinned.len()
     }
 
-    /// Drop `r`'s entry (the object was swept; the key is never reused).
-    /// Clears any pin — a swept generation must not keep a ghost pin.
+    /// Drop one holder's claim on `r`'s entry. While other holders'
+    /// pins remain (peers sharing a deduplicated params object whose
+    /// generations are still live), only this holder's pin is released
+    /// and the entry stays resident; the last claim drops the entry,
+    /// its packed sidecar, and any ghost pin (the object was swept; the
+    /// key is never reused).
     pub fn invalidate(&self, r: &ObjectRef) {
         let mut st = self.state.lock().unwrap();
         let key = (r.bucket.clone(), r.key.clone());
-        st.pinned.remove(&key);
+        if st.drop_pin(&key) {
+            return;
+        }
+        st.packed.remove(&key);
         if st.slots.remove(&key).is_some() {
             st.order.retain(|k| k != &key);
         }
+    }
+
+    /// Check the packed view of `r` out of the sidecar (removing it):
+    /// the caller owns it for the duration of one execution and is
+    /// expected to [`Self::put_packed`] it back. Single occupancy is
+    /// the point — exactly one branch per epoch reads a given batch
+    /// object, so the checkout never contends in steady state, and a
+    /// rare concurrent reader (cross-epoch overlap on the same branch
+    /// index) simply misses and re-packs. Typed via `Any` so the store
+    /// stays ignorant of PJRT literal types. No-op (always a miss) when
+    /// caching is disabled.
+    pub fn take_packed<T: Any + Send>(&self, r: &ObjectRef) -> Option<Box<T>> {
+        if self.capacity == 0 {
+            self.pack_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        let key = (r.bucket.clone(), r.key.clone());
+        match st.packed.remove(&key) {
+            Some(boxed) => match boxed.downcast::<T>() {
+                Ok(t) => {
+                    self.pack_hits.fetch_add(1, Ordering::Relaxed);
+                    Some(t)
+                }
+                Err(boxed) => {
+                    // a different packed type lives under this key:
+                    // leave it for its owner
+                    st.packed.insert(key, boxed);
+                    self.pack_misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+            },
+            None => {
+                self.pack_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Check a packed view of `r` back into the sidecar (replacing
+    /// whatever a concurrent re-packer may have left there). No-op when
+    /// caching is disabled.
+    pub fn put_packed<T: Any + Send>(&self, r: &ObjectRef, packed: Box<T>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.packed.insert((r.bucket.clone(), r.key.clone()), packed);
+    }
+
+    /// Packed-sidecar checkout hits.
+    pub fn pack_hits(&self) -> u64 {
+        self.pack_hits.load(Ordering::Relaxed)
+    }
+
+    /// Packed-sidecar checkout misses (first packing of each object,
+    /// plus every access with caching disabled).
+    pub fn pack_misses(&self) -> u64 {
+        self.pack_misses.load(Ordering::Relaxed)
     }
 
     /// Live entries (filled or in flight).
@@ -729,6 +1016,115 @@ mod tests {
         assert_eq!(off.misses(), 2);
         assert_eq!(off.hits(), 0);
         assert!(off.is_empty());
+    }
+
+    #[test]
+    fn put_dedup_shares_identical_bytes_within_a_generation() {
+        let s = ObjectStore::new();
+        let bytes = Bytes::from_static(b"params-v1");
+        let r0 = s.put_dedup("shared", bytes.clone(), 1).unwrap();
+        let r1 = s.put_dedup("shared", bytes.clone(), 1).unwrap();
+        // one object, one put, one dedup hit — N peers put 1 object
+        assert_eq!(r0, r1);
+        assert_eq!(s.object_count("shared"), 1);
+        assert_eq!(s.stats().0, 1, "a dedup hit must not count as a put");
+        assert_eq!(s.dedup_hits(), 1);
+        // a different generation of the same bytes is a separate object
+        let r2 = s.put_dedup("shared", bytes.clone(), 2).unwrap();
+        assert_ne!(r0.key, r2.key);
+        assert_eq!(s.object_count("shared"), 2);
+        // different bytes in the same generation too
+        let r3 = s.put_dedup("shared", Bytes::from_static(b"params-v1'"), 1).unwrap();
+        assert_ne!(r0.key, r3.key);
+        assert_eq!(s.dedup_hits(), 1);
+    }
+
+    #[test]
+    fn release_removes_on_last_reference_only() {
+        let s = ObjectStore::new();
+        let bytes = Bytes::from_static(b"shared-params");
+        let r = s.put_dedup("shared", bytes.clone(), 3).unwrap();
+        s.put_dedup("shared", bytes.clone(), 3).unwrap(); // second holder
+        assert!(!s.release(&r), "first release must keep the object");
+        assert!(s.get_ref(&r).is_ok());
+        assert!(s.release(&r), "last release removes it");
+        assert!(s.get_ref(&r).is_err());
+        // the dedup index entry went with it: the same bytes store anew
+        let r2 = s.put_dedup("shared", bytes, 3).unwrap();
+        assert_ne!(r.key, r2.key, "stale index entry must not resurrect a freed key");
+        assert!(s.get_ref(&r2).is_ok());
+        // releasing a missing object is a no-op (sweeps run wholesale)
+        assert!(!s.release(&r));
+        // plain puts carry one implicit reference
+        let p = s.put_new("b", Bytes::from_static(b"x")).unwrap();
+        assert!(s.release(&p));
+        assert!(s.get_ref(&p).is_err());
+    }
+
+    #[test]
+    fn generation_sweep_purges_dedup_index() {
+        let s = ObjectStore::new();
+        let bytes = Bytes::from_static(b"params");
+        let r = s.put_dedup("shared", bytes.clone(), 5).unwrap();
+        s.put_dedup("shared", bytes.clone(), 5).unwrap();
+        assert_eq!(s.sweep_generation("shared", 5), 1);
+        // the sweep is wholesale (refcounts ignored) and the index is
+        // clean: identical bytes after the sweep are a fresh object,
+        // not a dangling ref
+        let r2 = s.put_dedup("shared", bytes, 5).unwrap();
+        assert_ne!(r.key, r2.key);
+        assert!(s.get_ref(&r2).is_ok());
+        assert_eq!(s.dedup_hits(), 1);
+    }
+
+    #[test]
+    fn decoded_cache_pins_are_counted_per_holder() {
+        // the shared-params shape: two peers pin the same deduplicated
+        // entry; the first peer's retirement (invalidate) must leave
+        // the entry resident for the second peer's tail branches
+        let s = ObjectStore::new();
+        let r = s.put_new("b", Bytes::from(f32s_to_bytes(&[1.0, 2.0]))).unwrap();
+        let c = DecodedCache::new(4);
+        c.pin(&r);
+        c.pin(&r);
+        assert_eq!(c.pinned_len(), 1, "one key, two holders");
+        c.get_or_decode(&r, &s).unwrap();
+        c.invalidate(&r); // peer 0 retires
+        assert_eq!(c.pinned_len(), 1);
+        assert_eq!(*c.get_or_decode(&r, &s).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(c.hits(), 1, "entry must survive the first holder's retirement");
+        c.invalidate(&r); // peer 1 retires: entry drops
+        assert_eq!(c.pinned_len(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn packed_sidecar_checks_out_and_back_in() {
+        let s = ObjectStore::new();
+        let r = s.put_new("b", Bytes::from_static(b"batch")).unwrap();
+        let c = DecodedCache::new(4);
+        // nothing packed yet: miss
+        assert!(c.take_packed::<Vec<u8>>(&r).is_none());
+        assert_eq!((c.pack_hits(), c.pack_misses()), (0, 1));
+        // check in, check out: hit, and the sidecar is empty again
+        c.put_packed(&r, Box::new(vec![7u8, 8, 9]));
+        let got = c.take_packed::<Vec<u8>>(&r).expect("checked-in view");
+        assert_eq!(*got, vec![7, 8, 9]);
+        assert_eq!((c.pack_hits(), c.pack_misses()), (1, 1));
+        assert!(c.take_packed::<Vec<u8>>(&r).is_none(), "single occupancy");
+        // a mismatched type stays put for its owner
+        c.put_packed(&r, Box::new(vec![1u8]));
+        assert!(c.take_packed::<String>(&r).is_none());
+        assert!(c.take_packed::<Vec<u8>>(&r).is_some());
+        // invalidate drops the sidecar entry with the rest
+        c.put_packed(&r, Box::new(vec![2u8]));
+        c.invalidate(&r);
+        assert!(c.take_packed::<Vec<u8>>(&r).is_none());
+        // disabled cache: put is a no-op, take always misses
+        let off = DecodedCache::new(0);
+        off.put_packed(&r, Box::new(vec![3u8]));
+        assert!(off.take_packed::<Vec<u8>>(&r).is_none());
+        assert_eq!(off.pack_hits(), 0);
     }
 
     #[test]

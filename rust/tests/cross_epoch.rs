@@ -419,6 +419,8 @@ fn cross_epoch_sweep_off_accumulates_scratch() {
         .run()
         .unwrap();
     // teardown removes the persistent batch objects; the unswept
-    // scratch (params + parked gradients per peer per epoch) remains
-    assert_eq!(rep.store_objects, epochs * peers * (1 + batches));
+    // scratch remains: one deduped params object per epoch (identical
+    // bytes across synchronous peers) plus the parked gradients per
+    // peer per epoch
+    assert_eq!(rep.store_objects, epochs * (1 + peers * batches));
 }

@@ -137,7 +137,9 @@ fn serverless_cfg() -> TrainConfig {
 /// The acceptance bar: with epoch-persistent batch objects, a
 /// steady-state epoch puts exactly one input object (the params) plus
 /// the parked per-batch gradients — the per-epoch batch re-upload is
-/// gone, and the decode cache turns N params reads into one decode.
+/// gone; content dedupe collapses the N identical per-peer params
+/// uploads to one stored object per epoch, and the decode cache turns
+/// the whole cluster's params reads into one decode.
 #[test]
 fn steady_state_epochs_put_only_params() {
     require_artifacts!();
@@ -150,21 +152,40 @@ fn steady_state_epochs_put_only_params() {
     let branches = peers * epochs * batches;
     assert_eq!(rep.lambda_invocations, branches);
 
-    // puts: batch objects once per peer, then per epoch per peer one
-    // params object + one parked gradient per branch. The old plane
-    // paid an extra `batches` puts per peer per epoch.
-    let want_puts = peers * batches + epochs * peers * (1 + batches);
+    // puts: batch objects once per peer, then per epoch ONE deduped
+    // params object for the whole cluster (synchronous peers upload
+    // identical bytes) + one parked gradient per branch. The old plane
+    // paid an extra `batches` puts per peer per epoch, and until the
+    // dedupe an extra params object per peer per epoch.
+    let want_puts = peers * batches + epochs * (1 + peers * batches);
     assert_eq!(
         rep.counter("store.puts"),
         Some(want_puts),
-        "steady-state epochs must upload params only (O(1) input puts)"
+        "steady-state epochs must store params once per epoch (O(1) input puts)"
+    );
+    // every peer after the first hits the dedupe
+    assert_eq!(
+        rep.counter("store.dedup_hits"),
+        Some(epochs * (peers - 1)),
+        "N synchronous peers must put 1 params object"
     );
 
-    // decode counters: one miss per (peer, epoch) params object, every
-    // other branch is a hit — exact even under concurrent branches
-    let want_misses = peers * epochs;
+    // decode counters: one miss per epoch — the deduplicated params
+    // object is shared cluster-wide, so even across peers the decode
+    // happens once; every other branch is a hit. Exact even under
+    // concurrent branches (per-key in-flight guard).
+    let want_misses = epochs;
     assert_eq!(rep.counter("store.decode_misses"), Some(want_misses));
     assert_eq!(rep.counter("store.decode_hits"), Some(branches - want_misses));
+
+    // packed-literal sidecar: each batch object's input literals are
+    // packed exactly once (epoch 1), then checked out on every later
+    // epoch
+    assert_eq!(rep.counter("store.pack_misses"), Some(peers * batches));
+    assert_eq!(
+        rep.counter("store.pack_hits"),
+        Some((epochs - 1) * peers * batches)
+    );
 
     // generation sweeps + teardown leave nothing behind
     assert_eq!(rep.store_objects, 0);
@@ -182,8 +203,9 @@ fn sweep_scratch_off_accumulates_epoch_scratch() {
         .run()
         .unwrap();
     // teardown removes the persistent batch objects; the unswept
-    // scratch (params + parked gradients per peer per epoch) remains
-    assert_eq!(rep.store_objects, epochs * peers * (1 + batches));
+    // scratch remains: one deduped params object per epoch plus the
+    // parked gradients per peer per epoch
+    assert_eq!(rep.store_objects, epochs * (1 + peers * batches));
 }
 
 /// Staged and pipelined dispatch consume the same cached batch refs and

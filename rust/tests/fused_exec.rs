@@ -1,0 +1,297 @@
+//! Fused micro-batched execution, end to end:
+//!
+//! - batch-fold bit-identity (no PJRT needed): work items routed
+//!   through the [`ExecBatcher`] produce bit-identical outputs — and
+//!   bit-identical branch-order f64 folds — at `--exec-batch` 1/4/8 ×
+//!   worker threads 1/2/8, because fusion never mixes members' data;
+//! - mixed params versions: interleaved generations flow through the
+//!   batcher without ever corrupting each other's outputs (the
+//!   never-fuse-across-versions contract; exact group accounting is
+//!   unit-tested in `runtime::batcher`);
+//! - cluster acceptance (real PJRT, artifact-gated): training results
+//!   are invariant across `--exec-batch` × `--exec-threads`, an
+//!   8-branch single-peer run at `--exec-batch 8` performs exactly one
+//!   fused engine dispatch per epoch, and fusion composes with
+//!   cross-epoch dispatch (generations never fuse, stores stay clean).
+
+mod common;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use p2pless::config::{Backend, OffloadMode, TrainConfig};
+use p2pless::coordinator::Cluster;
+use p2pless::faas::Semaphore;
+use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey};
+
+const ITEMS: usize = 16;
+const DIM: usize = 8;
+
+fn key(version: u64) -> FuseKey {
+    FuseKey { exe: 0xFEED, batch: DIM, params: 4, version }
+}
+
+/// Deterministic per-item input, distinct across items so any routing
+/// mix-up inside the batcher corrupts some item's output bits.
+fn item_input(version: u64, i: usize) -> Vec<f32> {
+    (0..DIM)
+        .map(|k| (version.wrapping_mul(31) + i as u64 * 7 + k as u64) as f32 * 0.015625 - 1.0)
+        .collect()
+}
+
+fn transform(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|v| 2.0 * v + 1.0).collect()
+}
+
+/// Push `ITEMS` work items of `version_of(i)` through one batcher on a
+/// pool of `threads` plain worker threads; returns per-item output bits
+/// in item order.
+fn run_pool(
+    exec_batch: usize,
+    threads: usize,
+    version_of: fn(usize) -> u64,
+) -> Vec<Vec<u32>> {
+    let batcher = Arc::new(ExecBatcher::new(exec_batch, Duration::from_millis(2)));
+    let sem = Arc::new(Semaphore::new(2));
+    let queue = Arc::new(Mutex::new((0..ITEMS).collect::<VecDeque<usize>>()));
+    let results: Arc<Mutex<Vec<Vec<u32>>>> = Arc::new(Mutex::new(vec![Vec::new(); ITEMS]));
+    let workers: Vec<_> = (0..threads)
+        .map(|_| {
+            let batcher = batcher.clone();
+            let sem = sem.clone();
+            let queue = queue.clone();
+            let results = results.clone();
+            std::thread::spawn(move || loop {
+                let Some(i) = queue.lock().unwrap().pop_front() else {
+                    return;
+                };
+                let version = version_of(i);
+                let data = item_input(version, i);
+                let inputs = vec![literal_f32(&data, &[DIM as i64]).unwrap()];
+                let (outs, _ins, _timing) = batcher
+                    .run(key(version), inputs, &sem, |ins| {
+                        let v = ins[0].to_vec::<f32>()?;
+                        let out = transform(&v);
+                        Ok(vec![literal_f32(&out, &[out.len() as i64])?])
+                    })
+                    .unwrap();
+                let bits: Vec<u32> = outs[0]
+                    .to_vec::<f32>()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                results.lock().unwrap()[i] = bits;
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(batcher.fused_branches(), ITEMS as u64, "every item must execute");
+    Arc::try_unwrap(results).unwrap().into_inner().unwrap()
+}
+
+/// Fold per-item outputs in item order into one f64 running sum per
+/// coordinate — the shape of the epoch gradient fold — and return the
+/// bit pattern.
+fn fold_bits(outputs: &[Vec<u32>]) -> Vec<u64> {
+    let mut acc = vec![0f64; DIM];
+    for out in outputs {
+        for (a, &bits) in acc.iter_mut().zip(out) {
+            *a += f32::from_bits(bits) as f64;
+        }
+    }
+    acc.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The acceptance bar below the cluster: outputs and branch-order folds
+/// are bit-identical at every `--exec-batch` × thread-count
+/// combination, because a fused dispatch executes each member's own
+/// inputs and nothing else.
+#[test]
+fn fused_folds_bit_identical_across_batch_and_threads() {
+    let reference = run_pool(1, 1, |_| 42);
+    let reference_fold = fold_bits(&reference);
+    for exec_batch in [1usize, 4, 8] {
+        for threads in [1usize, 2, 8] {
+            let got = run_pool(exec_batch, threads, |_| 42);
+            for (i, (g, w)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g, w,
+                    "item {i} output bits diverged at batch {exec_batch}, \
+                     threads {threads}"
+                );
+            }
+            assert_eq!(
+                fold_bits(&got),
+                reference_fold,
+                "fold bits diverged at batch {exec_batch}, threads {threads}"
+            );
+        }
+    }
+}
+
+/// Interleaved params versions flow through the batcher uncorrupted:
+/// items of generation 1 and 2 alternate, and every item still gets its
+/// own transform back (a cross-version fuse would hand some item
+/// another generation's inputs — the unit tests in `runtime::batcher`
+/// additionally pin the exact group accounting).
+#[test]
+fn mixed_params_versions_stay_isolated() {
+    let got = run_pool(4, 8, |i| 1 + (i % 2) as u64);
+    for (i, bits) in got.iter().enumerate() {
+        let want: Vec<u32> = transform(&item_input(1 + (i % 2) as u64, i))
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        assert_eq!(bits, &want, "item {i} was cross-contaminated");
+    }
+}
+
+// -------------------------------------------------------------- cluster
+
+fn serverless_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 2,
+        lr: 0.05,
+        train_samples: 2 * 16 * 2, // 2 full batches per peer
+        val_samples: 64,
+        backend: Backend::Serverless,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+fn engine_with_batch(exec_batch: usize, wait_us: u64) -> Arc<Engine> {
+    Arc::new(
+        Engine::with_exec_batching(0, exec_batch, Duration::from_micros(wait_us))
+            .expect("PJRT CPU client"),
+    )
+}
+
+/// Training results are invariant across the fusion matrix: the leader's
+/// validation curve at `--exec-batch` 4/8 × `--exec-threads` 1/2/8
+/// matches the unbatched single-thread reference.
+#[test]
+fn fused_cluster_results_invariant_across_batch_and_threads() {
+    require_artifacts!();
+    let run = |engine: &Arc<Engine>, exec_batch: usize, threads: usize| {
+        let cfg = TrainConfig {
+            exec_batch,
+            exec_threads: threads,
+            ..serverless_cfg()
+        };
+        Cluster::with_engine(cfg, engine.clone()).unwrap().run().unwrap()
+    };
+    let reference = run(&common::engine(), 1, 1);
+    assert_eq!(reference.counter("engine.batched_execs"), Some(0), "fusion off");
+    for exec_batch in [4usize, 8] {
+        let engine = engine_with_batch(exec_batch, 500);
+        for threads in [1usize, 2, 8] {
+            let got = run(&engine, exec_batch, threads);
+            assert_eq!(got.lambda_invocations, reference.lambda_invocations);
+            assert_eq!(got.val_curve.len(), reference.val_curve.len());
+            for ((e1, l1, a1), (e2, l2, a2)) in
+                reference.val_curve.iter().zip(&got.val_curve)
+            {
+                assert_eq!(e1, e2);
+                assert!(
+                    (l1 - l2).abs() < 1e-6,
+                    "val loss diverged at batch {exec_batch}, threads {threads}: \
+                     {l1} vs {l2}"
+                );
+                assert!((a1 - a2).abs() < 1e-6);
+            }
+            assert_eq!(got.store_objects, 0);
+        }
+    }
+}
+
+/// The headline acceptance: an 8-branch single-peer epoch at
+/// `--exec-batch 8` with 8 workers performs exactly ONE fused engine
+/// dispatch per epoch, carrying all 8 branches (100% fill), and the
+/// math matches the unbatched run.
+#[test]
+fn eight_branches_fuse_into_one_dispatch_per_epoch() {
+    require_artifacts!();
+    let epochs = 2usize;
+    let cfg = |exec_batch: usize| TrainConfig {
+        peers: 1,
+        epochs,
+        train_samples: 8 * 16, // 8 branches per epoch
+        exec_threads: 8,
+        exec_batch,
+        // a generous collect window: the group closes the instant the
+        // 8th branch arrives, so the window is never actually paid in
+        // steady state — it only guards against scheduling hiccups
+        exec_batch_wait_us: 5_000_000,
+        ..serverless_cfg()
+    };
+    let fused = Cluster::with_engine(cfg(8), engine_with_batch(8, 5_000_000))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        fused.counter("engine.batched_execs"),
+        Some(epochs as u64),
+        "8 branches at --exec-batch 8 must fuse into one dispatch per epoch"
+    );
+    assert_eq!(
+        fused.counter("engine.fused_branches"),
+        Some((epochs * 8) as u64)
+    );
+    assert_eq!(fused.counter("engine.batch_fill"), Some(100));
+
+    let unbatched = Cluster::with_engine(cfg(1), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(unbatched.counter("engine.batched_execs"), Some(0));
+    assert_eq!(fused.lambda_invocations, unbatched.lambda_invocations);
+    assert_eq!(fused.val_curve.len(), unbatched.val_curve.len());
+    for ((_, l1, a1), (_, l2, a2)) in fused.val_curve.iter().zip(&unbatched.val_curve) {
+        assert!((l1 - l2).abs() < 1e-6, "fused {l1} vs unbatched {l2}");
+        assert!((a1 - a2).abs() < 1e-6);
+    }
+    assert_eq!(fused.store_objects, 0);
+}
+
+/// Fusion composes with cross-epoch dispatch: overlapping generations
+/// never fuse (keyed by params version), the validation curve still
+/// matches staged, and the lagged sweep leaves the store clean.
+#[test]
+fn fusion_composes_with_cross_epoch_mode() {
+    require_artifacts!();
+    let staged = Cluster::with_engine(
+        TrainConfig { offload_mode: OffloadMode::Staged, ..serverless_cfg() },
+        common::engine(),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let fused_cross = Cluster::with_engine(
+        TrainConfig {
+            offload_mode: OffloadMode::CrossEpoch,
+            exec_batch: 4,
+            exec_threads: 4,
+            ..serverless_cfg()
+        },
+        engine_with_batch(4, 500),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(staged.val_curve.len(), fused_cross.val_curve.len());
+    for ((_, l1, a1), (_, l2, a2)) in staged.val_curve.iter().zip(&fused_cross.val_curve) {
+        assert!((l1 - l2).abs() < 1e-6, "staged {l1} vs fused cross-epoch {l2}");
+        assert!((a1 - a2).abs() < 1e-6);
+    }
+    assert_eq!(staged.lambda_invocations, fused_cross.lambda_invocations);
+    assert_eq!(fused_cross.store_objects, 0);
+}
