@@ -1,18 +1,35 @@
 //! Fig-4 bench: communication cost as the peer count grows — real
 //! broker exchange of MobileNet-sized gradients between P threads, plus
 //! the modeled full-scale times.
+//!
+//! Second act: the **wire-plane sweep** — bytes-on-wire and modeled
+//! round wall for `none`/`qsgd:4`/`qsgd:16`/`topk:0.05` over the same
+//! peer-count axis, emitted as `BENCH_wire_plane.json` (the committed
+//! record; every value is integer-valued and content-independent, so
+//! regeneration is byte-stable). `BENCH_WIRE_ONLY=1` (CI) skips the
+//! threaded exchange and runs just the sweep.
 
 use std::sync::Arc;
 
 use p2pless::broker::{Broker, QueueMode};
-use p2pless::compress::RawCodec;
+use p2pless::compress::{codec_for, RawCodec};
+use p2pless::config::Compression;
 use p2pless::coordinator::GradientWire;
+use p2pless::faas::pricing;
 use p2pless::harness::bench::{header, Bench};
 use p2pless::perfmodel::{self, paper_model, PaperModel};
 use p2pless::store::ObjectStore;
-use p2pless::util::Rng;
+use p2pless::util::{Json, Rng};
+
+/// Integer pico-USD mirror of [`pricing`]'s transfer rate card, so the
+/// committed JSON carries exact integers instead of float-formatted
+/// dollars ($5e-6/PUT, $4e-7/GET, $0.02/GB = 20 pUSD/byte).
+const PUT_E12: u64 = 5_000_000;
+const GET_E12: u64 = 400_000;
+const BYTE_E12: u64 = 20;
 
 fn main() {
+    let wire_only = std::env::var_os("BENCH_WIRE_ONLY").is_some();
     header(
         "comm_scaling",
         "one full gradient exchange round (publish + consume P-1 queues) over peer count",
@@ -21,55 +38,131 @@ fn main() {
     let mut rng = Rng::seed_from_u64(9);
     let grad: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
 
-    let mut b = Bench::new("exchange").with_samples(1, 5);
-    for &peers in &[2usize, 4, 8, 12] {
-        let grad = grad.clone();
-        b.bench(&format!("round_{peers}_peers"), move || {
-            let broker = Arc::new(Broker::default());
-            let store = Arc::new(ObjectStore::new());
-            for r in 0..peers {
-                broker
-                    .declare(&Broker::gradient_queue(r), QueueMode::LatestOnly)
-                    .unwrap();
-            }
-            let handles: Vec<_> = (0..peers)
-                .map(|r| {
-                    let broker = broker.clone();
-                    let store = store.clone();
-                    let grad = grad.clone();
-                    std::thread::spawn(move || {
-                        let wire =
-                            GradientWire::new(Arc::new(RawCodec), store, usize::MAX);
-                        wire.publish(&broker, r, 1, &grad).unwrap();
-                        let mut total = 0usize;
-                        for p in 0..peers {
-                            if p == r {
-                                continue;
+    if !wire_only {
+        let mut b = Bench::new("exchange").with_samples(1, 5);
+        for &peers in &[2usize, 4, 8, 12] {
+            let grad = grad.clone();
+            b.bench(&format!("round_{peers}_peers"), move || {
+                let broker = Arc::new(Broker::default());
+                let store = Arc::new(ObjectStore::new());
+                for r in 0..peers {
+                    broker
+                        .declare(&Broker::gradient_queue(r), QueueMode::LatestOnly)
+                        .unwrap();
+                }
+                let handles: Vec<_> = (0..peers)
+                    .map(|r| {
+                        let broker = broker.clone();
+                        let store = store.clone();
+                        let grad = grad.clone();
+                        std::thread::spawn(move || {
+                            let wire =
+                                GradientWire::new(Arc::new(RawCodec), store, usize::MAX);
+                            wire.publish(&broker, r, 1, &grad).unwrap();
+                            let mut total = 0usize;
+                            for p in 0..peers {
+                                if p == r {
+                                    continue;
+                                }
+                                let q = broker.get(&Broker::gradient_queue(p)).unwrap();
+                                let m = q.await_epoch(1).unwrap();
+                                total += wire.decode(&m.payload).unwrap().len();
                             }
-                            let q = broker.get(&Broker::gradient_queue(p)).unwrap();
-                            let m = q.await_epoch(1).unwrap();
-                            total += wire.decode(&m.payload).unwrap().len();
-                        }
-                        total
+                            total
+                        })
                     })
-                })
-                .collect();
-            for h in handles {
-                std::hint::black_box(h.join().unwrap());
+                    .collect();
+                for h in handles {
+                    std::hint::black_box(h.join().unwrap());
+                }
+            });
+        }
+
+        println!("\nmodeled full-scale comm (fig 4 series):");
+        for model in [PaperModel::Vgg11, PaperModel::MobilenetV3Small] {
+            let spec = paper_model(model);
+            for &peers in &[4usize, 8, 12] {
+                let send = perfmodel::send_time(spec.gradient_bytes(), 1.0);
+                let recv = perfmodel::recv_time(spec.gradient_bytes(), peers - 1, 1.0);
+                println!(
+                    "  {:<20} peers={peers:<3} send {:>8.2?}  recv {:>8.2?}",
+                    spec.name, send, recv
+                );
             }
-        });
+        }
     }
 
-    println!("\nmodeled full-scale comm (fig 4 series):");
-    for model in [PaperModel::Vgg11, PaperModel::MobilenetV3Small] {
-        let spec = paper_model(model);
-        for &peers in &[4usize, 8, 12] {
-            let send = perfmodel::send_time(spec.gradient_bytes(), 1.0);
-            let recv = perfmodel::recv_time(spec.gradient_bytes(), peers - 1, 1.0);
-            println!(
-                "  {:<20} peers={peers:<3} send {:>8.2?}  recv {:>8.2?}",
-                spec.name, send, recv
+    // ---- wire-plane sweep -----------------------------------------------
+    // One store-mediated "round" among P peers: every peer parks its
+    // gradient (P puts) and reads the other P-1 parks (P*(P-1) gets).
+    // The per-object wire length is content-independent for every codec
+    // here (it depends only on n / levels / frac), which is what makes
+    // the committed JSON reproducible.
+    println!("\nwire-plane sweep (serverless store path):");
+    let raw_bytes = (n * 4) as u64; // what the plane counts as wire.bytes_raw
+    let mut enc = Bench::new("wire_codec").with_samples(1, 3);
+    let mut configs: Vec<Json> = Vec::new();
+    for spec in ["none", "qsgd:4", "qsgd:16", "topk:0.05"] {
+        let comp = Compression::parse(spec).unwrap();
+        let wire_len = match comp {
+            // `none` parks plain f32 bytes — no codec framing at all
+            Compression::None => n * 4,
+            _ => codec_for(comp, 7).encode(&grad).unwrap().len(),
+        };
+        let wire_pct = wire_len as u64 * 100 / raw_bytes;
+        if spec == "qsgd:16" {
+            // the PR's acceptance bar: qsgd:16 stays at or under 25%
+            assert!(
+                wire_pct <= 25,
+                "qsgd:16 wire {wire_len} exceeds 25% of raw {raw_bytes}"
             );
         }
+        // measured codec cost (stdout only — wall depends on the host,
+        // so it stays out of the committed record)
+        if comp != Compression::None {
+            let g = grad.clone();
+            enc.bench(&format!("encode_{spec}"), move || {
+                codec_for(comp, 7).encode(&g).unwrap().len()
+            });
+        }
+        for &peers in &[2usize, 4, 8, 12] {
+            let puts = peers as u64;
+            let gets = (peers * (peers - 1)) as u64;
+            let round_bytes = (puts + gets) * wire_len as u64;
+            // critical path per peer: own put, then P-1 sequential gets
+            let wall = perfmodel::store_put_time(wire_len)
+                + perfmodel::store_get_time(wire_len) * (peers as u32 - 1);
+            let cost_e12 = puts * PUT_E12 + gets * GET_E12 + round_bytes * BYTE_E12;
+            // the integer rate card must agree with the float model
+            let usd = pricing::transfer_cost(round_bytes, puts, gets);
+            assert!(
+                (usd - cost_e12 as f64 / 1e12).abs() < 1e-9,
+                "integer rate card drifted from pricing::transfer_cost"
+            );
+            println!(
+                "  {spec:<10} peers={peers:<3} {wire_len:>8} B/grad ({wire_pct:>3}%) \
+                 round {round_bytes:>10} B  modeled {wall:>9.2?}  ${:.6}",
+                usd
+            );
+            let mut row = Json::obj();
+            row.set("compression", spec)
+                .set("peers", peers)
+                .set("bytes_wire", wire_len)
+                .set("wire_pct", wire_pct)
+                .set("round_bytes_wire", round_bytes)
+                .set("modeled_round_ns", wall.as_nanos() as u64)
+                .set("transfer_cost_usd_e12", cost_e12);
+            configs.push(row);
+        }
+    }
+    let mut j = Json::obj();
+    j.set("bench", "comm_scaling/wire_plane")
+        .set("elems", n)
+        .set("bytes_raw", raw_bytes)
+        .set("configs", configs);
+    if let Err(e) = std::fs::write("BENCH_wire_plane.json", j.to_string()) {
+        eprintln!("could not write BENCH_wire_plane.json: {e}");
+    } else {
+        println!("\nwrote BENCH_wire_plane.json");
     }
 }

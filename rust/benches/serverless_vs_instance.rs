@@ -3,6 +3,7 @@
 //! worker-pool fan-out at several thread counts, the pipelined-vs-staged
 //! epoch dispatch, and a real two-peer PJRT run per backend and mode.
 
+use p2pless::compress::WirePlane;
 use p2pless::config::{Backend, OffloadMode, TrainConfig};
 use p2pless::coordinator::{Cluster, ServerlessOffload};
 use p2pless::data::{Batcher, DatasetKind, SyntheticDataset};
@@ -332,6 +333,7 @@ fn main() {
             runtime.clone(),
             BranchScheduler::new(Arc::new(Executor::new(4)), true),
             Arc::new(DecodedCache::new(16)),
+            Arc::new(WirePlane::off()),
             0,
             1769,
             64,
@@ -357,6 +359,7 @@ fn main() {
                 runtime.clone(),
                 BranchScheduler::new(Arc::new(Executor::new(4)), true),
                 Arc::new(DecodedCache::new(16)),
+                Arc::new(WirePlane::off()),
                 0,
                 1769,
                 64,

@@ -2,6 +2,20 @@
 //! vector, encoded with any inner codec ("Delta compression" pointer in
 //! the paper's §VI-B). Stateful per direction — sender and receiver each
 //! keep their own `DeltaCodec` with mirrored reference state.
+//!
+//! **Statefulness contract** (cross-epoch audit): the reference is
+//! *implicit* — correctness requires encode/decode calls to alternate
+//! one-to-one on a single ordered stream, and nothing on the wire says
+//! which reference a frame was encoded against. That is fine for the
+//! broker exchange path (one FIFO stream per peer pair,
+//! [`DeltaCodec::reset`] on reconnect) but unsafe for store-mediated
+//! params uploads, where a
+//! restarted or cache-evicted reader has no way to detect a desynced
+//! reference. The serverless wire plane therefore does **not** use this
+//! codec: its params chain ([`crate::compress::WirePlane`]) keys every
+//! delta frame by generation and embeds the base object's reference, so
+//! a broken chain is detected and resynced with a full object instead
+//! of silently decoding against the wrong base.
 
 use crate::util::Bytes;
 use std::sync::Mutex;
@@ -22,6 +36,13 @@ impl<C: Codec> DeltaCodec<C> {
 
     pub fn reset(&self) {
         *self.reference.lock().unwrap() = None;
+    }
+
+    /// Whether this side currently holds a synchronized reference —
+    /// callers that cannot guarantee the one-to-one stream contract
+    /// (see module docs) can check and [`Self::reset`] explicitly.
+    pub fn has_reference(&self) -> bool {
+        self.reference.lock().unwrap().is_some()
     }
 }
 
@@ -110,12 +131,33 @@ mod tests {
     fn reset_clears_reference() {
         let tx = DeltaCodec::new(RawCodec);
         let v = vec![5.0f32; 8];
+        assert!(!tx.has_reference());
         tx.encode(&v).unwrap();
+        assert!(tx.has_reference());
         tx.reset();
+        assert!(!tx.has_reference());
         let wire = tx.encode(&v).unwrap();
         // after reset the full vector is sent, not a zero delta
         let raw = RawCodec.decode(&wire).unwrap();
         assert_eq!(raw, v);
+    }
+
+    #[test]
+    fn desynced_stream_is_undetectable_on_the_wire() {
+        // the audit's pinned-down hazard: a receiver that missed one
+        // frame decodes the next one without any error — the wire
+        // carries no reference identity. This is why the store-mediated
+        // params path uses generation-keyed frames instead.
+        let tx = DeltaCodec::new(RawCodec);
+        let rx = DeltaCodec::new(RawCodec);
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![2.0f32, 4.0, 6.0];
+        let c = vec![3.0f32, 6.0, 9.0];
+        rx.decode(&tx.encode(&a).unwrap()).unwrap();
+        let _dropped = tx.encode(&b).unwrap();
+        let out = rx.decode(&tx.encode(&c).unwrap()).unwrap();
+        // decodes "successfully" to the wrong vector
+        assert_ne!(out, c);
     }
 
     #[test]

@@ -8,14 +8,20 @@
 //! `encode(&[f32]) -> Bytes` / `decode(&bytes) -> Vec<f32>`; `decode`
 //! must accept exactly what `encode` produced (property-tested in
 //! `rust/tests/prop_compress.rs`).
+//!
+//! [`WirePlane`] lifts these codecs into the serverless data plane:
+//! delta-framed params uploads and quantized gradient parks through the
+//! object store, with `wire.*` byte/time accounting.
 
 mod delta;
 mod qsgd;
 mod topk;
+mod wire;
 
 pub use delta::DeltaCodec;
 pub use qsgd::QsgdCodec;
 pub use topk::TopkCodec;
+pub use wire::{ParamsChain, WirePlane};
 
 use crate::util::Bytes;
 

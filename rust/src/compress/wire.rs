@@ -1,0 +1,623 @@
+//! The compressed serverless **wire plane**: the codec layer between
+//! the coordinator and the object store (§III-B.4 applied to the
+//! storage-mediated data path, the bottleneck "Towards Demystifying
+//! Serverless ML Training" identifies).
+//!
+//! Two independent paths, both off by default:
+//!
+//! - **Params uploads** (`--params-delta-every N`, N > 0): params v(e)
+//!   are delta-encoded against v(e−1) — both resident under the lagged
+//!   generation sweep — and framed as a *delta frame* that names the
+//!   previous generation's object. The handler reconstructs through the
+//!   [`DecodedCache`], which memoizes each generation's decoded view
+//!   cluster-wide, so the recursion terminates after one hop in steady
+//!   state. A *full frame* is emitted for the first generation, every N
+//!   generations (the resync cadence), on a generation gap or dimension
+//!   change, and whenever the previous generation's object is gone from
+//!   the store (restart/eviction) — that last case is the broken-chain
+//!   resync counted in `wire.delta_resyncs`.
+//! - **Gradient returns** (`--wire-compression qsgd:S|topk:F`): the
+//!   gradient Lambda parks its result encoded instead of as dense f32s,
+//!   and the collect path decodes right before the `GradAccumulator`
+//!   fold.
+//!
+//! With both knobs off ([`WirePlane::off`]) every byte on the store is
+//! identical to the uncompressed plane — no framing, no extra fields,
+//! counters all zero — which the cluster invariance test pins down.
+//!
+//! ## Frame format (params objects, magic `WPv1`)
+//!
+//! ```text
+//! full:  "WPv1" | 0x00 | RawCodec wire of params
+//! delta: "WPv1" | 0x01 | u64 prev_gen LE | u32 ref_len LE
+//!        | prev ObjectRef wire (ref_len bytes) | inner-codec wire of Δ
+//! ```
+//!
+//! The inner delta codec is the configured `--wire-compression` codec
+//! (RawCodec when `none`), seeded by (run seed, generation) only — no
+//! peer rank — so synchronous peers emit byte-identical frames and the
+//! shared-params dedupe keeps storing one object per epoch. The sender
+//! mirrors the receiver's (possibly lossy) reconstruction and commits
+//! *that* as the next delta base, so every peer and handler agree on
+//! v(e) bit-for-bit even under lossy inner codecs.
+//!
+//! Unlike [`DeltaCodec`](super::DeltaCodec), whose reference vector is
+//! implicit codec state (correct only when encode/decode calls alternate
+//! one-to-one on one stream), the params chain is explicitly keyed by
+//! generation: the frame itself names the base object, and a decoder can
+//! verify and resolve it from the store.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::{codec_for, Codec, RawCodec};
+use crate::config::Compression;
+use crate::error::{Error, Result};
+use crate::store::{DecodedCache, ObjectRef, ObjectStore};
+use crate::util::bytes::bytes_to_f32s;
+use crate::util::Bytes;
+
+/// Magic prefix of a wire-plane params frame.
+pub const FRAME_MAGIC: &[u8; 4] = b"WPv1";
+const KIND_FULL: u8 = 0;
+const KIND_DELTA: u8 = 1;
+
+/// splitmix64 finalizer — decorrelates the (seed, generation, …) tuples
+/// fed to the stochastic quantizer.
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn mix(parts: &[u64]) -> u64 {
+    parts.iter().fold(0x243f_6a88_85a3_08d3, |h, &p| splitmix(h ^ p))
+}
+
+/// The previous generation's upload, tracked by [`ParamsChain`]: the
+/// stored object the next delta frame will name, and the receiver-side
+/// reconstruction the next delta is computed against.
+struct PrevParams {
+    generation: u64,
+    object: ObjectRef,
+    reconstructed: Vec<f32>,
+}
+
+/// One peer's generation-keyed params chain. [`WirePlane::encode_params`]
+/// reads it to decide full vs delta; the caller commits each successful
+/// upload back via [`ParamsChain::commit`] so the chain always points at
+/// the newest stored generation.
+#[derive(Default)]
+pub struct ParamsChain {
+    prev: Mutex<Option<PrevParams>>,
+}
+
+impl ParamsChain {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record generation `generation`'s stored object and its
+    /// receiver-side reconstruction as the next delta base.
+    pub fn commit(&self, generation: u64, object: ObjectRef, reconstructed: Vec<f32>) {
+        *self.prev.lock().unwrap() =
+            Some(PrevParams { generation, object, reconstructed });
+    }
+
+    /// Generation the chain currently points at (None before the first
+    /// commit).
+    pub fn generation(&self) -> Option<u64> {
+        self.prev.lock().unwrap().as_ref().map(|p| p.generation)
+    }
+}
+
+/// Shared wire-plane state for one cluster run: the two knobs plus the
+/// byte/time counters exported as `wire.*` through the
+/// `MetricsRegistry`. One instance is shared by every peer's offload and
+/// every handler (counters are cluster-wide, like the store's).
+pub struct WirePlane {
+    compression: Compression,
+    params_delta_every: usize,
+    seed: u64,
+    bytes_raw: AtomicU64,
+    bytes_wire: AtomicU64,
+    encode_us: AtomicU64,
+    decode_us: AtomicU64,
+    delta_resyncs: AtomicU64,
+}
+
+impl WirePlane {
+    pub fn new(compression: Compression, params_delta_every: usize, seed: u64) -> Self {
+        Self {
+            compression,
+            params_delta_every,
+            seed,
+            bytes_raw: AtomicU64::new(0),
+            bytes_wire: AtomicU64::new(0),
+            encode_us: AtomicU64::new(0),
+            decode_us: AtomicU64::new(0),
+            delta_resyncs: AtomicU64::new(0),
+        }
+    }
+
+    /// A fully disabled plane: both paths byte-identical to the
+    /// uncompressed data plane.
+    pub fn off() -> Self {
+        Self::new(Compression::None, 0, 0)
+    }
+
+    pub fn compression(&self) -> Compression {
+        self.compression
+    }
+
+    pub fn params_delta_every(&self) -> usize {
+        self.params_delta_every
+    }
+
+    /// Gradient returns are encoded (anything but `none`).
+    pub fn grads_on(&self) -> bool {
+        self.compression != Compression::None
+    }
+
+    /// Params uploads are framed (delta cadence > 0).
+    pub fn params_on(&self) -> bool {
+        self.params_delta_every > 0
+    }
+
+    /// Raw f32 bytes that entered the plane (params + gradients).
+    pub fn bytes_raw(&self) -> u64 {
+        self.bytes_raw.load(Ordering::Relaxed)
+    }
+
+    /// Bytes actually shipped to the store after encoding.
+    pub fn bytes_wire(&self) -> u64 {
+        self.bytes_wire.load(Ordering::Relaxed)
+    }
+
+    /// Wall microseconds spent encoding (params framing + grad parks).
+    pub fn encode_us(&self) -> u64 {
+        self.encode_us.load(Ordering::Relaxed)
+    }
+
+    /// Wall microseconds spent decoding frames and grad parks.
+    pub fn decode_us(&self) -> u64 {
+        self.decode_us.load(Ordering::Relaxed)
+    }
+
+    /// Full-frame resyncs forced by a *missing* previous generation
+    /// (restart/eviction) — scheduled cadence fulls and first frames are
+    /// not counted.
+    pub fn delta_resyncs(&self) -> u64 {
+        self.delta_resyncs.load(Ordering::Relaxed)
+    }
+
+    /// Inner codec for generation `generation`'s params delta. Seeded by
+    /// (run seed, generation) only — never the peer rank — so every
+    /// peer's frame bytes are identical and the shared-params dedupe
+    /// holds; fresh per call so stochastic codecs start from call 0.
+    fn params_codec(&self, generation: u64) -> Box<dyn Codec> {
+        codec_for(self.compression, mix(&[self.seed, generation]))
+    }
+
+    /// Decode-side codec: every codec's `decode` ignores the seed.
+    fn decode_codec(&self) -> Box<dyn Codec> {
+        codec_for(self.compression, 0)
+    }
+
+    /// Frame params v(`generation`) for upload. Returns the frame bytes
+    /// and the receiver-side reconstruction the caller commits to the
+    /// chain after storing the frame. Requires [`Self::params_on`].
+    pub fn encode_params(
+        &self,
+        params: &[f32],
+        generation: u64,
+        chain: &ParamsChain,
+        store: &ObjectStore,
+    ) -> Result<(Bytes, Vec<f32>)> {
+        debug_assert!(self.params_on(), "params path is off");
+        let t0 = Instant::now();
+        let prev = chain.prev.lock().unwrap();
+        // a delta frame is sound only against the *immediately
+        // preceding* generation, off the resync cadence, with matching
+        // dimensions, whose object is still resolvable by a decoder
+        let base = prev.as_ref().filter(|p| {
+            p.generation + 1 == generation
+                && generation % self.params_delta_every as u64 != 0
+                && p.reconstructed.len() == params.len()
+        });
+        let base = match base {
+            Some(p) if store.generation_of(&p.object).is_none() => {
+                // the chain's tail is gone (restart, sweep, eviction):
+                // resync with a full object instead of corrupting every
+                // decode downstream
+                self.delta_resyncs.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            other => other,
+        };
+        let (frame, reconstructed) = match base {
+            Some(p) => {
+                let delta: Vec<f32> =
+                    params.iter().zip(&p.reconstructed).map(|(a, b)| a - b).collect();
+                let codec = self.params_codec(generation);
+                let wire = codec.encode(&delta)?;
+                // mirror the receiver's (possibly lossy) reconstruction
+                // so the next delta is computed against the exact vector
+                // every decoder will hold
+                let decoded = codec.decode(&wire)?;
+                let reconstructed: Vec<f32> = p
+                    .reconstructed
+                    .iter()
+                    .zip(&decoded)
+                    .map(|(b, d)| b + d)
+                    .collect();
+                let ref_wire = p.object.to_wire();
+                let mut out = Vec::with_capacity(17 + ref_wire.len() + wire.len());
+                out.extend_from_slice(FRAME_MAGIC);
+                out.push(KIND_DELTA);
+                out.extend_from_slice(&p.generation.to_le_bytes());
+                out.extend_from_slice(&(ref_wire.len() as u32).to_le_bytes());
+                out.extend_from_slice(&ref_wire);
+                out.extend_from_slice(&wire);
+                (Bytes::from(out), reconstructed)
+            }
+            None => {
+                let wire = RawCodec.encode(params)?;
+                let mut out = Vec::with_capacity(5 + wire.len());
+                out.extend_from_slice(FRAME_MAGIC);
+                out.push(KIND_FULL);
+                out.extend_from_slice(&wire);
+                // full frames are lossless: the reconstruction is the
+                // params themselves
+                (Bytes::from(out), params.to_vec())
+            }
+        };
+        drop(prev);
+        self.bytes_raw.fetch_add(params.len() as u64 * 4, Ordering::Relaxed);
+        self.bytes_wire.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.encode_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok((frame, reconstructed))
+    }
+
+    /// Decoded params view of `r`. With the params path off this is
+    /// exactly [`DecodedCache::get_or_decode`]; with it on, the cache
+    /// decodes through the frame format, resolving a delta frame's base
+    /// generation recursively through the same cache (distinct keys,
+    /// strictly older generations — the recursion cannot revisit a key).
+    pub fn decode_params(
+        &self,
+        r: &ObjectRef,
+        cache: &DecodedCache,
+        store: &ObjectStore,
+    ) -> Result<Arc<Vec<f32>>> {
+        if !self.params_on() {
+            return cache.get_or_decode(r, store);
+        }
+        cache.get_or_decode_with(r, store, &|bytes| self.decode_frame(bytes, cache, store))
+    }
+
+    /// Decode one params frame (the [`DecodedCache`] miss path).
+    fn decode_frame(
+        &self,
+        bytes: &Bytes,
+        cache: &DecodedCache,
+        store: &ObjectStore,
+    ) -> Result<Vec<f32>> {
+        if bytes.len() < 5 || &bytes[0..4] != FRAME_MAGIC {
+            return Err(Error::Codec(
+                "wire plane: params object is not a WPv1 frame".into(),
+            ));
+        }
+        match bytes[4] {
+            KIND_FULL => {
+                let t0 = Instant::now();
+                let out = RawCodec.decode(&Bytes::from(bytes[5..].to_vec()))?;
+                self.decode_us
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                Ok(out)
+            }
+            KIND_DELTA => {
+                let body = &bytes[5..];
+                if body.len() < 12 {
+                    return Err(Error::Codec("wire plane: truncated delta frame".into()));
+                }
+                let prev_gen = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let ref_len = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+                let rest = &body[12..];
+                if rest.len() < ref_len {
+                    return Err(Error::Codec("wire plane: truncated delta frame".into()));
+                }
+                let prev_ref = ObjectRef::from_wire(&rest[..ref_len])?;
+                // the base resolves through the same cache: a hit in
+                // steady state (the lagged sweep keeps v(e−1) pinned
+                // while v(e) is live), a recursive frame decode after a
+                // cold start
+                let base = self.decode_params(&prev_ref, cache, store).map_err(|e| {
+                    Error::Codec(format!(
+                        "wire plane: delta frame's base generation {prev_gen} \
+                         is unresolvable: {e}"
+                    ))
+                })?;
+                let t0 = Instant::now();
+                let delta = self.decode_codec().decode(&Bytes::from(rest[ref_len..].to_vec()))?;
+                if delta.len() != base.len() {
+                    return Err(Error::Codec(format!(
+                        "wire plane: delta dimension {} != base dimension {}",
+                        delta.len(),
+                        base.len()
+                    )));
+                }
+                let out = base.iter().zip(&delta).map(|(b, d)| b + d).collect();
+                self.decode_us
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                Ok(out)
+            }
+            k => Err(Error::Codec(format!("wire plane: unknown frame kind {k}"))),
+        }
+    }
+
+    /// Encode one gradient return for parking. Seeded per (run seed,
+    /// generation, peer, branch) so no two branches share a quantizer
+    /// stream. Requires [`Self::grads_on`].
+    pub fn encode_grads(
+        &self,
+        grads: &[f32],
+        generation: u64,
+        peer: usize,
+        branch: u64,
+    ) -> Result<Bytes> {
+        debug_assert!(self.grads_on(), "gradient path is off");
+        let t0 = Instant::now();
+        let codec =
+            codec_for(self.compression, mix(&[self.seed, generation, peer as u64, branch]));
+        let wire = codec.encode(grads)?;
+        self.bytes_raw.fetch_add(grads.len() as u64 * 4, Ordering::Relaxed);
+        self.bytes_wire.fetch_add(wire.len() as u64, Ordering::Relaxed);
+        self.encode_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(wire)
+    }
+
+    /// Decode one parked gradient before the accumulator fold.
+    pub fn decode_grads(&self, wire: &Bytes) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let out = self.decode_codec().decode(wire)?;
+        self.decode_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Decode raw (unframed) f32 params bytes — the `none` path's
+    /// object layout, kept for diagnostics parity.
+    pub fn raw_params(bytes: &Bytes) -> Vec<f32> {
+        bytes_to_f32s(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::PARAMS_BUCKET;
+
+    fn plane(spec: &str, every: usize) -> WirePlane {
+        WirePlane::new(Compression::parse(spec).unwrap(), every, 42)
+    }
+
+    /// Integer-valued params so raw delta encode/decode is exact and
+    /// equality assertions are meaningful.
+    fn params_for(generation: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32) + (generation as f32) * 3.0).collect()
+    }
+
+    fn fixture() -> (Arc<ObjectStore>, DecodedCache) {
+        let store = Arc::new(ObjectStore::new());
+        store.create_bucket(PARAMS_BUCKET);
+        (store, DecodedCache::new(8))
+    }
+
+    /// Upload one generation through the plane, committing the chain.
+    fn upload(
+        plane: &WirePlane,
+        chain: &ParamsChain,
+        store: &ObjectStore,
+        generation: u64,
+        params: &[f32],
+    ) -> ObjectRef {
+        let (frame, recon) =
+            plane.encode_params(params, generation, chain, store).unwrap();
+        let r = store.put_dedup(PARAMS_BUCKET, frame, generation).unwrap();
+        chain.commit(generation, r.clone(), recon);
+        r
+    }
+
+    #[test]
+    fn off_plane_has_no_paths() {
+        let p = WirePlane::off();
+        assert!(!p.grads_on() && !p.params_on());
+        assert_eq!(p.bytes_raw(), 0);
+        assert_eq!(p.bytes_wire(), 0);
+        assert_eq!(p.delta_resyncs(), 0);
+    }
+
+    #[test]
+    fn full_then_delta_frames_roundtrip_through_cache() {
+        let (store, cache) = fixture();
+        let p = plane("none", 4);
+        let chain = ParamsChain::new();
+        let v1 = params_for(1, 64);
+        let r1 = upload(&p, &chain, &store, 1, &v1);
+        let frame1 = store.get_ref(&r1).unwrap();
+        assert_eq!(&frame1[0..4], FRAME_MAGIC);
+        assert_eq!(frame1[4], KIND_FULL);
+        assert_eq!(*p.decode_params(&r1, &cache, &store).unwrap(), v1);
+
+        let v2 = params_for(2, 64);
+        let r2 = upload(&p, &chain, &store, 2, &v2);
+        let frame2 = store.get_ref(&r2).unwrap();
+        assert_eq!(frame2[4], KIND_DELTA, "gen 2 off the cadence must be a delta");
+        // integer-valued params: raw delta reconstruction is exact
+        assert_eq!(*p.decode_params(&r2, &cache, &store).unwrap(), v2);
+        assert_eq!(p.delta_resyncs(), 0);
+        assert!(p.bytes_wire() > 0 && p.bytes_raw() == 2 * 64 * 4);
+    }
+
+    #[test]
+    fn delta_base_resolves_recursively_on_cold_cache() {
+        let (store, cache) = fixture();
+        let p = plane("none", 8);
+        let chain = ParamsChain::new();
+        let v1 = params_for(1, 32);
+        let v2 = params_for(2, 32);
+        upload(&p, &chain, &store, 1, &v1);
+        let r2 = upload(&p, &chain, &store, 2, &v2);
+        // a brand-new cache (cold start): decoding v2's delta frame must
+        // recursively decode v1's full frame first
+        let cold = DecodedCache::new(8);
+        assert_eq!(*p.decode_params(&r2, &cold, &store).unwrap(), v2);
+        assert_eq!(cold.misses(), 2, "one miss per frame in the chain");
+        // and a second read is a pure hit
+        assert_eq!(*p.decode_params(&r2, &cold, &store).unwrap(), v2);
+        assert_eq!(cold.hits(), 1);
+    }
+
+    #[test]
+    fn swept_previous_generation_forces_counted_resync() {
+        // satellite regression: a dropped/swept base generation must
+        // produce a clean full-object resync, not a silent bad decode
+        let (store, cache) = fixture();
+        let p = plane("none", 100);
+        let chain = ParamsChain::new();
+        upload(&p, &chain, &store, 1, &params_for(1, 16));
+        let r2 = upload(&p, &chain, &store, 2, &params_for(2, 16));
+        assert_eq!(store.get_ref(&r2).unwrap()[4], KIND_DELTA);
+        // simulate restart/eviction: gen 2's object disappears
+        store.sweep_generation(PARAMS_BUCKET, 2);
+        assert!(store.generation_of(&r2).is_none());
+        let v3 = params_for(3, 16);
+        let r3 = upload(&p, &chain, &store, 3, &v3);
+        assert_eq!(
+            store.get_ref(&r3).unwrap()[4],
+            KIND_FULL,
+            "broken chain must resync with a full frame"
+        );
+        assert_eq!(p.delta_resyncs(), 1);
+        assert_eq!(*p.decode_params(&r3, &cache, &store).unwrap(), v3);
+    }
+
+    #[test]
+    fn cadence_emits_full_frames_every_n_generations() {
+        let (store, _cache) = fixture();
+        let p = plane("none", 2);
+        let chain = ParamsChain::new();
+        for generation in 1..=5u64 {
+            let r = upload(&p, &chain, &store, generation, &params_for(generation, 8));
+            let kind = store.get_ref(&r).unwrap()[4];
+            let want = if generation == 1 || generation % 2 == 0 {
+                KIND_FULL
+            } else {
+                KIND_DELTA
+            };
+            assert_eq!(kind, want, "generation {generation}");
+        }
+        assert_eq!(p.delta_resyncs(), 0, "cadence fulls are not resyncs");
+    }
+
+    #[test]
+    fn generation_gap_forces_uncounted_full() {
+        let (store, _cache) = fixture();
+        let p = plane("none", 100);
+        let chain = ParamsChain::new();
+        upload(&p, &chain, &store, 1, &params_for(1, 8));
+        let r3 = upload(&p, &chain, &store, 3, &params_for(3, 8));
+        assert_eq!(store.get_ref(&r3).unwrap()[4], KIND_FULL);
+        assert_eq!(p.delta_resyncs(), 0, "a gap is not a broken chain");
+    }
+
+    #[test]
+    fn synchronous_peers_emit_identical_frames() {
+        // the shared-params dedupe depends on frame bytes being
+        // rank-independent, lossy inner codec included
+        let (store, _cache) = fixture();
+        let pa = plane("qsgd:16", 4);
+        let pb = plane("qsgd:16", 4);
+        let (ca, cb) = (ParamsChain::new(), ParamsChain::new());
+        for generation in 1..=3u64 {
+            let v = params_for(generation, 128);
+            let (fa, ra) = pa.encode_params(&v, generation, &ca, &store).unwrap();
+            let (fb, rb) = pb.encode_params(&v, generation, &cb, &store).unwrap();
+            assert_eq!(&fa[..], &fb[..], "generation {generation} frames diverge");
+            assert_eq!(ra, rb);
+            let r = store.put_dedup(PARAMS_BUCKET, fa, generation).unwrap();
+            store.put_dedup(PARAMS_BUCKET, fb, generation).unwrap();
+            ca.commit(generation, r.clone(), ra);
+            cb.commit(generation, r, rb);
+        }
+    }
+
+    #[test]
+    fn lossy_delta_chain_mirrors_receiver_reconstruction() {
+        // under a lossy inner codec the decoded view drifts from the
+        // true params, but sender and receiver must agree bit-for-bit
+        let (store, cache) = fixture();
+        let p = plane("qsgd:16", 10);
+        let chain = ParamsChain::new();
+        for generation in 1..=4u64 {
+            let v: Vec<f32> =
+                (0..256).map(|i| ((i * 7 + generation as usize * 13) % 97) as f32 * 0.01).collect();
+            let r = upload(&p, &chain, &store, generation, &v);
+            let decoded = p.decode_params(&r, &cache, &store).unwrap();
+            let committed = chain.prev.lock().unwrap();
+            assert_eq!(
+                *decoded,
+                committed.as_ref().unwrap().reconstructed,
+                "generation {generation}: receiver and sender views diverge"
+            );
+        }
+    }
+
+    #[test]
+    fn grads_roundtrip_and_count_bytes() {
+        let p = plane("qsgd:16", 0);
+        assert!(p.grads_on() && !p.params_on());
+        let grads: Vec<f32> = (0..4096).map(|i| (i as f32) * 1e-3 - 2.0).collect();
+        let wire = p.encode_grads(&grads, 3, 1, 7).unwrap();
+        let back = p.decode_grads(&wire).unwrap();
+        assert_eq!(back.len(), grads.len());
+        assert_eq!(p.bytes_raw(), 4096 * 4);
+        assert_eq!(p.bytes_wire(), wire.len() as u64);
+        // qsgd:16 is 6 bits/elem + 10-byte header: well under a quarter
+        assert!(p.bytes_wire() * 4 <= p.bytes_raw());
+    }
+
+    #[test]
+    fn frame_decode_rejects_garbage() {
+        let (store, cache) = fixture();
+        let p = plane("none", 4);
+        // an unframed (raw f32) object is not a frame
+        let raw = store
+            .put_dedup(PARAMS_BUCKET, Bytes::from(vec![0u8; 16]), 1)
+            .unwrap();
+        assert!(p.decode_params(&raw, &cache, &store).is_err());
+        // truncated delta body
+        let mut bad = FRAME_MAGIC.to_vec();
+        bad.push(KIND_DELTA);
+        bad.extend_from_slice(&[0u8; 4]);
+        let bad = store.put_dedup(PARAMS_BUCKET, Bytes::from(bad), 2).unwrap();
+        assert!(p.decode_params(&bad, &cache, &store).is_err());
+        // unknown kind
+        let mut odd = FRAME_MAGIC.to_vec();
+        odd.push(9);
+        odd.extend_from_slice(&RawCodec.encode(&[1.0]).unwrap());
+        let odd = store.put_dedup(PARAMS_BUCKET, Bytes::from(odd), 3).unwrap();
+        assert!(p.decode_params(&odd, &cache, &store).is_err());
+    }
+
+    #[test]
+    fn seed_mix_separates_streams() {
+        assert_ne!(mix(&[1, 2]), mix(&[2, 1]));
+        assert_ne!(mix(&[1, 2, 3, 4]), mix(&[1, 2, 3, 5]));
+    }
+}

@@ -196,6 +196,15 @@ pub struct TrainConfig {
     /// generation after the fan-out. `false` keeps it all — a debugging
     /// aid that lets the store grow with the epoch count.
     pub sweep_scratch: bool,
+    /// Serverless wire-plane codec for gradient returns (and the inner
+    /// codec of params delta frames): `none` keeps the data plane
+    /// byte-identical to the uncompressed path.
+    pub wire_compression: Compression,
+    /// Delta-encode params uploads against the previous generation,
+    /// resyncing with a full object every N generations (0 = off, raw
+    /// f32 params objects exactly as before; requires `decode_cache > 0`
+    /// so a delta frame's base generation stays memoized).
+    pub params_delta_every: usize,
     /// Worker threads in the FaaS execution fabric (0 = machine size).
     /// Physical concurrency only: the modeled accounting does not move.
     pub exec_threads: usize,
@@ -244,6 +253,8 @@ impl Default for TrainConfig {
             pipeline_depth: 2,
             decode_cache: 16,
             sweep_scratch: true,
+            wire_compression: Compression::None,
+            params_delta_every: 0,
             exec_threads: 0,
             exec_slots: 0,
             exec_batch: 1,
@@ -296,6 +307,12 @@ impl TrainConfig {
                 "pipeline_depth" => cfg.pipeline_depth = v.as_usize().ok_or_else(missing)?,
                 "decode_cache" => cfg.decode_cache = v.as_usize().ok_or_else(missing)?,
                 "sweep_scratch" => cfg.sweep_scratch = v.as_bool().ok_or_else(missing)?,
+                "wire_compression" => {
+                    cfg.wire_compression = Compression::parse(v.as_str().ok_or_else(missing)?)?
+                }
+                "params_delta_every" => {
+                    cfg.params_delta_every = v.as_usize().ok_or_else(missing)?
+                }
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
                 "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
                 "exec_batch" => cfg.exec_batch = v.as_usize().ok_or_else(missing)?,
@@ -336,6 +353,8 @@ impl TrainConfig {
             .set("pipeline_depth", self.pipeline_depth)
             .set("decode_cache", self.decode_cache)
             .set("sweep_scratch", self.sweep_scratch)
+            .set("wire_compression", self.wire_compression.to_spec())
+            .set("params_delta_every", self.params_delta_every)
             .set("exec_threads", self.exec_threads)
             .set("exec_slots", self.exec_slots)
             .set("exec_batch", self.exec_batch)
@@ -385,6 +404,23 @@ impl TrainConfig {
             if !(frac > 0.0 && frac <= 1.0) {
                 return Err(Error::Config("topk frac must be in (0,1]".into()));
             }
+        }
+        if let Compression::Qsgd { s } = self.wire_compression {
+            if s < 1 {
+                return Err(Error::Config("wire qsgd s must be >= 1".into()));
+            }
+        }
+        if let Compression::Topk { frac } = self.wire_compression {
+            if !(frac > 0.0 && frac <= 1.0) {
+                return Err(Error::Config("wire topk frac must be in (0,1]".into()));
+            }
+        }
+        if self.params_delta_every > 0 && self.decode_cache == 0 {
+            return Err(Error::Config(
+                "params_delta_every requires decode_cache > 0 — a delta frame's \
+                 base generation is reconstructed through the decoded cache"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -494,6 +530,34 @@ mod tests {
         // defaults: a small cache, scratch swept every epoch
         assert_eq!(TrainConfig::default().decode_cache, 16);
         assert!(TrainConfig::default().sweep_scratch);
+    }
+
+    #[test]
+    fn wire_plane_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            wire_compression: Compression::Qsgd { s: 16 },
+            params_delta_every: 4,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(matches!(back.wire_compression, Compression::Qsgd { s: 16 }));
+        assert_eq!(back.params_delta_every, 4);
+        // defaults: the plane is fully off
+        assert_eq!(TrainConfig::default().wire_compression, Compression::None);
+        assert_eq!(TrainConfig::default().params_delta_every, 0);
+        // the wire codec is validated like the exchange codec
+        let bad = TrainConfig {
+            wire_compression: Compression::Topk { frac: 1.5 },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // a delta chain cannot reconstruct without the decoded cache
+        let bad = TrainConfig {
+            params_delta_every: 4,
+            decode_cache: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

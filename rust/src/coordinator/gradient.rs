@@ -130,7 +130,10 @@ impl GradientDict {
 /// Streaming elementwise mean of per-batch gradients (the
 /// `AverageBatchesGradients` step): one running f64 sum instead of
 /// materializing every per-batch gradient, so memory is O(params)
-/// regardless of the batch count.
+/// regardless of the batch count. Inputs must be dense f32 vectors —
+/// a wire-plane-compressed gradient park is decoded *before* the fold
+/// (see `ServerlessOffload::fold_branch`), so the fold order and f64
+/// summation stay byte-identical whatever the wire codec.
 #[derive(Debug, Default)]
 pub struct GradAccumulator {
     acc: Vec<f64>,

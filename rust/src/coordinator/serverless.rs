@@ -64,6 +64,15 @@
 //!   Modeled wall/billed/cost remain byte-identical to staged at any
 //!   `pipeline_depth`; only the measured wall shrinks.
 //!
+//! Orthogonal to the dispatch mode, the **wire plane**
+//! ([`crate::compress::WirePlane`]) compresses what actually crosses
+//! the store: `--params-delta-every N` frames params uploads as deltas
+//! against the previous generation (resident under the lagged sweep),
+//! and `--wire-compression` quantizes the parked gradient returns,
+//! decoded right before the fold. With both knobs off every store byte
+//! — payloads, objects, counters — is identical to the uncompressed
+//! plane; see `docs/ARCHITECTURE.md` ("the wire plane").
+//!
 //! Generation lifecycle in cross-epoch mode (one peer, depth 2):
 //!
 //! ```text
@@ -102,6 +111,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::gradient::GradAccumulator;
+use crate::compress::{ParamsChain, WirePlane};
 use crate::config::OffloadMode;
 use crate::data::Batch;
 use crate::error::{Error, Result};
@@ -175,11 +185,23 @@ fn ref_from_json(j: &Json) -> Result<ObjectRef> {
 
 /// Build one branch request: cached batch ref + this epoch's params ref
 /// + the generation tag the handler scopes its scratch writes to.
-fn branch_payload(params_ref: &ObjectRef, batch_ref: &ObjectRef, generation: u64) -> Bytes {
+/// `branch` (the batch index) rides along **only** when the wire
+/// plane's gradient path is on — it seeds the per-branch quantizer —
+/// so the `--wire-compression none` payload stays byte-identical to
+/// the uncompressed plane.
+fn branch_payload(
+    params_ref: &ObjectRef,
+    batch_ref: &ObjectRef,
+    generation: u64,
+    branch: Option<u64>,
+) -> Bytes {
     let mut req = Json::obj();
     req.set("params", ref_to_json(params_ref))
         .set("batch", ref_to_json(batch_ref))
         .set("gen", generation);
+    if let Some(idx) = branch {
+        req.set("idx", idx);
+    }
     Bytes::from(req.to_string().into_bytes())
 }
 
@@ -215,6 +237,13 @@ pub struct ServerlessOffload {
     runtime: Arc<ModelRuntime>,
     scheduler: Arc<BranchScheduler>,
     decode_cache: Arc<DecodedCache>,
+    /// Cluster-shared wire-plane knobs + `wire.*` counters. With both
+    /// paths off ([`WirePlane::off`]) every store byte is identical to
+    /// the uncompressed plane.
+    wire: Arc<WirePlane>,
+    /// This peer's generation-keyed params delta chain (wire plane's
+    /// params path; idle when `params_delta_every == 0`).
+    chain: ParamsChain,
     function: String,
     bucket: String,
     peer: usize,
@@ -275,8 +304,10 @@ impl ServerlessOffload {
     /// `concurrency` becomes the peer's admission cap on the cluster
     /// scheduler (and the Map concurrency in staged mode);
     /// `decode_cache` memoizes the params decode across branches;
-    /// `sweep_scratch = false` keeps per-epoch scratch alive (debugging
-    /// aid — the store then grows with the epoch count);
+    /// `wire` carries the cluster-shared wire-plane knobs/counters
+    /// ([`WirePlane::off`] reproduces the uncompressed plane byte for
+    /// byte); `sweep_scratch = false` keeps per-epoch scratch alive
+    /// (debugging aid — the store then grows with the epoch count);
     /// `pipeline_depth` bounds the cross-epoch in-flight window
     /// (ignored by staged/pipelined modes; clamped to >= 1).
     #[allow(clippy::too_many_arguments)]
@@ -286,6 +317,7 @@ impl ServerlessOffload {
         runtime: Arc<ModelRuntime>,
         scheduler: Arc<BranchScheduler>,
         decode_cache: Arc<DecodedCache>,
+        wire: Arc<WirePlane>,
         peer_rank: usize,
         memory_mb: u32,
         concurrency: usize,
@@ -309,6 +341,8 @@ impl ServerlessOffload {
         let h_runtime = runtime.clone();
         let h_bucket = bucket.clone();
         let h_cache = decode_cache.clone();
+        let h_wire = wire.clone();
+        let h_peer = peer_rank;
         let handler: Handler = Arc::new(move |payload: &Bytes| {
             let req = Json::parse(
                 std::str::from_utf8(payload).map_err(|e| Error::Faas(e.to_string()))?,
@@ -319,7 +353,10 @@ impl ServerlessOffload {
                 .req("gen")?
                 .as_u64()
                 .ok_or_else(|| Error::Faas("branch request: \"gen\" is not a number".into()))?;
-            let params = h_cache.get_or_decode(&params_ref, &h_store)?;
+            // framed params decode when the wire plane's params path is
+            // on, the plain cached decode otherwise — both memoized per
+            // version in the shared cache
+            let params = h_wire.decode_params(&params_ref, &h_cache, &h_store)?;
             // cached-literal fast path: the batch object is immutable
             // and read by exactly one branch per epoch, so its input
             // literals are packed once per object and checked out /
@@ -343,11 +380,18 @@ impl ServerlessOffload {
             // own work — S3 I/O, decode, its own execution — stays
             // billed)
             crate::faas::report_unbilled(out.queue_wait);
-            let grad_ref = h_store.put_new_gen(
-                &h_bucket,
-                Bytes::from(f32s_to_bytes(&out.grads)),
-                generation,
-            )?;
+            // park the gradient encoded when the wire plane's gradient
+            // path is on; the branch index seeds the per-branch
+            // quantizer stream and rides in the payload only then
+            let park = if h_wire.grads_on() {
+                let branch = req.req("idx")?.as_u64().ok_or_else(|| {
+                    Error::Faas("branch request: \"idx\" is not a number".into())
+                })?;
+                h_wire.encode_grads(&out.grads, generation, h_peer, branch)?
+            } else {
+                Bytes::from(f32s_to_bytes(&out.grads))
+            };
+            let grad_ref = h_store.put_new_gen(&h_bucket, park, generation)?;
             let mut resp = Json::obj();
             resp.set("loss", out.loss as f64)
                 .set("grad", ref_to_json(&grad_ref));
@@ -360,6 +404,8 @@ impl ServerlessOffload {
             runtime,
             scheduler,
             decode_cache,
+            wire,
+            chain: ParamsChain::new(),
             function,
             bucket,
             peer: peer_rank,
@@ -427,6 +473,27 @@ impl ServerlessOffload {
         Ok(refs.len())
     }
 
+    /// Upload params v(`generation`) through the wire plane: a delta (or
+    /// full) frame when the params path is on, raw f32 bytes otherwise —
+    /// both content-deduplicated through the shared bucket (frame bytes
+    /// are rank-independent, so synchronous peers still store one object
+    /// per epoch). On the framed path the chain is committed to this
+    /// upload so the next generation deltas against it.
+    fn upload_params(&self, params: &[f32], generation: u64) -> Result<ObjectRef> {
+        if !self.wire.params_on() {
+            return self.store.put_dedup(
+                PARAMS_BUCKET,
+                Bytes::from(f32s_to_bytes(params)),
+                generation,
+            );
+        }
+        let (frame, reconstructed) =
+            self.wire.encode_params(params, generation, &self.chain, &self.store)?;
+        let params_ref = self.store.put_dedup(PARAMS_BUCKET, frame, generation)?;
+        self.chain.commit(generation, params_ref.clone(), reconstructed);
+        Ok(params_ref)
+    }
+
     /// Run one epoch's batches through the dynamically-generated state
     /// machine and average the gradients. Uploads exactly one object —
     /// the params, tagged with this epoch's generation. Staged and
@@ -468,11 +535,7 @@ impl ServerlessOffload {
         // identical, so the cluster stores one object per epoch and
         // each peer holds a reference
         let generation = epoch as u64;
-        let params_ref = self.store.put_dedup(
-            PARAMS_BUCKET,
-            Bytes::from(f32s_to_bytes(params)),
-            generation,
-        )?;
+        let params_ref = self.upload_params(params, generation)?;
         // the live params version must survive cache pressure for the
         // whole fan-out, whatever the mode — without the pin, a small
         // shared cache lets another peer's params insertion evict this
@@ -553,18 +616,22 @@ impl ServerlessOffload {
             RetryPolicy::default(),
         )?
         .with_generation(generation);
-        let params_ref = self.store.put_dedup(
-            PARAMS_BUCKET,
-            Bytes::from(f32s_to_bytes(params)),
-            generation,
-        )?;
+        let params_ref = self.upload_params(params, generation)?;
         // the live params version must survive cache pressure until its
         // generation retires — tail branches re-reading an evicted entry
         // would still be *correct* (the lagged sweep keeps the object),
         // but the exactly-one-decode-per-epoch invariant would not hold
         self.decode_cache.pin(&params_ref);
-        for batch_ref in &batch_refs {
-            pipe.submit(branch_payload(&params_ref, batch_ref, generation), None);
+        for (idx, batch_ref) in batch_refs.iter().enumerate() {
+            pipe.submit(
+                branch_payload(
+                    &params_ref,
+                    batch_ref,
+                    generation,
+                    self.wire.grads_on().then_some(idx as u64),
+                ),
+                None,
+            );
         }
         self.inflight.lock().unwrap().push_back(InflightEpoch {
             epoch,
@@ -702,7 +769,9 @@ impl ServerlessOffload {
         }
     }
 
-    /// Parse a branch response and fold it into the running epoch state.
+    /// Parse a branch response and fold it into the running epoch state,
+    /// decoding the parked gradient through the wire plane when its
+    /// gradient path is on.
     fn fold_branch(
         &self,
         out: &[u8],
@@ -711,7 +780,12 @@ impl ServerlessOffload {
     ) -> Result<()> {
         let (loss, grad_ref) = parse_branch_response(out)?;
         *loss_sum += loss;
-        acc.add(&bytes_to_f32s(&self.store.get_ref(&grad_ref)?))
+        let park = self.store.get_ref(&grad_ref)?;
+        if self.wire.grads_on() {
+            acc.add(&self.wire.decode_grads(&park)?)
+        } else {
+            acc.add(&bytes_to_f32s(&park))
+        }
     }
 
     /// Staged: build every payload, fan out, collect. Scratch objects
@@ -726,7 +800,15 @@ impl ServerlessOffload {
     ) -> Result<OffloadResult> {
         let items: Vec<Bytes> = batch_refs
             .iter()
-            .map(|r| branch_payload(params_ref, r, generation))
+            .enumerate()
+            .map(|(idx, r)| {
+                branch_payload(
+                    params_ref,
+                    r,
+                    generation,
+                    self.wire.grads_on().then_some(idx as u64),
+                )
+            })
             .collect();
         // dynamic state machine: one branch per batch, dispatched
         // across the shared worker pool
@@ -787,8 +869,16 @@ impl ServerlessOffload {
         .with_generation(generation);
         let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
-        for batch_ref in batch_refs {
-            pipe.submit(branch_payload(params_ref, batch_ref, generation), None);
+        for (idx, batch_ref) in batch_refs.iter().enumerate() {
+            pipe.submit(
+                branch_payload(
+                    params_ref,
+                    batch_ref,
+                    generation,
+                    self.wire.grads_on().then_some(idx as u64),
+                ),
+                None,
+            );
             // drain whatever already landed: collection overlaps dispatch
             while let Some((_, out)) = pipe.poll_output() {
                 self.fold_branch(&out, &mut acc, &mut loss_sum)?;
@@ -847,11 +937,25 @@ mod tests {
     fn branch_payload_carries_generation() {
         let p = ObjectRef { bucket: "b".into(), key: "params".into(), size: 8 };
         let b = ObjectRef { bucket: "b".into(), key: "batch".into(), size: 16 };
-        let payload = branch_payload(&p, &b, 7);
+        let payload = branch_payload(&p, &b, 7, None);
         let req = Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
         assert_eq!(req.req("gen").unwrap().as_u64(), Some(7));
         assert_eq!(ref_from_json(req.req("params").unwrap()).unwrap(), p);
         assert_eq!(ref_from_json(req.req("batch").unwrap()).unwrap(), b);
+    }
+
+    #[test]
+    fn branch_index_rides_only_on_the_compressed_plane() {
+        // the `none` payload must stay byte-identical to the pre-wire
+        // plane: no "idx" field at all
+        let p = ObjectRef { bucket: "b".into(), key: "params".into(), size: 8 };
+        let b = ObjectRef { bucket: "b".into(), key: "batch".into(), size: 16 };
+        let plain = branch_payload(&p, &b, 7, None);
+        let req = Json::parse(std::str::from_utf8(&plain).unwrap()).unwrap();
+        assert!(req.req("idx").is_err(), "uncompressed payload grew an idx field");
+        let tagged = branch_payload(&p, &b, 7, Some(3));
+        let req = Json::parse(std::str::from_utf8(&tagged).unwrap()).unwrap();
+        assert_eq!(req.req("idx").unwrap().as_u64(), Some(3));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
 use crate::broker::{Broker, FaultPlan, QueueMode, DEFAULT_MESSAGE_CAP};
-use crate::compress::codec_for;
+use crate::compress::{codec_for, WirePlane};
 use crate::config::{Backend, TrainConfig};
 use crate::data::{DatasetKind, SyntheticDataset};
 use crate::error::{Error, Result};
@@ -60,7 +60,7 @@ impl TrainReport {
     }
 
     /// Look up a named utilization counter (`sched.*`, `exec.*`,
-    /// `store.*`, `engine.*`).
+    /// `store.*`, `engine.*`, `wire.*`).
     pub fn counter(&self, name: &str) -> Option<u64> {
         self.counters
             .iter()
@@ -177,6 +177,14 @@ impl Cluster {
         // shared across every peer's handlers: the params object each
         // epoch's branches read is decoded once, not once per branch
         let decode_cache = Arc::new(DecodedCache::new(cfg.decode_cache));
+        // the serverless wire plane: cluster-shared codec knobs and
+        // wire.* byte/time counters for the store-mediated params
+        // uploads and gradient returns (fully off by default)
+        let wire_plane = Arc::new(WirePlane::new(
+            cfg.wire_compression,
+            cfg.params_delta_every,
+            cfg.seed,
+        ));
         let metrics = Arc::new(MetricsRegistry::new());
         let runtime = Arc::new(ModelRuntime::load(
             self.engine.clone(),
@@ -236,6 +244,7 @@ impl Cluster {
                         runtime.clone(),
                         scheduler.clone(),
                         decode_cache.clone(),
+                        wire_plane.clone(),
                         rank,
                         mem,
                         cfg.lambda_concurrency,
@@ -363,6 +372,13 @@ impl Cluster {
         metrics.set_counter("store.decode_misses", decode_cache.misses());
         metrics.set_counter("store.pack_hits", decode_cache.pack_hits());
         metrics.set_counter("store.pack_misses", decode_cache.pack_misses());
+        // wire plane: raw vs on-wire bytes, codec time, chain resyncs
+        // (all zero with the plane off — pinned by the invariance test)
+        metrics.set_counter("wire.bytes_raw", wire_plane.bytes_raw());
+        metrics.set_counter("wire.bytes_wire", wire_plane.bytes_wire());
+        metrics.set_counter("wire.encode_us", wire_plane.encode_us());
+        metrics.set_counter("wire.decode_us", wire_plane.decode_us());
+        metrics.set_counter("wire.delta_resyncs", wire_plane.delta_resyncs());
         // execution fusion: fused dispatches, branches that rode them,
         // and the mean group fill as a percentage of --exec-batch
         let (batched, fused) = self.engine.batch_stats();

@@ -14,6 +14,17 @@ pub const USD_PER_1M_REQUESTS: f64 = 0.20;
 /// Billing granularity: AWS bills per 1 ms.
 pub const BILLING_QUANTUM_MS: u64 = 1;
 
+/// S3-class request fee per PUT ($0.005 per 1000, standard tier).
+pub const S3_USD_PER_PUT: f64 = 5.0e-6;
+
+/// S3-class request fee per GET ($0.0004 per 1000).
+pub const S3_USD_PER_GET: f64 = 4.0e-7;
+
+/// Per-GB transfer rate on the data plane (cross-region replication
+/// rate — intra-region Lambda<->S3 bandwidth itself is free, so this is
+/// the geo-distributed-peers term the wire plane's compression shrinks).
+pub const S3_USD_PER_GB_XREGION: f64 = 0.02;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Arch {
     Arm64,
@@ -35,6 +46,17 @@ pub fn invocation_cost(memory_mb: u32, billed_ms: u64, arch: Arch) -> f64 {
     let quantized = billed_ms.div_ceil(BILLING_QUANTUM_MS) * BILLING_QUANTUM_MS;
     price_per_second(memory_mb, arch) * quantized as f64 / 1000.0
         + USD_PER_1M_REQUESTS / 1_000_000.0
+}
+
+/// Data-plane transfer cost of a run: request fees for `puts`/`gets`
+/// plus the per-GB rate on the bytes that actually crossed the wire.
+/// Fed by the wire plane's `wire.bytes_wire` and the store's put/get
+/// counters — the cost term compression moves, orthogonal to
+/// [`invocation_cost`]'s compute term.
+pub fn transfer_cost(wire_bytes: u64, puts: u64, gets: u64) -> f64 {
+    puts as f64 * S3_USD_PER_PUT
+        + gets as f64 * S3_USD_PER_GET
+        + wire_bytes as f64 / 1e9 * S3_USD_PER_GB_XREGION
 }
 
 #[cfg(test)]
@@ -70,6 +92,21 @@ mod tests {
     fn invocation_includes_request_fee() {
         let c = invocation_cost(1024, 0, Arch::Arm64);
         assert!((c - 0.2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_cost_terms() {
+        // zero bytes: pure request fees
+        let fees = transfer_cost(0, 10, 100);
+        assert!((fees - (10.0 * S3_USD_PER_PUT + 100.0 * S3_USD_PER_GET)).abs() < 1e-15);
+        // bytes term is linear at the cross-region rate
+        let a = transfer_cost(1_000_000_000, 0, 0);
+        assert!((a - S3_USD_PER_GB_XREGION).abs() < 1e-12);
+        // compression moves the cost: a qsgd:16 plane (18.75% of raw)
+        // must be cheaper for the same request counts
+        let dense = transfer_cost(1_000_004, 16, 64);
+        let quant = transfer_cost(187_510, 16, 64);
+        assert!(quant < dense);
     }
 
     #[test]

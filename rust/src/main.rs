@@ -13,7 +13,9 @@ use std::sync::Arc;
 use p2pless::config::{Backend, Compression, OffloadMode, SyncMode, TrainConfig};
 use p2pless::coordinator::Cluster;
 use p2pless::error::{Error, Result};
+use p2pless::faas::pricing;
 use p2pless::harness;
+use p2pless::perfmodel;
 use p2pless::runtime::{Engine, Manifest};
 
 const USAGE: &str = "\
@@ -63,6 +65,16 @@ TRAIN OPTIONS:
                              epoch's store scratch (params, parked
                              gradients) by generation after the fan-out;
                              persistent batch objects always survive
+    --wire-compression C     none | qsgd:S | topk:FRAC (default none):
+                             serverless wire-plane codec — gradient
+                             returns park encoded and params delta
+                             frames use it as their inner codec; none
+                             keeps the data plane byte-identical to the
+                             uncompressed path
+    --params-delta-every N   delta-encode params uploads against the
+                             previous generation, resyncing with a full
+                             object every N generations (default 0 =
+                             off; needs --decode-cache > 0)
     --exec-threads N         FaaS worker-pool threads (0 = machine size);
                              physical fan-out concurrency only — the
                              modeled accounting does not move with N
@@ -205,6 +217,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_bool(args, "sweep-scratch")? {
         cfg.sweep_scratch = v;
     }
+    if let Some(v) = args.flags.get("wire-compression") {
+        cfg.wire_compression = Compression::parse(v)?;
+    }
+    if let Some(v) = parse_num(args, "params-delta-every")? {
+        cfg.params_delta_every = v;
+    }
     if let Some(v) = parse_num(args, "exec-threads")? {
         cfg.exec_threads = v;
     }
@@ -308,6 +326,30 @@ fn cmd_train(args: &Args) -> Result<()> {
             c("store.pack_misses"),
             report.store_objects,
         );
+        if report.config.wire_compression != Compression::None
+            || report.config.params_delta_every > 0
+        {
+            let raw = c("wire.bytes_raw");
+            let wire = c("wire.bytes_wire");
+            let pct = if raw > 0 { wire as f64 * 100.0 / raw as f64 } else { 0.0 };
+            // bytes-on-wire feeds the modeled transfer terms: per-epoch
+            // park time at the modeled store bandwidth, and the S3
+            // request + cross-region rate card for the whole run
+            println!(
+                "wire plane ({}, params delta every {}): {} raw -> {} wire bytes \
+                 ({pct:.1}%), {} delta resyncs; encode {:.1} ms / decode {:.1} ms; \
+                 modeled park {:?} / transfer ${:.6}",
+                report.config.wire_compression.to_spec(),
+                report.config.params_delta_every,
+                raw,
+                wire,
+                c("wire.delta_resyncs"),
+                c("wire.encode_us") as f64 / 1e3,
+                c("wire.decode_us") as f64 / 1e3,
+                perfmodel::store_put_time(wire as usize),
+                pricing::transfer_cost(wire, c("store.puts"), c("store.gets")),
+            );
+        }
         if report.config.exec_batch > 1 {
             println!(
                 "fused exec (batch {}): {} fused dispatches / {} branches fused / \

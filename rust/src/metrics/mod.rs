@@ -128,7 +128,8 @@ impl StageTimer {
 
 /// Thread-safe per-stage aggregation, plus named utilization counters
 /// (scheduler queue depth, executor busy threads, per-peer branches
-/// served) so fairness regressions are observable in the run report.
+/// served, `wire.*` bytes-on-wire accounting) so fairness and
+/// data-plane regressions are observable in the run report.
 #[derive(Default)]
 pub struct MetricsRegistry {
     stages: Mutex<HashMap<Stage, StageSummary>>,

@@ -45,6 +45,13 @@ pub const SEND_BW: f64 = 72.0e6;
 pub const RECV_BW: f64 = 102.6e6;
 /// Fixed per-message broker latency.
 pub const MSG_LATENCY: Duration = Duration::from_millis(8);
+/// Effective single-stream object-store PUT bandwidth (bytes/s) from
+/// inside a Lambda (S3-class storage; the wire plane's park path).
+pub const STORE_PUT_BW: f64 = 100.0e6;
+/// Effective single-stream object-store GET bandwidth (bytes/s).
+pub const STORE_GET_BW: f64 = 150.0e6;
+/// Fixed per-request store latency (time to first byte).
+pub const STORE_REQ_LATENCY: Duration = Duration::from_millis(12);
 
 /// Per-sample gradient-computation time on an EC2 instance.
 pub fn instance_per_sample(spec: &PaperModelSpec, inst: &InstanceType, batch: usize) -> Duration {
@@ -103,6 +110,18 @@ pub fn recv_time(gradient_bytes: usize, remote_peers: usize, compression_ratio: 
     let wire = gradient_bytes as f64 / compression_ratio.max(1e-9);
     MSG_LATENCY * remote_peers as u32
         + Duration::from_secs_f64(wire * remote_peers as f64 / RECV_BW)
+}
+
+/// Modeled time to park `wire_bytes` in the object store (a gradient
+/// return or params upload). Fed by the wire plane's bytes-on-wire:
+/// compression moves this transfer term, never the compute terms.
+pub fn store_put_time(wire_bytes: usize) -> Duration {
+    STORE_REQ_LATENCY + Duration::from_secs_f64(wire_bytes as f64 / STORE_PUT_BW)
+}
+
+/// Modeled time to read `wire_bytes` back from the object store.
+pub fn store_get_time(wire_bytes: usize) -> Duration {
+    STORE_REQ_LATENCY + Duration::from_secs_f64(wire_bytes as f64 / STORE_GET_BW)
 }
 
 #[cfg(test)]
@@ -194,6 +213,22 @@ mod tests {
         assert!(comp < plain);
         let ratio = plain.as_secs_f64() / comp.as_secs_f64();
         assert!(ratio > 4.0 && ratio < 5.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn store_transfer_latency_floor_and_scaling() {
+        // zero bytes still pays the request latency
+        assert_eq!(store_put_time(0), STORE_REQ_LATENCY);
+        assert_eq!(store_get_time(0), STORE_REQ_LATENCY);
+        // gets are faster than puts for the same payload
+        assert!(store_get_time(1_000_000) < store_put_time(1_000_000));
+        // a qsgd:16-sized park (18.75% of raw) beats the dense park
+        let dense = store_put_time(1_000_004);
+        let quant = store_put_time(187_510);
+        assert!(quant < dense);
+        let saved = dense.as_secs_f64() - quant.as_secs_f64();
+        // the savings are pure transfer: (1_000_004 - 187_510) / PUT_BW
+        assert!((saved - 812_494.0 / STORE_PUT_BW).abs() < 1e-9);
     }
 
     #[test]

@@ -604,9 +604,23 @@ impl DecodedCache {
     /// get + decode. Failures (missing object) leave the entry empty so
     /// a later call can retry.
     pub fn get_or_decode(&self, r: &ObjectRef, store: &ObjectStore) -> Result<Arc<Vec<f32>>> {
+        self.get_or_decode_with(r, store, &|bytes| Ok(bytes_to_f32s(bytes)))
+    }
+
+    /// Like [`Self::get_or_decode`] but with a caller-supplied decode —
+    /// the wire plane's framed params objects decode through here. The
+    /// closure runs under the entry's value lock on a miss; it may
+    /// recurse into the cache for *other* keys (a delta frame resolving
+    /// its base generation) but must never re-enter the same key.
+    pub fn get_or_decode_with(
+        &self,
+        r: &ObjectRef,
+        store: &ObjectStore,
+        decode: &dyn Fn(&Bytes) -> Result<Vec<f32>>,
+    ) -> Result<Arc<Vec<f32>>> {
         if self.capacity == 0 {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::new(bytes_to_f32s(&store.get_ref(r)?)));
+            return Ok(Arc::new(decode(&store.get_ref(r)?)?));
         }
         let slot = {
             let mut st = self.state.lock().unwrap();
@@ -639,7 +653,7 @@ impl DecodedCache {
             return Ok(v.clone());
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let decoded = Arc::new(bytes_to_f32s(&store.get_ref(r)?));
+        let decoded = Arc::new(decode(&store.get_ref(r)?)?);
         *value = Some(decoded.clone());
         Ok(decoded)
     }

@@ -1,0 +1,135 @@
+//! Cluster-level acceptance for the compressed serverless wire plane:
+//!
+//! - invariance: `--wire-compression none` (the default) is byte-for-byte
+//!   the pre-compression data plane on every offload mode — validation
+//!   curves, modeled lambda numbers and store counters all bit-identical,
+//!   with every `wire.*` counter pinned at zero;
+//! - lossy convergence: a `qsgd:16` gradient plane with delta-encoded
+//!   params uploads still trains (finite, near-baseline val loss), moves
+//!   strictly fewer bytes through the store, and never needs a chain
+//!   resync under the normal lagged sweep.
+
+mod common;
+
+use p2pless::config::{Backend, Compression, OffloadMode, TrainConfig};
+use p2pless::coordinator::{Cluster, TrainReport};
+
+fn serverless_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs: 3,
+        lr: 0.05,
+        train_samples: 2 * 16 * 3, // 3 full batches per peer, no remainder
+        val_samples: 64,
+        backend: Backend::Serverless,
+        artifacts_dir: common::artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+fn run(cfg: TrainConfig) -> TrainReport {
+    Cluster::with_engine(cfg, common::engine()).unwrap().run().unwrap()
+}
+
+/// The counters the `none` plane must not perturb: the whole store
+/// data-plane fingerprint plus the fold-visible lambda numbers.
+const PINNED: &[&str] = &[
+    "store.puts",
+    "store.gets",
+    "store.bytes_in",
+    "store.dedup_hits",
+    "store.decode_hits",
+    "store.decode_misses",
+    "broker.stale_drops",
+];
+
+/// Explicitly passing `--wire-compression none` must be byte-identical
+/// to the default plane on every offload mode: same validation curve
+/// bits, same modeled cost, same store counters — and the wire plane
+/// itself reports all-zero counters (it never touched a byte).
+#[test]
+fn none_wire_plane_is_byte_identical_on_every_mode() {
+    require_artifacts!();
+    for mode in [OffloadMode::Staged, OffloadMode::Pipelined, OffloadMode::CrossEpoch] {
+        let base = run(TrainConfig { offload_mode: mode, ..serverless_cfg() });
+        let explicit = run(TrainConfig {
+            offload_mode: mode,
+            wire_compression: Compression::None,
+            params_delta_every: 0,
+            ..serverless_cfg()
+        });
+        assert_eq!(base.val_curve.len(), explicit.val_curve.len());
+        for ((e1, l1, a1), (e2, l2, a2)) in base.val_curve.iter().zip(&explicit.val_curve) {
+            assert_eq!(e1, e2, "mode {mode:?}");
+            assert_eq!(l1.to_bits(), l2.to_bits(), "val loss bits diverged: {mode:?}");
+            assert_eq!(a1.to_bits(), a2.to_bits(), "val acc bits diverged: {mode:?}");
+        }
+        assert_eq!(base.lambda_invocations, explicit.lambda_invocations);
+        assert_eq!(
+            base.lambda_cost_usd.to_bits(),
+            explicit.lambda_cost_usd.to_bits(),
+            "modeled cost diverged with an explicit none plane: {mode:?}"
+        );
+        for name in PINNED {
+            assert_eq!(
+                base.counter(name),
+                explicit.counter(name),
+                "counter {name} diverged: {mode:?}"
+            );
+        }
+        for rep in [&base, &explicit] {
+            for c in
+                ["wire.bytes_raw", "wire.bytes_wire", "wire.encode_us", "wire.decode_us",
+                 "wire.delta_resyncs"]
+            {
+                assert_eq!(rep.counter(c), Some(0), "{c} nonzero on the none plane: {mode:?}");
+            }
+            assert_eq!(rep.store_objects, 0, "mode {mode:?} leaked store objects");
+        }
+    }
+}
+
+/// A lossy plane (`qsgd:16` gradients, delta params every 4 generations)
+/// still converges near the uncompressed baseline while moving strictly
+/// fewer bytes through the store — and the delta chain never breaks
+/// under the normal lagged sweep.
+#[test]
+fn qsgd16_delta_plane_converges_and_shrinks_the_wire() {
+    require_artifacts!();
+    let baseline = run(serverless_cfg());
+    let quant = run(TrainConfig {
+        wire_compression: Compression::Qsgd { s: 16 },
+        params_delta_every: 4,
+        ..serverless_cfg()
+    });
+    let l_base = baseline.final_val_loss().unwrap();
+    let l_quant = quant.final_val_loss().unwrap();
+    assert!(l_base.is_finite() && l_quant.is_finite());
+    // 6-bit-quantized gradients on a 3-epoch MNIST run: stay within a
+    // generous but regression-catching band of the exact plane
+    assert!(
+        (l_quant - l_base).abs() <= 0.5 * l_base.max(0.2),
+        "qsgd:16 val loss {l_quant} too far from baseline {l_base}"
+    );
+    let raw = quant.counter("wire.bytes_raw").unwrap();
+    let wire = quant.counter("wire.bytes_wire").unwrap();
+    assert!(raw > 0 && wire > 0, "compressed plane reported no traffic");
+    assert!(
+        wire * 2 < raw,
+        "wire bytes {wire} not under half of raw {raw} at qsgd:16"
+    );
+    // the store moved fewer bytes than the uncompressed plane did
+    let b_base = baseline.counter("store.bytes_in").unwrap();
+    let b_quant = quant.counter("store.bytes_in").unwrap();
+    assert!(
+        b_quant < b_base,
+        "store bytes_in did not shrink: {b_quant} vs baseline {b_base}"
+    );
+    // v(e-1) stays resident under the lagged sweep, so the delta chain
+    // never needs an emergency full-object resync in a clean run
+    assert_eq!(quant.counter("wire.delta_resyncs"), Some(0));
+    assert_eq!(quant.store_objects, 0, "compressed plane leaked store objects");
+}
