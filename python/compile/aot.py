@@ -12,6 +12,11 @@ INT_MAX`); the text parser reassigns ids and round-trips cleanly (see
 
 Artifacts per (model, dataset):
     grad_<m>_<ds>_b<B>.hlo.txt            (params, x, y) -> (loss, grads)
+    grad_stacked_<m>_<ds>_b<B>x<k>.hlo.txt
+                                          (params, xs[k], ys[k]) ->
+                                          (losses[k], grads[k, P]):
+                                          k micro-batches, per-branch
+                                          outputs, no cross-lane reduction
     grad_<m>_<ds>_b<B>_nopallas.hlo.txt   ablation: jnp.dot instead of L1
     update_<m>_<ds>.hlo.txt               (params, grads, lr) -> (params',)
     eval_<m>_<ds>_b<B>.hlo.txt            (params, x, y) -> (loss, ncorrect)
@@ -33,6 +38,9 @@ from .kernels import qsgd
 from .model import DATASETS, MODELS, Model
 
 GRAD_BATCHES = (16, 64)
+# stacking factors k for grad_stacked_bBxk artifacts: one XLA execution
+# over k micro-batches with per-branch outputs (fused-group fast path)
+STACK_FACTORS = (4, 8)
 EVAL_BATCHES = (64, 256)
 NOPALLAS_BATCHES = (64,)
 QSGD_N = 4096
@@ -67,11 +75,14 @@ def lower_model(m: Model, out_dir: str, quick: bool):
         param_count=m.param_count,
         input=[h, w, c],
         nclass=m.nclass,
-        artifacts=dict(grad={}, grad_nopallas={}, eval={}),
+        artifacts=dict(grad={}, grad_stacked={}, grad_nopallas={}, eval={}),
         params_spec=m.params.spec_json(),
     )
 
     grad_batches = GRAD_BATCHES[:1] if quick else GRAD_BATCHES
+    # --quick still emits the smallest stacked artifact so CI smoke can
+    # exercise the stacked-dispatch path without a full compile
+    stack_factors = STACK_FACTORS[:1] if quick else STACK_FACTORS
     eval_batches = EVAL_BATCHES[:1] if quick else EVAL_BATCHES
     nopallas = () if quick else NOPALLAS_BATCHES
 
@@ -81,6 +92,16 @@ def lower_model(m: Model, out_dir: str, quick: bool):
         low = jax.jit(lambda p, x, y: m.grad_step(p, x, y)).lower(pspec, xs, ys)
         entry["artifacts"]["grad"][str(b)] = _write(
             out_dir, f"grad_{key}_b{b}.hlo.txt", to_hlo_text(low))
+        entry["artifacts"]["grad_stacked"][str(b)] = {}
+        for k in stack_factors:
+            xss = jax.ShapeDtypeStruct((k, b, h, w, c), jnp.float32)
+            yss = jax.ShapeDtypeStruct((k, b), jnp.int32)
+            low = jax.jit(
+                lambda p, x, y: m.grad_stacked(p, x, y)
+            ).lower(pspec, xss, yss)
+            entry["artifacts"]["grad_stacked"][str(b)][str(k)] = _write(
+                out_dir, f"grad_stacked_{key}_b{b}x{k}.hlo.txt",
+                to_hlo_text(low))
     for b in nopallas:
         xs = jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
         ys = jax.ShapeDtypeStruct((b,), jnp.int32)
@@ -135,7 +156,11 @@ def main():
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 
-    manifest = dict(version=1, models={}, grad_batches=list(GRAD_BATCHES),
+    # schema v2: per-model artifacts.grad_stacked[batch][k] + the
+    # top-level stack_factors list (v1 manifests have neither; the rust
+    # loader accepts both and simply finds no stacked artifacts for v1)
+    manifest = dict(version=2, models={}, grad_batches=list(GRAD_BATCHES),
+                    stack_factors=list(STACK_FACTORS),
                     eval_batches=list(EVAL_BATCHES))
     for name in args.models:
         for ds in args.datasets:

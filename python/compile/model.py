@@ -193,6 +193,24 @@ class Model:
         )(flat, x, y)
         return loss, g
 
+    def grad_stacked(self, flat, xs, ys, use_pallas=True):
+        """k independent grad_steps over stacked micro-batches.
+
+        xs is (k, B, H, W, C), ys is (k, B); every lane shares the same
+        flat params. Returns (losses[k], grads[k, P]) with NO cross-lane
+        reduction, so the runtime can split the outputs back to the k
+        callers exactly as if each had executed its own grad artifact.
+        The loop is unrolled at trace time (k is a compile-time constant
+        baked into the artifact name), keeping each lane's computation
+        graph identical to the single-batch grad_step lowering.
+        """
+        losses, grads = [], []
+        for i in range(xs.shape[0]):
+            loss, g = self.grad_step(flat, xs[i], ys[i], use_pallas=use_pallas)
+            losses.append(loss)
+            grads.append(g)
+        return jnp.stack(losses), jnp.stack(grads)
+
     def apply_update(self, flat, grads, lr):
         """Plain SGD: theta <- theta - lr * g (paper Alg. 1 update)."""
         return (flat - lr.reshape(()) * grads,)

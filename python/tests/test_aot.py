@@ -46,6 +46,37 @@ def test_grad_artifact_signature():
     assert f"f32[{m.param_count}]" in text
 
 
+def test_grad_stacked_matches_per_lane_grad_step():
+    """Stacked lowering keeps lanes independent: lane i's outputs equal a
+    plain grad_step over micro-batch i, and nothing folds across lanes."""
+    m = Model("mini_squeezenet", "mnist")
+    flat = m.init_flat(seed=0)
+    k, b = 3, 2
+    key = jax.random.PRNGKey(7)
+    xs = jax.random.normal(key, (k, b, 28, 28, 1), jnp.float32)
+    ys = jnp.arange(k * b, dtype=jnp.int32).reshape(k, b) % m.nclass
+    losses, grads = m.grad_stacked(flat, xs, ys)
+    assert losses.shape == (k,)
+    assert grads.shape == (k, m.param_count)
+    for i in range(k):
+        loss_i, g_i = m.grad_step(flat, xs[i], ys[i])
+        assert jnp.allclose(losses[i], loss_i)
+        assert jnp.allclose(grads[i], g_i)
+
+
+def test_grad_stacked_artifact_signature():
+    m = Model("mini_squeezenet", "mnist")
+    k, b = 4, 4
+    pspec = jax.ShapeDtypeStruct((m.param_count,), jnp.float32)
+    xs = jax.ShapeDtypeStruct((k, b, 28, 28, 1), jnp.float32)
+    ys = jax.ShapeDtypeStruct((k, b), jnp.int32)
+    low = jax.jit(m.grad_stacked).lower(pspec, xs, ys)
+    text = aot.to_hlo_text(low)
+    assert "ENTRY" in text
+    # per-branch outputs: losses f32[k] + grads f32[k, P]
+    assert f"f32[{k},{m.param_count}]" in text
+
+
 @pytest.mark.slow
 def test_quick_aot_writes_manifest(tmp_path, monkeypatch):
     monkeypatch.setattr(
@@ -55,8 +86,11 @@ def test_quick_aot_writes_manifest(tmp_path, monkeypatch):
     )
     aot.main()
     man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["version"] == 2
     entry = man["models"]["mini_squeezenet_mnist"]
+    # --quick still ships the smallest stacked artifact for CI smoke
     for rel in [entry["artifacts"]["grad"]["16"], entry["artifacts"]["update"],
+                entry["artifacts"]["grad_stacked"]["16"]["4"],
                 entry["init_params"], man["qsgd"]["encode"]]:
         assert os.path.exists(tmp_path / rel)
     # init params file has exactly param_count f32s

@@ -27,8 +27,135 @@ fn main() {
         "modeled fig-3 cells + real worker-pool fan-out + real two-peer runs per backend",
     );
     // CI sets BENCH_FUSED_ONLY to skip the sleep-driven synthetic
-    // sections and go straight to the fused-exec comparison + JSON
+    // sections and go straight to the fused-exec comparison + JSON;
+    // BENCH_STACKED_ONLY runs only the stacked three-way below
     let fused_only = std::env::var_os("BENCH_FUSED_ONLY").is_some();
+    let stacked_only = std::env::var_os("BENCH_STACKED_ONLY").is_some();
+
+    // true stacked execution, synthetic three-way: the real ExecBatcher
+    // under a serialized slot with a fixed per-XLA-dispatch overhead —
+    // the shape the stacked artifacts remove. Unbatched pays the
+    // overhead once per branch, fused (PR-5 back-to-back) still pays it
+    // once per member turn, stacked pays it ONCE per group. All counts
+    // in the committed JSON are content-independent integers (walls go
+    // to stdout only), so the file is byte-stable across runs.
+    {
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 16;
+        const DISPATCH_OVERHEAD: Duration = Duration::from_micros(300);
+        let run = |exec_batch: usize, stack: bool| {
+            let batcher =
+                Arc::new(ExecBatcher::new(exec_batch, Duration::from_millis(200)));
+            let sem = Arc::new(Semaphore::new(1));
+            let barrier = Arc::new(std::sync::Barrier::new(THREADS));
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let batcher = batcher.clone();
+                    let sem = sem.clone();
+                    let barrier = barrier.clone();
+                    std::thread::spawn(move || {
+                        for r in 0..ROUNDS {
+                            // every round is a fresh full wave: exactly
+                            // one group of THREADS forms per round, so
+                            // the dispatch counts are deterministic
+                            barrier.wait();
+                            let data: Vec<f32> =
+                                (0..64).map(|k| (t * 1000 + r * 10 + k) as f32).collect();
+                            let inputs = vec![literal_f32(&data, &[64]).unwrap()];
+                            let key =
+                                FuseKey { exe: 2, batch: 64, params: 0, version: 1 };
+                            batcher
+                                .run_stacked(
+                                    key,
+                                    inputs,
+                                    &sem,
+                                    |ins| {
+                                        std::thread::sleep(DISPATCH_OVERHEAD);
+                                        let v = ins[0].to_vec::<f32>()?;
+                                        let s: f32 = v.iter().sum();
+                                        Ok(vec![literal_f32(&[s], &[1])?])
+                                    },
+                                    move |views| {
+                                        if !stack || views.len() < 2 {
+                                            return Ok(None);
+                                        }
+                                        let t0 = Instant::now();
+                                        std::thread::sleep(DISPATCH_OVERHEAD);
+                                        let mut outs = Vec::with_capacity(views.len());
+                                        for v in views {
+                                            let x = v[0].to_vec::<f32>()?;
+                                            let s: f32 = x.iter().sum();
+                                            outs.push(vec![literal_f32(&[s], &[1])?]);
+                                        }
+                                        Ok(Some((outs, t0.elapsed(), views.len())))
+                                    },
+                                )
+                                .unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            (
+                t0.elapsed(),
+                batcher.batched_execs(),
+                batcher.stacked_execs(),
+                batcher.pad_waste(),
+            )
+        };
+        let _ = run(THREADS, true); // warm-up
+        let best = |exec_batch: usize, stack: bool| {
+            (0..3).map(|_| run(exec_batch, stack)).min_by_key(|r| r.0).unwrap()
+        };
+        let (un_wall, un_execs, _, _) = best(1, false);
+        let (fu_wall, fu_execs, fu_stacked, _) = best(THREADS, false);
+        let (st_wall, st_execs, st_stacked, st_pad) = best(THREADS, true);
+        println!(
+            "stacked_exec(synthetic, slot=1, {} branches): unbatched {un_wall:?} \
+             ({un_execs} dispatches) vs fused {fu_wall:?} ({fu_execs} dispatches, \
+             back-to-back) vs stacked {st_wall:?} ({st_stacked} stacked XLA \
+             executions, pad {st_pad})",
+            THREADS * ROUNDS,
+        );
+        // the counts are the contract — pin them hard so a grouping
+        // regression cannot hide behind a byte-stable JSON
+        assert_eq!(un_execs, (THREADS * ROUNDS) as u64);
+        assert_eq!(fu_execs, ROUNDS as u64, "full waves must fuse per round");
+        assert_eq!(fu_stacked, 0, "the declined strategy must not stack");
+        assert_eq!(st_execs, ROUNDS as u64);
+        assert_eq!(
+            st_stacked, ROUNDS as u64,
+            "every full fused group must run as ONE stacked execution"
+        );
+        assert_eq!(st_pad, 0, "exact-fit groups must not pad");
+        assert!(
+            st_wall < fu_wall,
+            "stacked ({st_wall:?}) must beat the back-to-back fused path \
+             ({fu_wall:?}) at slot=1 — it pays the dispatch overhead once \
+             per group instead of once per member"
+        );
+        let mut j = Json::obj();
+        j.set("bench", "stacked_exec")
+            .set("threads", THREADS)
+            .set("rounds", ROUNDS)
+            .set("branches", THREADS * ROUNDS)
+            .set("exec_batch", THREADS)
+            .set("unbatched_dispatches", un_execs)
+            .set("fused_dispatches", fu_execs)
+            .set("stacked_dispatches", st_execs)
+            .set("stacked_execs", st_stacked)
+            .set("pad_waste", st_pad)
+            .set("stacked_faster", st_wall < fu_wall);
+        if let Err(e) = std::fs::write("BENCH_stacked_exec.json", j.to_string()) {
+            eprintln!("could not write BENCH_stacked_exec.json: {e}");
+        }
+        if stacked_only {
+            return;
+        }
+    }
 
     if !fused_only {
     // cost of evaluating a modeled cell (orchestration overhead itself)

@@ -219,6 +219,12 @@ pub struct TrainConfig {
     /// (`exec_slots = 1`, many small branches) and costing intra-group
     /// parallelism when slots are plentiful.
     pub exec_batch: usize,
+    /// Adaptive exec-batch control plane (`--exec-batch auto`): treat
+    /// `exec_batch` as a ceiling and let the scheduler size the live
+    /// fused-group target (and its own coalesce burst) from queue
+    /// depth / pool utilization. Off by default; the modeled
+    /// accounting still never moves — only the measured wall.
+    pub exec_batch_auto: bool,
     /// How long a fused-execution group collects members before
     /// dispatching partially filled, in microseconds.
     pub exec_batch_wait_us: u64,
@@ -258,6 +264,7 @@ impl Default for TrainConfig {
             exec_threads: 0,
             exec_slots: 0,
             exec_batch: 1,
+            exec_batch_auto: false,
             exec_batch_wait_us: 500,
             seed: 42,
             artifacts_dir: "artifacts".into(),
@@ -316,6 +323,9 @@ impl TrainConfig {
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
                 "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
                 "exec_batch" => cfg.exec_batch = v.as_usize().ok_or_else(missing)?,
+                "exec_batch_auto" => {
+                    cfg.exec_batch_auto = v.as_bool().ok_or_else(missing)?
+                }
                 "exec_batch_wait_us" => {
                     cfg.exec_batch_wait_us = v.as_u64().ok_or_else(missing)?
                 }
@@ -358,6 +368,7 @@ impl TrainConfig {
             .set("exec_threads", self.exec_threads)
             .set("exec_slots", self.exec_slots)
             .set("exec_batch", self.exec_batch)
+            .set("exec_batch_auto", self.exec_batch_auto)
             .set("exec_batch_wait_us", self.exec_batch_wait_us)
             .set("seed", self.seed)
             .set("artifacts_dir", self.artifacts_dir.as_str())
@@ -393,6 +404,13 @@ impl TrainConfig {
         if self.exec_batch == 0 {
             return Err(Error::Config(
                 "exec_batch must be >= 1 (1 disables fusion)".into(),
+            ));
+        }
+        if self.exec_batch_auto && self.exec_batch < 2 {
+            return Err(Error::Config(
+                "exec_batch_auto needs an exec_batch ceiling >= 2 \
+                 (auto mode ramps between 1 and the ceiling)"
+                    .into(),
             ));
         }
         if let Compression::Qsgd { s } = self.compression {
@@ -478,6 +496,25 @@ mod tests {
         // a zero batch can hold no branch at all — config error
         let bad = TrainConfig { exec_batch: 0, ..Default::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn exec_batch_auto_roundtrips_and_needs_a_ceiling() {
+        let cfg = TrainConfig {
+            exec_batch: 8,
+            exec_batch_auto: true,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.exec_batch_auto);
+        assert_eq!(back.exec_batch, 8);
+        assert!(!TrainConfig::default().exec_batch_auto);
+        // auto with the fusion-disabled ceiling of 1 has no room to
+        // ramp: reject instead of silently running unfused forever
+        let bad = TrainConfig { exec_batch_auto: true, ..Default::default() };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("exec_batch"), "{err}");
     }
 
     #[test]

@@ -173,7 +173,20 @@ impl Cluster {
         let scheduler = BranchScheduler::new(executor.clone(), cfg.sched_fair);
         // with execution fusion on, release a peer's same-generation
         // branches in bursts so they meet in the engine batcher
-        scheduler.set_coalesce(cfg.exec_batch);
+        if cfg.exec_batch_auto {
+            // adaptive control plane: the controller resizes both the
+            // scheduler's coalesce burst and the engine's effective
+            // fused-group target from live queue depth, between 1 and
+            // the --exec-batch ceiling
+            let engine = self.engine.clone();
+            scheduler.enable_autotune(
+                cfg.exec_batch,
+                Box::new(move |n| engine.set_exec_batch_effective(n)),
+            );
+        } else {
+            scheduler.set_coalesce(cfg.exec_batch);
+            self.engine.set_exec_batch_effective(cfg.exec_batch);
+        }
         // shared across every peer's handlers: the params object each
         // epoch's branches read is decoded once, not once per branch
         let decode_cache = Arc::new(DecodedCache::new(cfg.decode_cache));
@@ -215,6 +228,7 @@ impl Cluster {
         // engine fusion counters are engine-lifetime monotonic and the
         // engine may be shared across runs: report this run's delta
         let (batched0, fused0) = self.engine.batch_stats();
+        let (stacked0, pad0) = self.engine.stacked_stats();
         let t0 = Instant::now();
         let mut handles = Vec::with_capacity(cfg.peers);
         let mut partitions = partitions.into_iter();
@@ -354,6 +368,7 @@ impl Cluster {
         metrics.set_counter("sched.branches_completed", sched.completed);
         metrics.set_counter("sched.peak_queue_depth", sched.peak_queued as u64);
         metrics.set_counter("sched.peak_in_flight", sched.peak_in_flight as u64);
+        metrics.set_counter("sched.lane_promotions", sched.lane_promotions);
         metrics.set_counter(
             "sched.peak_inflight_generations",
             sched.peak_inflight_generations as u64,
@@ -391,6 +406,11 @@ impl Cluster {
             0
         };
         metrics.set_counter("engine.batch_fill", fill);
+        // stacked execution: groups that completed as ONE stacked XLA
+        // execution, and the padding lanes those stacks wasted
+        let (stacked, pad) = self.engine.stacked_stats();
+        metrics.set_counter("engine.stacked_execs", stacked - stacked0);
+        metrics.set_counter("engine.pad_waste", pad - pad0);
         // cross-epoch overlap accounting: how many epoch fan-outs were
         // pre-dispatched ahead of the boundary, and for how long they
         // executed before collection began

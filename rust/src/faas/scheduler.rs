@@ -37,6 +37,21 @@
 //! pool back-to-back, so they meet in the batcher and fuse instead of
 //! arriving interleaved with other generations.
 //!
+//! Two control-plane extensions ride on those lanes:
+//!
+//! - **Adaptive exec-batch** (`--exec-batch auto`): an
+//!   [`auto_exec_batch`] feedback controller, ticked on every submit
+//!   and completion ([`BranchScheduler::enable_autotune`]), retargets
+//!   the coalesce burst *and* the engine's effective fused-group size
+//!   from the live queue-depth/utilization counters — ramping up under
+//!   deep backlogs, backing off toward unfused when lanes are starved.
+//! - **Priority lanes**: [`BranchScheduler::submit_detached_prio`]
+//!   queues a branch (validation / convergence work) at the FRONT of
+//!   its lane and rotation, and [`BranchScheduler::await_generation_drained`]
+//!   promotes a straggling generation's lane to the front of the
+//!   rotation while a collector blocks on its tail. Both are counted
+//!   as `lane_promotions` in [`SchedulerStats`].
+//!
 //! ```
 //! use std::sync::Arc;
 //! use p2pless::faas::{BranchScheduler, Executor};
@@ -64,6 +79,42 @@ use crate::error::{Error, Result};
 use crate::util::Bytes;
 
 type DetachedJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// One step of the `--exec-batch auto` feedback controller: given the
+/// current effective batch target and the scheduler's live signals,
+/// return the next target in `1..=max`.
+///
+/// The policy is deliberately simple and hysteresis-free in each
+/// direction (multiplicative ramp, additive back-off — AIMD inverted
+/// for a sizing knob):
+///
+/// - a backlog at least as deep as the pool means branches are waiting
+///   on slots anyway, so bigger fused groups cost no latency — double
+///   toward `max`;
+/// - an empty backlog with idle workers means a collecting group would
+///   only fill by waiting out its window — step down toward 1 (unfused);
+/// - anything in between holds.
+pub fn auto_exec_batch(cur: usize, queued: usize, busy: usize, pool: usize, max: usize) -> usize {
+    let max = max.max(1);
+    let pool = pool.max(1);
+    if queued >= pool {
+        (cur.max(1).saturating_mul(2)).min(max)
+    } else if queued == 0 && busy < pool {
+        cur.saturating_sub(1).max(1)
+    } else {
+        cur.clamp(1, max)
+    }
+}
+
+/// Live state of [`BranchScheduler::enable_autotune`].
+struct AutoTune {
+    /// The `--exec-batch` ceiling.
+    max: usize,
+    /// Last target handed to `on_change`.
+    target: usize,
+    /// Applies a new target to the engine (batcher effective size).
+    on_change: Box<dyn Fn(usize) + Send + Sync>,
+}
 
 /// One peer's admission lane. Jobs carry an optional generation tag
 /// (the epoch / param version) so overlapping epochs are observable and
@@ -119,6 +170,9 @@ struct SchedState {
     /// Active same-generation release burst: (rank, generation,
     /// releases left). See [`BranchScheduler::set_coalesce`].
     burst: Option<(usize, u64, usize)>,
+    /// Priority-lane events: front-of-lane submissions plus straggler
+    /// lane promotions at the drain barrier.
+    lane_promotions: u64,
     /// Peer rank per dispatch, in dispatch order (tests/fairness audits;
     /// off by default — it grows with every branch).
     dispatch_log: Option<Vec<usize>>,
@@ -252,6 +306,10 @@ pub struct SchedulerStats {
     pub exec_threads: usize,
     /// High-water mark of simultaneously busy executor workers.
     pub exec_peak_busy: usize,
+    /// Priority-lane events: front-of-lane submissions
+    /// ([`BranchScheduler::submit_detached_prio`]) plus straggler lane
+    /// promotions at the generation drain barrier.
+    pub lane_promotions: u64,
 }
 
 /// Cluster-wide admission control over the shared [`Executor`].
@@ -268,6 +326,9 @@ pub struct BranchScheduler {
     /// Signalled on every branch completion; the generation drain
     /// barrier parks here.
     drained: Condvar,
+    /// `--exec-batch auto` controller; `None` for fixed knobs. Lock
+    /// order: `state` before `autotune`, never the reverse.
+    autotune: Mutex<Option<AutoTune>>,
 }
 
 impl BranchScheduler {
@@ -292,10 +353,48 @@ impl BranchScheduler {
                 inflight_gens: BTreeMap::new(),
                 peak_inflight_gens: 0,
                 burst: None,
+                lane_promotions: 0,
                 dispatch_log: None,
             }),
             drained: Condvar::new(),
+            autotune: Mutex::new(None),
         })
+    }
+
+    /// Turn on the `--exec-batch auto` controller: on every submit and
+    /// completion, [`auto_exec_batch`] recomputes the effective fused
+    /// batch target from the live queue depth / pool utilization, and a
+    /// changed target is applied to both this scheduler's coalesce
+    /// burst and (through `on_change`) the engine's effective group
+    /// size. `max` is the `--exec-batch` ceiling; the controller starts
+    /// at 1 (unfused) and ramps only when backlog evidence arrives.
+    pub fn enable_autotune(&self, max: usize, on_change: Box<dyn Fn(usize) + Send + Sync>) {
+        let start = 1;
+        self.coalesce.store(start, Ordering::Relaxed);
+        on_change(start);
+        *self.autotune.lock().unwrap() =
+            Some(AutoTune { max: max.max(1), target: start, on_change });
+    }
+
+    /// One controller step (no-op unless [`Self::enable_autotune`]).
+    fn autotune_tick(&self) {
+        // signals are read under the state lock, the decision applied
+        // under the autotune lock — in that order, matching every other
+        // path that takes both
+        let (queued, busy) = {
+            let st = self.state.lock().unwrap();
+            (st.queued, st.in_flight_total)
+        };
+        let pool = self.executor.threads();
+        let mut slot = self.autotune.lock().unwrap();
+        if let Some(at) = slot.as_mut() {
+            let next = auto_exec_batch(at.target, queued, busy, pool, at.max);
+            if next != at.target {
+                at.target = next;
+                self.coalesce.store(next, Ordering::Relaxed);
+                (at.on_change)(next);
+            }
+        }
     }
 
     /// Enable same-generation branch coalescing: once a tagged branch of
@@ -386,7 +485,68 @@ impl BranchScheduler {
             st.queued += 1;
             st.peak_queued = st.peak_queued.max(st.queued);
         }
+        self.autotune_tick();
         self.pump();
+    }
+
+    /// [`Self::submit_detached_tagged`], but the branch is queued at the
+    /// FRONT of its lane and the lane moves to the front of the
+    /// round-robin rotation — the priority path for work the whole
+    /// cluster waits on (the leader's validation / convergence branch
+    /// must not sit behind a full epoch of gradient branches). Counted
+    /// in [`SchedulerStats::lane_promotions`] whenever it actually
+    /// overtakes queued work. In-flight caps and pool width still bind:
+    /// priority reorders the queue, it never over-admits.
+    pub fn submit_detached_prio(
+        &self,
+        rank: usize,
+        generation: Option<u64>,
+        f: impl FnOnce() + Send + 'static,
+    ) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if !st.lanes.contains_key(&rank) {
+                st.lanes.insert(rank, Lane::new(usize::MAX));
+                st.rr.push_back(rank);
+            }
+            let overtakes = st.queued > 0;
+            let lane = st.lanes.get_mut(&rank).unwrap();
+            lane.queue.push_front((generation, Box::new(f)));
+            if let Some(g) = generation {
+                *lane.gen_queued.entry(g).or_insert(0) += 1;
+            }
+            st.submitted += 1;
+            st.queued += 1;
+            st.peak_queued = st.peak_queued.max(st.queued);
+            if st.rr.front() != Some(&rank) {
+                st.rr.retain(|&r| r != rank);
+                st.rr.push_front(rank);
+            }
+            // a priority branch also cuts any open release burst: the
+            // next free slot must not keep streaming another lane's
+            // generation past it
+            st.burst = None;
+            if overtakes {
+                st.lane_promotions += 1;
+            }
+        }
+        self.autotune_tick();
+        self.pump();
+    }
+
+    /// [`Self::submit`] through the priority path (see
+    /// [`Self::submit_detached_prio`]).
+    pub fn submit_prio<T, F>(&self, rank: usize, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, handle) = JobHandle::channel();
+        self.submit_detached_prio(rank, None, move || {
+            let out = catch_unwind(AssertUnwindSafe(f)).map_err(|p| panic_message(&*p));
+            let _ = tx.send(out);
+        });
+        handle
     }
 
     /// Drain barrier: block until none of `rank`'s branches tagged with
@@ -397,6 +557,23 @@ impl BranchScheduler {
     /// generations.
     pub fn await_generation_drained(&self, rank: usize, generation: u64) {
         let mut st = self.state.lock().unwrap();
+        // straggler priority: a collector is now blocked on this
+        // generation's tail, so any of its branches still *queued* are
+        // the cluster's critical path — move the lane to the front of
+        // the rotation so they win the next free slots. Within the
+        // lane FIFO already orders the old generation first.
+        let straggling = st
+            .lanes
+            .get(&rank)
+            .and_then(|lane| lane.gen_queued.get(&generation))
+            .copied()
+            .unwrap_or(0)
+            > 0;
+        if straggling && st.rr.front() != Some(&rank) {
+            st.rr.retain(|&r| r != rank);
+            st.rr.push_front(rank);
+            st.lane_promotions += 1;
+        }
         while st
             .lanes
             .get(&rank)
@@ -487,6 +664,7 @@ impl BranchScheduler {
         // wake any drain barrier, then hand the freed slot to the next
         // eligible branch
         self.drained.notify_all();
+        self.autotune_tick();
         self.pump();
     }
 
@@ -504,6 +682,7 @@ impl BranchScheduler {
             peak_inflight_generations: st.peak_inflight_gens,
             exec_threads: self.executor.threads(),
             exec_peak_busy: self.executor.peak_busy(),
+            lane_promotions: st.lane_promotions,
         }
     }
 
@@ -1089,5 +1268,138 @@ mod tests {
         // the reserved wave went back to the warm pool, exactly as the
         // staged Map's unconditional release does on its error paths
         assert_eq!(p.acquire_environments("grad", 4), 4);
+    }
+
+    #[test]
+    fn auto_exec_batch_ramps_up_under_deep_queues() {
+        // a backlog at least as deep as the pool doubles toward the cap
+        assert_eq!(auto_exec_batch(1, 8, 4, 4, 8), 2);
+        assert_eq!(auto_exec_batch(2, 8, 4, 4, 8), 4);
+        assert_eq!(auto_exec_batch(4, 8, 4, 4, 8), 8);
+        assert_eq!(auto_exec_batch(8, 8, 4, 4, 8), 8, "ceiling binds");
+        // a (defensively clamped) zero current target still ramps
+        assert_eq!(auto_exec_batch(0, 8, 4, 4, 8), 2);
+    }
+
+    #[test]
+    fn auto_exec_batch_backs_off_when_starved() {
+        // empty queue with idle workers: a collecting group would only
+        // fill by waiting out its window — step down toward unfused
+        assert_eq!(auto_exec_batch(8, 0, 2, 4, 8), 7);
+        assert_eq!(auto_exec_batch(2, 0, 0, 4, 8), 1);
+        assert_eq!(auto_exec_batch(1, 0, 0, 4, 8), 1, "floor binds");
+    }
+
+    #[test]
+    fn auto_exec_batch_holds_without_clear_evidence() {
+        // shallow backlog: neither ramp nor starvation evidence
+        assert_eq!(auto_exec_batch(4, 2, 4, 4, 8), 4);
+        // empty queue but a saturated pool: work is flowing, hold
+        assert_eq!(auto_exec_batch(4, 0, 4, 4, 8), 4);
+        // a held value is still clamped into the configured range
+        assert_eq!(auto_exec_batch(9, 2, 4, 4, 8), 8);
+    }
+
+    #[test]
+    fn autotune_ramps_with_backlog_and_backs_off_when_drained() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        let targets = Arc::new(Mutex::new(Vec::new()));
+        let t = targets.clone();
+        sched.enable_autotune(8, Box::new(move |n| t.lock().unwrap().push(n)));
+        assert_eq!(*targets.lock().unwrap(), vec![1], "controller starts unfused");
+
+        // pile up a backlog deeper than the pool while paused: each
+        // submit tick that sees queued >= pool doubles the target
+        sched.pause();
+        for _ in 0..8 {
+            sched.submit_detached_tagged(0, Some(1), || {});
+        }
+        assert_eq!(
+            *targets.lock().unwrap(),
+            vec![1, 2, 4, 8],
+            "deep queue ramps the target toward the ceiling"
+        );
+        sched.resume();
+        await_completed(&sched, 8);
+
+        // starvation: single submit/join cycles never build a backlog
+        // (queued == 1 < pool at submit, empty on completion), so the
+        // completion ticks walk the target back down to 1
+        for i in 0..10u64 {
+            sched.submit(0, || ()).join().unwrap();
+            await_completed(&sched, 9 + i);
+        }
+        assert_eq!(
+            targets.lock().unwrap().last(),
+            Some(&1),
+            "starved controller backs off to unfused"
+        );
+    }
+
+    #[test]
+    fn priority_submission_overtakes_queued_branches() {
+        // 1-thread pool, paused: queue two normal branches per lane,
+        // then a priority branch on lane 1 — it must win the first
+        // slot even though four branches were queued ahead of it
+        let sched = BranchScheduler::new(Arc::new(Executor::new(1)), true);
+        sched.enable_dispatch_log();
+        sched.register_peer(0, 8);
+        sched.register_peer(1, 8);
+        sched.pause();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..2 {
+            for rank in [0usize, 1] {
+                let order = order.clone();
+                sched.submit_detached_tagged(rank, Some(1), move || {
+                    order.lock().unwrap().push(format!("n{rank}.{i}"));
+                });
+            }
+        }
+        let o = order.clone();
+        sched.submit_detached_prio(1, Some(1), move || {
+            o.lock().unwrap().push("prio".to_string());
+        });
+        assert_eq!(sched.stats().lane_promotions, 1, "overtake is counted");
+        sched.resume();
+        await_completed(&sched, 5);
+        assert_eq!(order.lock().unwrap()[0], "prio", "priority branch ran first");
+        assert_eq!(sched.dispatch_log()[0], 1);
+        // admission caps / pool width still bound everything else
+        assert_eq!(sched.stats().completed, 5);
+    }
+
+    #[test]
+    fn drain_barrier_promotes_straggler_lane() {
+        // lane 1 holds the awaited generation's tail but sits behind
+        // lane 0 in the rotation; a collector blocking on the drain
+        // barrier moves it to the rotation front so the tail wins the
+        // next free slot instead of waiting out lane 0's backlog
+        let sched = BranchScheduler::new(Arc::new(Executor::new(1)), true);
+        sched.enable_dispatch_log();
+        sched.register_peer(0, 8);
+        sched.register_peer(1, 8);
+        sched.pause();
+        for _ in 0..2 {
+            sched.submit_detached(0, || {});
+            sched.submit_detached_tagged(1, Some(3), || {});
+        }
+        let s2 = sched.clone();
+        let collector = std::thread::spawn(move || s2.await_generation_drained(1, 3));
+        // the promotion happens as the barrier starts waiting
+        for _ in 0..500 {
+            if sched.stats().lane_promotions >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(sched.stats().lane_promotions, 1, "straggler lane promoted");
+        sched.resume();
+        collector.join().unwrap();
+        await_completed(&sched, 4);
+        assert_eq!(
+            sched.dispatch_log()[0],
+            1,
+            "promoted lane won the first slot"
+        );
     }
 }

@@ -80,7 +80,7 @@ TRAIN OPTIONS:
                              modeled accounting does not move with N
     --exec-slots N           concurrent PJRT executions (0 = machine
                              size, 1 = serialized honest-timing mode)
-    --exec-batch N           fused-execution batch: up to N concurrent
+    --exec-batch N|auto      fused-execution batch: up to N concurrent
                              gradient branches of the same executable +
                              params version coalesce into one engine
                              dispatch (default 1 = fusion off). Math and
@@ -89,7 +89,12 @@ TRAIN OPTIONS:
                              shrinks when dispatch overhead dominates
                              (best with --exec-slots 1), but a fused
                              group runs on one slot, so wide-open slots
-                             lose intra-group parallelism
+                             lose intra-group parallelism. With stacked
+                             AOT artifacts (manifest v2) a full group
+                             runs as ONE stacked XLA execution. "auto"
+                             sizes the live target adaptively from
+                             queue depth between 1 and a ceiling of
+                             max(N, 8)
     --exec-batch-wait-us N   fused-group collect window in microseconds
                              (default 500): how long a group waits to
                              fill before dispatching partial
@@ -229,8 +234,19 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_num(args, "exec-slots")? {
         cfg.exec_slots = v;
     }
-    if let Some(v) = parse_num(args, "exec-batch")? {
-        cfg.exec_batch = v;
+    match args.flags.get("exec-batch").map(String::as_str) {
+        // adaptive control plane: the numeric knob becomes a ceiling
+        // (raised to at least 8 so the controller has room to ramp)
+        Some("auto") => {
+            cfg.exec_batch_auto = true;
+            cfg.exec_batch = cfg.exec_batch.max(8);
+        }
+        Some(v) => {
+            cfg.exec_batch = v.parse().map_err(|_| {
+                Error::Config(format!("--exec-batch: bad value {v:?} (want a count or \"auto\")"))
+            })?;
+        }
+        None => {}
     }
     if let Some(v) = parse_num(args, "exec-batch-wait-us")? {
         cfg.exec_batch_wait_us = v;
@@ -352,12 +368,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         if report.config.exec_batch > 1 {
             println!(
-                "fused exec (batch {}): {} fused dispatches / {} branches fused / \
+                "fused exec (batch {}{}): {} fused dispatches / {} branches fused / \
                  {}% mean fill",
                 report.config.exec_batch,
+                if report.config.exec_batch_auto { " auto" } else { "" },
                 c("engine.batched_execs"),
                 c("engine.fused_branches"),
                 c("engine.batch_fill"),
+            );
+            println!(
+                "stacked exec: {} stacked XLA executions / {} pad lanes wasted / \
+                 {} lane promotions",
+                c("engine.stacked_execs"),
+                c("engine.pad_waste"),
+                c("sched.lane_promotions"),
             );
         }
         if report.config.offload_mode == OffloadMode::CrossEpoch {

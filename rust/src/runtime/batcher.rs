@@ -20,9 +20,10 @@
 //! Fusion must never change the math or the modeled accounting:
 //!
 //! - **gradient/loss folds** — each member executes on *its own*
-//!   literals against the shared executable; nothing is summed or
-//!   averaged across members, so every caller receives bit-identical
-//!   outputs to an unbatched run. Members are grouped strictly by
+//!   literals (its own back-to-back turn, or its own lane of a stacked
+//!   execution); nothing is summed or averaged across members, so every
+//!   caller receives its own outputs exactly as an unbatched run would
+//!   compute them. Members are grouped strictly by
 //!   [`FuseKey`] (executable identity + batch/param shapes + params
 //!   version), so cross-generation branches — whose inputs come from
 //!   different params versions — can never share a group;
@@ -33,27 +34,48 @@
 //!   in-process artifact. Modeled numbers therefore stay byte-identical
 //!   at any `--exec-batch`; only the *measured* wall moves.
 //!
-//! ## What "fused" means here — and the performance tradeoff
+//! ## What "fused" means here — two execution strategies
 //!
 //! A fused dispatch is one *engine* dispatch: one slot acquisition, one
-//! worker wakeup chain, the members' literals executed back-to-back on
-//! the leader's thread. It is **not** a single XLA execution over
-//! stacked inputs — the AOT artifacts are shape-specialized to one
-//! batch size, and a stacked execution would reduce loss/gradient over
-//! the combined batch, which cannot be split back per caller
-//! byte-identically. (Lowering batch-size-`B·k` artifacts with
-//! per-branch outputs is the ROADMAP follow-up that would turn a group
-//! into literally one execution.)
+//! worker wakeup chain. How the group's literals then execute depends
+//! on what the artifact manifest offers:
 //!
-//! Consequently fusion amortizes the *per-dispatch* costs — slot
-//! round-trips, cross-thread wakeups, cache-cold parameter reloads —
-//! and that is a win exactly when those dominate: small/serialized
-//! `--exec-slots` (the paper tables' honest-timing mode) or many tiny
-//! branches. With `--exec-slots` at machine size and heavy branches,
-//! the group runs sequentially under its single slot while other slots
-//! idle, trading away intra-group parallelism: measured wall can then
-//! *grow*. This is why the knob defaults to off and the bench pins
-//! `--exec-slots 1` for the batched-vs-unbatched comparison.
+//! - **Stacked (one XLA execution).** When a `grad_stacked_{B}x{k}`
+//!   artifact covers the group ([`run_stacked`]'s `stacked` closure
+//!   returns per-member outputs), the leader packs every member's
+//!   micro-batch into one stacked literal and the whole group runs as
+//!   literally ONE XLA execution. The stacked artifacts are lowered
+//!   with **per-branch** loss/gradient outputs — `k` independent lanes,
+//!   no cross-lane reduction — so the outputs split back per caller
+//!   exactly as the sequential path would produce them. Groups smaller
+//!   than the nearest available `k` are padded by replicating a real
+//!   member's lane (pad lanes execute and are discarded; the waste is
+//!   counted in [`pad_waste`]).
+//! - **Back-to-back (fallback).** When no stacked artifact fits — v1
+//!   manifests, mixed-size groups, singleton groups — the members'
+//!   literals execute back-to-back on the leader's thread under the one
+//!   slot, amortizing the per-dispatch costs only.
+//!
+//! Stacking attacks the execution itself, not just its scheduling: XLA
+//! sees the `k` lanes at once and can overlap/vectorize across them,
+//! where the fallback still pays `k` full executions. With
+//! `--exec-slots` at machine size and heavy branches, a fused group
+//! still serializes under its single slot while other slots idle —
+//! which is why the knob defaults to off and the bench pins
+//! `--exec-slots 1` for the comparison.
+//!
+//! ## The adaptive effective batch
+//!
+//! `--exec-batch N` is a *ceiling*: [`set_effective`] (driven by the
+//! `--exec-batch auto` controller in `faas::scheduler`) retargets the
+//! live group size anywhere in `1..=max` from queue-depth/utilization
+//! signals without rebuilding the engine. Groups forming after a
+//! retarget use the new size; a group mid-collect finishes at the size
+//! it started with.
+//!
+//! [`run_stacked`]: ExecBatcher::run_stacked
+//! [`pad_waste`]: ExecBatcher::pad_waste
+//! [`set_effective`]: ExecBatcher::set_effective
 //!
 //! ## Liveness
 //!
@@ -70,7 +92,7 @@
 //! [`Engine::run`]: super::Engine::run
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -129,6 +151,16 @@ unsafe impl Send for LitVec {}
 /// the member's own sub-execution duration.
 type MemberReply = Result<(LitVec, LitVec, Duration)>;
 
+/// What a [`run_stacked`] `stacked` closure reports back to the leader:
+/// `Some((per_member_outputs, stacked_wall, k))` when the whole group
+/// ran as one stacked XLA execution of padded factor `k` (outputs in
+/// member-view order: leader first, then members in arrival order), or
+/// `None` when no stacked artifact fits and the group must fall back to
+/// the back-to-back path.
+///
+/// [`run_stacked`]: ExecBatcher::run_stacked
+pub type StackedRun = Option<(Vec<Vec<xla::Literal>>, Duration, usize)>;
+
 struct Member {
     inputs: LitVec,
     reply: SyncSender<MemberReply>,
@@ -170,10 +202,17 @@ enum Role {
 /// [`Engine`]: super::Engine
 pub struct ExecBatcher {
     max: usize,
+    /// Live group-size target, `1..=max`. Fixed `--exec-batch N` keeps
+    /// it at `max`; the `auto` controller retargets it at runtime.
+    effective: AtomicUsize,
     wait: Duration,
     groups: Mutex<HashMap<FuseKey, Arc<Group>>>,
     batched_execs: AtomicU64,
     fused_branches: AtomicU64,
+    /// Fused groups that ran as ONE stacked XLA execution.
+    stacked_execs: AtomicU64,
+    /// Pad lanes executed-and-discarded across all stacked runs.
+    pad_waste: AtomicU64,
 }
 
 impl ExecBatcher {
@@ -184,18 +223,34 @@ impl ExecBatcher {
     ///
     /// [`Engine::run_fused`]: super::Engine::run_fused
     pub fn new(max: usize, wait: Duration) -> Self {
+        let max = max.max(1);
         Self {
-            max: max.max(1),
+            max,
+            effective: AtomicUsize::new(max),
             wait,
             groups: Mutex::new(HashMap::new()),
             batched_execs: AtomicU64::new(0),
             fused_branches: AtomicU64::new(0),
+            stacked_execs: AtomicU64::new(0),
+            pad_waste: AtomicU64::new(0),
         }
     }
 
-    /// Maximum members per fused run.
+    /// Maximum members per fused run (the `--exec-batch` ceiling).
     pub fn max(&self) -> usize {
         self.max
+    }
+
+    /// The live group-size target (`1..=max`).
+    pub fn effective(&self) -> usize {
+        self.effective.load(Ordering::Relaxed)
+    }
+
+    /// Retarget the live group size, clamped to `1..=max`. Groups that
+    /// form after this call collect to the new target; a group already
+    /// collecting finishes at the size it started with.
+    pub fn set_effective(&self, n: usize) {
+        self.effective.store(n.clamp(1, self.max), Ordering::Relaxed);
     }
 
     /// The collect window.
@@ -212,6 +267,18 @@ impl ExecBatcher {
     /// Total branches that went through fused dispatches.
     pub fn fused_branches(&self) -> u64 {
         self.fused_branches.load(Ordering::Relaxed)
+    }
+
+    /// Fused groups that ran as ONE stacked XLA execution (subset of
+    /// [`batched_execs`](Self::batched_execs)).
+    pub fn stacked_execs(&self) -> u64 {
+        self.stacked_execs.load(Ordering::Relaxed)
+    }
+
+    /// Total pad lanes executed-and-discarded by stacked runs whose
+    /// group was smaller than the nearest available stacking factor.
+    pub fn pad_waste(&self) -> u64 {
+        self.pad_waste.load(Ordering::Relaxed)
     }
 
     /// Join (or lead) the fused run for `key`. Blocks until this
@@ -233,6 +300,30 @@ impl ExecBatcher {
     where
         E: Fn(&[xla::Literal]) -> Result<Vec<xla::Literal>>,
     {
+        // no stacked strategy: every group takes the back-to-back path
+        self.run_stacked(key, inputs, sem, exec, |_| Ok(None))
+    }
+
+    /// Like [`run`](Self::run), with a stacked fast path: once the
+    /// group is closed and the slot held, the leader offers every
+    /// member's input slice (its own first, then members in arrival
+    /// order) to `stacked`. If it returns per-member outputs, the whole
+    /// group completes from that ONE stacked XLA execution; on `None`
+    /// the members execute back-to-back through `exec` as before. A
+    /// `stacked` error fails the entire group — every member's data
+    /// rode the one dispatch.
+    pub fn run_stacked<E, S>(
+        &self,
+        key: FuseKey,
+        inputs: Vec<xla::Literal>,
+        sem: &Semaphore,
+        exec: E,
+        stacked: S,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)>
+    where
+        E: Fn(&[xla::Literal]) -> Result<Vec<xla::Literal>>,
+        S: Fn(&[&[xla::Literal]]) -> Result<StackedRun>,
+    {
         let t_start = Instant::now();
         match self.enlist(key, inputs) {
             Role::Follower(rx) => match rx.recv() {
@@ -249,12 +340,15 @@ impl ExecBatcher {
                     "fused execution leader vanished before replying".into(),
                 )),
             },
-            Role::Leader(group, own) => self.lead(key, group, own, t_start, sem, exec),
+            Role::Leader(group, own) => {
+                self.lead(key, group, own, t_start, sem, exec, stacked)
+            }
         }
     }
 
     /// Become a follower of an open group, or the leader of a fresh one.
     fn enlist(&self, key: FuseKey, inputs: Vec<xla::Literal>) -> Role {
+        let target = self.effective();
         let mut groups = self.groups.lock().unwrap();
         if let Some(group) = groups.get(&key) {
             let group = group.clone();
@@ -262,10 +356,10 @@ impl ExecBatcher {
             let mut st = group.state.lock().unwrap();
             // joinable iff still open and there is room left beside the
             // leader: total occupancy is members + 1
-            if !st.closed && st.members.len() + 2 <= self.max {
+            if !st.closed && st.members.len() + 2 <= target {
                 let (tx, rx) = sync_channel(1);
                 st.members.push(Member { inputs: LitVec(inputs), reply: tx });
-                let full = st.members.len() + 1 >= self.max;
+                let full = st.members.len() + 1 >= target;
                 drop(st);
                 drop(groups);
                 if full {
@@ -284,8 +378,11 @@ impl ExecBatcher {
     }
 
     /// Leader phase: collect members until full or the window expires,
-    /// close the group, then run everyone under one execution slot.
-    fn lead<E>(
+    /// close the group, then run everyone under one execution slot —
+    /// as one stacked XLA execution when `stacked` covers the group,
+    /// back-to-back through `exec` otherwise.
+    #[allow(clippy::too_many_arguments)]
+    fn lead<E, S>(
         &self,
         key: FuseKey,
         group: Arc<Group>,
@@ -293,18 +390,22 @@ impl ExecBatcher {
         t_start: Instant,
         sem: &Semaphore,
         exec: E,
+        stacked: S,
     ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)>
     where
         E: Fn(&[xla::Literal]) -> Result<Vec<xla::Literal>>,
+        S: Fn(&[&[xla::Literal]]) -> Result<StackedRun>,
     {
         // collect: park on the condvar until the group fills or the
         // window runs out (no lock held besides the group's own, and
         // no execution slot — a starved group can never block the
-        // engine)
+        // engine). The target is snapshotted: a concurrent retarget
+        // applies to the next group, not one mid-collect.
+        let target = self.effective();
         let deadline = Instant::now() + self.wait;
         {
             let mut st = group.state.lock().unwrap();
-            while st.members.len() + 1 < self.max {
+            while st.members.len() + 1 < target {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -340,9 +441,65 @@ impl ExecBatcher {
         self.fused_branches
             .fetch_add(1 + members.len() as u64, Ordering::Relaxed);
 
-        // the leader's own turn first, then every member in arrival
-        // order; each turn is timed individually so billing stays
-        // per-branch
+        // stacked fast path: offer the whole group (leader's inputs
+        // first, members in arrival order) as one stacked execution
+        let views: Vec<&[xla::Literal]> = std::iter::once(own_inputs.as_slice())
+            .chain(members.iter().map(|m| m.inputs.0.as_slice()))
+            .collect();
+        match stacked(&views) {
+            Ok(Some((mut outs, stacked_wall, k))) if outs.len() == views.len() => {
+                drop(views);
+                let group_size = 1 + members.len();
+                self.stacked_execs.fetch_add(1, Ordering::Relaxed);
+                self.pad_waste
+                    .fetch_add(k.saturating_sub(group_size) as u64, Ordering::Relaxed);
+                // billing: one stacked execution of k lanes is split as
+                // an equal per-lane share — each member's `exec` covers
+                // exactly its own lane's slice of the one execution, so
+                // the group's summed billed time never exceeds the real
+                // stacked wall. Everything else (collect window, slot
+                // wait, pad lanes' share) stays in queue_wait, which
+                // the FaaS billing path excludes.
+                let share = stacked_wall / k.max(1) as u32;
+                let member_outs = outs.split_off(1);
+                for (Member { inputs, reply }, m_outs) in
+                    members.into_iter().zip(member_outs)
+                {
+                    let _ = reply.send(Ok((LitVec(m_outs), inputs, share)));
+                }
+                let own_outs = outs.pop().expect("leader lane output");
+                let queue_wait = t_start.elapsed().saturating_sub(share);
+                return Ok((own_outs, own_inputs, ExecTiming { exec: share, queue_wait }));
+            }
+            Ok(Some((outs, _, _))) => {
+                drop(views);
+                let msg = format!(
+                    "stacked execution returned {} member outputs for a \
+                     group of {}",
+                    outs.len(),
+                    1 + members.len()
+                );
+                for Member { reply, .. } in members {
+                    let _ = reply.send(Err(Error::Runtime(msg.clone())));
+                }
+                return Err(Error::Runtime(msg));
+            }
+            Err(e) => {
+                drop(views);
+                // the whole group rode the one stacked dispatch: fail
+                // every member with the same cause
+                let msg = format!("stacked execution failed: {e}");
+                for Member { reply, .. } in members {
+                    let _ = reply.send(Err(Error::Runtime(msg.clone())));
+                }
+                return Err(e);
+            }
+            Ok(None) => drop(views),
+        }
+
+        // back-to-back fallback: the leader's own turn first, then
+        // every member in arrival order; each turn is timed
+        // individually so billing stays per-branch
         let t0 = Instant::now();
         let own_result = exec(&own_inputs);
         let own_exec = t0.elapsed();
@@ -589,5 +746,214 @@ mod tests {
         assert_eq!(oks.len(), 1, "the healthy member must succeed");
         assert_eq!(errs.len(), 1, "the poisoned member must fail alone");
         assert!(errs[0].as_ref().unwrap_err().to_string().contains("poisoned"));
+    }
+
+    /// A synthetic stacked strategy: computes every lane's `[2x + 1]`
+    /// in one "execution" padded to `k` lanes, reporting a fixed wall.
+    fn stack_to(k: usize, views: &[&[xla::Literal]]) -> Result<StackedRun> {
+        let mut outs = Vec::with_capacity(views.len());
+        for v in views {
+            outs.push(double_plus_one(v)?);
+        }
+        Ok(Some((outs, Duration::from_millis(8), k.max(views.len()))))
+    }
+
+    /// Like [`fan_in`], but through [`ExecBatcher::run_stacked`] with a
+    /// shared stacked strategy (all callers use one version).
+    fn fan_in_stacked(
+        batcher: &Arc<ExecBatcher>,
+        n: usize,
+        stacked: impl Fn(&[&[xla::Literal]]) -> Result<StackedRun> + Copy + Send + 'static,
+    ) -> Vec<Vec<u32>> {
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let batcher = batcher.clone();
+                let sem = sem.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let inputs = input(i as f32);
+                    let want_back: Vec<u32> = inputs[0]
+                        .to_vec::<f32>()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    barrier.wait();
+                    let (outs, ins, _timing) = batcher
+                        .run_stacked(key(5), inputs, &sem, double_plus_one, stacked)
+                        .unwrap();
+                    let got_back: Vec<u32> = ins[0]
+                        .to_vec::<f32>()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect();
+                    assert_eq!(got_back, want_back, "inputs must round-trip");
+                    outs[0]
+                        .to_vec::<f32>()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn full_group_runs_as_one_stacked_execution() {
+        let b = Arc::new(ExecBatcher::new(4, Duration::from_millis(500)));
+        let got = fan_in_stacked(&b, 4, |v| stack_to(4, v));
+        for (i, bits) in got.iter().enumerate() {
+            assert_eq!(bits, &expected(i), "lane {i} got someone else's output");
+        }
+        assert_eq!(b.batched_execs(), 1, "one engine dispatch");
+        assert_eq!(b.stacked_execs(), 1, "one stacked XLA execution");
+        assert_eq!(b.fused_branches(), 4);
+        assert_eq!(b.pad_waste(), 0, "an exact-fit stack pads nothing");
+    }
+
+    #[test]
+    fn padded_stacked_execution_counts_its_waste() {
+        // three callers padded into an 8-lane stack: the group still
+        // completes as one stacked execution, every member gets its own
+        // lane back, and the 5 dead lanes show up in the counter
+        let b = Arc::new(ExecBatcher::new(8, Duration::from_millis(40)));
+        let got = fan_in_stacked(&b, 3, |v| stack_to(8, v));
+        for (i, bits) in got.iter().enumerate() {
+            assert_eq!(bits, &expected(i));
+        }
+        assert_eq!(b.stacked_execs(), 1);
+        assert_eq!(b.pad_waste(), 5, "8-lane stack over a group of 3 wastes 5");
+    }
+
+    #[test]
+    fn declined_stack_falls_back_to_back_to_back() {
+        // a strategy with no fitting artifact (mixed batch sizes, v1
+        // manifest) declines with None: the group must still complete
+        // bit-identically through the per-member fallback
+        let b = Arc::new(ExecBatcher::new(4, Duration::from_millis(500)));
+        let got = fan_in_stacked(&b, 4, |_| Ok(None));
+        for (i, bits) in got.iter().enumerate() {
+            assert_eq!(bits, &expected(i));
+        }
+        assert_eq!(b.batched_execs(), 1, "still one fused dispatch");
+        assert_eq!(b.stacked_execs(), 0, "a declined stack is not counted");
+        assert_eq!(b.pad_waste(), 0);
+    }
+
+    #[test]
+    fn stacked_error_fails_the_whole_group() {
+        // every member's data rode the one stacked dispatch, so a
+        // stacked failure must surface to all of them — no member may
+        // silently retry on half-executed state
+        let b = Arc::new(ExecBatcher::new(2, Duration::from_millis(500)));
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(2));
+        let spawn = |i: usize| {
+            let b = b.clone();
+            let sem = sem.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                b.run_stacked(key(6), input(i as f32), &sem, double_plus_one, |_| {
+                    Err(Error::Runtime("stack blew up".into()))
+                })
+                .map(|_| ())
+            })
+        };
+        let (a, c) = (spawn(0), spawn(1));
+        for r in [a.join().unwrap(), c.join().unwrap()] {
+            let e = r.unwrap_err();
+            assert!(e.to_string().contains("stack blew up"), "{e}");
+        }
+        assert_eq!(b.stacked_execs(), 0, "a failed stack is not a stacked exec");
+    }
+
+    #[test]
+    fn stacked_arity_mismatch_is_rejected_not_misdelivered() {
+        // a strategy that loses a lane must error out loudly — zipping
+        // short would hand members someone else's outputs
+        let b = Arc::new(ExecBatcher::new(2, Duration::from_millis(500)));
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(2));
+        let spawn = |i: usize| {
+            let b = b.clone();
+            let sem = sem.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                b.run_stacked(key(7), input(i as f32), &sem, double_plus_one, |views| {
+                    let mut outs = Vec::new();
+                    for v in &views[..views.len() - 1] {
+                        outs.push(double_plus_one(v)?);
+                    }
+                    Ok(Some((outs, Duration::from_millis(1), views.len())))
+                })
+                .map(|_| ())
+            })
+        };
+        let (a, c) = (spawn(0), spawn(1));
+        for r in [a.join().unwrap(), c.join().unwrap()] {
+            let e = r.unwrap_err();
+            assert!(e.to_string().contains("member outputs"), "{e}");
+        }
+    }
+
+    #[test]
+    fn stacked_billing_is_an_equal_per_lane_share() {
+        // a 10 ms stacked execution of 2 lanes bills each member
+        // exactly 5 ms: the group's summed billed time never exceeds
+        // the one real stacked wall
+        let b = Arc::new(ExecBatcher::new(2, Duration::from_millis(500)));
+        let sem = Arc::new(Semaphore::new(1));
+        let barrier = Arc::new(Barrier::new(2));
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let b = b.clone();
+                let sem = sem.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let (_, _, timing) = b
+                        .run_stacked(key(12), input(i as f32), &sem, double_plus_one, |v| {
+                            stack_to(2, v).map(|r| {
+                                r.map(|(outs, _, k)| (outs, Duration::from_millis(10), k))
+                            })
+                        })
+                        .unwrap();
+                    timing
+                })
+            })
+            .collect();
+        for h in handles {
+            let timing = h.join().unwrap();
+            assert_eq!(timing.exec, Duration::from_millis(5));
+        }
+        assert_eq!(b.stacked_execs(), 1);
+    }
+
+    #[test]
+    fn effective_target_resizes_groups_and_clamps() {
+        let b = Arc::new(ExecBatcher::new(8, Duration::from_millis(500)));
+        assert_eq!(b.effective(), 8, "effective starts at the ceiling");
+        b.set_effective(2);
+        assert_eq!(b.effective(), 2);
+        // four callers at target 2 pair into exactly two stacked groups
+        let got = fan_in_stacked(&b, 4, |v| stack_to(2, v));
+        for (i, bits) in got.iter().enumerate() {
+            assert_eq!(bits, &expected(i));
+        }
+        assert_eq!(b.batched_execs(), 2);
+        assert_eq!(b.stacked_execs(), 2);
+        assert_eq!(b.pad_waste(), 0);
+        // retargets clamp into [1, max]
+        b.set_effective(0);
+        assert_eq!(b.effective(), 1);
+        b.set_effective(99);
+        assert_eq!(b.effective(), 8);
     }
 }

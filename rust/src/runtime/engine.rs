@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::batcher::{ExecBatcher, FuseKey, DEFAULT_EXEC_BATCH_WAIT};
+use super::batcher::{ExecBatcher, FuseKey, StackedRun, DEFAULT_EXEC_BATCH_WAIT};
 use crate::error::{Error, Result};
 use crate::util::sync::Semaphore;
 
@@ -108,9 +108,24 @@ impl Engine {
     }
 
     /// The fused-batch size this engine was built with (`1` = fusion
-    /// off).
+    /// off). This is the *ceiling*; see
+    /// [`Self::exec_batch_effective`] for the live target.
     pub fn exec_batch(&self) -> usize {
         self.batcher.max()
+    }
+
+    /// The live fused-group size target (`1..=exec_batch()`). Equal to
+    /// the ceiling unless an adaptive controller retargeted it.
+    pub fn exec_batch_effective(&self) -> usize {
+        self.batcher.effective()
+    }
+
+    /// Retarget the live fused-group size (clamped to
+    /// `1..=exec_batch()`). Driven by the `--exec-batch auto`
+    /// controller in `faas::scheduler`; groups already collecting
+    /// finish at their original size.
+    pub fn set_exec_batch_effective(&self, n: usize) {
+        self.batcher.set_effective(n);
     }
 
     /// The fused-group collect window this engine was built with
@@ -125,6 +140,14 @@ impl Engine {
     /// snapshot and diff.
     pub fn batch_stats(&self) -> (u64, u64) {
         (self.batcher.batched_execs(), self.batcher.fused_branches())
+    }
+
+    /// `(stacked_execs, pad_waste)`: fused groups that ran as ONE
+    /// stacked XLA execution, and pad lanes executed-and-discarded to
+    /// reach an available stacking factor. Monotonic like
+    /// [`Self::batch_stats`].
+    pub fn stacked_stats(&self) -> (u64, u64) {
+        (self.batcher.stacked_execs(), self.batcher.pad_waste())
     }
 
     pub fn platform(&self) -> String {
@@ -211,12 +234,37 @@ impl Engine {
         inputs: Vec<xla::Literal>,
         key: FuseKey,
     ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)> {
-        if self.batcher.max() <= 1 {
+        self.run_fused_stacked(exe, inputs, key, |_| Ok(None))
+    }
+
+    /// [`Self::run_fused`] with a stacked fast path: once the group
+    /// leader holds the slot it offers every member's inputs to
+    /// `stacked` (see [`ExecBatcher::run_stacked`]); if that reports a
+    /// completed stacked XLA execution the whole group finishes from
+    /// it, otherwise members execute back-to-back as before. With the
+    /// live batch target at 1 this is exactly [`Self::run`] — no
+    /// grouping, no stacking.
+    pub fn run_fused_stacked<S>(
+        &self,
+        exe: &Arc<Executable>,
+        inputs: Vec<xla::Literal>,
+        key: FuseKey,
+        stacked: S,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, ExecTiming)>
+    where
+        S: Fn(&[&[xla::Literal]]) -> Result<StackedRun>,
+    {
+        if self.batcher.effective() <= 1 {
             let (parts, timing) = self.run(exe, &inputs)?;
             return Ok((parts, inputs, timing));
         }
-        self.batcher
-            .run(key, inputs, &self.exec_sem, |ins| execute_literals(exe, ins))
+        self.batcher.run_stacked(
+            key,
+            inputs,
+            &self.exec_sem,
+            |ins| execute_literals(exe, ins),
+            stacked,
+        )
     }
 
     /// Total number of compiled executables resident.

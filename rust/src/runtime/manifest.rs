@@ -20,6 +20,10 @@ pub struct ModelEntry {
     pub nclass: usize,
     /// batch size -> grad artifact file.
     pub grad: BTreeMap<usize, String>,
+    /// batch size -> stacking factor k -> stacked grad artifact taking k
+    /// micro-batches and returning per-branch (losses\[k\], grads\[k, P\])
+    /// with no cross-lane reduction (manifest schema v2; empty for v1).
+    pub grad_stacked: BTreeMap<usize, BTreeMap<usize, String>>,
     /// batch size -> no-pallas ablation grad artifact.
     pub grad_nopallas: BTreeMap<usize, String>,
     /// batch size -> eval artifact file.
@@ -38,10 +42,15 @@ pub struct QsgdEntry {
     pub decode: String,
 }
 
+/// Newest manifest schema this runtime understands.
+pub const MANIFEST_VERSION: u64 = 2;
+
 /// Parsed manifest plus its directory (file names resolve against it).
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Schema version the artifacts were written with (1 if absent).
+    pub version: u64,
     pub models: BTreeMap<String, ModelEntry>,
     pub qsgd: QsgdEntry,
 }
@@ -62,6 +71,20 @@ fn batch_map(json: &Json) -> Result<BTreeMap<usize, String>> {
     Ok(out)
 }
 
+/// Parse `{"<batch>": {"<k>": "file", ...}, ...}` (schema v2 grad_stacked).
+fn stacked_map(json: &Json) -> Result<BTreeMap<usize, BTreeMap<usize, String>>> {
+    let mut out = BTreeMap::new();
+    if let Some(obj) = json.as_obj() {
+        for (k, v) in obj {
+            let b: usize = k
+                .parse()
+                .map_err(|_| Error::Json(format!("bad batch key {k:?}")))?;
+            out.insert(b, batch_map(v)?);
+        }
+    }
+    Ok(out)
+}
+
 impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -74,6 +97,14 @@ impl Manifest {
             )));
         }
         let json = Json::parse_file(&path)?;
+        let version = json.get("version").and_then(Json::as_u64).unwrap_or(1);
+        if version > MANIFEST_VERSION {
+            return Err(Error::Runtime(format!(
+                "manifest schema v{version} is newer than this runtime \
+                 supports (v{MANIFEST_VERSION}) — rebuild artifacts or \
+                 update the runtime"
+            )));
+        }
         let mut models = BTreeMap::new();
         for (key, m) in json
             .req("models")?
@@ -105,6 +136,11 @@ impl Manifest {
                     ),
                     nclass: m.req("nclass")?.as_usize().unwrap_or(10),
                     grad: batch_map(arts.req("grad")?)?,
+                    grad_stacked: arts
+                        .get("grad_stacked")
+                        .map(stacked_map)
+                        .transpose()?
+                        .unwrap_or_default(),
                     grad_nopallas: arts
                         .get("grad_nopallas")
                         .map(batch_map)
@@ -131,7 +167,7 @@ impl Manifest {
             encode: q.req("encode")?.as_str().unwrap_or_default().to_string(),
             decode: q.req("decode")?.as_str().unwrap_or_default().to_string(),
         };
-        Ok(Self { dir, models, qsgd })
+        Ok(Self { dir, version, models, qsgd })
     }
 
     pub fn model(&self, key: &str) -> Result<&ModelEntry> {
@@ -168,6 +204,33 @@ impl ModelEntry {
     pub fn grad_batches(&self) -> Vec<usize> {
         self.grad.keys().copied().collect()
     }
+
+    /// Stacked grad artifact for a batch size and stacking factor k.
+    pub fn grad_stacked_for(&self, batch: usize, k: usize) -> Result<&str> {
+        self.grad_stacked
+            .get(&batch)
+            .and_then(|m| m.get(&k))
+            .map(String::as_str)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "{}: no stacked grad artifact for batch {} x{} (have {:?})",
+                    self.key,
+                    batch,
+                    k,
+                    self.stacked_ks(batch)
+                ))
+            })
+    }
+
+    /// Available stacking factors for a batch size, ascending — empty on
+    /// v1 manifests (no stacked artifacts), which disables the stacked
+    /// fast path without erroring.
+    pub fn stacked_ks(&self, batch: usize) -> Vec<usize> {
+        self.grad_stacked
+            .get(&batch)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -175,8 +238,9 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "version": 1,
+      "version": 2,
       "grad_batches": [16, 64],
+      "stack_factors": [4, 8],
       "eval_batches": [64, 256],
       "models": {
         "mini_vgg_mnist": {
@@ -184,6 +248,7 @@ mod tests {
           "param_count": 98442, "input": [28, 28, 1], "nclass": 10,
           "artifacts": {
             "grad": {"16": "g16.hlo.txt", "64": "g64.hlo.txt"},
+            "grad_stacked": {"16": {"4": "g16x4.hlo.txt", "8": "g16x8.hlo.txt"}},
             "grad_nopallas": {"64": "g64np.hlo.txt"},
             "eval": {"64": "e64.hlo.txt"},
             "update": "u.hlo.txt"
@@ -213,6 +278,51 @@ mod tests {
         assert!(e.grad_for(128).is_err());
         assert_eq!(m.qsgd.s, 16);
         assert!(m.resolve("g64.hlo.txt").ends_with("g64.hlo.txt"));
+    }
+
+    #[test]
+    fn stacked_schema_roundtrips() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_test_stacked");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.version, 2);
+        let e = m.model("mini_vgg_mnist").unwrap();
+        assert_eq!(e.stacked_ks(16), vec![4, 8]);
+        assert_eq!(e.grad_stacked_for(16, 4).unwrap(), "g16x4.hlo.txt");
+        assert_eq!(e.grad_stacked_for(16, 8).unwrap(), "g16x8.hlo.txt");
+        // batch 64 has no stacked artifacts: discovery is empty, lookup
+        // errors with the available factors named
+        assert!(e.stacked_ks(64).is_empty());
+        assert!(e.grad_stacked_for(64, 4).is_err());
+        assert!(e.grad_stacked_for(16, 2).is_err());
+    }
+
+    #[test]
+    fn v1_manifest_without_stacked_artifacts_still_loads() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_test_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let v1 = SAMPLE
+            .replace("\"version\": 2", "\"version\": 1")
+            .replace(
+                "\"grad_stacked\": {\"16\": {\"4\": \"g16x4.hlo.txt\", \"8\": \"g16x8.hlo.txt\"}},",
+                "",
+            );
+        std::fs::write(dir.join("manifest.json"), v1).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.version, 1);
+        let e = m.model("mini_vgg_mnist").unwrap();
+        assert!(e.stacked_ks(16).is_empty());
+    }
+
+    #[test]
+    fn future_schema_is_rejected_actionably() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_test_future");
+        std::fs::create_dir_all(&dir).unwrap();
+        let future = SAMPLE.replace("\"version\": 2", "\"version\": 3");
+        std::fs::write(dir.join("manifest.json"), future).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("schema v3"), "{err}");
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //!
 //! - [`ModelRuntime::grad`] — (params, x, y) -> (loss, flat gradient):
 //!   the per-batch hot spot (contains the L2 model and the L1 Pallas
-//!   matmul kernels, lowered into one HLO module);
+//!   matmul kernels, lowered into one HLO module). Fused groups of
+//!   concurrent same-version callers additionally take the stacked
+//!   fast path — ONE `grad_stacked_{B}x{k}` execution with per-branch
+//!   outputs — when the manifest (schema v2) carries such artifacts;
 //! - [`ModelRuntime::update`] — SGD apply;
 //! - [`ModelRuntime::eval`] — (loss, correct count) on a validation set;
 //! - [`QsgdKernel`] — the Pallas quantizer pair, used to cross-validate
@@ -19,9 +22,9 @@ mod batcher;
 mod engine;
 mod manifest;
 
-pub use batcher::{ExecBatcher, FuseKey, DEFAULT_EXEC_BATCH_WAIT};
+pub use batcher::{ExecBatcher, FuseKey, StackedRun, DEFAULT_EXEC_BATCH_WAIT};
 pub use engine::{literal_f32, literal_i32, scalar_f32, Engine, ExecTiming, Executable};
-pub use manifest::{Manifest, ModelEntry, QsgdEntry};
+pub use manifest::{Manifest, ModelEntry, QsgdEntry, MANIFEST_VERSION};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -182,11 +185,19 @@ impl ModelRuntime {
         let PackedBatch { x: lx, y: ly, .. } = packed;
         let inputs = vec![lp, lx, ly];
         let (parts, mut inputs, timing) = match fuse_version {
-            Some(version) => self.engine.run_fused(
-                &exe,
-                inputs,
-                FuseKey::for_exe(&exe, batch, params.len(), version),
-            )?,
+            Some(version) => {
+                let key = FuseKey::for_exe(&exe, batch, params.len(), version);
+                // stacked artifacts cover only the pallas grad path; the
+                // closure falls back to back-to-back turns for group
+                // sizes no stacked factor covers
+                if pallas && !self.entry.stacked_ks(batch).is_empty() {
+                    self.engine.run_fused_stacked(&exe, inputs, key, |views| {
+                        self.grad_stacked(batch, views)
+                    })?
+                } else {
+                    self.engine.run_fused(&exe, inputs, key)?
+                }
+            }
             None => {
                 let (parts, timing) = self.engine.run(&exe, &inputs)?;
                 (parts, inputs, timing)
@@ -214,6 +225,80 @@ impl ModelRuntime {
             .pop()
             .ok_or_else(|| Error::Runtime("fused run returned no input literals".into()))?;
         Ok((out, PackedBatch { batch, x: lx, y: ly }))
+    }
+
+    /// Execute a whole fused group as ONE stacked XLA execution.
+    ///
+    /// Invoked by the group leader (via [`Engine::run_fused_stacked`])
+    /// with every member's input slice — `[params, x, y]` each, leader
+    /// first. Packs the members' micro-batches into one `(k, B, H, W,
+    /// C)` literal against the smallest available stacking factor `k >=
+    /// group size` (pad lanes replicate the last real member and are
+    /// discarded), runs the `grad_stacked_{B}x{k}` artifact once, and
+    /// splits its per-branch `(losses[k], grads[k, P])` outputs back
+    /// into per-member `(loss, grads)` literal pairs.
+    ///
+    /// Returns `Ok(None)` — back-to-back fallback — for singleton
+    /// groups (stacking would only add pad waste) and for groups larger
+    /// than every available factor.
+    fn grad_stacked(&self, batch: usize, views: &[&[xla::Literal]]) -> Result<StackedRun> {
+        let g = views.len();
+        if g < 2 {
+            return Ok(None);
+        }
+        let Some(k) = self.entry.stacked_ks(batch).into_iter().find(|&k| k >= g) else {
+            return Ok(None);
+        };
+        let file = self.entry.grad_stacked_for(batch, k)?.to_string();
+        let exe = self.engine.load(self.manifest.resolve(&file))?;
+        let (h, w, c) = self.entry.input;
+        let p = self.entry.param_count;
+        // the FuseKey pins the params version, so every member's params
+        // literal is identical: reuse the leader's
+        let params = views[0][0].to_vec::<f32>()?;
+        let elems = batch * h * w * c;
+        let mut xs = Vec::with_capacity(k * elems);
+        let mut ys = Vec::with_capacity(k * batch);
+        for lane in 0..k {
+            let v = views[lane.min(g - 1)];
+            xs.extend_from_slice(&v[1].to_vec::<f32>()?);
+            ys.extend_from_slice(&v[2].to_vec::<i32>()?);
+        }
+        let lp = literal_f32(&params, &[p as i64])?;
+        let lx = literal_f32(
+            &xs,
+            &[k as i64, batch as i64, h as i64, w as i64, c as i64],
+        )?;
+        let ly = literal_i32(&ys, &[k as i64, batch as i64])?;
+        // the leader already holds the group's execution slot: dispatch
+        // raw, timing only the stacked execution itself
+        let t0 = std::time::Instant::now();
+        let parts = engine::execute_literals(&exe, &[lp, lx, ly])?;
+        let wall = t0.elapsed();
+        if parts.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "stacked grad artifact returned {} outputs, expected 2",
+                parts.len()
+            )));
+        }
+        let losses = parts[0].to_vec::<f32>()?;
+        let grads = parts[1].to_vec::<f32>()?;
+        if losses.len() != k || grads.len() != k * p {
+            return Err(Error::Runtime(format!(
+                "stacked grad artifact shape mismatch: {} losses / {} grad \
+                 elems for k={k}, params={p}",
+                losses.len(),
+                grads.len()
+            )));
+        }
+        let mut per_member = Vec::with_capacity(g);
+        for i in 0..g {
+            per_member.push(vec![
+                literal_f32(&losses[i..i + 1], &[1])?,
+                literal_f32(&grads[i * p..(i + 1) * p], &[p as i64])?,
+            ]);
+        }
+        Ok(Some((per_member, wall, k)))
     }
 
     /// SGD apply: params' = params - lr * grads.

@@ -12,7 +12,13 @@
 //!   are invariant across `--exec-batch` × `--exec-threads`, an
 //!   8-branch single-peer run at `--exec-batch 8` performs exactly one
 //!   fused engine dispatch per epoch, and fusion composes with
-//!   cross-epoch dispatch (generations never fuse, stores stay clean).
+//!   cross-epoch dispatch (generations never fuse, stores stay clean);
+//! - stacked execution (PR 7): the same fold bit-identity holds when
+//!   groups complete as ONE stacked execution at stacking factors
+//!   1/4/8 × threads 1/2/8, groups too big for any stacked artifact
+//!   fall back without corruption, and — with v2 artifacts — a full
+//!   fused group in the real cluster runs as exactly one stacked XLA
+//!   execution (`engine.stacked_execs == engine.batched_execs`).
 
 mod common;
 
@@ -23,7 +29,7 @@ use std::time::Duration;
 use p2pless::config::{Backend, OffloadMode, TrainConfig};
 use p2pless::coordinator::Cluster;
 use p2pless::faas::Semaphore;
-use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey};
+use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey, Manifest};
 
 const ITEMS: usize = 16;
 const DIM: usize = 8;
@@ -93,6 +99,76 @@ fn run_pool(
     Arc::try_unwrap(results).unwrap().into_inner().unwrap()
 }
 
+/// Like [`run_pool`], but through [`ExecBatcher::run_stacked`]: a
+/// synthetic stacked strategy mirrors the runtime's — it declines
+/// singleton groups and groups bigger than the available factor
+/// `stack_k`, and otherwise computes every lane in one call padded to
+/// `stack_k`. Returns per-item bits plus the batcher's stacked
+/// counters.
+fn run_pool_stacked(
+    exec_batch: usize,
+    threads: usize,
+    stack_k: usize,
+) -> (Vec<Vec<u32>>, u64, u64) {
+    let batcher = Arc::new(ExecBatcher::new(exec_batch, Duration::from_millis(2)));
+    let sem = Arc::new(Semaphore::new(2));
+    let queue = Arc::new(Mutex::new((0..ITEMS).collect::<VecDeque<usize>>()));
+    let results: Arc<Mutex<Vec<Vec<u32>>>> = Arc::new(Mutex::new(vec![Vec::new(); ITEMS]));
+    let workers: Vec<_> = (0..threads)
+        .map(|_| {
+            let batcher = batcher.clone();
+            let sem = sem.clone();
+            let queue = queue.clone();
+            let results = results.clone();
+            std::thread::spawn(move || loop {
+                let Some(i) = queue.lock().unwrap().pop_front() else {
+                    return;
+                };
+                let data = item_input(42, i);
+                let inputs = vec![literal_f32(&data, &[DIM as i64]).unwrap()];
+                let (outs, _ins, _timing) = batcher
+                    .run_stacked(
+                        key(42),
+                        inputs,
+                        &sem,
+                        |ins| {
+                            let v = ins[0].to_vec::<f32>()?;
+                            let out = transform(&v);
+                            Ok(vec![literal_f32(&out, &[out.len() as i64])?])
+                        },
+                        |views| {
+                            let g = views.len();
+                            if g < 2 || g > stack_k {
+                                return Ok(None);
+                            }
+                            let mut outs = Vec::with_capacity(g);
+                            for v in views {
+                                let x = v[0].to_vec::<f32>()?;
+                                let out = transform(&x);
+                                outs.push(vec![literal_f32(&out, &[out.len() as i64])?]);
+                            }
+                            Ok(Some((outs, Duration::from_micros(50), stack_k)))
+                        },
+                    )
+                    .unwrap();
+                let bits: Vec<u32> = outs[0]
+                    .to_vec::<f32>()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                results.lock().unwrap()[i] = bits;
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(batcher.fused_branches(), ITEMS as u64, "every item must execute");
+    let (stacked, pad) = (batcher.stacked_execs(), batcher.pad_waste());
+    (Arc::try_unwrap(results).unwrap().into_inner().unwrap(), stacked, pad)
+}
+
 /// Fold per-item outputs in item order into one f64 running sum per
 /// coordinate — the shape of the epoch gradient fold — and return the
 /// bit pattern.
@@ -148,6 +224,48 @@ fn mixed_params_versions_stay_isolated() {
             .collect();
         assert_eq!(bits, &want, "item {i} was cross-contaminated");
     }
+}
+
+/// Stacked execution preserves the fold exactly: outputs and
+/// branch-order folds at stacking factors 1/4/8 × threads 1/2/8 are
+/// bit-identical to the sequential single-thread reference — whether a
+/// group completed as one stacked execution, was padded, or fell back.
+#[test]
+fn stacked_folds_bit_identical_across_stack_and_threads() {
+    let reference = run_pool(1, 1, |_| 42);
+    let reference_fold = fold_bits(&reference);
+    for stack_k in [1usize, 4, 8] {
+        for threads in [1usize, 2, 8] {
+            let (got, _stacked, _pad) = run_pool_stacked(stack_k, threads, stack_k);
+            for (i, (g, w)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g, w,
+                    "item {i} output bits diverged at stack {stack_k}, \
+                     threads {threads}"
+                );
+            }
+            assert_eq!(
+                fold_bits(&got),
+                reference_fold,
+                "fold bits diverged at stack {stack_k}, threads {threads}"
+            );
+        }
+    }
+}
+
+/// Groups bigger than any available stacking factor decline the stack
+/// and fall back to back-to-back turns — bits still never move. (At
+/// `--exec-batch 8` with artifacts topping out at k=4, whether any
+/// given group stacked depends on arrival timing; correctness must
+/// not.)
+#[test]
+fn oversized_groups_fall_back_without_corruption() {
+    let reference = run_pool(1, 1, |_| 42);
+    let (got, _stacked, _pad) = run_pool_stacked(8, 8, 4);
+    for (i, (g, w)) in got.iter().zip(&reference).enumerate() {
+        assert_eq!(g, w, "item {i} corrupted on the fallback path");
+    }
+    assert_eq!(fold_bits(&got), fold_bits(&reference));
 }
 
 // -------------------------------------------------------------- cluster
@@ -260,6 +378,103 @@ fn eight_branches_fuse_into_one_dispatch_per_epoch() {
         assert!((a1 - a2).abs() < 1e-6);
     }
     assert_eq!(fused.store_objects, 0);
+}
+
+/// The PR-7 headline acceptance: with stacked artifacts (manifest v2),
+/// every full fused group executes as exactly ONE stacked XLA
+/// execution — `engine.stacked_execs` equals the fused dispatch count,
+/// nothing is padded at an exact fit, and the validation curve still
+/// matches the unbatched reference.
+#[test]
+fn full_groups_run_as_one_stacked_xla_execution() {
+    require_artifacts!();
+    let man = Manifest::load(common::artifacts_dir()).unwrap();
+    let ks = match man.models.get("mini_squeezenet_mnist") {
+        Some(entry) => entry.stacked_ks(16),
+        None => Vec::new(),
+    };
+    // pick the largest stacking factor the artifacts offer for batch 16
+    let Some(k) = [8usize, 4].into_iter().find(|k| ks.contains(k)) else {
+        eprintln!(
+            "SKIP full_groups_run_as_one_stacked_xla_execution: artifacts \
+             have no stacked grad executables (manifest v1 — re-run aot.py)"
+        );
+        return;
+    };
+    let epochs = 2usize;
+    let cfg = |exec_batch: usize| TrainConfig {
+        peers: 1,
+        epochs,
+        train_samples: 8 * 16, // 8 branches per epoch
+        exec_threads: 8,
+        exec_batch,
+        exec_batch_wait_us: 5_000_000,
+        ..serverless_cfg()
+    };
+    let stacked = Cluster::with_engine(cfg(k), engine_with_batch(k, 5_000_000))
+        .unwrap()
+        .run()
+        .unwrap();
+    let groups = (epochs * 8 / k) as u64;
+    assert_eq!(
+        stacked.counter("engine.batched_execs"),
+        Some(groups),
+        "8 branches per epoch at --exec-batch {k} must pack into {groups} dispatches"
+    );
+    assert_eq!(
+        stacked.counter("engine.stacked_execs"),
+        Some(groups),
+        "every full fused group must run as ONE stacked XLA execution"
+    );
+    assert_eq!(
+        stacked.counter("engine.pad_waste"),
+        Some(0),
+        "exact-fit groups must not pad"
+    );
+
+    let unbatched = Cluster::with_engine(cfg(1), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(unbatched.counter("engine.stacked_execs"), Some(0));
+    assert_eq!(stacked.lambda_invocations, unbatched.lambda_invocations);
+    assert_eq!(stacked.val_curve.len(), unbatched.val_curve.len());
+    for ((_, l1, a1), (_, l2, a2)) in stacked.val_curve.iter().zip(&unbatched.val_curve) {
+        assert!((l1 - l2).abs() < 1e-6, "stacked {l1} vs unbatched {l2}");
+        assert!((a1 - a2).abs() < 1e-6);
+    }
+    assert_eq!(stacked.store_objects, 0);
+}
+
+/// `--exec-batch auto` never moves the math: the controller resizes
+/// groups from live queue depth, but the validation curve matches the
+/// unbatched single-thread reference and the store stays clean.
+#[test]
+fn auto_exec_batch_matches_unbatched_reference() {
+    require_artifacts!();
+    let reference = Cluster::with_engine(serverless_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let auto = Cluster::with_engine(
+        TrainConfig {
+            exec_batch: 8,
+            exec_batch_auto: true,
+            exec_threads: 4,
+            ..serverless_cfg()
+        },
+        engine_with_batch(8, 500),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(auto.lambda_invocations, reference.lambda_invocations);
+    assert_eq!(auto.val_curve.len(), reference.val_curve.len());
+    for ((_, l1, a1), (_, l2, a2)) in reference.val_curve.iter().zip(&auto.val_curve) {
+        assert!((l1 - l2).abs() < 1e-6, "reference {l1} vs auto {l2}");
+        assert!((a1 - a2).abs() < 1e-6);
+    }
+    assert_eq!(auto.store_objects, 0);
 }
 
 /// Fusion composes with cross-epoch dispatch: overlapping generations
