@@ -3,10 +3,12 @@
 //! worker-pool fan-out at several thread counts, the pipelined-vs-staged
 //! epoch dispatch, and a real two-peer PJRT run per backend and mode.
 
+use p2pless::broker::Broker;
 use p2pless::compress::WirePlane;
-use p2pless::config::{Backend, OffloadMode, TrainConfig};
-use p2pless::coordinator::{Cluster, ServerlessOffload};
+use p2pless::config::{Backend, FailurePolicy, OffloadMode, TrainConfig};
+use p2pless::coordinator::{Cluster, EpochBarrier, Membership, ServerlessOffload};
 use p2pless::data::{Batcher, DatasetKind, SyntheticDataset};
+use p2pless::error::Error;
 use p2pless::faas::{
     BranchScheduler, Executor, FaasPlatform, FunctionSpec, Handler, PipelinedMap,
     RetryPolicy, StateMachine,
@@ -14,11 +16,12 @@ use p2pless::faas::{
 use p2pless::faas::Semaphore;
 use p2pless::harness::bench::{header, Bench};
 use p2pless::harness::cloud_exps::fig3_cell;
+use p2pless::harness::faults::FaultPlanSpec;
 use p2pless::perfmodel::PaperModel;
 use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey, ModelRuntime};
 use p2pless::store::{DecodedCache, ObjectStore};
 use p2pless::util::{Bytes, Json};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -28,9 +31,14 @@ fn main() {
     );
     // CI sets BENCH_FUSED_ONLY to skip the sleep-driven synthetic
     // sections and go straight to the fused-exec comparison + JSON;
-    // BENCH_STACKED_ONLY runs only the stacked three-way below
+    // BENCH_STACKED_ONLY runs only the stacked three-way below;
+    // BENCH_FAULTS_ONLY runs only the fault-tolerance sweep
     let fused_only = std::env::var_os("BENCH_FUSED_ONLY").is_some();
     let stacked_only = std::env::var_os("BENCH_STACKED_ONLY").is_some();
+    if std::env::var_os("BENCH_FAULTS_ONLY").is_some() {
+        bench_faults();
+        return;
+    }
 
     // true stacked execution, synthetic three-way: the real ExecBatcher
     // under a serialized slot with a fixed per-XLA-dispatch overhead —
@@ -616,4 +624,220 @@ fn main() {
         j
     };
     write_fused_json(&fused_synth, Some(real_fused));
+}
+
+/// The fault-tolerance sweep (`BENCH_FAULTS_ONLY=1`): seeded kill rate
+/// × failure policy × cluster size, driven through the real
+/// [`Membership`] table and [`EpochBarrier`], plus a k-of-n fold-quorum
+/// sweep and a flaky-handler retry run through the real
+/// [`PipelinedMap`]. Every value in the committed JSON is a
+/// deterministic integer (schedules are seeded, the bookkeeping is
+/// exact), so `BENCH_fault_tolerance.json` is byte-stable across runs
+/// and machines — walls go to stdout only.
+fn bench_faults() {
+    const EPOCHS: usize = 6;
+    const SEED: u64 = 11;
+
+    // ---- membership sweep: rate × policy × peers ----------------------
+    let policies = [FailurePolicy::Abort, FailurePolicy::Drop, FailurePolicy::Takeover];
+    let mut cells: Vec<Json> = Vec::new();
+    for &peers in &[4usize, 8] {
+        for &rate_pct in &[0usize, 25, 50] {
+            let plan = if rate_pct == 0 {
+                None
+            } else {
+                let spec = format!("rate:kill=0.{rate_pct},seed={SEED}");
+                Some(FaultPlanSpec::parse(&spec).unwrap().resolve(peers, EPOCHS).unwrap())
+            };
+            // the seeded schedule as (rank, kill epoch), epoch-ordered
+            let mut kills: Vec<(usize, u64)> = (0..peers)
+                .filter_map(|r| plan.as_ref().and_then(|p| p.kill_epoch(r)).map(|e| (r, e)))
+                .collect();
+            kills.sort_by_key(|&(r, e)| (e, r));
+            for &policy in &policies {
+                let mut cell = Json::obj();
+                cell.set("peers", peers)
+                    .set("rate_pct", rate_pct)
+                    .set("policy", policy.name())
+                    .set("kills_scheduled", kills.len());
+                if policy == FailurePolicy::Abort {
+                    // fail-fast: the run dies with the first casualty
+                    let completed =
+                        kills.first().map(|&(_, e)| e as usize - 1).unwrap_or(EPOCHS);
+                    cell.set("completed_epochs", completed)
+                        .set("deaths", 0usize)
+                        .set("takeover_epochs", 0usize)
+                        .set("dropped_grads", 0usize)
+                        .set("barrier_proxies", 0usize)
+                        .set("final_leader", 0usize);
+                    cells.push(cell);
+                    continue;
+                }
+                // replay the schedule against the real membership plane:
+                // kills fire at epoch start, every survivor walks the
+                // dead slots exactly like the peer consume loop, and the
+                // cumulative barrier must fill via proxies every epoch
+                let broker = Arc::new(Broker::default());
+                let m = Membership::new(
+                    broker.clone(),
+                    peers,
+                    policy,
+                    Duration::from_millis(1),
+                    Duration::from_secs(3600),
+                    true,
+                )
+                .unwrap();
+                let barrier = EpochBarrier::new(&broker, peers).unwrap();
+                for epoch in 1..=EPOCHS as u64 {
+                    for &(r, at) in &kills {
+                        if at == epoch {
+                            m.declare_dead(r, "scheduled kill");
+                        }
+                    }
+                    let alive: Vec<usize> = (0..peers).filter(|&r| m.is_alive(r)).collect();
+                    for &me in &alive {
+                        for dead in 0..peers {
+                            if m.is_alive(dead) {
+                                continue;
+                            }
+                            if m.claim_takeover(me, dead, epoch) {
+                                m.note_takeover_published(dead, epoch);
+                            } else if policy == FailurePolicy::Drop {
+                                m.note_dropped_grad();
+                            }
+                        }
+                    }
+                    for &me in &alive {
+                        barrier.arrive(me, epoch).unwrap();
+                        m.note_barrier_arrival(me, epoch);
+                    }
+                    m.fill_barrier(&barrier, epoch).unwrap();
+                    assert!(
+                        barrier.wait_timeout(epoch, Duration::from_secs(5)).unwrap(),
+                        "barrier {epoch} must fill via proxies"
+                    );
+                }
+                cell.set("completed_epochs", EPOCHS)
+                    .set("deaths", m.deaths())
+                    .set("takeover_epochs", m.takeover_epochs())
+                    .set("dropped_grads", m.dropped_grads())
+                    .set("barrier_proxies", m.barrier_proxies())
+                    .set("final_leader", m.leader());
+                println!(
+                    "faults(p{peers} rate {rate_pct}% {}): {} deaths, {} takeover \
+                     epochs, {} dropped, {} proxies, leader {}",
+                    policy.name(),
+                    m.deaths(),
+                    m.takeover_epochs(),
+                    m.dropped_grads(),
+                    m.barrier_proxies(),
+                    m.leader(),
+                );
+                cells.push(cell);
+            }
+        }
+    }
+
+    // ---- k-of-n fold quorum through the real pipelined Map ------------
+    const BRANCHES: usize = 12;
+    const CONCURRENCY: usize = 4;
+    let echo: Handler = Arc::new(|b: &Bytes| Ok(b.clone()));
+    let mut quorum_cells: Vec<Json> = Vec::new();
+    for &quorum in &[0usize, BRANCHES / 2, BRANCHES - 1] {
+        let platform = Arc::new(FaasPlatform::new(Duration::from_millis(1500)));
+        platform.register(FunctionSpec::new("grad", 1024, echo.clone())).unwrap();
+        let sched = BranchScheduler::new(Arc::new(Executor::new(4)), true);
+        let mut pipe = PipelinedMap::new(
+            sched,
+            platform,
+            0,
+            "grad",
+            BRANCHES,
+            CONCURRENCY,
+            RetryPolicy::default(),
+        )
+        .unwrap()
+        .with_quorum(quorum);
+        for i in 0..BRANCHES {
+            pipe.submit(Bytes::from(vec![i as u8]), Some(Duration::from_millis(100)));
+        }
+        let mut folded = 0usize;
+        while pipe.next_output().is_some() {
+            folded += 1;
+        }
+        let r = pipe.finish().unwrap();
+        println!(
+            "quorum {quorum} of {BRANCHES}: folded {folded}, stragglers {}, \
+             modeled wall {:?}",
+            r.stragglers, r.wall,
+        );
+        let mut cell = Json::obj();
+        cell.set("quorum", quorum)
+            .set("folded", folded)
+            .set("stragglers", r.stragglers)
+            .set("invocations", r.invocations)
+            .set("cold_starts", r.cold_starts);
+        quorum_cells.push(cell);
+    }
+
+    // ---- configured retry policy against a deterministic flaky fleet --
+    // branches at index % 3 == 0 fail their first attempt; with
+    // `--lambda-retries 3` every branch lands and the retry counter is
+    // exactly the flaky population
+    let attempts: Arc<Mutex<std::collections::HashMap<u8, u32>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let seen = attempts.clone();
+    let flaky: Handler = Arc::new(move |b: &Bytes| {
+        let idx = b[0];
+        let mut map = seen.lock().unwrap();
+        let n = map.entry(idx).or_insert(0);
+        *n += 1;
+        if idx % 3 == 0 && *n == 1 {
+            return Err(Error::Faas(format!("branch {idx}: injected first-attempt failure")));
+        }
+        Ok(b.clone())
+    });
+    const RETRY_BRANCHES: usize = 8;
+    let platform = Arc::new(FaasPlatform::new(Duration::from_millis(1500)));
+    platform.register(FunctionSpec::new("grad", 1024, flaky)).unwrap();
+    let sched = BranchScheduler::new(Arc::new(Executor::new(4)), true);
+    let mut pipe = PipelinedMap::new(
+        sched,
+        platform,
+        0,
+        "grad",
+        RETRY_BRANCHES,
+        CONCURRENCY,
+        RetryPolicy::configured(3, 0, SEED),
+    )
+    .unwrap();
+    for i in 0..RETRY_BRANCHES {
+        pipe.submit(Bytes::from(vec![i as u8]), Some(Duration::from_millis(100)));
+    }
+    while pipe.next_output().is_some() {}
+    let r = pipe.finish().unwrap();
+    let flaky_count = (0..RETRY_BRANCHES).filter(|i| i % 3 == 0).count();
+    assert_eq!(r.retries, flaky_count, "one extra attempt per flaky branch");
+    println!(
+        "retries: {} branches ({flaky_count} flaky), {} extra attempts, all landed",
+        RETRY_BRANCHES, r.retries,
+    );
+    let mut retry_cell = Json::obj();
+    retry_cell
+        .set("branches", RETRY_BRANCHES)
+        .set("flaky", flaky_count)
+        .set("retries", r.retries)
+        .set("invocations", r.invocations)
+        .set("max_attempts", 3usize);
+
+    let mut j = Json::obj();
+    j.set("bench", "fault_tolerance")
+        .set("epochs", EPOCHS)
+        .set("seed", SEED)
+        .set("cells", cells)
+        .set("quorum_cells", quorum_cells)
+        .set("retry", retry_cell);
+    if let Err(e) = std::fs::write("BENCH_fault_tolerance.json", j.to_string()) {
+        eprintln!("could not write BENCH_fault_tolerance.json: {e}");
+    }
 }

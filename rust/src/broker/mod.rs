@@ -164,6 +164,12 @@ impl Broker {
     pub fn sync_queue() -> String {
         "sync.barrier".to_string()
     }
+
+    /// Conventional queue name for peer `r`'s liveness heartbeats
+    /// (LatestOnly: only the freshest beat matters).
+    pub fn heartbeat_queue(r: usize) -> String {
+        format!("peer.{r}.heartbeat")
+    }
 }
 
 #[cfg(test)]

@@ -270,6 +270,43 @@ impl Queue {
         }
     }
 
+    /// `await_epoch` with a timeout; `Ok(None)` on expiry, an
+    /// [`Error::Aborted`] if the run aborts first. The membership
+    /// plane's waiting loops use this so a consumer parked on a dead
+    /// peer's queue can periodically reap stale heartbeats instead of
+    /// waiting forever for a message that will never come.
+    pub fn await_epoch_timeout(
+        &self,
+        min_epoch: u64,
+        timeout: Duration,
+    ) -> Result<Option<Message>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if self.abort.is_aborted() {
+                return Err(self.abort.error());
+            }
+            let hit = match self.mode {
+                QueueMode::LatestOnly => inner.latest.as_ref(),
+                QueueMode::Fifo => inner.fifo.back(),
+            }
+            .filter(|m| m.epoch >= min_epoch)
+            .cloned();
+            if let Some(m) = hit {
+                self.stats_consumes.fetch_add(1, Ordering::Relaxed);
+                drop(inner);
+                self.delay();
+                return Ok(Some(m));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _res) = self.cond.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
     /// Block until the accepted-publish counter reaches `count`
     /// (barrier predicate). Errors with [`Error::Aborted`] on abort.
     pub fn await_version(&self, count: u64) -> Result<()> {
@@ -430,6 +467,36 @@ mod tests {
         }
         waiter.join().unwrap().unwrap();
         assert_eq!(q.version(), 3);
+    }
+
+    #[test]
+    fn await_epoch_timeout_expires_then_delivers() {
+        let q = q(QueueMode::LatestOnly);
+        // nothing published: expiry, not a hang
+        assert!(q
+            .await_epoch_timeout(1, Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        // a stale epoch does not satisfy the wait
+        q.publish(msg(0, 1, b"old")).unwrap();
+        assert!(q
+            .await_epoch_timeout(2, Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        q.publish(msg(0, 2, b"fresh")).unwrap();
+        let m = q
+            .await_epoch_timeout(2, Duration::from_millis(20))
+            .unwrap()
+            .unwrap();
+        assert_eq!(&m.payload[..], b"fresh");
+    }
+
+    #[test]
+    fn abort_unblocks_await_epoch_timeout() {
+        let abort = Arc::new(AbortState::default());
+        let q = q_with_abort(QueueMode::LatestOnly, abort.clone());
+        abort.trigger("boom");
+        assert!(q.await_epoch_timeout(1, Duration::from_millis(10)).is_err());
     }
 
     #[test]

@@ -78,6 +78,42 @@ impl OffloadMode {
     }
 }
 
+/// What the cluster does when a peer is declared dead mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FailurePolicy {
+    /// Fail fast: the first peer failure aborts the whole run — the
+    /// pre-membership behavior, and still the default.
+    #[default]
+    Abort,
+    /// A surviving peer re-dispatches the dead peer's batch partition
+    /// (the refs are epoch-persistent in the object store, so nothing
+    /// is re-uploaded) and publishes gradients on its behalf: the run
+    /// completes every epoch with zero lost branches.
+    Takeover,
+    /// Dead peers leave the exchange: survivors average over the
+    /// remaining gradients and the dead partition's branches are lost.
+    Drop,
+}
+
+impl FailurePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "abort" => Ok(Self::Abort),
+            "takeover" => Ok(Self::Takeover),
+            "drop" => Ok(Self::Drop),
+            _ => Err(Error::Config(format!("unknown failure policy {s:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Abort => "abort",
+            Self::Takeover => "takeover",
+            Self::Drop => "drop",
+        }
+    }
+}
+
 /// Synchronisation mode for the gradient exchange (§III-B.6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SyncMode {
@@ -228,6 +264,33 @@ pub struct TrainConfig {
     /// How long a fused-execution group collects members before
     /// dispatching partially filled, in microseconds.
     pub exec_batch_wait_us: u64,
+    /// Reaction to a peer declared dead mid-run: abort (fail fast),
+    /// takeover (a survivor re-dispatches the dead partition), or drop
+    /// (survivors continue without it).
+    pub on_peer_failure: FailurePolicy,
+    /// How often each live peer publishes a heartbeat on its broker
+    /// heartbeat queue, in milliseconds.
+    pub heartbeat_interval_ms: u64,
+    /// How long a peer's heartbeat may go stale before the membership
+    /// table declares it dead, in milliseconds. Also the deadline on
+    /// the epoch-barrier wait.
+    pub peer_timeout_ms: u64,
+    /// k-of-n partial folds: produce the next params from the first
+    /// `k` of a peer's n gradient branches (branch-index order, so the
+    /// straggler set is deterministic) and account the rest as
+    /// stragglers. 0 (the default) folds every branch.
+    pub fold_quorum: usize,
+    /// Deterministic fault-injection plan (`harness::faults` spec,
+    /// e.g. `"kill:peer1@2;delay:peer0.branch3@1:5ms;dup:peer2.branch0@1"`,
+    /// or `"rate:kill=0.25,seed=7"`). Empty = no faults.
+    pub fault_plan: String,
+    /// Lambda invocation attempts per branch (first try + retries).
+    pub lambda_retries: u32,
+    /// Base of the exponential retry backoff, in milliseconds: attempt
+    /// a sleeps `backoff * 2^(a-1)` plus seeded jitter before retrying.
+    /// 0 (the default) retries immediately — the pre-backoff behavior.
+    /// Measured wall only; the modeled accounting never moves.
+    pub retry_backoff_ms: u64,
     pub seed: u64,
     /// Where the AOT artifacts live.
     pub artifacts_dir: String,
@@ -266,6 +329,13 @@ impl Default for TrainConfig {
             exec_batch: 1,
             exec_batch_auto: false,
             exec_batch_wait_us: 500,
+            on_peer_failure: FailurePolicy::default(),
+            heartbeat_interval_ms: 250,
+            peer_timeout_ms: 30_000,
+            fold_quorum: 0,
+            fault_plan: String::new(),
+            lambda_retries: 3,
+            retry_backoff_ms: 0,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             early_stop_patience: 0,
@@ -329,6 +399,17 @@ impl TrainConfig {
                 "exec_batch_wait_us" => {
                     cfg.exec_batch_wait_us = v.as_u64().ok_or_else(missing)?
                 }
+                "on_peer_failure" => {
+                    cfg.on_peer_failure = FailurePolicy::parse(v.as_str().ok_or_else(missing)?)?
+                }
+                "heartbeat_interval_ms" => {
+                    cfg.heartbeat_interval_ms = v.as_u64().ok_or_else(missing)?
+                }
+                "peer_timeout_ms" => cfg.peer_timeout_ms = v.as_u64().ok_or_else(missing)?,
+                "fold_quorum" => cfg.fold_quorum = v.as_usize().ok_or_else(missing)?,
+                "fault_plan" => cfg.fault_plan = v.as_str().ok_or_else(missing)?.into(),
+                "lambda_retries" => cfg.lambda_retries = v.as_u64().ok_or_else(missing)? as u32,
+                "retry_backoff_ms" => cfg.retry_backoff_ms = v.as_u64().ok_or_else(missing)?,
                 "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
                 "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(missing)?.into(),
                 "early_stop_patience" => {
@@ -370,6 +451,13 @@ impl TrainConfig {
             .set("exec_batch", self.exec_batch)
             .set("exec_batch_auto", self.exec_batch_auto)
             .set("exec_batch_wait_us", self.exec_batch_wait_us)
+            .set("on_peer_failure", self.on_peer_failure.name())
+            .set("heartbeat_interval_ms", self.heartbeat_interval_ms)
+            .set("peer_timeout_ms", self.peer_timeout_ms)
+            .set("fold_quorum", self.fold_quorum)
+            .set("fault_plan", self.fault_plan.as_str())
+            .set("lambda_retries", self.lambda_retries as u64)
+            .set("retry_backoff_ms", self.retry_backoff_ms)
             .set("seed", self.seed)
             .set("artifacts_dir", self.artifacts_dir.as_str())
             .set("early_stop_patience", self.early_stop_patience)
@@ -440,6 +528,23 @@ impl TrainConfig {
                     .into(),
             ));
         }
+        if self.heartbeat_interval_ms == 0 {
+            return Err(Error::Config("heartbeat_interval_ms must be >= 1".into()));
+        }
+        if self.peer_timeout_ms < self.heartbeat_interval_ms {
+            return Err(Error::Config(format!(
+                "peer_timeout_ms={} must be >= heartbeat_interval_ms={} — a \
+                 timeout shorter than one beat declares every peer dead",
+                self.peer_timeout_ms, self.heartbeat_interval_ms
+            )));
+        }
+        if self.lambda_retries == 0 {
+            return Err(Error::Config(
+                "lambda_retries must be >= 1 (the first attempt counts)".into(),
+            ));
+        }
+        // reject a malformed fault plan up front, not mid-run
+        crate::harness::faults::FaultPlanSpec::parse(&self.fault_plan)?;
         Ok(())
     }
 }
@@ -594,6 +699,58 @@ mod tests {
             decode_cache: 0,
             ..Default::default()
         };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn membership_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            on_peer_failure: FailurePolicy::Takeover,
+            heartbeat_interval_ms: 20,
+            peer_timeout_ms: 100,
+            fold_quorum: 3,
+            fault_plan: "kill:peer1@2".into(),
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.on_peer_failure, FailurePolicy::Takeover);
+        assert_eq!(back.heartbeat_interval_ms, 20);
+        assert_eq!(back.peer_timeout_ms, 100);
+        assert_eq!(back.fold_quorum, 3);
+        assert_eq!(back.fault_plan, "kill:peer1@2");
+        // defaults: fail fast, full folds, no faults
+        let d = TrainConfig::default();
+        assert_eq!(d.on_peer_failure, FailurePolicy::Abort);
+        assert_eq!(d.fold_quorum, 0);
+        assert!(d.fault_plan.is_empty());
+        assert!(FailurePolicy::parse("explode").is_err());
+        // a timeout shorter than one beat declares everyone dead
+        let bad = TrainConfig {
+            heartbeat_interval_ms: 500,
+            peer_timeout_ms: 100,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // malformed fault plans are a config error, not a mid-run panic
+        let bad = TrainConfig { fault_plan: "explode:peer1@2".into(), ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn retry_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            lambda_retries: 5,
+            retry_backoff_ms: 10,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.lambda_retries, 5);
+        assert_eq!(back.retry_backoff_ms, 10);
+        // defaults match the old hardcoded RetryPolicy
+        assert_eq!(TrainConfig::default().lambda_retries, 3);
+        assert_eq!(TrainConfig::default().retry_backoff_ms, 0);
+        // zero attempts would never invoke at all
+        let bad = TrainConfig { lambda_retries: 0, ..Default::default() };
         assert!(bad.validate().is_err());
     }
 

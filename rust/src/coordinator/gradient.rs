@@ -138,6 +138,10 @@ impl GradientDict {
 pub struct GradAccumulator {
     acc: Vec<f64>,
     n: usize,
+    /// Fold quorum `k`: adds beyond the first `k` are skipped (and
+    /// counted), implementing the k-of-n partial fold. 0 = unbounded.
+    quorum: usize,
+    skipped: usize,
 }
 
 impl GradAccumulator {
@@ -145,8 +149,25 @@ impl GradAccumulator {
         Self::default()
     }
 
+    /// Fold at most the first `k` gradients; further [`Self::add`]
+    /// calls are counted as skipped instead of folded (k-of-n partial
+    /// folds, `--fold-quorum`). `k = 0` (the default) folds everything.
+    pub fn with_quorum(mut self, k: usize) -> Self {
+        self.quorum = k;
+        self
+    }
+
+    /// Adds refused because the quorum was already met.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
     /// Fold one gradient into the running sum.
     pub fn add(&mut self, g: &[f32]) -> Result<()> {
+        if self.quorum > 0 && self.n >= self.quorum {
+            self.skipped += 1;
+            return Ok(());
+        }
         if self.n == 0 {
             self.acc = g.iter().map(|&x| x as f64).collect();
         } else {
@@ -304,5 +325,25 @@ mod tests {
         acc.add(&[1.0, 2.0]).unwrap();
         assert!(acc.add(&[1.0]).is_err());
         assert!(GradAccumulator::new().mean().is_err());
+    }
+
+    #[test]
+    fn accumulator_quorum_folds_first_k_only() {
+        let mut acc = GradAccumulator::new().with_quorum(2);
+        acc.add(&[2.0, 0.0]).unwrap();
+        acc.add(&[4.0, 2.0]).unwrap();
+        // beyond the quorum: skipped, even a mismatched length
+        acc.add(&[100.0, 100.0]).unwrap();
+        acc.add(&[1.0]).unwrap();
+        assert_eq!(acc.count(), 2);
+        assert_eq!(acc.skipped(), 2);
+        assert_eq!(acc.mean().unwrap(), vec![3.0, 1.0]);
+        // quorum 0 folds everything (the default path is untouched)
+        let mut all = GradAccumulator::new().with_quorum(0);
+        for _ in 0..3 {
+            all.add(&[3.0]).unwrap();
+        }
+        assert_eq!(all.count(), 3);
+        assert_eq!(all.skipped(), 0);
     }
 }

@@ -1,0 +1,557 @@
+//! Elastic peer membership: broker-backed heartbeats, death
+//! declaration, partition takeover, and barrier back-fill.
+//!
+//! The paper pitches P2P-over-serverless as fault tolerant, but a
+//! fixed peer set with fail-fast abort (`Cluster::run` pre-PR-8) dies
+//! with its first casualty. This module makes liveness a tracked,
+//! policy-driven property:
+//!
+//! - Every live peer runs a [`HeartbeatPump`] publishing on its
+//!   `peer.{r}.heartbeat` queue every `--heartbeat-interval-ms`; the
+//!   shared [`Membership`] table records the last beat per rank.
+//! - Any waiting loop (gradient consume, epoch barrier, verdict wait)
+//!   parks with a timeout and calls [`Membership::reap`] on expiry: a
+//!   peer whose beat is staler than `--peer-timeout-ms` is declared
+//!   dead. A peer whose thread *exits* with an error is declared dead
+//!   immediately by the cluster's spawn wrapper — the timeout path
+//!   only has to catch hangs.
+//! - What happens next is the `--on-peer-failure` policy:
+//!   [`FailurePolicy::Abort`] keeps the historical fail-fast,
+//!   [`FailurePolicy::Drop`] shrinks the gradient average to the
+//!   survivors, and [`FailurePolicy::Takeover`] assigns a deterministic
+//!   successor (the next alive rank after the dead one, wrapping) that
+//!   recomputes the dead peer's partition — re-dispatching its
+//!   epoch-persistent batch refs through the successor's own Lambda
+//!   lane — and publishes the gradient *on the dead peer's queue* so
+//!   every consumer keeps seeing a full-width exchange.
+//! - The cumulative epoch barrier (`version >= epoch * peers`) would
+//!   never fill once a peer stops arriving, so survivors back-fill
+//!   proxy arrivals for dead ranks via [`Membership::fill_barrier`],
+//!   each (peer, epoch) proxy claimed exactly once.
+//!
+//! The membership plane is **armed** only when the policy is not
+//! `abort` or a fault plan is active: an unarmed run publishes no
+//! heartbeats and reaps nothing, keeping every broker/message counter
+//! byte-identical to the pre-membership trainer.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::sync::EpochBarrier;
+use crate::broker::{Broker, Message, QueueMode};
+use crate::config::FailurePolicy;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::store::ObjectRef;
+use crate::util::Bytes;
+
+/// What a successor needs to recompute a dead peer's partition.
+#[derive(Debug, Clone)]
+pub enum PartitionHandle {
+    /// Serverless: the epoch-persistent packed-batch refs the dead
+    /// peer uploaded at setup. Takeover re-dispatches these through
+    /// the successor's own function — nothing is re-uploaded.
+    Refs(Vec<ObjectRef>),
+    /// Instance: the raw partition; the successor re-batches it with
+    /// the dead peer's seed so the gradients are the ones the dead
+    /// peer would have computed.
+    Data(Box<Dataset>),
+}
+
+#[derive(Debug)]
+struct Slot {
+    alive: bool,
+    /// Finished its run cleanly — stops beating but is not dead.
+    done: bool,
+    last_beat: Instant,
+    reason: Option<String>,
+    /// Highest epoch this peer really arrived at the barrier for.
+    last_barrier_epoch: u64,
+    /// Highest epoch proxied on this (dead) peer's behalf.
+    proxied_to: u64,
+    /// Assigned takeover successor once dead.
+    successor: Option<usize>,
+    /// Highest epoch a successor has published a gradient for.
+    takeover_published: u64,
+    partition: Option<PartitionHandle>,
+}
+
+/// Cluster-wide liveness table shared by every peer thread and the
+/// trainer. All counters surface as `membership.*` in the train report.
+pub struct Membership {
+    peers: usize,
+    policy: FailurePolicy,
+    armed: bool,
+    heartbeat_interval: Duration,
+    peer_timeout: Duration,
+    broker: Arc<Broker>,
+    state: Mutex<Vec<Slot>>,
+    beats: AtomicU64,
+    deaths: AtomicU64,
+    barrier_proxies: AtomicU64,
+    takeover_epochs: AtomicU64,
+    dropped_grads: AtomicU64,
+}
+
+impl Membership {
+    /// Build the table. `armed` turns the heartbeat/reap machinery on;
+    /// unarmed tables are inert observers that never publish or
+    /// declare, so default runs stay byte-identical.
+    pub fn new(
+        broker: Arc<Broker>,
+        peers: usize,
+        policy: FailurePolicy,
+        heartbeat_interval: Duration,
+        peer_timeout: Duration,
+        armed: bool,
+    ) -> Result<Self> {
+        if armed {
+            for r in 0..peers {
+                broker.declare(&Broker::heartbeat_queue(r), QueueMode::LatestOnly)?;
+            }
+        }
+        let now = Instant::now();
+        let slots = (0..peers)
+            .map(|_| Slot {
+                alive: true,
+                done: false,
+                last_beat: now,
+                reason: None,
+                last_barrier_epoch: 0,
+                proxied_to: 0,
+                successor: None,
+                takeover_published: 0,
+                partition: None,
+            })
+            .collect();
+        Ok(Self {
+            peers,
+            policy,
+            armed,
+            heartbeat_interval,
+            peer_timeout,
+            broker,
+            state: Mutex::new(slots),
+            beats: AtomicU64::new(0),
+            deaths: AtomicU64::new(0),
+            barrier_proxies: AtomicU64::new(0),
+            takeover_epochs: AtomicU64::new(0),
+            dropped_grads: AtomicU64::new(0),
+        })
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    pub fn policy(&self) -> FailurePolicy {
+        self.policy
+    }
+
+    pub fn peers(&self) -> usize {
+        self.peers
+    }
+
+    /// The wait-slice for membership-aware blocking loops: short enough
+    /// to reap promptly, never zero.
+    pub fn wait_slice(&self) -> Duration {
+        self.heartbeat_interval.max(Duration::from_millis(1))
+    }
+
+    /// Publish one heartbeat for `rank` and refresh its table entry.
+    pub fn beat(&self, rank: usize) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st[rank].last_beat = Instant::now();
+        }
+        if self.armed {
+            let n = self.beats.fetch_add(1, Ordering::Relaxed) + 1;
+            let _ = self
+                .broker
+                .publish(&Broker::heartbeat_queue(rank), Message::new(rank, n, Bytes::new()));
+        }
+    }
+
+    /// Spawn the per-peer heartbeat thread; dropping the returned pump
+    /// (on any exit path, including unwind) stops and joins it, so a
+    /// peer's beats stop exactly when its thread does.
+    pub fn start_pump(self: Arc<Self>, rank: usize) -> HeartbeatPump {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let interval = self.wait_slice();
+        let table = self;
+        let handle = std::thread::spawn(move || {
+            while !flag.load(Ordering::SeqCst) {
+                table.beat(rank);
+                std::thread::sleep(interval);
+            }
+        });
+        HeartbeatPump { stop, handle: Some(handle) }
+    }
+
+    /// Mark a clean exit: the peer stops beating but is *not* dead.
+    pub fn mark_done(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        st[rank].done = true;
+    }
+
+    /// Declare `rank` dead. Returns whether this call did it (the
+    /// first reason wins). Assigns the takeover successor — the next
+    /// alive, unfinished rank after the dead one, wrapping — and
+    /// reroutes any dead peer whose successor just died.
+    pub fn declare_dead(&self, rank: usize, reason: &str) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st[rank].alive {
+            return false;
+        }
+        st[rank].alive = false;
+        st[rank].reason = Some(reason.to_string());
+        self.deaths.fetch_add(1, Ordering::Relaxed);
+        let next_alive = |st: &Vec<Slot>, from: usize| -> Option<usize> {
+            (1..self.peers)
+                .map(|d| (from + d) % self.peers)
+                .find(|&r| st[r].alive && !st[r].done)
+        };
+        st[rank].successor = next_alive(&st, rank);
+        for r in 0..self.peers {
+            if !st[r].alive && st[r].successor == Some(rank) {
+                st[r].successor = next_alive(&st, r);
+            }
+        }
+        true
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.state.lock().unwrap()[rank].alive
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.state.lock().unwrap().iter().filter(|s| s.alive).count()
+    }
+
+    /// Ranks currently declared dead, with their recorded reasons.
+    pub fn dead_peers(&self) -> Vec<(usize, String)> {
+        self.state
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.alive)
+            .map(|(r, s)| (r, s.reason.clone().unwrap_or_default()))
+            .collect()
+    }
+
+    /// The verdict leader: the smallest alive rank (rank 0 until it
+    /// dies).
+    pub fn leader(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .iter()
+            .position(|s| s.alive)
+            .unwrap_or(0)
+    }
+
+    /// Declare dead every peer whose heartbeat went stale. Under the
+    /// `abort` policy a stale peer aborts the whole run (the fail-fast
+    /// contract, now with a deadline instead of an infinite park);
+    /// under `takeover`/`drop` the table just records the death and
+    /// the caller's waiting loop routes around it. No-op when unarmed.
+    pub fn reap(&self) -> Result<()> {
+        if !self.armed {
+            return Ok(());
+        }
+        let stale: Vec<usize> = {
+            let st = self.state.lock().unwrap();
+            st.iter()
+                .enumerate()
+                .filter(|(_, s)| s.alive && !s.done && s.last_beat.elapsed() > self.peer_timeout)
+                .map(|(r, _)| r)
+                .collect()
+        };
+        for r in stale {
+            let reason = format!(
+                "peer {r} heartbeat stale for over {}ms",
+                self.peer_timeout.as_millis()
+            );
+            if self.policy == FailurePolicy::Abort {
+                self.broker.abort(&reason);
+                return Err(Error::Aborted(reason));
+            }
+            self.declare_dead(r, &reason);
+        }
+        Ok(())
+    }
+
+    /// Record that `rank` really arrived at the barrier for `epoch`
+    /// (so proxies never double an arrival the peer already made).
+    pub fn note_barrier_arrival(&self, rank: usize, epoch: u64) {
+        let mut st = self.state.lock().unwrap();
+        if epoch > st[rank].last_barrier_epoch {
+            st[rank].last_barrier_epoch = epoch;
+        }
+    }
+
+    /// Back-fill proxy arrivals for every dead peer up to `epoch`. Each
+    /// (peer, epoch) pair is claimed exactly once under the table lock,
+    /// so concurrent waiters never double-publish.
+    pub fn fill_barrier(&self, barrier: &EpochBarrier, epoch: u64) -> Result<()> {
+        if !self.armed {
+            return Ok(());
+        }
+        let mut to_proxy: Vec<(usize, u64)> = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            for (r, slot) in st.iter_mut().enumerate() {
+                if slot.alive {
+                    continue;
+                }
+                let from = slot.proxied_to.max(slot.last_barrier_epoch) + 1;
+                for e in from..=epoch {
+                    to_proxy.push((r, e));
+                }
+                if epoch > slot.proxied_to {
+                    slot.proxied_to = epoch;
+                }
+            }
+        }
+        for (r, e) in to_proxy {
+            barrier.proxy_arrive(r, e)?;
+            self.barrier_proxies.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Register what a successor would need to recompute `rank`'s
+    /// partition (refs for serverless peers, the raw data for instance
+    /// peers).
+    pub fn register_partition(&self, rank: usize, handle: PartitionHandle) {
+        let mut st = self.state.lock().unwrap();
+        st[rank].partition = Some(handle);
+    }
+
+    /// The dead peer's registered partition, if any.
+    pub fn partition_of(&self, rank: usize) -> Option<PartitionHandle> {
+        self.state.lock().unwrap()[rank].partition.clone()
+    }
+
+    /// Should `me` compute and publish `dead`'s epoch-`epoch` gradient?
+    /// True only for the assigned successor, only under the takeover
+    /// policy, and only while that epoch is unpublished — the claim is
+    /// finalized by [`Self::note_takeover_published`] after the publish
+    /// lands, so a successor that dies mid-takeover is re-covered by
+    /// its own successor.
+    pub fn claim_takeover(&self, me: usize, dead: usize, epoch: u64) -> bool {
+        if self.policy != FailurePolicy::Takeover {
+            return false;
+        }
+        let st = self.state.lock().unwrap();
+        let slot = &st[dead];
+        !slot.alive && slot.successor == Some(me) && slot.takeover_published < epoch
+    }
+
+    /// Record a successful on-behalf gradient publish.
+    pub fn note_takeover_published(&self, dead: usize, epoch: u64) {
+        let mut st = self.state.lock().unwrap();
+        if epoch > st[dead].takeover_published {
+            st[dead].takeover_published = epoch;
+        }
+        self.takeover_epochs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dead-peer gradient skipped under the `drop` policy.
+    pub fn note_dropped_grad(&self) {
+        self.dropped_grads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Heartbeats published.
+    pub fn heartbeats(&self) -> u64 {
+        self.beats.load(Ordering::Relaxed)
+    }
+
+    /// Peers declared dead.
+    pub fn deaths(&self) -> u64 {
+        self.deaths.load(Ordering::Relaxed)
+    }
+
+    /// Barrier arrivals proxied on behalf of dead peers.
+    pub fn barrier_proxies(&self) -> u64 {
+        self.barrier_proxies.load(Ordering::Relaxed)
+    }
+
+    /// Dead-peer epochs recomputed and published by successors.
+    pub fn takeover_epochs(&self) -> u64 {
+        self.takeover_epochs.load(Ordering::Relaxed)
+    }
+
+    /// Dead-peer gradients skipped under the `drop` policy.
+    pub fn dropped_grads(&self) -> u64 {
+        self.dropped_grads.load(Ordering::Relaxed)
+    }
+}
+
+/// Guard for a peer's heartbeat thread; dropping stops and joins it.
+pub struct HeartbeatPump {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for HeartbeatPump {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(peers: usize, policy: FailurePolicy) -> (Arc<Broker>, Arc<Membership>) {
+        let broker = Arc::new(Broker::default());
+        let m = Membership::new(
+            broker.clone(),
+            peers,
+            policy,
+            Duration::from_millis(5),
+            Duration::from_millis(30),
+            true,
+        )
+        .unwrap();
+        (broker, Arc::new(m))
+    }
+
+    #[test]
+    fn stale_peer_is_reaped_under_drop_policy() {
+        let (_, m) = table(3, FailurePolicy::Drop);
+        m.beat(0);
+        m.beat(2);
+        std::thread::sleep(Duration::from_millis(40));
+        m.beat(0);
+        m.beat(2);
+        m.reap().unwrap();
+        assert!(m.is_alive(0));
+        assert!(!m.is_alive(1), "peer 1 never beat and should be dead");
+        assert!(m.is_alive(2));
+        assert_eq!(m.alive_count(), 2);
+        assert_eq!(m.deaths(), 1);
+    }
+
+    #[test]
+    fn stale_peer_aborts_under_abort_policy() {
+        let (broker, m) = table(2, FailurePolicy::Abort);
+        std::thread::sleep(Duration::from_millis(40));
+        m.beat(0);
+        let err = m.reap().unwrap_err();
+        assert!(err.to_string().contains("peer 1"), "{err}");
+        assert!(broker.is_aborted());
+    }
+
+    #[test]
+    fn unarmed_table_never_reaps() {
+        let broker = Arc::new(Broker::default());
+        let m = Membership::new(
+            broker.clone(),
+            2,
+            FailurePolicy::Abort,
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            false,
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        m.reap().unwrap();
+        assert_eq!(m.alive_count(), 2);
+        assert_eq!(m.heartbeats(), 0);
+        // unarmed tables declare no heartbeat queues either
+        assert!(broker.get(&Broker::heartbeat_queue(0)).is_err());
+    }
+
+    #[test]
+    fn done_peers_are_not_reaped() {
+        let (_, m) = table(2, FailurePolicy::Drop);
+        m.mark_done(1);
+        std::thread::sleep(Duration::from_millis(40));
+        m.beat(0);
+        m.reap().unwrap();
+        assert!(m.is_alive(1), "a finished peer is not a dead peer");
+    }
+
+    #[test]
+    fn successor_assignment_wraps_and_reroutes() {
+        let (_, m) = table(4, FailurePolicy::Takeover);
+        assert!(m.declare_dead(3, "killed"));
+        // takeover claim: only the successor (rank 0, wrapping) wins
+        assert!(m.claim_takeover(0, 3, 1));
+        assert!(!m.claim_takeover(1, 3, 1));
+        // a published epoch cannot be claimed again
+        m.note_takeover_published(3, 1);
+        assert!(!m.claim_takeover(0, 3, 1));
+        assert!(m.claim_takeover(0, 3, 2));
+        // the successor dying reroutes the dead peer's coverage
+        assert!(m.declare_dead(0, "killed too"));
+        assert!(m.claim_takeover(1, 3, 2));
+        assert!(!m.claim_takeover(2, 3, 2));
+        // and the double-declare is refused
+        assert!(!m.declare_dead(3, "again"));
+        assert_eq!(m.deaths(), 2);
+    }
+
+    #[test]
+    fn leader_falls_over_to_smallest_alive_rank() {
+        let (_, m) = table(3, FailurePolicy::Takeover);
+        assert_eq!(m.leader(), 0);
+        m.declare_dead(0, "killed");
+        assert_eq!(m.leader(), 1);
+        m.declare_dead(1, "killed");
+        assert_eq!(m.leader(), 2);
+    }
+
+    #[test]
+    fn barrier_backfill_proxies_each_missing_epoch_once() {
+        let (broker, m) = table(2, FailurePolicy::Takeover);
+        let barrier = EpochBarrier::new(&broker, 2).unwrap();
+        // peer 1 really arrived for epoch 1, then died
+        barrier.arrive(1, 1).unwrap();
+        m.note_barrier_arrival(1, 1);
+        m.declare_dead(1, "killed");
+        // survivor arrives for epochs 1..=3 and back-fills
+        for e in 1..=3u64 {
+            barrier.arrive(0, e).unwrap();
+            m.note_barrier_arrival(0, e);
+            m.fill_barrier(&barrier, e).unwrap();
+            assert!(
+                barrier.wait_timeout(e, Duration::from_millis(100)).unwrap(),
+                "barrier {e} should fill via proxies"
+            );
+        }
+        // epochs 2 and 3 proxied; epoch 1 was a real arrival
+        assert_eq!(m.barrier_proxies(), 2);
+        // re-filling claims nothing new
+        m.fill_barrier(&barrier, 3).unwrap();
+        assert_eq!(m.barrier_proxies(), 2);
+    }
+
+    #[test]
+    fn pump_beats_until_dropped() {
+        let (_, m) = table(1, FailurePolicy::Drop);
+        let pump = m.clone().start_pump(0);
+        std::thread::sleep(Duration::from_millis(25));
+        drop(pump);
+        let beats = m.heartbeats();
+        assert!(beats >= 2, "expected a few beats, got {beats}");
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(m.heartbeats(), beats, "pump must stop after drop");
+    }
+
+    #[test]
+    fn partition_registry_roundtrips() {
+        let (_, m) = table(2, FailurePolicy::Takeover);
+        assert!(m.partition_of(1).is_none());
+        m.register_partition(1, PartitionHandle::Refs(Vec::new()));
+        assert!(matches!(m.partition_of(1), Some(PartitionHandle::Refs(_))));
+    }
+}

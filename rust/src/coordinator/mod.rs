@@ -6,10 +6,12 @@
 //! - [`gradient`] — exchange wire format, S3 overflow, averaging;
 //! - [`serverless`] — the dynamic-state-machine Lambda fan-out;
 //! - [`sync`] — the RabbitMQ epoch barrier;
+//! - [`membership`] — heartbeat liveness, takeover, barrier back-fill;
 //! - [`convergence`] — Early Stopping + ReduceLROnPlateau.
 
 pub mod convergence;
 pub mod gradient;
+pub mod membership;
 pub mod peer;
 pub mod serverless;
 pub mod sync;
@@ -17,6 +19,7 @@ pub mod trainer;
 
 pub use convergence::{EarlyStopping, ReduceLROnPlateau};
 pub use gradient::{average_batch_gradients, GradAccumulator, GradientDict, GradientWire};
+pub use membership::{HeartbeatPump, Membership, PartitionHandle};
 pub use peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
 pub use serverless::{pack_batch, unpack_batch, OffloadResult, ServerlessOffload};
 pub use sync::EpochBarrier;

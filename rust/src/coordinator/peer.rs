@@ -25,15 +25,18 @@
 //! and cost diverge from the staged reference.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::convergence::{EarlyStopping, ReduceLROnPlateau};
 use super::gradient::{GradAccumulator, GradientDict, GradientWire};
+use super::membership::{Membership, PartitionHandle};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
 use crate::broker::{Broker, Message, QueueMode};
-use crate::config::{OffloadMode, SyncMode, TrainConfig};
+use crate::config::{FailurePolicy, OffloadMode, SyncMode, TrainConfig};
 use crate::data::{Batcher, Dataset};
 use crate::error::{Error, Result};
+use crate::harness::faults::FaultPlan;
 use crate::metrics::{MetricsRegistry, Stage, StageTimer};
 use crate::runtime::ModelRuntime;
 use crate::util::{Bytes, Json};
@@ -106,6 +109,12 @@ pub struct PeerReport {
     /// Cross-epoch mode: summed overlap windows — how long pre-dispatched
     /// epochs ran on the pool before their collection began.
     pub overlap_wall: std::time::Duration,
+    /// Invocation attempts beyond the first across this peer's fan-outs
+    /// (the configured `--lambda-retries` policy at work).
+    pub lambda_retries: usize,
+    /// Branches executed and billed but excluded from the fold by the
+    /// `--fold-quorum` k-of-n partial fold.
+    pub fold_stragglers: usize,
 }
 
 /// One peer of the cluster.
@@ -121,6 +130,11 @@ pub struct Peer {
     barrier: Arc<EpochBarrier>,
     metrics: Arc<MetricsRegistry>,
     params: Vec<f32>,
+    /// Cluster liveness table; `None` (or unarmed) reproduces the
+    /// fixed-membership trainer byte for byte.
+    membership: Option<Arc<Membership>>,
+    /// Deterministic fault-injection plan (`--fault-plan`).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Peer {
@@ -153,11 +167,33 @@ impl Peer {
             barrier,
             metrics,
             params,
+            membership: None,
+            faults: None,
         })
+    }
+
+    /// Attach the cluster's shared membership table (the trainer wires
+    /// every peer to the same one).
+    pub fn set_membership(&mut self, membership: Arc<Membership>) {
+        self.membership = Some(membership);
+    }
+
+    /// Arm the fault-injection plan for this peer's thread (kill
+    /// checks; the offload backend holds its own handle for branch
+    /// delays/dups).
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.faults = Some(faults);
     }
 
     pub fn params(&self) -> &[f32] {
         &self.params
+    }
+
+    /// The armed membership table, if any — unarmed tables are treated
+    /// as absent so every waiting loop keeps its historical untimed
+    /// form (and its exact message/counter trace).
+    fn armed_membership(&self) -> Option<&Arc<Membership>> {
+        self.membership.as_ref().filter(|m| m.armed())
     }
 
     fn no_batch_error(&self) -> Error {
@@ -193,7 +229,16 @@ impl Peer {
             lambda_measured_wall: std::time::Duration::ZERO,
             predispatched_epochs: 0,
             overlap_wall: std::time::Duration::ZERO,
+            lambda_retries: 0,
+            fold_stragglers: 0,
         };
+
+        // heartbeat pump: beats until dropped — which happens on every
+        // exit path of this function, so this peer's beats stop exactly
+        // when its thread does and survivors' reap timers start counting
+        let _pump = self
+            .armed_membership()
+            .map(|m| m.clone().start_pump(self.rank));
 
         // Serverless fidelity (paper §III-B): the partition is batched
         // once and uploaded to the peer's bucket *before* training;
@@ -207,6 +252,19 @@ impl Peer {
                 return Err(self.no_batch_error());
             }
             offload.upload_batches(&batches)?;
+        }
+
+        // register what a takeover successor would need to recompute
+        // this peer's partition: the epoch-persistent batch refs
+        // (serverless) or the raw partition (instance)
+        if let Some(m) = self.armed_membership() {
+            let handle = match &self.backend {
+                GradBackend::Serverless(offload) => PartitionHandle::Refs(offload.batch_refs()),
+                GradBackend::Local { .. } => {
+                    PartitionHandle::Data(Box::new(self.partition.clone()))
+                }
+            };
+            m.register_partition(self.rank, handle);
         }
 
         // Cross-epoch pre-dispatch is only sound when the verdict can
@@ -234,6 +292,20 @@ impl Peer {
         #[allow(clippy::redundant_closure_call)]
         let epochs_outcome = (|| -> Result<()> {
             for epoch in 1..=self.config.epochs as u64 {
+                // ---- 0. injected death ------------------------------------
+                // a killed peer errors out *before* computing the epoch, so
+                // it never publishes v(epoch); the `?` routes through the
+                // offload teardown below and the cluster's spawn wrapper
+                // then declares this rank dead
+                if let Some(plan) = &self.faults {
+                    if plan.should_kill(self.rank, epoch) {
+                        return Err(Error::Runtime(format!(
+                            "peer {}: fault plan killed this peer at epoch {epoch}",
+                            self.rank
+                        )));
+                    }
+                }
+
                 // ---- 1. per-batch gradients + average ---------------------
                 // (instance path) materialize this epoch's reshuffled
                 // batches outside the timed compute stage
@@ -286,6 +358,8 @@ impl Peer {
                         report.lambda_cost_usd += out.cost_usd;
                         report.lambda_invocations += out.invocations;
                         report.lambda_measured_wall += out.measured_wall;
+                        report.lambda_retries += out.retries;
+                        report.fold_stragglers += out.stragglers;
                         (out.loss, out.grads)
                     }
                 };
@@ -310,8 +384,70 @@ impl Peer {
                     let q = self.broker.get(&Broker::gradient_queue(peer))?;
                     match self.config.sync {
                         SyncMode::Synchronous => {
-                            let m = q.await_epoch(epoch)?;
-                            dict.insert(peer, self.wire.decode(&m.payload)?);
+                            let grad = match self.armed_membership() {
+                                None => Some(self.wire.decode(&q.await_epoch(epoch)?.payload)?),
+                                Some(membership) => {
+                                    let membership = membership.clone();
+                                    loop {
+                                        if let Some(msg) = q
+                                            .await_epoch_timeout(epoch, membership.wait_slice())?
+                                        {
+                                            break Some(self.wire.decode(&msg.payload)?);
+                                        }
+                                        membership.reap()?;
+                                        if membership.is_alive(peer) {
+                                            continue;
+                                        }
+                                        // final drain: the peer may have
+                                        // published v(epoch) in the instant
+                                        // before its death was declared — a
+                                        // landed gradient always wins
+                                        if let Some(msg) =
+                                            q.await_epoch_timeout(epoch, Duration::ZERO)?
+                                        {
+                                            break Some(self.wire.decode(&msg.payload)?);
+                                        }
+                                        match membership.policy() {
+                                            FailurePolicy::Drop => {
+                                                membership.note_dropped_grad();
+                                                break None;
+                                            }
+                                            FailurePolicy::Takeover => {
+                                                if membership
+                                                    .claim_takeover(self.rank, peer, epoch)
+                                                {
+                                                    let g = self.takeover_grads(
+                                                        &membership,
+                                                        peer,
+                                                        epoch,
+                                                        &mut report,
+                                                    )?;
+                                                    self.wire
+                                                        .publish(&self.broker, peer, epoch, &g)?;
+                                                    membership
+                                                        .note_takeover_published(peer, epoch);
+                                                    // loop around and decode our
+                                                    // own publish so every
+                                                    // survivor folds identical
+                                                    // wire-decoded bytes
+                                                }
+                                                // not the successor: it publishes
+                                                // on the dead queue; keep waiting
+                                            }
+                                            // reap() aborts before the death is
+                                            // ever visible here
+                                            FailurePolicy::Abort => {
+                                                return Err(Error::Aborted(format!(
+                                                    "peer {peer} died under the abort policy"
+                                                )));
+                                            }
+                                        }
+                                    }
+                                }
+                            };
+                            if let Some(g) = grad {
+                                dict.insert(peer, g);
+                            }
                         }
                         SyncMode::Asynchronous => {
                             // take whatever is freshest, even stale; skip if
@@ -348,8 +484,11 @@ impl Peer {
                 }
 
                 // ---- 5. convergence detection (leader broadcasts) ---------
+                // the leader is the smallest *alive* rank: rank 0 until it
+                // dies, then the membership table's fallback
+                let leader = self.armed_membership().map(|m| m.leader()).unwrap_or(0);
                 let mut stop = false;
-                if self.rank == 0 {
+                if self.rank == leader {
                     let t = StageTimer::start(Stage::ConvergenceDetection);
                     let (val_loss, val_acc) = self.runtime.eval_dataset(&self.params, &self.val)?;
                     stop = early.observe(val_loss);
@@ -357,25 +496,93 @@ impl Peer {
                     let verdict = Verdict { epoch, stop, lr, val_loss, val_acc };
                     self.broker.publish(
                         &control_queue(),
-                        Message::new(0, epoch, verdict.to_payload()),
+                        Message::new(self.rank, epoch, verdict.to_payload()),
                     )?;
                     t.stop(&self.metrics);
                 }
 
                 // ---- 6. barrier (synchronous mode) ------------------------
                 if self.config.sync == SyncMode::Synchronous {
-                    self.barrier.arrive_and_wait(self.rank, epoch)?;
+                    match self.armed_membership() {
+                        None => self.barrier.arrive_and_wait(self.rank, epoch)?,
+                        Some(m) => {
+                            // arrive exactly once (the cumulative predicate
+                            // counts publishes), then park in slices: each
+                            // expiry reaps stale peers and back-fills proxy
+                            // arrivals for the dead so the barrier still
+                            // fills — the PR's fix for the epoch-barrier
+                            // hang on peer death
+                            self.barrier.arrive(self.rank, epoch)?;
+                            m.note_barrier_arrival(self.rank, epoch);
+                            m.fill_barrier(&self.barrier, epoch)?;
+                            while !self.barrier.wait_timeout(epoch, m.wait_slice())? {
+                                m.reap()?;
+                                m.fill_barrier(&self.barrier, epoch)?;
+                            }
+                        }
+                    }
                 }
 
                 // follow the leader's verdict
-                if self.rank != 0 {
+                if self.rank != leader {
                     let ctl = self.broker.get(&control_queue())?;
+                    let mut stepped_up = false;
                     let msg = match self.config.sync {
-                        SyncMode::Synchronous => Some(ctl.await_epoch(epoch)?),
+                        SyncMode::Synchronous => match self.armed_membership() {
+                            None => Some(ctl.await_epoch(epoch)?),
+                            Some(membership) => {
+                                let membership = membership.clone();
+                                loop {
+                                    if let Some(msg) = ctl
+                                        .await_epoch_timeout(epoch, membership.wait_slice())?
+                                    {
+                                        break Some(msg);
+                                    }
+                                    membership.reap()?;
+                                    if membership.leader() == self.rank && !stepped_up {
+                                        // every rank below died before
+                                        // broadcasting this epoch's verdict —
+                                        // step up: evaluate, publish, then
+                                        // read the broadcast back like any
+                                        // other survivor
+                                        let t =
+                                            StageTimer::start(Stage::ConvergenceDetection);
+                                        let (val_loss, val_acc) = self
+                                            .runtime
+                                            .eval_dataset(&self.params, &self.val)?;
+                                        let v_stop = early.observe(val_loss);
+                                        let v_lr = plateau.observe(val_loss);
+                                        let verdict = Verdict {
+                                            epoch,
+                                            stop: v_stop,
+                                            lr: v_lr,
+                                            val_loss,
+                                            val_acc,
+                                        };
+                                        self.broker.publish(
+                                            &control_queue(),
+                                            Message::new(self.rank, epoch, verdict.to_payload()),
+                                        )?;
+                                        t.stop(&self.metrics);
+                                        stepped_up = true;
+                                    }
+                                }
+                            }
+                        },
                         SyncMode::Asynchronous => ctl.peek_latest(),
                     };
                     if let Some(m) = msg {
                         let v = Verdict::from_message(&m)?;
+                        // under an armed membership every follower feeds the
+                        // broadcast val-loss into its *local* convergence
+                        // state, so a later leader fallback continues the
+                        // same early-stop/plateau history the dead leader
+                        // accumulated (the eval is deterministic, so the
+                        // observed sequence is identical on every rank)
+                        if !stepped_up && self.armed_membership().is_some() {
+                            early.observe(v.val_loss);
+                            plateau.observe(v.val_loss);
+                        }
                         lr = if v.lr > 0.0 { v.lr } else { lr };
                         stop = v.stop;
                     }
@@ -396,5 +603,60 @@ impl Peer {
         }
         epochs_outcome?;
         Ok(report)
+    }
+
+    /// Recompute a dead peer's epoch-`epoch` gradient from its
+    /// registered partition (the takeover policy). Serverless
+    /// partitions re-dispatch the dead peer's epoch-persistent batch
+    /// refs through its still-registered Lambda; instance partitions
+    /// re-batch the raw data with the dead peer's shuffle seed. Either
+    /// way the result is byte-identical to the gradient the dead peer
+    /// would have published.
+    fn takeover_grads(
+        &self,
+        membership: &Membership,
+        dead: usize,
+        epoch: u64,
+        report: &mut PeerReport,
+    ) -> Result<Vec<f32>> {
+        let handle = membership.partition_of(dead).ok_or_else(|| {
+            Error::Runtime(format!(
+                "peer {}: no partition registered for dead peer {dead}",
+                self.rank
+            ))
+        })?;
+        match (&self.backend, handle) {
+            (GradBackend::Serverless(offload), PartitionHandle::Refs(refs)) => {
+                let out = offload.compute_takeover(epoch as usize, dead, &refs)?;
+                report.lambda_cost_usd += out.cost_usd;
+                report.lambda_invocations += out.invocations;
+                report.lambda_measured_wall += out.measured_wall;
+                report.lambda_retries += out.retries;
+                report.fold_stragglers += out.stragglers;
+                Ok(out.grads)
+            }
+            (GradBackend::Local { pallas }, PartitionHandle::Data(data)) => {
+                let batcher =
+                    Batcher::new(self.config.batch_size, self.config.seed ^ dead as u64);
+                let batches = batcher.epoch_batches(&data, epoch as usize);
+                if batches.is_empty() {
+                    return Err(Error::Data(format!(
+                        "peer {}: dead peer {dead}'s partition yields no batches",
+                        self.rank
+                    )));
+                }
+                let mut acc = GradAccumulator::new();
+                for b in &batches {
+                    let out = self.runtime.grad(b.size, &self.params, &b.x, &b.y, *pallas)?;
+                    acc.add(&out.grads)?;
+                }
+                acc.mean()
+            }
+            _ => Err(Error::Runtime(format!(
+                "peer {}: dead peer {dead}'s partition handle does not match \
+                 this backend",
+                self.rank
+            ))),
+        }
     }
 }

@@ -119,6 +119,7 @@ use crate::faas::{
     BranchScheduler, FaasPlatform, FunctionSpec, Handler, PipelinedMap, RetryPolicy,
     StateMachine,
 };
+use crate::harness::faults::FaultPlan as InjectedFaults;
 use crate::runtime::{ModelRuntime, PackedBatch};
 use crate::store::{DecodedCache, ObjectRef, ObjectStore, PARAMS_BUCKET};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
@@ -220,6 +221,12 @@ fn parse_branch_response(out: &[u8]) -> Result<(f64, ObjectRef)> {
     Ok((loss, grad_ref))
 }
 
+/// Shared slot for the injected fault plan: the Lambda handler is
+/// registered at construction but the plan arrives later (via
+/// [`ServerlessOffload::set_faults`]), so the handler reads it through
+/// this slot. `None` (the default) injects nothing.
+type FaultSlot = Arc<Mutex<Option<Arc<InjectedFaults>>>>;
+
 /// One dispatched-but-not-yet-collected epoch (cross-epoch mode).
 struct InflightEpoch {
     epoch: usize,
@@ -252,6 +259,17 @@ pub struct ServerlessOffload {
     sweep_scratch: bool,
     /// Cross-epoch window: max epochs in flight at once (>= 1).
     pipeline_depth: usize,
+    /// Retry policy for every branch invocation (`--lambda-retries` /
+    /// `--retry-backoff-ms`); defaults to the historical hardcoded
+    /// policy (3 attempts, no backoff).
+    retry: RetryPolicy,
+    /// k-of-n partial folds (`--fold-quorum`): only the first k
+    /// branches (by index) fold into the gradient/wall; the rest are
+    /// stragglers — executed and billed. 0 (default) folds everything.
+    fold_quorum: usize,
+    /// Injected fault plan shared with the Lambda handler (delays fire
+    /// inside the handler; duplicates add shadow invocations).
+    faults: FaultSlot,
     /// Epoch-persistent batch objects, uploaded once by
     /// [`Self::upload_batches`] and referenced by every epoch's branch
     /// payloads thereafter.
@@ -270,7 +288,9 @@ pub struct ServerlessOffload {
     /// parked generation's drain and gradient sweep already happened
     /// when its epoch completed; only the params release remains.
     /// Drained by the next epoch's fan-out or [`Self::finish_run`].
-    pending_release: Mutex<Option<ObjectRef>>,
+    /// Tagged with its generation so a takeover can locate the still-
+    /// resident params object for the epoch being recovered.
+    pending_release: Mutex<Option<(u64, ObjectRef)>>,
 }
 
 /// Result of one serverless epoch fan-out.
@@ -291,6 +311,12 @@ pub struct OffloadResult {
     pub cost_usd: f64,
     pub invocations: usize,
     pub cold_starts: usize,
+    /// Extra invocation attempts beyond the first, across all branches
+    /// (the configured Lambda retry policy at work).
+    pub retries: usize,
+    /// Branches that executed (and billed) but were excluded from the
+    /// fold by the k-of-n quorum.
+    pub stragglers: usize,
     /// Cross-epoch mode: how long this epoch had been dispatched before
     /// collection began — the overlap window the pre-dispatch bought
     /// (zero in staged/pipelined modes and for non-pre-dispatched
@@ -337,11 +363,13 @@ impl ServerlessOffload {
         // params version so concurrent same-version branches fuse into
         // one engine dispatch — and park the gradient in S3 under the
         // request's generation tag.
+        let faults: FaultSlot = Arc::new(Mutex::new(None));
         let h_store = store.clone();
         let h_runtime = runtime.clone();
         let h_bucket = bucket.clone();
         let h_cache = decode_cache.clone();
         let h_wire = wire.clone();
+        let h_faults = faults.clone();
         let h_peer = peer_rank;
         let handler: Handler = Arc::new(move |payload: &Bytes| {
             let req = Json::parse(
@@ -353,6 +381,17 @@ impl ServerlessOffload {
                 .req("gen")?
                 .as_u64()
                 .ok_or_else(|| Error::Faas("branch request: \"gen\" is not a number".into()))?;
+            // injected branch delay (fault harness): the branch index
+            // rides in the payload whenever any delay/dup targets this
+            // peer, so the lookup is exact. Measured time only — the
+            // modeled plane (wall/billed/cost) never sees the sleep.
+            if let Some(plan) = h_faults.lock().unwrap().clone() {
+                if let Some(idx) = req.req("idx").ok().and_then(|j| j.as_u64()) {
+                    if let Some(us) = plan.branch_delay_us(h_peer, generation, idx as usize) {
+                        std::thread::sleep(Duration::from_micros(us));
+                    }
+                }
+            }
             // framed params decode when the wire plane's params path is
             // on, the plain cached decode otherwise — both memoized per
             // version in the shared cache
@@ -413,6 +452,9 @@ impl ServerlessOffload {
             mode,
             sweep_scratch,
             pipeline_depth: pipeline_depth.max(1),
+            retry: RetryPolicy::default(),
+            fold_quorum: 0,
+            faults,
             batch_refs: Mutex::new(Vec::new()),
             inflight: Mutex::new(VecDeque::new()),
             retired: Mutex::new(VecDeque::new()),
@@ -431,6 +473,230 @@ impl ServerlessOffload {
     /// Cross-epoch in-flight window (meaningful in cross-epoch mode).
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
+    }
+
+    /// Replace the branch retry policy (default: 3 attempts, no
+    /// backoff — the historical hardcoded policy).
+    pub fn set_retry(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
+    /// Set the k-of-n fold quorum (`--fold-quorum`); 0 folds all
+    /// branches. A `k >= n` quorum degenerates to folding everything.
+    pub fn set_fold_quorum(&mut self, k: usize) {
+        self.fold_quorum = k;
+    }
+
+    pub fn fold_quorum(&self) -> usize {
+        self.fold_quorum
+    }
+
+    /// Arm the fault-injection plan: branch delays fire inside the
+    /// Lambda handler, duplicates add shadow deliveries of targeted
+    /// branches.
+    pub fn set_faults(&self, plan: Arc<InjectedFaults>) {
+        *self.faults.lock().unwrap() = Some(plan);
+    }
+
+    fn injected_faults(&self) -> Option<Arc<InjectedFaults>> {
+        self.faults.lock().unwrap().clone()
+    }
+
+    /// Should the branch index ride in the payload? Needed by the
+    /// wire plane's per-branch quantizer and by targeted branch
+    /// faults; otherwise omitted so default payloads stay
+    /// byte-identical to the pre-membership plane.
+    fn idx_tag(&self, idx: usize) -> Option<u64> {
+        self.idx_tag_for(self.peer, idx)
+    }
+
+    /// [`Self::idx_tag`] on behalf of an arbitrary rank — a takeover
+    /// fan-out tags branches exactly as the dead peer would have, so
+    /// its handler sees the same payloads.
+    fn idx_tag_for(&self, rank: usize, idx: usize) -> Option<u64> {
+        let faulted = self
+            .injected_faults()
+            .map(|f| f.targets_branches(rank))
+            .unwrap_or(false);
+        (self.wire.grads_on() || faulted).then_some(idx as u64)
+    }
+
+    /// The quorum effective for a fan-out of `n` branches (0 = all).
+    fn effective_quorum(&self, n: usize) -> usize {
+        if self.fold_quorum == 0 || self.fold_quorum >= n {
+            0
+        } else {
+            self.fold_quorum
+        }
+    }
+
+    /// Branches actually folded out of a fan-out of `n`.
+    fn folded_count(&self, n: usize) -> usize {
+        match self.effective_quorum(n) {
+            0 => n,
+            k => k,
+        }
+    }
+
+    /// Inject duplicate deliveries: every branch the fault plan marks
+    /// as duplicated gets a *shadow* invocation on this peer's lane —
+    /// same payload, same generation tag (so drain barriers cover it),
+    /// result discarded. The real branch's landing is the only one
+    /// folded, which is exactly the idempotence the at-least-once
+    /// delivery claim needs; the shadow's parked gradient lands in the
+    /// same generation scratch and is swept with it.
+    fn inject_duplicates(
+        &self,
+        params_ref: &ObjectRef,
+        batch_refs: &[ObjectRef],
+        generation: u64,
+    ) {
+        let Some(plan) = self.injected_faults() else {
+            return;
+        };
+        for (idx, batch_ref) in batch_refs.iter().enumerate() {
+            if !plan.duplicate(self.peer, generation, idx) {
+                continue;
+            }
+            let payload = branch_payload(params_ref, batch_ref, generation, self.idx_tag(idx));
+            let platform = self.platform.clone();
+            let function = self.function.clone();
+            self.scheduler
+                .submit_detached_tagged(self.peer, Some(generation), move || {
+                    let _ = platform.invoke(&function, &payload, None);
+                });
+        }
+    }
+
+    /// Snapshot of the uploaded batch refs (this peer's partition).
+    /// The membership table registers these so a survivor can
+    /// re-dispatch them on takeover — the objects are epoch-persistent,
+    /// so a takeover re-dispatches branches, it never re-uploads data.
+    pub fn batch_refs(&self) -> Vec<ObjectRef> {
+        self.batch_refs.lock().unwrap().clone()
+    }
+
+    /// Still-resident params object for `generation`, if any: the
+    /// staged/pipelined one-epoch-late release slot, then cross-epoch's
+    /// lagged-retire queue, then the in-flight window. A takeover for
+    /// epoch `e` runs strictly before this peer computes `e + 1`, so a
+    /// miss means the recovery window already aged out.
+    fn current_params_ref(&self, generation: u64) -> Option<ObjectRef> {
+        if let Some((g, r)) = self.pending_release.lock().unwrap().as_ref() {
+            if *g == generation {
+                return Some(r.clone());
+            }
+        }
+        if let Some((_, r)) = self
+            .retired
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(g, _)| *g == generation)
+        {
+            return Some(r.clone());
+        }
+        self.inflight
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|ep| ep.generation == generation)
+            .map(|ep| ep.params_ref.clone())
+    }
+
+    /// Recompute a *dead* peer's epoch-`epoch` fold on this peer's lane
+    /// (partition takeover, `--on-peer-failure takeover`). Nothing is
+    /// re-uploaded: the dead peer's batch objects are epoch-persistent
+    /// and the params object v(`epoch`) is this peer's still-resident
+    /// reference (re-uploading would double-commit the params delta
+    /// chain). The fan-out invokes the *dead peer's* registered Lambda
+    /// — its handler seeds the wire plane's per-branch quantizer with
+    /// the dead rank — so the folded gradient is byte-identical to the
+    /// one the dead peer would have produced: same branch order, same
+    /// f64 accumulation, same quorum.
+    pub fn compute_takeover(
+        &self,
+        epoch: usize,
+        dead_rank: usize,
+        batch_refs: &[ObjectRef],
+    ) -> Result<OffloadResult> {
+        if batch_refs.is_empty() {
+            return Err(Error::Faas(format!(
+                "peer {}: takeover of peer {dead_rank}'s empty partition",
+                self.peer
+            )));
+        }
+        let generation = epoch as u64;
+        let params_ref = self.current_params_ref(generation).ok_or_else(|| {
+            Error::Faas(format!(
+                "peer {}: params v{generation} already released — \
+                 takeover window for peer {dead_rank} missed",
+                self.peer
+            ))
+        })?;
+        let dead_function =
+            format!("grad-{}-peer{}", self.runtime.entry.key, dead_rank);
+        let mut pipe = PipelinedMap::new(
+            self.scheduler.clone(),
+            self.platform.clone(),
+            self.peer,
+            &dead_function,
+            batch_refs.len(),
+            self.concurrency,
+            self.retry,
+        )?
+        .with_generation(generation)
+        .with_quorum(self.effective_quorum(batch_refs.len()));
+        let mut acc = GradAccumulator::new();
+        let mut loss_sum = 0f64;
+        let mut fold_err: Option<Error> = None;
+        for (idx, batch_ref) in batch_refs.iter().enumerate() {
+            pipe.submit(
+                branch_payload(
+                    &params_ref,
+                    batch_ref,
+                    generation,
+                    self.idx_tag_for(dead_rank, idx),
+                ),
+                None,
+            );
+        }
+        while let Some((_, out)) = pipe.next_output() {
+            if let Err(e) = self.fold_branch(&out, &mut acc, &mut loss_sum) {
+                fold_err = Some(e);
+                break;
+            }
+        }
+        let finish = pipe.finish();
+        // the takeover's parked gradients land in the *dead peer's*
+        // scratch bucket under the recovered generation (its handler
+        // parked them). Drain both lanes — the takeover branches on
+        // this peer's, any straggling pre-death branches on the dead
+        // peer's evicted lane — then sweep that generation; the
+        // trainer's final orphan sweep catches anything parked later.
+        self.scheduler.await_generation_drained(self.peer, generation);
+        self.scheduler.await_generation_drained(dead_rank, generation);
+        if self.sweep_scratch {
+            self.store
+                .sweep_generation(&crate::store::peer_bucket(dead_rank), generation);
+        }
+        let report = match (fold_err, finish) {
+            (Some(e), _) | (None, Err(e)) => return Err(e),
+            (None, Ok(r)) => r,
+        };
+        Ok(OffloadResult {
+            loss: (loss_sum / self.folded_count(batch_refs.len()) as f64) as f32,
+            grads: acc.mean()?,
+            wall: report.wall,
+            measured_wall: report.measured_wall,
+            billed: report.billed,
+            cost_usd: report.cost_usd,
+            invocations: report.invocations,
+            cold_starts: report.cold_starts,
+            retries: report.retries,
+            stragglers: report.stragglers,
+            overlap: Duration::ZERO,
+        })
     }
 
     /// Epochs dispatched but not yet collected (cross-epoch mode).
@@ -561,8 +827,12 @@ impl ServerlessOffload {
         if self.sweep_scratch {
             self.store.sweep_generation(&self.bucket, generation);
         }
-        let lagged = self.pending_release.lock().unwrap().replace(params_ref);
-        if let Some(lagged_ref) = lagged {
+        let lagged = self
+            .pending_release
+            .lock()
+            .unwrap()
+            .replace((generation, params_ref));
+        if let Some((_, lagged_ref)) = lagged {
             self.release_params(&lagged_ref);
         }
         outcome
@@ -613,23 +883,21 @@ impl ServerlessOffload {
             &self.function,
             batch_refs.len(),
             self.concurrency,
-            RetryPolicy::default(),
+            self.retry,
         )?
-        .with_generation(generation);
+        .with_generation(generation)
+        .with_quorum(self.effective_quorum(batch_refs.len()));
         let params_ref = self.upload_params(params, generation)?;
         // the live params version must survive cache pressure until its
         // generation retires — tail branches re-reading an evicted entry
         // would still be *correct* (the lagged sweep keeps the object),
         // but the exactly-one-decode-per-epoch invariant would not hold
         self.decode_cache.pin(&params_ref);
+        // duplicated deliveries race the real fan-out on the shared pool
+        self.inject_duplicates(&params_ref, &batch_refs, generation);
         for (idx, batch_ref) in batch_refs.iter().enumerate() {
             pipe.submit(
-                branch_payload(
-                    &params_ref,
-                    batch_ref,
-                    generation,
-                    self.wire.grads_on().then_some(idx as u64),
-                ),
+                branch_payload(&params_ref, batch_ref, generation, self.idx_tag(idx)),
                 None,
             );
         }
@@ -690,7 +958,7 @@ impl ServerlessOffload {
         Ok((
             epoch,
             OffloadResult {
-                loss: (loss_sum / batches as f64) as f32,
+                loss: (loss_sum / self.folded_count(batches) as f64) as f32,
                 grads: acc.mean()?,
                 wall: report.wall,
                 measured_wall: report.measured_wall,
@@ -698,6 +966,8 @@ impl ServerlessOffload {
                 cost_usd: report.cost_usd,
                 invocations: report.invocations,
                 cold_starts: report.cold_starts,
+                retries: report.retries,
+                stragglers: report.stragglers,
                 overlap,
             },
         ))
@@ -764,7 +1034,7 @@ impl ServerlessOffload {
             }
         }
         let pending = self.pending_release.lock().unwrap().take();
-        if let Some(params_ref) = pending {
+        if let Some((_, params_ref)) = pending {
             self.release_params(&params_ref);
         }
     }
@@ -801,15 +1071,10 @@ impl ServerlessOffload {
         let items: Vec<Bytes> = batch_refs
             .iter()
             .enumerate()
-            .map(|(idx, r)| {
-                branch_payload(
-                    params_ref,
-                    r,
-                    generation,
-                    self.wire.grads_on().then_some(idx as u64),
-                )
-            })
+            .map(|(idx, r)| branch_payload(params_ref, r, generation, self.idx_tag(idx)))
             .collect();
+        // duplicated deliveries race the real fan-out on the shared pool
+        self.inject_duplicates(params_ref, batch_refs, generation);
         // dynamic state machine: one branch per batch, dispatched
         // across the shared worker pool
         let sm = StateMachine::parallel_batches(
@@ -818,22 +1083,27 @@ impl ServerlessOffload {
             items,
             vec![],
             self.concurrency,
-        );
+        )
+        .with_retry(self.retry);
         let report = sm.execute_with(&self.platform, self.scheduler.executor())?;
         // collect + average (streaming: one running sum instead of
-        // materializing every per-batch gradient)
+        // materializing every per-batch gradient). Under a fold quorum
+        // only the first k outputs fold; the staged wall stays the full
+        // wave (every branch still ran in it) — the quorum's wall
+        // truncation is a property of the streaming collectors.
         let outputs = report
             .outputs
             .first()
             .ok_or_else(|| Error::Faas("state machine produced no outputs".into()))?;
+        let folded = self.folded_count(outputs.len());
         let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
-        for out in outputs {
+        for out in outputs.iter().take(folded) {
             self.fold_branch(out, &mut acc, &mut loss_sum)?;
         }
         let avg = acc.mean()?;
         Ok(OffloadResult {
-            loss: (loss_sum / outputs.len() as f64) as f32,
+            loss: (loss_sum / folded as f64) as f32,
             grads: avg,
             wall: report.wall,
             measured_wall: report.measured_wall,
@@ -841,6 +1111,8 @@ impl ServerlessOffload {
             cost_usd: report.cost_usd,
             invocations: report.invocations,
             cold_starts: report.cold_starts,
+            retries: report.retries,
+            stragglers: outputs.len() - folded,
             overlap: Duration::ZERO,
         })
     }
@@ -864,19 +1136,17 @@ impl ServerlessOffload {
             &self.function,
             batch_refs.len(),
             self.concurrency,
-            RetryPolicy::default(),
+            self.retry,
         )?
-        .with_generation(generation);
+        .with_generation(generation)
+        .with_quorum(self.effective_quorum(batch_refs.len()));
+        // duplicated deliveries race the real fan-out on the shared pool
+        self.inject_duplicates(params_ref, batch_refs, generation);
         let mut acc = GradAccumulator::new();
         let mut loss_sum = 0f64;
         for (idx, batch_ref) in batch_refs.iter().enumerate() {
             pipe.submit(
-                branch_payload(
-                    params_ref,
-                    batch_ref,
-                    generation,
-                    self.wire.grads_on().then_some(idx as u64),
-                ),
+                branch_payload(params_ref, batch_ref, generation, self.idx_tag(idx)),
                 None,
             );
             // drain whatever already landed: collection overlaps dispatch
@@ -889,7 +1159,7 @@ impl ServerlessOffload {
         }
         let report = pipe.finish()?;
         Ok(OffloadResult {
-            loss: (loss_sum / batch_refs.len() as f64) as f32,
+            loss: (loss_sum / self.folded_count(batch_refs.len()) as f64) as f32,
             grads: acc.mean()?,
             wall: report.wall,
             measured_wall: report.measured_wall,
@@ -897,6 +1167,8 @@ impl ServerlessOffload {
             cost_usd: report.cost_usd,
             invocations: report.invocations,
             cold_starts: report.cold_starts,
+            retries: report.retries,
+            stragglers: report.stragglers,
             overlap: Duration::ZERO,
         })
     }

@@ -31,9 +31,8 @@ impl EpochBarrier {
     /// if the run aborts while parked — a failed peer must not leave the
     /// rest at the barrier forever.
     pub fn arrive_and_wait(&self, rank: usize, epoch: u64) -> Result<()> {
-        self.queue
-            .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))?;
-        self.queue.await_version(epoch * self.peers as u64)
+        self.arrive(rank, epoch)?;
+        self.queue.await_version(self.expected(epoch))
     }
 
     /// As above but with a timeout; `Ok(false)` if the barrier never
@@ -44,10 +43,35 @@ impl EpochBarrier {
         epoch: u64,
         timeout: Duration,
     ) -> Result<bool> {
+        self.arrive(rank, epoch)?;
+        self.wait_timeout(epoch, timeout)
+    }
+
+    /// Publish `rank`'s arrival for `epoch` without waiting. A waiter
+    /// that re-tries its timed wait must arrive exactly once — the
+    /// barrier predicate counts publishes.
+    pub fn arrive(&self, rank: usize, epoch: u64) -> Result<()> {
         self.queue
-            .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))?;
+            .publish(Message::new(rank, epoch, Bytes::from_static(b"done")))
+    }
+
+    /// Publish an arrival *on behalf of* a dead peer so the cumulative
+    /// predicate still fills. The membership table claims each
+    /// (peer, epoch) proxy exactly once before calling this.
+    pub fn proxy_arrive(&self, rank: usize, epoch: u64) -> Result<()> {
         self.queue
-            .await_version_timeout(epoch * self.peers as u64, timeout)
+            .publish(Message::new(rank, epoch, Bytes::from_static(b"proxy")))
+    }
+
+    /// Wait (without arriving) until epoch `epoch`'s barrier fills;
+    /// `Ok(false)` on timeout, an abort error if the run aborted first.
+    pub fn wait_timeout(&self, epoch: u64, timeout: Duration) -> Result<bool> {
+        self.queue.await_version_timeout(self.expected(epoch), timeout)
+    }
+
+    /// Cumulative arrivals the barrier expects after epoch `epoch`.
+    pub fn expected(&self, epoch: u64) -> u64 {
+        epoch * self.peers as u64
     }
 
     /// Completed arrivals so far (all epochs).

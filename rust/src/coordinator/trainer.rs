@@ -9,15 +9,17 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::gradient::GradientWire;
+use super::membership::Membership;
 use super::peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
 use crate::broker::{Broker, FaultPlan, QueueMode, DEFAULT_MESSAGE_CAP};
 use crate::compress::{codec_for, WirePlane};
-use crate::config::{Backend, TrainConfig};
+use crate::config::{Backend, FailurePolicy, TrainConfig};
 use crate::data::{DatasetKind, SyntheticDataset};
 use crate::error::{Error, Result};
-use crate::faas::{BranchScheduler, Executor, FaasPlatform, SchedulerStats};
+use crate::faas::{BranchScheduler, Executor, FaasPlatform, RetryPolicy, SchedulerStats};
+use crate::harness::faults::FaultPlanSpec;
 use crate::metrics::{MetricsRegistry, Stage, StageSummary};
 use crate::perfmodel;
 use crate::runtime::{Engine, ModelRuntime};
@@ -224,6 +226,34 @@ impl Cluster {
         broker.declare(&control_queue(), QueueMode::Fifo)?;
         let barrier = Arc::new(EpochBarrier::new(&broker, cfg.peers)?);
 
+        // ---- membership + fault plan --------------------------------------
+        // the injected-fault plan (kills / branch delays / duplicate
+        // deliveries) is resolved once for the whole cluster
+        let fault_plan = {
+            let spec = FaultPlanSpec::parse(&cfg.fault_plan)?;
+            if spec.is_empty() {
+                None
+            } else {
+                Some(Arc::new(spec.resolve(cfg.peers, cfg.epochs)?))
+            }
+        };
+        // the membership plane arms only when something can actually die
+        // survivably: a non-abort policy, or an active fault plan. An
+        // unarmed table publishes no heartbeats and reaps nothing, so
+        // default runs keep their exact broker/message trace.
+        let armed = cfg.on_peer_failure != FailurePolicy::Abort || fault_plan.is_some();
+        let membership = Arc::new(Membership::new(
+            broker.clone(),
+            cfg.peers,
+            cfg.on_peer_failure,
+            Duration::from_millis(cfg.heartbeat_interval_ms),
+            Duration::from_millis(cfg.peer_timeout_ms),
+            armed,
+        )?);
+        // branch retry policy: seeded per-attempt jitter on top of the
+        // exponential backoff, shared by every peer's fan-outs
+        let retry = RetryPolicy::configured(cfg.lambda_retries, cfg.retry_backoff_ms, cfg.seed);
+
         // ---- spawn peers --------------------------------------------------
         // engine fusion counters are engine-lifetime monotonic and the
         // engine may be shared across runs: report this run's delta
@@ -252,7 +282,7 @@ impl Cluster {
                             })
                             .unwrap_or(1769)
                     };
-                    GradBackend::Serverless(ServerlessOffload::new(
+                    let mut offload = ServerlessOffload::new(
                         platform.clone(),
                         store.clone(),
                         runtime.clone(),
@@ -265,7 +295,13 @@ impl Cluster {
                         cfg.offload_mode,
                         cfg.sweep_scratch,
                         cfg.pipeline_depth,
-                    )?)
+                    )?;
+                    offload.set_retry(retry);
+                    offload.set_fold_quorum(cfg.fold_quorum);
+                    if let Some(plan) = &fault_plan {
+                        offload.set_faults(plan.clone());
+                    }
+                    GradBackend::Serverless(offload)
                 }
             };
             let mut peer = Peer::new(
@@ -280,25 +316,50 @@ impl Cluster {
                 barrier.clone(),
                 metrics.clone(),
             )?;
-            // fail fast: a peer that errors (or panics) aborts the
-            // broker, so peers parked on gradient waits or the epoch
-            // barrier wake with Error::Aborted instead of hanging
+            peer.set_membership(membership.clone());
+            if let Some(plan) = &fault_plan {
+                peer.set_faults(plan.clone());
+            }
+            // under a survivable policy (takeover/drop) a failed peer is
+            // declared dead *from its own thread* — survivors route
+            // around it immediately, the heartbeat timeout only has to
+            // catch hangs — and its scheduler lane is evicted so queued
+            // branches stop competing for pool slots. Otherwise keep the
+            // historical fail-fast: abort the broker so peers parked on
+            // gradient waits or the epoch barrier wake with
+            // Error::Aborted instead of hanging.
             let broker = broker.clone();
+            let thread_membership = membership.clone();
+            let thread_scheduler = scheduler.clone();
+            let survivable = armed && cfg.on_peer_failure != FailurePolicy::Abort;
             handles.push(std::thread::spawn(move || {
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                     || peer.run(),
                 ));
                 match outcome {
                     Ok(result) => {
-                        if let Err(e) = &result {
-                            if !matches!(e, Error::Aborted(_)) {
-                                broker.abort(&format!("peer {rank} failed: {e}"));
+                        match &result {
+                            Err(e) if !matches!(e, Error::Aborted(_)) => {
+                                if survivable {
+                                    thread_membership
+                                        .declare_dead(rank, &format!("peer {rank} failed: {e}"));
+                                    thread_scheduler.evict_peer(rank);
+                                } else {
+                                    broker.abort(&format!("peer {rank} failed: {e}"));
+                                }
                             }
+                            Err(_) => {}
+                            Ok(_) => thread_membership.mark_done(rank),
                         }
                         result
                     }
                     Err(_) => {
-                        broker.abort(&format!("peer {rank} panicked"));
+                        if survivable {
+                            thread_membership.declare_dead(rank, &format!("peer {rank} panicked"));
+                            thread_scheduler.evict_peer(rank);
+                        } else {
+                            broker.abort(&format!("peer {rank} panicked"));
+                        }
                         Err(Error::Broker(format!("peer {rank} thread panicked")))
                     }
                 }
@@ -322,9 +383,14 @@ impl Cluster {
                 *failure = Some(e);
             }
         };
-        for h in handles {
+        let survivable = armed && cfg.on_peer_failure != FailurePolicy::Abort;
+        for (rank, h) in handles.into_iter().enumerate() {
             match h.join() {
                 Ok(Ok(p)) => peers.push(p),
+                // under a survivable policy a declared-dead peer's error
+                // is a recorded death, not a run failure — the survivors
+                // carried the epoch to completion around it
+                Ok(Err(_)) if survivable && !membership.is_alive(rank) => {}
                 Ok(Err(e)) => record(&mut failure, e),
                 // unreachable in practice: the spawn wrapper catches
                 // peer panics and returns them as Ok(Err(..))
@@ -336,6 +402,17 @@ impl Cluster {
         }
         if let Some(e) = failure {
             return Err(e);
+        }
+        if peers.is_empty() {
+            let dead: Vec<String> = membership
+                .dead_peers()
+                .into_iter()
+                .map(|(r, why)| format!("peer {r}: {why}"))
+                .collect();
+            return Err(Error::Runtime(format!(
+                "no peer survived the run [{}]",
+                dead.join("; ")
+            )));
         }
         let wall = t0.elapsed();
 
@@ -360,6 +437,18 @@ impl Cluster {
         // scratch generation a sweep missed stays visible
         for rank in 0..cfg.peers {
             store.sweep_generation(&peer_bucket(rank), GEN_PERSISTENT);
+        }
+        // dead peers never ran their own teardown to the end of the run:
+        // straggling branches on their evicted lanes (and takeover
+        // fan-outs through their handlers) may have parked scratch after
+        // the per-epoch sweeps. Sweep every generation of every dead
+        // bucket so `store_objects` stays an invariant, and count what
+        // was actually reclaimed.
+        let mut orphans_swept = 0usize;
+        for (rank, _) in membership.dead_peers() {
+            for e in 1..=cfg.epochs as u64 {
+                orphans_swept += store.sweep_generation(&peer_bucket(rank), e);
+            }
         }
 
         // ---- scheduler / executor utilization ----------------------------
@@ -419,6 +508,27 @@ impl Cluster {
         metrics.set_counter("offload.predispatched_epochs", predispatched as u64);
         metrics.set_counter("offload.overlap_wall_us", overlap.as_micros() as u64);
         metrics.set_counter("broker.stale_drops", broker.stale_drops());
+        // elastic-membership plane: liveness traffic, deaths, and how the
+        // cluster routed around them
+        metrics.set_counter("membership.heartbeats", membership.heartbeats());
+        metrics.set_counter("membership.deaths", membership.deaths());
+        metrics.set_counter("membership.barrier_proxies", membership.barrier_proxies());
+        metrics.set_counter("membership.takeover_epochs", membership.takeover_epochs());
+        metrics.set_counter("membership.dropped_grads", membership.dropped_grads());
+        metrics.set_counter("membership.orphans_swept", orphans_swept as u64);
+        // k-of-n partial folds and the configured Lambda retry policy
+        metrics.set_counter("fold.quorum", cfg.fold_quorum as u64);
+        let stragglers: usize = peers.iter().map(|p| p.fold_stragglers).sum();
+        metrics.set_counter("fold.stragglers", stragglers as u64);
+        let retries: usize = peers.iter().map(|p| p.lambda_retries).sum();
+        metrics.set_counter("faas.retries", retries as u64);
+        metrics.set_counter("sched.lane_evictions", sched.lane_evictions);
+        // fault-injection accounting (all zero without --fault-plan)
+        if let Some(plan) = &fault_plan {
+            metrics.set_counter("fault.kills_fired", plan.kills_fired());
+            metrics.set_counter("fault.delays_fired", plan.delays_fired());
+            metrics.set_counter("fault.dups_fired", plan.dups_fired());
+        }
 
         Ok(TrainReport {
             config: cfg.clone(),

@@ -125,6 +125,9 @@ struct Lane {
     in_flight: usize,
     cap: usize,
     served: u64,
+    /// Evicted lanes (dead peers) never dispatch; queued work was
+    /// dropped at eviction and new submissions are refused.
+    evicted: bool,
     /// Queued branches per generation (tagged submissions only).
     gen_queued: BTreeMap<u64, usize>,
     /// Released-to-pool branches per generation (tagged only).
@@ -138,6 +141,7 @@ impl Lane {
             in_flight: 0,
             cap: cap.max(1),
             served: 0,
+            evicted: false,
             gen_queued: BTreeMap::new(),
             gen_inflight: BTreeMap::new(),
         }
@@ -173,6 +177,8 @@ struct SchedState {
     /// Priority-lane events: front-of-lane submissions plus straggler
     /// lane promotions at the drain barrier.
     lane_promotions: u64,
+    /// Lanes evicted because their peer was declared dead.
+    lane_evictions: u64,
     /// Peer rank per dispatch, in dispatch order (tests/fairness audits;
     /// off by default — it grows with every branch).
     dispatch_log: Option<Vec<usize>>,
@@ -193,7 +199,8 @@ impl SchedState {
         if self.in_flight_total >= pool_cap {
             return None;
         }
-        let eligible = |lane: &Lane| !lane.queue.is_empty() && lane.in_flight < lane.cap;
+        let eligible =
+            |lane: &Lane| !lane.evicted && !lane.queue.is_empty() && lane.in_flight < lane.cap;
         // coalescing hint: if the last release opened a same-generation
         // burst and the lane's next branch continues it, skip the
         // rotation — one epoch's branches then hit the worker pool (and
@@ -310,6 +317,9 @@ pub struct SchedulerStats {
     /// ([`BranchScheduler::submit_detached_prio`]) plus straggler lane
     /// promotions at the generation drain barrier.
     pub lane_promotions: u64,
+    /// Lanes evicted because their peer was declared dead
+    /// ([`BranchScheduler::evict_peer`]).
+    pub lane_evictions: u64,
 }
 
 /// Cluster-wide admission control over the shared [`Executor`].
@@ -354,6 +364,7 @@ impl BranchScheduler {
                 peak_inflight_gens: 0,
                 burst: None,
                 lane_promotions: 0,
+                lane_evictions: 0,
                 dispatch_log: None,
             }),
             drained: Condvar::new(),
@@ -442,6 +453,53 @@ impl BranchScheduler {
         }
     }
 
+    /// Evict a dead peer's lane: queued (undispatched) branches are
+    /// dropped — their result receivers observe a disconnect — the lane
+    /// is removed from dispatch, and later submissions to it are
+    /// refused. Branches already released to the pool drain naturally.
+    /// Called by the cluster after the dead peer's thread has exited,
+    /// so nothing is concurrently collecting the dropped branches.
+    /// Returns the number of queued branches dropped.
+    pub fn evict_peer(&self, rank: usize) -> usize {
+        let dropped = {
+            let mut st = self.state.lock().unwrap();
+            let Some(lane) = st.lanes.get_mut(&rank) else {
+                return 0;
+            };
+            if lane.evicted {
+                return 0;
+            }
+            lane.evicted = true;
+            let dropped = lane.queue.len();
+            lane.queue.clear();
+            lane.gen_queued.clear();
+            st.queued -= dropped;
+            st.lane_evictions += 1;
+            // a burst pinned to this lane must not stall the rotation
+            if st.burst.map(|(r, _, _)| r) == Some(rank) {
+                st.burst = None;
+            }
+            dropped
+        };
+        // generation occupancy changed: wake drain barriers, then hand
+        // the rotation to surviving lanes
+        self.drained.notify_all();
+        self.pump();
+        dropped
+    }
+
+    /// Undo [`Self::evict_peer`] (a re-admitted peer in a future
+    /// elastic-join flow); the lane resumes dispatching new work.
+    pub fn readmit_peer(&self, rank: usize) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(lane) = st.lanes.get_mut(&rank) {
+                lane.evicted = false;
+            }
+        }
+        self.pump();
+    }
+
     /// Hold all dispatch (queued branches accumulate in lanes).
     pub fn pause(&self) {
         self.state.lock().unwrap().paused = true;
@@ -477,6 +535,10 @@ impl BranchScheduler {
                 st.rr.push_back(rank);
             }
             let lane = st.lanes.get_mut(&rank).unwrap();
+            if lane.evicted {
+                // dead peer: drop the job; its receiver sees a disconnect
+                return;
+            }
             lane.queue.push_back((generation, Box::new(f)));
             if let Some(g) = generation {
                 *lane.gen_queued.entry(g).or_insert(0) += 1;
@@ -511,6 +573,9 @@ impl BranchScheduler {
             }
             let overtakes = st.queued > 0;
             let lane = st.lanes.get_mut(&rank).unwrap();
+            if lane.evicted {
+                return;
+            }
             lane.queue.push_front((generation, Box::new(f)));
             if let Some(g) = generation {
                 *lane.gen_queued.entry(g).or_insert(0) += 1;
@@ -683,6 +748,7 @@ impl BranchScheduler {
             exec_threads: self.executor.threads(),
             exec_peak_busy: self.executor.peak_busy(),
             lane_promotions: st.lane_promotions,
+            lane_evictions: st.lane_evictions,
         }
     }
 
@@ -708,9 +774,15 @@ impl BranchScheduler {
 #[derive(Default)]
 pub struct MapCollector {
     concurrency: usize,
+    /// Fold quorum `k`: only the first `k` branches (by branch index)
+    /// are folded into the wall and yielded; the rest are stragglers —
+    /// executed and billed, but off the modeled critical path. 0 = all.
+    quorum: usize,
     pending: BTreeMap<usize, (Result<Invocation>, u32)>,
     next: usize,
     landed: usize,
+    yielded: usize,
+    stragglers: usize,
     walls: Vec<Duration>,
     billed: Duration,
     cost_usd: f64,
@@ -723,6 +795,22 @@ pub struct MapCollector {
 impl MapCollector {
     pub fn new(concurrency: usize) -> Self {
         Self { concurrency: concurrency.max(1), ..Default::default() }
+    }
+
+    /// Fold only the first `k` branches (by branch index) into the
+    /// modeled wall / yielded outputs; later branches are counted as
+    /// [`ExecutionReport::stragglers`]. Deterministic by construction —
+    /// "first k by index", not "first k to land", so the folded
+    /// gradient is identical across pool sizes and timings. `k = 0`
+    /// (the default) folds everything.
+    pub fn with_quorum(mut self, k: usize) -> Self {
+        self.set_quorum(k);
+        self
+    }
+
+    /// In-place form of [`Self::with_quorum`].
+    pub fn set_quorum(&mut self, k: usize) {
+        self.quorum = k;
     }
 
     /// Branches landed so far (any order).
@@ -753,9 +841,16 @@ impl MapCollector {
                     if !inv.cold_start.is_zero() {
                         self.cold_starts += 1;
                     }
-                    self.walls.push(inv.wall());
                     self.billed += inv.billed;
                     self.cost_usd += inv.cost_usd;
+                    if self.quorum > 0 && self.yielded >= self.quorum {
+                        // straggler: billed honestly, but neither on the
+                        // modeled critical path nor in the fold
+                        self.stragglers += 1;
+                        continue;
+                    }
+                    self.yielded += 1;
+                    self.walls.push(inv.wall());
                     return Some((idx, inv.output));
                 }
                 Err(e) => {
@@ -784,6 +879,7 @@ impl MapCollector {
             invocations: self.invocations,
             cold_starts: self.cold_starts,
             retries: self.retries,
+            stragglers: self.stragglers,
         })
     }
 }
@@ -868,6 +964,13 @@ impl PipelinedMap {
     pub fn with_generation(mut self, generation: u64) -> Self {
         assert_eq!(self.submitted, 0, "set the generation before submitting");
         self.generation = Some(generation);
+        self
+    }
+
+    /// Apply a fold quorum to this fan-out's collector (see
+    /// [`MapCollector::with_quorum`]); `k = 0` folds everything.
+    pub fn with_quorum(mut self, k: usize) -> Self {
+        self.collector.set_quorum(k);
         self
     }
 
@@ -1209,6 +1312,74 @@ mod tests {
         c.push(2, (Err(Error::Faas("boom".into())), 3));
         let report = c.finish();
         assert!(report.is_err(), "branch error must win over the report");
+    }
+
+    #[test]
+    fn evicted_lane_drops_queue_and_refuses_new_work() {
+        let sched = BranchScheduler::new(Arc::new(Executor::new(1)), true);
+        sched.register_peer(0, 8);
+        sched.register_peer(1, 8);
+        sched.pause();
+        let ran = Arc::new(AtomicUsize::new(0));
+        for rank in [0usize, 1] {
+            for _ in 0..2 {
+                let ran = ran.clone();
+                sched.submit_detached_tagged(rank, Some(1), move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }
+        assert_eq!(sched.evict_peer(1), 2, "both queued branches dropped");
+        assert_eq!(sched.evict_peer(1), 0, "idempotent");
+        // the dead peer's generation is drained (nothing will run it)
+        sched.await_generation_drained(1, 1);
+        // new work for the dead peer is refused
+        let orphan = sched.submit(1, || 1);
+        assert!(orphan.join().is_err(), "evicted lane must refuse work");
+        sched.resume();
+        await_completed(&sched, 2);
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "survivor lane unaffected");
+        assert_eq!(sched.stats().lane_evictions, 1);
+        // re-admission restores dispatch
+        sched.readmit_peer(1);
+        assert_eq!(sched.submit(1, || 7).join().unwrap(), 7);
+    }
+
+    #[test]
+    fn quorum_folds_first_k_and_bills_stragglers() {
+        let inv = |ms: u64| Invocation {
+            function: "f".into(),
+            output: Bytes::from_static(b"o"),
+            measured: Duration::from_millis(ms),
+            billed: Duration::from_millis(ms),
+            cold_start: Duration::ZERO,
+            memory_mb: 512,
+            cost_usd: 1.0,
+        };
+        let mut c = MapCollector::new(64).with_quorum(2);
+        for i in 0..4 {
+            c.push(i, (Ok(inv(10)), 1));
+        }
+        let mut got = Vec::new();
+        while let Some((idx, _)) = c.pop_ready() {
+            got.push(idx);
+        }
+        assert_eq!(got, vec![0, 1], "only the first k yield");
+        let r = c.finish().unwrap();
+        assert_eq!(r.stragglers, 2);
+        assert_eq!(r.invocations, 4, "stragglers still execute");
+        assert_eq!(r.billed, Duration::from_millis(40), "and bill honestly");
+        assert_eq!(r.cost_usd, 4.0);
+        assert_eq!(r.wall, Duration::from_millis(10), "wall spans the quorum only");
+        // quorum 0 = fold everything (the byte-identical default)
+        let mut all = MapCollector::new(64);
+        for i in 0..4 {
+            all.push(i, (Ok(inv(10)), 1));
+        }
+        while all.pop_ready().is_some() {}
+        let r = all.finish().unwrap();
+        assert_eq!(r.stragglers, 0);
+        assert_eq!(r.wall, Duration::from_millis(10));
     }
 
     #[test]

@@ -35,15 +35,62 @@ use super::lambda::{FaasPlatform, Invocation};
 use crate::error::{Error, Result};
 
 /// Retry policy for transient task failures (Step Functions' `Retry`).
+///
+/// Configured per run via `--lambda-retries` / `--retry-backoff-ms`;
+/// the default (3 attempts, no backoff) matches the policy that was
+/// hardcoded before the knobs existed, so default runs are unchanged.
 #[derive(Debug, Clone, Copy)]
 pub struct RetryPolicy {
+    /// Total attempts (the first try counts; minimum 1).
     pub max_attempts: u32,
+    /// Base sleep before the first retry; attempt `k` waits
+    /// `backoff * 2^(k-1)` plus seeded jitter. Measured time only —
+    /// modeled walls never include backoff sleeps.
+    pub backoff: Duration,
+    /// Seed for the deterministic jitter (same seed → same delays).
+    pub jitter_seed: u64,
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        Self { max_attempts: 3 }
+        Self { max_attempts: 3, backoff: Duration::ZERO, jitter_seed: 0 }
     }
+}
+
+impl RetryPolicy {
+    /// Policy from the config knobs, with a per-peer jitter seed so
+    /// colliding retries from different peers decorrelate.
+    pub fn configured(max_attempts: u32, backoff_ms: u64, jitter_seed: u64) -> Self {
+        Self {
+            max_attempts: max_attempts.max(1),
+            backoff: Duration::from_millis(backoff_ms),
+            jitter_seed,
+        }
+    }
+
+    /// Sleep owed before retry attempt `attempt` (1-based over
+    /// retries): exponential base plus jitter in `[0, base/2]`.
+    pub fn backoff_delay(&self, attempt: u32) -> Duration {
+        if self.backoff.is_zero() || attempt == 0 {
+            return Duration::ZERO;
+        }
+        let base = self.backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(10));
+        let half = base.as_nanos() as u64 / 2;
+        let jitter = if half == 0 {
+            0
+        } else {
+            jitter_hash(self.jitter_seed ^ u64::from(attempt)) % (half + 1)
+        };
+        base + Duration::from_nanos(jitter)
+    }
+}
+
+/// splitmix64 — a tiny stateless hash for deterministic retry jitter.
+fn jitter_hash(state: u64) -> u64 {
+    let mut z = state.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
 }
 
 /// A state in the machine.
@@ -75,6 +122,9 @@ pub struct ExecutionReport {
     pub invocations: usize,
     pub cold_starts: usize,
     pub retries: usize,
+    /// Branches beyond a fold quorum: executed and billed, but excluded
+    /// from the modeled wall and the folded output (k-of-n folds).
+    pub stragglers: usize,
 }
 
 /// A dynamically-built state machine.
@@ -260,6 +310,12 @@ pub(crate) fn invoke_with_retry(
     let max = retry.max_attempts.max(1);
     let mut last_err = None;
     for attempt in 0..max {
+        if attempt > 0 {
+            let delay = retry.backoff_delay(attempt);
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+        }
         let result = match prepared_cold {
             None => platform.invoke(function, payload, modeled),
             Some(cold) => {
@@ -437,7 +493,7 @@ mod tests {
         let failing: Handler = Arc::new(|_| Err(Error::Faas("always".into())));
         p.register(FunctionSpec::new("bad", 512, failing)).unwrap();
         let sm = StateMachine::new("r")
-            .with_retry(RetryPolicy { max_attempts: 2 })
+            .with_retry(RetryPolicy { max_attempts: 2, ..RetryPolicy::default() })
             .task("bad", Bytes::new(), None);
         assert!(sm.execute(&p).is_err());
     }
@@ -455,12 +511,30 @@ mod tests {
             &Bytes::new(),
             None,
             None,
-            RetryPolicy { max_attempts: 3 },
+            RetryPolicy { max_attempts: 3, ..RetryPolicy::default() },
         );
         assert!(res.is_err());
         assert_eq!(attempts, 3, "3 attempts made");
         assert_eq!(attempts - 1, 2, "recorded as 2 retries");
         assert_eq!(p.stats().errors, 3);
+    }
+
+    #[test]
+    fn backoff_is_exponential_deterministic_and_bounded() {
+        let p = RetryPolicy::configured(5, 100, 42);
+        let d1 = p.backoff_delay(1);
+        let d2 = p.backoff_delay(2);
+        let d3 = p.backoff_delay(3);
+        // exponential base, jitter bounded by half the base
+        assert!(d1 >= Duration::from_millis(100) && d1 <= Duration::from_millis(150));
+        assert!(d2 >= Duration::from_millis(200) && d2 <= Duration::from_millis(300));
+        assert!(d3 >= Duration::from_millis(400) && d3 <= Duration::from_millis(600));
+        // same seed, same delays
+        assert_eq!(d2, RetryPolicy::configured(5, 100, 42).backoff_delay(2));
+        // different seed, (almost surely) different jitter
+        assert_ne!(d2, RetryPolicy::configured(5, 100, 43).backoff_delay(2));
+        // no backoff configured = no sleep owed
+        assert_eq!(RetryPolicy::default().backoff_delay(3), Duration::ZERO);
     }
 
     #[test]

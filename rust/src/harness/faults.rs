@@ -1,0 +1,471 @@
+//! Deterministic fault injection for membership / robustness tests.
+//!
+//! A fault plan is a seeded, fully explicit schedule of failures —
+//! *kill* a peer at an epoch, *delay* a gradient branch, *duplicate* a
+//! branch delivery — parsed from a compact spec string
+//! (`--fault-plan`) and resolved against the concrete cluster shape
+//! before the run starts. Resolution is pure: the same spec, peer
+//! count, and epoch count always produce the same event list, so every
+//! failure mode is replayable byte-for-byte in tests and benches.
+//!
+//! Spec grammar (entries joined by `;`):
+//!
+//! | entry                          | effect                                    |
+//! |--------------------------------|-------------------------------------------|
+//! | `kill:peer1@2`                 | peer 1 exits at the start of epoch 2      |
+//! | `delay:peer0@3:5ms`            | every epoch-3 branch of peer 0 sleeps 5ms |
+//! | `delay:peer0.branch3@1:5ms`    | only branch 3 sleeps                      |
+//! | `dup:peer2.branch0@1`          | branch 0 is dispatched twice in epoch 1   |
+//! | `rate:kill=0.25,seed=7`        | seeded kills covering 25% of the peers    |
+//!
+//! Kills take effect in [`crate::coordinator::peer::Peer::run`];
+//! delays and duplicates are applied at the serverless branch dispatch
+//! site (the delay sleeps inside the Lambda handler, so it moves only
+//! the *measured* wall — modeled accounting is untouched — and a
+//! duplicate's second landing is suppressed before the fold so the
+//! gradient math never sees it).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// What a single fault event does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// The peer's training thread exits at the start of the epoch.
+    Kill,
+    /// The branch's Lambda invocation sleeps before executing.
+    Delay,
+    /// The branch is dispatched twice; the duplicate's result is
+    /// discarded deterministically before the fold.
+    Dup,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            Self::Kill => "kill",
+            Self::Delay => "delay",
+            Self::Dup => "dup",
+        }
+    }
+}
+
+/// One resolved fault: kind × peer × (optional branch) × epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub peer: usize,
+    /// Target branch for delay/dup; `None` hits every branch (delay
+    /// only — a blanket duplicate would double the whole epoch).
+    pub branch: Option<usize>,
+    /// 1-based training epoch the fault fires in.
+    pub epoch: u64,
+    /// Injected sleep for [`FaultKind::Delay`], in microseconds.
+    pub delay_us: u64,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:peer{}", self.kind.name(), self.peer)?;
+        if let Some(b) = self.branch {
+            write!(f, ".branch{b}")?;
+        }
+        write!(f, "@{}", self.epoch)?;
+        if self.kind == FaultKind::Delay {
+            write!(f, ":{}ms", self.delay_us / 1000)?;
+        }
+        Ok(())
+    }
+}
+
+/// A parsed-but-unresolved `--fault-plan`: explicit events plus an
+/// optional seeded kill-rate clause that expands once the cluster
+/// shape (peers, epochs) is known.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlanSpec {
+    explicit: Vec<FaultEvent>,
+    /// `(kill_rate, seed)` from a `rate:` clause.
+    rate: Option<(f64, u64)>,
+}
+
+impl FaultPlanSpec {
+    /// Parse a spec string; `""` is the empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| Error::Config(format!("bad fault entry {entry:?}")))?;
+            match kind {
+                "kill" => {
+                    let (peer, branch, epoch) = parse_target(rest)?;
+                    if branch.is_some() {
+                        return Err(Error::Config(format!(
+                            "kill targets a peer, not a branch: {entry:?}"
+                        )));
+                    }
+                    plan.explicit.push(FaultEvent {
+                        kind: FaultKind::Kill,
+                        peer,
+                        branch: None,
+                        epoch,
+                        delay_us: 0,
+                    });
+                }
+                "delay" => {
+                    let (target, ms) = rest.rsplit_once(':').ok_or_else(|| {
+                        Error::Config(format!("delay needs a duration: {entry:?}"))
+                    })?;
+                    let ms = ms.strip_suffix("ms").unwrap_or(ms);
+                    let ms: u64 = ms.parse().map_err(|_| {
+                        Error::Config(format!("bad fault delay duration {ms:?}"))
+                    })?;
+                    let (peer, branch, epoch) = parse_target(target)?;
+                    plan.explicit.push(FaultEvent {
+                        kind: FaultKind::Delay,
+                        peer,
+                        branch,
+                        epoch,
+                        delay_us: ms * 1000,
+                    });
+                }
+                "dup" => {
+                    let (peer, branch, epoch) = parse_target(rest)?;
+                    let branch = branch.ok_or_else(|| {
+                        Error::Config(format!("dup targets a specific branch: {entry:?}"))
+                    })?;
+                    plan.explicit.push(FaultEvent {
+                        kind: FaultKind::Dup,
+                        peer,
+                        branch: Some(branch),
+                        epoch,
+                        delay_us: 0,
+                    });
+                }
+                "rate" => {
+                    let mut kill_rate = None;
+                    let mut seed = 0u64;
+                    for kv in rest.split(',').map(str::trim) {
+                        match kv.split_once('=') {
+                            Some(("kill", v)) => {
+                                let r: f64 = v.parse().map_err(|_| {
+                                    Error::Config(format!("bad fault kill rate {v:?}"))
+                                })?;
+                                if !(0.0..=1.0).contains(&r) {
+                                    return Err(Error::Config(format!(
+                                        "fault kill rate {r} outside [0,1]"
+                                    )));
+                                }
+                                kill_rate = Some(r);
+                            }
+                            Some(("seed", v)) => {
+                                seed = v.parse().map_err(|_| {
+                                    Error::Config(format!("bad fault seed {v:?}"))
+                                })?;
+                            }
+                            _ => {
+                                return Err(Error::Config(format!(
+                                    "bad fault rate clause {kv:?}"
+                                )))
+                            }
+                        }
+                    }
+                    let kill_rate = kill_rate.ok_or_else(|| {
+                        Error::Config(format!("rate clause needs kill=<frac>: {entry:?}"))
+                    })?;
+                    plan.rate = Some((kill_rate, seed));
+                }
+                other => {
+                    return Err(Error::Config(format!("unknown fault kind {other:?}")))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// No entries at all?
+    pub fn is_empty(&self) -> bool {
+        self.explicit.is_empty() && self.rate.is_none()
+    }
+
+    /// Expand against the concrete cluster shape into a sorted,
+    /// deterministic event list. Rate-based kills pick distinct
+    /// victims among ranks `1..peers` (rank 0 is spared so the seeded
+    /// sweep always keeps the natural leader) and fire in seeded
+    /// epochs `1..=epochs`; the count is `floor(rate × peers)` capped
+    /// at `peers - 1` so at least one survivor remains.
+    pub fn resolve(&self, peers: usize, epochs: usize) -> Result<FaultPlan> {
+        let mut events = self.explicit.clone();
+        for ev in &events {
+            if ev.peer >= peers {
+                return Err(Error::Config(format!(
+                    "fault plan targets peer {} but the cluster has {peers}",
+                    ev.peer
+                )));
+            }
+            if ev.epoch == 0 || ev.epoch > epochs as u64 {
+                return Err(Error::Config(format!(
+                    "fault plan targets epoch {} outside 1..={epochs}",
+                    ev.epoch
+                )));
+            }
+        }
+        if let Some((rate, seed)) = self.rate {
+            let kills = ((rate * peers as f64).floor() as usize).min(peers.saturating_sub(1));
+            let mut rng = seed ^ 0x9e37_79b9_7f4a_7c15;
+            let mut victims: Vec<usize> = (1..peers).collect();
+            for k in 0..kills {
+                let pick = k + (splitmix(&mut rng) as usize) % (victims.len() - k).max(1);
+                victims.swap(k, pick);
+                let epoch = 1 + splitmix(&mut rng) % epochs.max(1) as u64;
+                events.push(FaultEvent {
+                    kind: FaultKind::Kill,
+                    peer: victims[k],
+                    branch: None,
+                    epoch,
+                    delay_us: 0,
+                });
+            }
+        }
+        events.sort();
+        events.dedup();
+        Ok(FaultPlan::new(events))
+    }
+}
+
+fn parse_target(s: &str) -> Result<(usize, Option<usize>, u64)> {
+    let (who, epoch) = s
+        .split_once('@')
+        .ok_or_else(|| Error::Config(format!("fault target needs @epoch: {s:?}")))?;
+    let epoch: u64 = epoch
+        .parse()
+        .map_err(|_| Error::Config(format!("bad fault epoch {epoch:?}")))?;
+    let (peer, branch) = match who.split_once('.') {
+        Some((p, b)) => {
+            let b = b
+                .strip_prefix("branch")
+                .and_then(|n| n.parse().ok())
+                .ok_or_else(|| Error::Config(format!("bad fault branch {b:?}")))?;
+            (p, Some(b))
+        }
+        None => (who, None),
+    };
+    let peer: usize = peer
+        .strip_prefix("peer")
+        .and_then(|n| n.parse().ok())
+        .ok_or_else(|| Error::Config(format!("bad fault peer {peer:?}")))?;
+    Ok((peer, branch, epoch))
+}
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A resolved fault schedule, consulted by the peer loop (kills) and
+/// the serverless branch dispatch (delays, duplicates). Counters track
+/// how many injections actually fired, surfaced as `fault.*` in the
+/// train report.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    kills_fired: AtomicU64,
+    delays_fired: AtomicU64,
+    dups_fired: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(events: Vec<FaultEvent>) -> Self {
+        Self { events, ..Default::default() }
+    }
+
+    /// The resolved schedule, sorted and deduplicated.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Canonical spec string for the resolved schedule — two plans
+    /// that replay identically render identically.
+    pub fn to_spec(&self) -> String {
+        let parts: Vec<String> = self.events.iter().map(|e| e.to_string()).collect();
+        parts.join(";")
+    }
+
+    /// Does `rank` die at the start of `epoch`? Fires the kill counter
+    /// on a hit (callers act on every hit exactly once).
+    pub fn should_kill(&self, rank: usize, epoch: u64) -> bool {
+        let hit = self
+            .events
+            .iter()
+            .any(|e| e.kind == FaultKind::Kill && e.peer == rank && e.epoch == epoch);
+        if hit {
+            self.kills_fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// The earliest epoch `rank` is scheduled to die in, if any.
+    pub fn kill_epoch(&self, rank: usize) -> Option<u64> {
+        self.events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Kill && e.peer == rank)
+            .map(|e| e.epoch)
+            .min()
+    }
+
+    /// Injected sleep for this branch invocation, if any (the longest
+    /// matching delay wins when a blanket and a targeted entry both
+    /// apply).
+    pub fn branch_delay_us(&self, rank: usize, epoch: u64, branch: usize) -> Option<u64> {
+        let us = self
+            .events
+            .iter()
+            .filter(|e| {
+                e.kind == FaultKind::Delay
+                    && e.peer == rank
+                    && e.epoch == epoch
+                    && (e.branch.is_none() || e.branch == Some(branch))
+            })
+            .map(|e| e.delay_us)
+            .max();
+        if us.is_some() {
+            self.delays_fired.fetch_add(1, Ordering::Relaxed);
+        }
+        us
+    }
+
+    /// Should this branch be dispatched twice?
+    pub fn duplicate(&self, rank: usize, epoch: u64, branch: usize) -> bool {
+        let hit = self.events.iter().any(|e| {
+            e.kind == FaultKind::Dup
+                && e.peer == rank
+                && e.epoch == epoch
+                && e.branch == Some(branch)
+        });
+        if hit {
+            self.dups_fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Does any delay/dup entry target `rank`'s branches at all? Used
+    /// to decide whether branch indices must ride in the payload.
+    pub fn targets_branches(&self, rank: usize) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.peer == rank && e.kind != FaultKind::Kill)
+    }
+
+    /// Kills that actually fired.
+    pub fn kills_fired(&self) -> u64 {
+        self.kills_fired.load(Ordering::Relaxed)
+    }
+
+    /// Branch delays that actually fired.
+    pub fn delays_fired(&self) -> u64 {
+        self.delays_fired.load(Ordering::Relaxed)
+    }
+
+    /// Branch duplicates that actually fired.
+    pub fn dups_fired(&self) -> u64 {
+        self.dups_fired.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let plan = FaultPlanSpec::parse(
+            "kill:peer1@2;delay:peer0@3:5ms;delay:peer0.branch3@1:2ms;dup:peer2.branch0@1",
+        )
+        .unwrap();
+        let plan = plan.resolve(4, 4).unwrap();
+        assert_eq!(plan.events().len(), 4);
+        assert!(plan.should_kill(1, 2));
+        assert!(!plan.should_kill(1, 1));
+        assert_eq!(plan.branch_delay_us(0, 3, 7), Some(5000));
+        assert_eq!(plan.branch_delay_us(0, 1, 3), Some(2000));
+        assert_eq!(plan.branch_delay_us(0, 1, 4), None);
+        assert!(plan.duplicate(2, 1, 0));
+        assert!(!plan.duplicate(2, 1, 1));
+        assert_eq!(plan.kills_fired(), 1);
+        assert_eq!(plan.delays_fired(), 2);
+        assert_eq!(plan.dups_fired(), 1);
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let plan = FaultPlanSpec::parse("").unwrap();
+        assert!(plan.is_empty());
+        assert!(plan.resolve(4, 4).unwrap().events().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        assert!(FaultPlanSpec::parse("explode:peer1@2").is_err());
+        assert!(FaultPlanSpec::parse("kill:peer1").is_err());
+        assert!(FaultPlanSpec::parse("kill:peer1.branch2@1").is_err());
+        assert!(FaultPlanSpec::parse("dup:peer1@1").is_err());
+        assert!(FaultPlanSpec::parse("delay:peer1@1").is_err());
+        assert!(FaultPlanSpec::parse("delay:peer1@1:banana").is_err());
+        assert!(FaultPlanSpec::parse("rate:kill=2.0").is_err());
+        assert!(FaultPlanSpec::parse("rate:seed=7").is_err());
+    }
+
+    #[test]
+    fn resolve_bounds_checks_the_cluster_shape() {
+        let plan = FaultPlanSpec::parse("kill:peer7@2").unwrap();
+        assert!(plan.resolve(4, 4).is_err());
+        let plan = FaultPlanSpec::parse("kill:peer1@9").unwrap();
+        assert!(plan.resolve(4, 4).is_err());
+    }
+
+    #[test]
+    fn seeded_rate_resolution_is_deterministic() {
+        let spec = FaultPlanSpec::parse("rate:kill=0.5,seed=7").unwrap();
+        let a = spec.resolve(8, 4).unwrap();
+        let b = spec.resolve(8, 4).unwrap();
+        assert_eq!(a.to_spec(), b.to_spec());
+        assert_eq!(a.events().len(), 4); // floor(0.5 * 8)
+        // rank 0 is always spared; victims are distinct
+        let mut victims: Vec<usize> = a.events().iter().map(|e| e.peer).collect();
+        assert!(!victims.contains(&0));
+        victims.sort_unstable();
+        victims.dedup();
+        assert_eq!(victims.len(), 4);
+        // a different seed picks a different schedule
+        let other = FaultPlanSpec::parse("rate:kill=0.5,seed=8")
+            .unwrap()
+            .resolve(8, 4)
+            .unwrap();
+        assert_ne!(a.to_spec(), other.to_spec());
+    }
+
+    #[test]
+    fn rate_always_leaves_a_survivor() {
+        let spec = FaultPlanSpec::parse("rate:kill=1.0,seed=1").unwrap();
+        let plan = spec.resolve(4, 4).unwrap();
+        assert_eq!(plan.events().len(), 3); // capped at peers - 1
+    }
+
+    #[test]
+    fn canonical_spec_roundtrips() {
+        let spec = "delay:peer0.branch3@1:2ms;dup:peer2.branch0@1;kill:peer1@2";
+        let plan = FaultPlanSpec::parse(spec).unwrap().resolve(4, 4).unwrap();
+        // to_spec renders sorted canonical form; reparsing it resolves
+        // to the identical schedule
+        let again = FaultPlanSpec::parse(&plan.to_spec())
+            .unwrap()
+            .resolve(4, 4)
+            .unwrap();
+        assert_eq!(plan.events(), again.events());
+    }
+}

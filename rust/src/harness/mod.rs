@@ -14,6 +14,7 @@
 
 pub mod bench;
 pub mod cloud_exps;
+pub mod faults;
 pub mod real_exps;
 pub mod report;
 

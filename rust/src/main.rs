@@ -10,7 +10,7 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use p2pless::config::{Backend, Compression, OffloadMode, SyncMode, TrainConfig};
+use p2pless::config::{Backend, Compression, FailurePolicy, OffloadMode, SyncMode, TrainConfig};
 use p2pless::coordinator::Cluster;
 use p2pless::error::{Error, Result};
 use p2pless::faas::pricing;
@@ -98,6 +98,32 @@ TRAIN OPTIONS:
     --exec-batch-wait-us N   fused-group collect window in microseconds
                              (default 500): how long a group waits to
                              fill before dispatching partial
+    --on-peer-failure P      abort | takeover | drop (default abort):
+                             what survivors do when a peer dies mid-run
+                             — abort the whole cluster (seed behavior),
+                             take over its batch partition via its
+                             epoch-persistent uploads, or drop it from
+                             the fold
+    --heartbeat-interval-ms N
+                             per-peer liveness heartbeat period
+                             (default 250)
+    --peer-timeout-ms N      silence after which a peer is declared
+                             dead (default 30000; must be >= the
+                             heartbeat interval)
+    --fold-quorum K          fold only the first K of N gradient
+                             branches per peer-epoch, by branch index;
+                             stragglers still execute and bill but are
+                             excluded from the fold (default 0 = all)
+    --fault-plan SPEC        deterministic fault injection: semicolon-
+                             separated events such as kill:peer1@2 /
+                             delay:peer0.branch3@1:5ms /
+                             dup:peer2.branch0@1, or the seeded form
+                             rate:kill=0.25,seed=7 (empty = off; any
+                             plan arms the membership plane)
+    --lambda-retries N       invocation attempts per lambda branch
+                             (default 3; 1 = fail fast)
+    --retry-backoff-ms N     base of the exponential retry backoff
+                             with seeded jitter (default 0 = immediate)
     --early-stop N           early-stopping patience (0 = off)
     --plateau N              ReduceLROnPlateau patience (0 = off)
     --seed N                 RNG seed
@@ -251,6 +277,27 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_num(args, "exec-batch-wait-us")? {
         cfg.exec_batch_wait_us = v;
     }
+    if let Some(v) = args.flags.get("on-peer-failure") {
+        cfg.on_peer_failure = FailurePolicy::parse(v)?;
+    }
+    if let Some(v) = parse_num(args, "heartbeat-interval-ms")? {
+        cfg.heartbeat_interval_ms = v;
+    }
+    if let Some(v) = parse_num(args, "peer-timeout-ms")? {
+        cfg.peer_timeout_ms = v;
+    }
+    if let Some(v) = parse_num(args, "fold-quorum")? {
+        cfg.fold_quorum = v;
+    }
+    if let Some(v) = args.flags.get("fault-plan") {
+        cfg.fault_plan = v.clone();
+    }
+    if let Some(v) = parse_num(args, "lambda-retries")? {
+        cfg.lambda_retries = v;
+    }
+    if let Some(v) = parse_num(args, "retry-backoff-ms")? {
+        cfg.retry_backoff_ms = v;
+    }
     if let Some(v) = parse_num(args, "early-stop")? {
         cfg.early_stop_patience = v;
     }
@@ -342,6 +389,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             c("store.pack_misses"),
             report.store_objects,
         );
+        if c("faas.retries") > 0 {
+            println!(
+                "lambda retries: {} extra attempts ({} max per branch, backoff {} ms)",
+                c("faas.retries"),
+                report.config.lambda_retries,
+                report.config.retry_backoff_ms,
+            );
+        }
         if report.config.wire_compression != Compression::None
             || report.config.params_delta_every > 0
         {
@@ -394,6 +449,38 @@ fn cmd_train(args: &Args) -> Result<()> {
                 c("broker.stale_drops"),
             );
         }
+    }
+    let c = |name| report.counter(name).unwrap_or(0);
+    let armed = report.config.on_peer_failure != FailurePolicy::Abort
+        || !report.config.fault_plan.is_empty();
+    if armed {
+        println!(
+            "membership ({} policy): {} heartbeats, {} deaths, {} barrier proxies, \
+             {} takeover epochs, {} gradients dropped, {} orphan objects swept",
+            report.config.on_peer_failure.name(),
+            c("membership.heartbeats"),
+            c("membership.deaths"),
+            c("membership.barrier_proxies"),
+            c("membership.takeover_epochs"),
+            c("membership.dropped_grads"),
+            c("membership.orphans_swept"),
+        );
+    }
+    if report.config.fold_quorum > 0 {
+        println!(
+            "fold quorum {}: {} straggler branches excluded from the fold",
+            c("fold.quorum"),
+            c("fold.stragglers"),
+        );
+    }
+    if !report.config.fault_plan.is_empty() {
+        println!(
+            "fault plan \"{}\": {} kills / {} delays / {} dups fired",
+            report.config.fault_plan,
+            c("fault.kills_fired"),
+            c("fault.delays_fired"),
+            c("fault.dups_fired"),
+        );
     }
     println!("wall: {:?}", report.wall);
     Ok(())

@@ -1,0 +1,415 @@
+//! The elastic-membership + fault-injection plane, end to end:
+//!
+//! - fault plans replay byte-stably (parse → resolve → canonical spec);
+//! - k-of-n partial folds are deterministic — "first k by branch
+//!   index", identical modeled outputs at any worker-thread count;
+//! - the epoch barrier no longer hangs on a dead peer: timed waits
+//!   reap the stale rank and back-fill proxy arrivals;
+//! - the historical fail-fast abort survives as the `abort` policy,
+//!   now with a deadline instead of an infinite park;
+//! - full clusters (real PJRT, artifact-gated) complete every epoch
+//!   when a peer is killed mid-run under `takeover` / `drop`, and the
+//!   takeover run reproduces the fault-free validation curve.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use p2pless::broker::Broker;
+use p2pless::config::{Backend, FailurePolicy, SyncMode, TrainConfig};
+use p2pless::coordinator::{Cluster, EpochBarrier, Membership};
+use p2pless::error::Error;
+use p2pless::faas::{
+    BranchScheduler, Executor, FaasPlatform, FunctionSpec, Handler, PipelinedMap,
+    RetryPolicy,
+};
+use p2pless::harness::faults::FaultPlanSpec;
+use p2pless::util::Bytes;
+
+// ---------------------------------------------------------------------------
+// fault-plan determinism (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// Parsing the same spec twice and resolving against the same cluster
+/// shape must produce identical schedules — and the canonical rendering
+/// round-trips through the parser.
+#[test]
+fn fault_plan_replay_is_byte_stable() {
+    let spec = "kill:peer1@2;delay:peer0.branch3@1:5ms;dup:peer2.branch0@1";
+    let a = FaultPlanSpec::parse(spec).unwrap().resolve(4, 3).unwrap();
+    let b = FaultPlanSpec::parse(spec).unwrap().resolve(4, 3).unwrap();
+    assert_eq!(a.to_spec(), b.to_spec());
+    assert_eq!(a.events(), b.events());
+    // canonical form parses back to the same schedule
+    let c = FaultPlanSpec::parse(&a.to_spec()).unwrap().resolve(4, 3).unwrap();
+    assert_eq!(c.to_spec(), a.to_spec());
+}
+
+/// The seeded rate form expands deterministically: same seed, same
+/// victims and epochs; rank 0 is always spared and at least one peer
+/// survives.
+#[test]
+fn rate_plan_resolves_deterministically() {
+    let resolve = || {
+        FaultPlanSpec::parse("rate:kill=0.5,seed=7")
+            .unwrap()
+            .resolve(8, 4)
+            .unwrap()
+    };
+    let a = resolve();
+    let b = resolve();
+    assert_eq!(a.to_spec(), b.to_spec());
+    assert_eq!(a.events().len(), 4, "floor(0.5 × 8) kills");
+    for e in a.events() {
+        assert_ne!(e.peer, 0, "rank 0 is spared by the seeded sweep");
+        assert!(e.epoch >= 1 && e.epoch <= 4);
+    }
+    // a different seed reshuffles the schedule
+    let other = FaultPlanSpec::parse("rate:kill=0.5,seed=8")
+        .unwrap()
+        .resolve(8, 4)
+        .unwrap();
+    assert_ne!(other.to_spec(), a.to_spec());
+}
+
+#[test]
+fn fault_plan_rejects_malformed_specs() {
+    for bad in [
+        "explode:peer1@2",          // unknown verb
+        "kill:peer0.branch1@2",     // kills target peers, not branches
+        "dup:peer1@2",              // dups need a specific branch
+        "delay:peer1@2",            // delays need a duration
+        "rate:seed=3",              // rate needs kill=<frac>
+        "rate:kill=1.5,seed=3",     // rate outside [0,1]
+        "kill:peer1",               // missing @epoch
+    ] {
+        assert!(FaultPlanSpec::parse(bad).is_err(), "accepted {bad:?}");
+    }
+    // resolve validates against the cluster shape
+    let spec = FaultPlanSpec::parse("kill:peer5@1").unwrap();
+    assert!(spec.resolve(4, 3).is_err(), "peer 5 of a 4-peer cluster");
+    let spec = FaultPlanSpec::parse("kill:peer1@9").unwrap();
+    assert!(spec.resolve(4, 3).is_err(), "epoch 9 of a 3-epoch run");
+}
+
+// ---------------------------------------------------------------------------
+// k-of-n fold quorum (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+fn echo() -> Handler {
+    Arc::new(|b: &Bytes| Ok(b.clone()))
+}
+
+fn platform(handler: Handler) -> Arc<FaasPlatform> {
+    let p = Arc::new(FaasPlatform::new(Duration::from_millis(1500)));
+    p.register(FunctionSpec::new("grad", 1024, handler)).unwrap();
+    p
+}
+
+/// The quorum is "first k by branch index", not "first k to land": the
+/// yielded branch set and every modeled number must be identical at any
+/// worker-thread count.
+#[test]
+fn quorum_fold_is_deterministic_across_thread_counts() {
+    let n = 12usize;
+    let k = 5usize;
+    let run = |threads: usize| {
+        let p = platform(echo());
+        let sched = BranchScheduler::new(Arc::new(Executor::new(threads)), true);
+        let mut pipe = PipelinedMap::new(
+            sched,
+            p,
+            0,
+            "grad",
+            n,
+            4,
+            RetryPolicy::default(),
+        )
+        .unwrap()
+        .with_quorum(k);
+        for i in 0..n {
+            pipe.submit(Bytes::from(vec![i as u8]), Some(Duration::from_millis(100)));
+        }
+        let mut yielded = Vec::new();
+        while let Some((idx, out)) = pipe.next_output() {
+            assert_eq!(out[0] as usize, idx, "branch payload must round-trip");
+            yielded.push(idx);
+        }
+        let r = pipe.finish().unwrap();
+        (yielded, r.wall, r.billed, r.cost_usd.to_bits(), r.invocations, r.stragglers)
+    };
+    let reference = run(1);
+    assert_eq!(reference.0, (0..k).collect::<Vec<_>>(), "first k by index");
+    assert_eq!(reference.5, n - k, "the rest are stragglers");
+    assert_eq!(reference.4, n, "stragglers still execute and bill");
+    for threads in [2usize, 8] {
+        assert_eq!(run(threads), reference, "quorum fold moved at {threads} threads");
+    }
+}
+
+/// `--fold-quorum 0` (the default) and any quorum >= n are the
+/// unquorumed path — byte-identical reports, no stragglers.
+#[test]
+fn quorum_zero_and_full_match_unquorumed() {
+    let n = 6usize;
+    let run = |quorum: usize| {
+        let p = platform(echo());
+        let sched = BranchScheduler::new(Arc::new(Executor::new(2)), true);
+        let mut pipe = PipelinedMap::new(
+            sched,
+            p,
+            0,
+            "grad",
+            n,
+            4,
+            RetryPolicy::default(),
+        )
+        .unwrap()
+        .with_quorum(quorum);
+        for i in 0..n {
+            pipe.submit(Bytes::from(vec![i as u8]), Some(Duration::from_millis(50)));
+        }
+        let mut count = 0usize;
+        while pipe.next_output().is_some() {
+            count += 1;
+        }
+        let r = pipe.finish().unwrap();
+        (count, r.wall, r.billed, r.cost_usd.to_bits(), r.stragglers)
+    };
+    let unquorumed = run(0);
+    assert_eq!(unquorumed.0, n);
+    assert_eq!(unquorumed.4, 0);
+    assert_eq!(run(n), unquorumed, "quorum == n must change nothing");
+    assert_eq!(run(n + 3), unquorumed, "quorum > n must change nothing");
+}
+
+// ---------------------------------------------------------------------------
+// epoch-barrier liveness (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// The satellite regression: pre-membership, a survivor parked on the
+/// cumulative barrier forever once a peer stopped arriving. With the
+/// armed table the timed wait reaps the stale rank and back-fills its
+/// proxy arrivals, epoch after epoch.
+#[test]
+fn barrier_timed_wait_reaps_dead_peer_and_backfills() {
+    let broker = Arc::new(Broker::default());
+    let m = Membership::new(
+        broker.clone(),
+        2,
+        FailurePolicy::Drop,
+        Duration::from_millis(5),
+        Duration::from_millis(30),
+        true,
+    )
+    .unwrap();
+    let barrier = EpochBarrier::new(&broker, 2).unwrap();
+    // peer 1 never beats and never arrives; rank 0 carries 3 epochs
+    for epoch in 1..=3u64 {
+        m.beat(0);
+        barrier.arrive(0, epoch).unwrap();
+        m.note_barrier_arrival(0, epoch);
+        m.fill_barrier(&barrier, epoch).unwrap();
+        let mut rounds = 0;
+        while !barrier.wait_timeout(epoch, m.wait_slice()).unwrap() {
+            m.reap().unwrap();
+            m.fill_barrier(&barrier, epoch).unwrap();
+            rounds += 1;
+            assert!(rounds < 100, "barrier {epoch} never filled");
+        }
+    }
+    assert_eq!(m.deaths(), 1, "peer 1 reaped exactly once");
+    assert!(!m.is_alive(1));
+    assert_eq!(m.barrier_proxies(), 3, "one proxy arrival per epoch");
+}
+
+/// Under the `abort` policy the same timed wait preserves the fail-fast
+/// contract of `cluster_abort.rs`: the reap aborts the broker, and a
+/// peer parked on the barrier wakes with `Error::Aborted` instead of
+/// hanging on the dead peer's deadline.
+#[test]
+fn stale_peer_under_abort_policy_releases_parked_survivor() {
+    let broker = Arc::new(Broker::default());
+    let m = Membership::new(
+        broker.clone(),
+        2,
+        FailurePolicy::Abort,
+        Duration::from_millis(5),
+        Duration::from_millis(30),
+        true,
+    )
+    .unwrap();
+    let barrier = Arc::new(EpochBarrier::new(&broker, 2).unwrap());
+    let b = barrier.clone();
+    let parked = std::thread::spawn(move || b.arrive_and_wait(1, 1));
+    // let rank 1 park, then let rank 0's heartbeat go stale
+    std::thread::sleep(Duration::from_millis(40));
+    m.beat(1);
+    let err = m.reap().unwrap_err();
+    assert!(matches!(err, Error::Aborted(_)), "reap must abort, got {err}");
+    assert!(broker.is_aborted());
+    let err = parked.join().unwrap().unwrap_err();
+    assert!(matches!(err, Error::Aborted(_)), "parked peer still hung: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// full clusters under injected faults (real PJRT, artifact-gated)
+// ---------------------------------------------------------------------------
+
+fn fault_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 3,
+        batch_size: 16,
+        epochs: 3,
+        lr: 0.05,
+        train_samples: 3 * 16 * 2,
+        val_samples: 64,
+        backend: Backend::Serverless,
+        sync: SyncMode::Synchronous,
+        artifacts_dir: common::artifacts_dir(),
+        // short deadlines so a hang regression fails fast instead of
+        // stalling the suite (death detection itself is prompt — the
+        // dying thread declares itself)
+        heartbeat_interval_ms: 20,
+        peer_timeout_ms: 5_000,
+        ..Default::default()
+    }
+}
+
+/// The tentpole acceptance: kill one peer mid-run; under `takeover` the
+/// survivors complete every epoch AND the successor recomputes the dead
+/// peer's partition through its registered lambda, so the leader's
+/// validation curve is the fault-free one.
+#[test]
+fn takeover_completes_all_epochs_with_reference_curve() {
+    require_artifacts!();
+    let reference = Cluster::with_engine(fault_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Takeover,
+        fault_plan: "kill:peer1@2".into(),
+        ..fault_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    // survivors carried the full epoch count; the dead peer's report is
+    // a recorded death, not a run failure
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.peers.len(), 2, "peer 1's thread died at epoch 2");
+    assert_eq!(rep.counter("membership.deaths"), Some(1));
+    assert_eq!(rep.counter("fault.kills_fired"), Some(1));
+    // epochs 2 and 3 recomputed on the dead peer's behalf
+    assert_eq!(rep.counter("membership.takeover_epochs"), Some(2));
+    // the takeover re-dispatches the dead peer's epoch-persistent batch
+    // refs through its registered function: same quantizer seeds, same
+    // fold width — the validation curve must match the fault-free run
+    assert_eq!(rep.val_curve.len(), reference.val_curve.len());
+    for ((e1, l1, _), (e2, l2, _)) in reference.val_curve.iter().zip(&rep.val_curve) {
+        assert_eq!(e1, e2);
+        assert!(
+            (l1 - l2).abs() < 1e-6,
+            "takeover diverged at epoch {e1}: {l1} vs {l2}"
+        );
+    }
+    // takeover fan-outs sweep their own scratch; the trainer sweeps the
+    // dead peer's orphans — the store still ends empty
+    assert_eq!(rep.store_objects, 0);
+}
+
+/// Same kill under `drop`: the run completes with the fold shrunk to
+/// the survivors (no takeover, gradients recorded as dropped).
+#[test]
+fn drop_policy_completes_with_shrunk_fold() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Drop,
+        fault_plan: "kill:peer1@2".into(),
+        ..fault_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.deaths"), Some(1));
+    assert_eq!(rep.counter("membership.takeover_epochs"), Some(0));
+    // 2 survivors × 2 epochs skip the dead peer's slot
+    assert_eq!(rep.counter("membership.dropped_grads"), Some(4));
+    assert_eq!(rep.store_objects, 0);
+}
+
+/// The `abort` policy (the default) preserves the seed's fail-fast
+/// semantics under an injected kill: the run errors out instead of
+/// routing around the death.
+#[test]
+fn abort_policy_fails_fast_on_injected_kill() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        fault_plan: "kill:peer1@2".into(),
+        ..fault_cfg()
+    };
+    let err = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("peer 1"),
+        "abort must surface the killed peer: {err}"
+    );
+}
+
+/// The instance backend takes over too: the successor re-batches the
+/// dead peer's raw partition with the dead peer's seed, reproducing the
+/// gradients it would have computed.
+#[test]
+fn instance_backend_takeover_matches_reference_curve() {
+    require_artifacts!();
+    let base = TrainConfig { backend: Backend::Instance, ..fault_cfg() };
+    let reference = Cluster::with_engine(base.clone(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Takeover,
+        fault_plan: "kill:peer2@2".into(),
+        ..base
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.takeover_epochs"), Some(2));
+    for ((e1, l1, _), (e2, l2, _)) in reference.val_curve.iter().zip(&rep.val_curve) {
+        assert_eq!(e1, e2);
+        assert!(
+            (l1 - l2).abs() < 1e-6,
+            "instance takeover diverged at epoch {e1}: {l1} vs {l2}"
+        );
+    }
+}
+
+/// k-of-n through the whole cluster: a serverless run with a fold
+/// quorum completes, counts its stragglers, and still learns (the loss
+/// denominators shrink to the folded branch count).
+#[test]
+fn cluster_fold_quorum_counts_stragglers() {
+    require_artifacts!();
+    let cfg = TrainConfig { fold_quorum: 1, ..fault_cfg() };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    // 2 batches per peer-epoch, quorum 1: one straggler each
+    assert_eq!(rep.counter("fold.stragglers"), Some(3 * 3));
+    assert_eq!(rep.counter("fold.quorum"), Some(1));
+    assert!(rep.mean_train_loss_last_epoch().unwrap().is_finite());
+}

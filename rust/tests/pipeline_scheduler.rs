@@ -305,7 +305,7 @@ fn pipelined_errors_and_panics_are_contained() {
             "grad",
             3,
             8,
-            RetryPolicy { max_attempts: 2 },
+            RetryPolicy { max_attempts: 2, ..RetryPolicy::default() },
         )
         .unwrap();
         pipe.submit(Bytes::from_static(b"ok1"), None);
