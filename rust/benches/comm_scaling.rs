@@ -8,6 +8,13 @@
 //! record; every value is integer-valued and content-independent, so
 //! regeneration is byte-stable). `BENCH_WIRE_ONLY=1` (CI) skips the
 //! threaded exchange and runs just the sweep.
+//!
+//! Third act: the **shard-plane sweep** — per-epoch bytes-on-wire, put
+//! counts and modeled transfer cost for a 1 MB params object cut into
+//! 20 shards, as the number of layers a generation actually touches
+//! grows, driven through the real `store::shard` upload path and
+//! emitted as `BENCH_shard_plane.json` (same byte-stability contract).
+//! `BENCH_SHARD_ONLY=1` (CI) runs just this sweep.
 
 use std::sync::Arc;
 
@@ -18,8 +25,12 @@ use p2pless::coordinator::GradientWire;
 use p2pless::faas::pricing;
 use p2pless::harness::bench::{header, Bench};
 use p2pless::perfmodel::{self, paper_model, PaperModel};
-use p2pless::store::ObjectStore;
-use p2pless::util::{Json, Rng};
+use p2pless::store::shard::{
+    upload_sharded, ShardPlane, ShardSpec, ShardState, SHARD_KIND_RAW,
+};
+use p2pless::store::{ObjectStore, PARAMS_BUCKET};
+use p2pless::util::bytes::f32s_to_bytes;
+use p2pless::util::{Bytes, Json, Rng};
 
 /// Integer pico-USD mirror of [`pricing`]'s transfer rate card, so the
 /// committed JSON carries exact integers instead of float-formatted
@@ -30,6 +41,7 @@ const BYTE_E12: u64 = 20;
 
 fn main() {
     let wire_only = std::env::var_os("BENCH_WIRE_ONLY").is_some();
+    let shard_only = std::env::var_os("BENCH_SHARD_ONLY").is_some();
     header(
         "comm_scaling",
         "one full gradient exchange round (publish + consume P-1 queues) over peer count",
@@ -38,7 +50,7 @@ fn main() {
     let mut rng = Rng::seed_from_u64(9);
     let grad: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
 
-    if !wire_only {
+    if !wire_only && !shard_only {
         let mut b = Bench::new("exchange").with_samples(1, 5);
         for &peers in &[2usize, 4, 8, 12] {
             let grad = grad.clone();
@@ -92,12 +104,20 @@ fn main() {
         }
     }
 
-    // ---- wire-plane sweep -----------------------------------------------
-    // One store-mediated "round" among P peers: every peer parks its
-    // gradient (P puts) and reads the other P-1 parks (P*(P-1) gets).
-    // The per-object wire length is content-independent for every codec
-    // here (it depends only on n / levels / frac), which is what makes
-    // the committed JSON reproducible.
+    if !shard_only {
+        wire_sweep(n, &grad);
+    }
+    if !wire_only {
+        shard_sweep(n);
+    }
+}
+
+/// The wire-plane sweep: one store-mediated "round" among P peers —
+/// every peer parks its gradient (P puts) and reads the other P-1 parks
+/// (P*(P-1) gets). The per-object wire length is content-independent
+/// for every codec here (it depends only on n / levels / frac), which
+/// is what makes the committed JSON reproducible.
+fn wire_sweep(n: usize, grad: &[f32]) {
     println!("\nwire-plane sweep (serverless store path):");
     let raw_bytes = (n * 4) as u64; // what the plane counts as wire.bytes_raw
     let mut enc = Bench::new("wire_codec").with_samples(1, 3);
@@ -107,7 +127,7 @@ fn main() {
         let wire_len = match comp {
             // `none` parks plain f32 bytes — no codec framing at all
             Compression::None => n * 4,
-            _ => codec_for(comp, 7).encode(&grad).unwrap().len(),
+            _ => codec_for(comp, 7).encode(grad).unwrap().len(),
         };
         let wire_pct = wire_len as u64 * 100 / raw_bytes;
         if spec == "qsgd:16" {
@@ -120,7 +140,7 @@ fn main() {
         // measured codec cost (stdout only — wall depends on the host,
         // so it stays out of the committed record)
         if comp != Compression::None {
-            let g = grad.clone();
+            let g = grad.to_vec();
             enc.bench(&format!("encode_{spec}"), move || {
                 codec_for(comp, 7).encode(&g).unwrap().len()
             });
@@ -164,5 +184,128 @@ fn main() {
         eprintln!("could not write BENCH_wire_plane.json: {e}");
     } else {
         println!("\nwrote BENCH_wire_plane.json");
+    }
+}
+
+/// The shard-plane sweep: per-epoch bytes-on-wire, put counts and
+/// modeled transfer cost for the same 1 MB params object cut into 20
+/// shards, as the number of layers a generation actually touches (k)
+/// grows. Each point drives the real [`upload_sharded`] path against a
+/// fresh store — the put counts and manifest bytes in the committed
+/// record are measured, not assumed — and every recorded value is exact
+/// integer arithmetic over content-independent sizes, so regeneration
+/// is byte-stable.
+fn shard_sweep(n: usize) {
+    println!("\nshard-plane sweep (k of L layers changed per epoch):");
+    let layers = 20usize;
+    assert_eq!(n % layers, 0, "equal shards keep the record's sizes exact");
+    let shard_elems = n / layers;
+    let shard_bytes = (shard_elems * 4) as u64;
+    let raw_bytes = (n * 4) as u64;
+    // the monolithic plane's steady-state epoch: one put, one
+    // cluster-wide decode get, the whole params object on the wire
+    let mono_cost_e12 = PUT_E12 + GET_E12 + raw_bytes * BYTE_E12;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut manifest_bytes = 0u64;
+    for &k in &[0usize, 1, 2, 5, 10, 20] {
+        let store = ObjectStore::new();
+        let plane = ShardPlane::new(ShardSpec::Count(layers), n, &[]).unwrap();
+        let state = ShardState::new(plane.shard_count());
+        let mut params: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.03125).collect();
+        let up1 = upload_sharded(
+            &plane,
+            &state,
+            &store,
+            PARAMS_BUCKET,
+            &params,
+            1,
+            SHARD_KIND_RAW,
+            |_, slice| {
+                let r =
+                    store.put_dedup(PARAMS_BUCKET, Bytes::from(f32s_to_bytes(slice)), 1)?;
+                Ok((r, slice.to_vec()))
+            },
+        )
+        .unwrap();
+        let puts_after_first = store.stats().0;
+        // generation 2 touches the first element of each of the first k
+        // shards — exactly k content hashes change
+        for s in 0..k {
+            params[s * shard_elems] += 1.0;
+        }
+        let up2 = upload_sharded(
+            &plane,
+            &state,
+            &store,
+            PARAMS_BUCKET,
+            &params,
+            2,
+            SHARD_KIND_RAW,
+            |_, slice| {
+                let r =
+                    store.put_dedup(PARAMS_BUCKET, Bytes::from(f32s_to_bytes(slice)), 2)?;
+                Ok((r, slice.to_vec()))
+            },
+        )
+        .unwrap();
+        let puts = store.stats().0 - puts_after_first;
+        assert_eq!(puts, (k + 1) as u64, "a k-of-L epoch puts k shards + 1 manifest");
+        let bytes_saved = plane.bytes_saved();
+        assert_eq!(bytes_saved, (layers - k) as u64 * shard_bytes);
+        manifest_bytes = up2.manifest.size as u64;
+        // 16-byte header + per entry: 33 fixed bytes + a 69-byte
+        // ObjectRef wire (13-char bucket, 36-char key) — drift here
+        // means the committed record's framing model went stale
+        assert_eq!(manifest_bytes, 16 + layers as u64 * (33 + 69));
+        let epoch_bytes = k as u64 * shard_bytes + manifest_bytes;
+        // handler side: the manifest + each changed shard decodes once
+        // cluster-wide; reused shards are DecodedCache hits, no get
+        let gets = (k + 1) as u64;
+        let cost_e12 = puts * PUT_E12 + gets * GET_E12 + epoch_bytes * BYTE_E12;
+        // the integer rate card must agree with the float model
+        let usd = pricing::transfer_cost(epoch_bytes, puts, gets);
+        assert!(
+            (usd - cost_e12 as f64 / 1e12).abs() < 1e-9,
+            "integer rate card drifted from pricing::transfer_cost"
+        );
+        let verdict = if cost_e12 < mono_cost_e12 { "sharded" } else { "monolithic" };
+        println!(
+            "  k={k:<3} puts {puts:<3} {epoch_bytes:>8} B on wire  saved {bytes_saved:>8} B  \
+             ${:.6} vs monolithic ${:.6} -> {verdict}",
+            cost_e12 as f64 / 1e12,
+            mono_cost_e12 as f64 / 1e12
+        );
+        let mut row = Json::obj();
+        row.set("layers_changed", k)
+            .set("puts", puts)
+            .set("gets", gets)
+            .set("epoch_bytes_wire", epoch_bytes)
+            .set("bytes_saved", bytes_saved)
+            .set("cost_usd_e12", cost_e12)
+            .set("monolithic_cost_usd_e12", mono_cost_e12)
+            .set("verdict", verdict);
+        rows.push(row);
+        // both holders release: reused objects live on generation 2's
+        // retained references until the last release, then nothing leaks
+        for r in up1.shards.iter().chain([&up1.manifest]) {
+            store.release(r);
+        }
+        for r in up2.shards.iter().chain([&up2.manifest]) {
+            store.release(r);
+        }
+        assert_eq!(store.total_objects(), 0, "shard sweep leaked store objects");
+    }
+    let mut j = Json::obj();
+    j.set("bench", "comm_scaling/shard_plane")
+        .set("elems", n)
+        .set("bytes_raw", raw_bytes)
+        .set("layers", layers)
+        .set("shard_bytes", shard_bytes)
+        .set("manifest_bytes", manifest_bytes)
+        .set("rows", rows);
+    if let Err(e) = std::fs::write("BENCH_shard_plane.json", j.to_string()) {
+        eprintln!("could not write BENCH_shard_plane.json: {e}");
+    } else {
+        println!("\nwrote BENCH_shard_plane.json");
     }
 }

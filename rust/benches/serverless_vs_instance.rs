@@ -19,7 +19,7 @@ use p2pless::harness::cloud_exps::fig3_cell;
 use p2pless::harness::faults::FaultPlanSpec;
 use p2pless::perfmodel::PaperModel;
 use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey, ModelRuntime};
-use p2pless::store::{DecodedCache, ObjectStore};
+use p2pless::store::{shard::ShardPlane, DecodedCache, ObjectStore};
 use p2pless::util::{Bytes, Json};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -469,6 +469,7 @@ fn main() {
             BranchScheduler::new(Arc::new(Executor::new(4)), true),
             Arc::new(DecodedCache::new(16)),
             Arc::new(WirePlane::off()),
+            Arc::new(ShardPlane::off()),
             0,
             1769,
             64,
@@ -495,6 +496,7 @@ fn main() {
                 BranchScheduler::new(Arc::new(Executor::new(4)), true),
                 Arc::new(DecodedCache::new(16)),
                 Arc::new(WirePlane::off()),
+                Arc::new(ShardPlane::off()),
                 0,
                 1769,
                 64,

@@ -111,6 +111,18 @@ impl ParamsChain {
     pub fn generation(&self) -> Option<u64> {
         self.prev.lock().unwrap().as_ref().map(|p| p.generation)
     }
+
+    /// Re-key the committed base to `generation` without changing the
+    /// object or its reconstruction — the shard plane's reuse path: an
+    /// unchanged shard ships no new frame, so the base that delta
+    /// validity checks against (`base generation + 1 == next`) must
+    /// advance with the manifest generation or the next real change
+    /// would needlessly resync. No-op before the first commit.
+    pub fn rekey(&self, generation: u64) {
+        if let Some(p) = self.prev.lock().unwrap().as_mut() {
+            p.generation = generation;
+        }
+    }
 }
 
 /// Shared wire-plane state for one cluster run: the two knobs plus the
@@ -462,6 +474,33 @@ mod tests {
         assert_eq!(*p.decode_params(&r2, &cache, &store).unwrap(), v2);
         assert_eq!(p.delta_resyncs(), 0);
         assert!(p.bytes_wire() > 0 && p.bytes_raw() == 2 * 64 * 4);
+    }
+
+    #[test]
+    fn rekey_keeps_the_delta_chain_valid_across_a_reuse_gap() {
+        // the shard plane's reuse path: generation 2 ships no frame for
+        // an unchanged shard; rekeying the committed base to 2 lets
+        // generation 3's change delta-encode instead of resyncing
+        let (store, cache) = fixture();
+        let p = plane("none", 100);
+        let chain = ParamsChain::new();
+        let v1 = params_for(1, 16);
+        upload(&p, &chain, &store, 1, &v1);
+        chain.rekey(2); // generation 2 reused the gen-1 object as-is
+        assert_eq!(chain.generation(), Some(2));
+        let v3 = params_for(3, 16);
+        let r3 = upload(&p, &chain, &store, 3, &v3);
+        assert_eq!(
+            store.get_ref(&r3).unwrap()[4],
+            KIND_DELTA,
+            "rekeyed base must delta-encode, not resync"
+        );
+        assert_eq!(*p.decode_params(&r3, &cache, &store).unwrap(), v3);
+        assert_eq!(p.delta_resyncs(), 0);
+        // rekey before any commit is a no-op
+        let fresh = ParamsChain::new();
+        fresh.rekey(7);
+        assert_eq!(fresh.generation(), None);
     }
 
     #[test]

@@ -241,6 +241,15 @@ pub struct TrainConfig {
     /// f32 params objects exactly as before; requires `decode_cache > 0`
     /// so a delta frame's base generation stays memoized).
     pub params_delta_every: usize,
+    /// Sharded params manifest: `"off"` ships one monolithic params
+    /// object (byte-identical to the seed plane), `"layer"` splits on
+    /// the AOT manifest's per-layer `params_spec`, a number splits into
+    /// that many contiguous near-equal shards. With sharding on, each
+    /// generation uploads a small `SPv1` manifest plus only the shards
+    /// whose content hash changed; unchanged shards carry the prior
+    /// generation's object ref. Requires `decode_cache > 0` so the
+    /// handler-side per-shard decodes are memoized.
+    pub params_sharding: String,
     /// Worker threads in the FaaS execution fabric (0 = machine size).
     /// Physical concurrency only: the modeled accounting does not move.
     pub exec_threads: usize,
@@ -324,6 +333,7 @@ impl Default for TrainConfig {
             sweep_scratch: true,
             wire_compression: Compression::None,
             params_delta_every: 0,
+            params_sharding: "off".into(),
             exec_threads: 0,
             exec_slots: 0,
             exec_batch: 1,
@@ -390,6 +400,9 @@ impl TrainConfig {
                 "params_delta_every" => {
                     cfg.params_delta_every = v.as_usize().ok_or_else(missing)?
                 }
+                "params_sharding" => {
+                    cfg.params_sharding = v.as_str().ok_or_else(missing)?.to_string()
+                }
                 "exec_threads" => cfg.exec_threads = v.as_usize().ok_or_else(missing)?,
                 "exec_slots" => cfg.exec_slots = v.as_usize().ok_or_else(missing)?,
                 "exec_batch" => cfg.exec_batch = v.as_usize().ok_or_else(missing)?,
@@ -446,6 +459,7 @@ impl TrainConfig {
             .set("sweep_scratch", self.sweep_scratch)
             .set("wire_compression", self.wire_compression.to_spec())
             .set("params_delta_every", self.params_delta_every)
+            .set("params_sharding", self.params_sharding.as_str())
             .set("exec_threads", self.exec_threads)
             .set("exec_slots", self.exec_slots)
             .set("exec_batch", self.exec_batch)
@@ -525,6 +539,14 @@ impl TrainConfig {
             return Err(Error::Config(
                 "params_delta_every requires decode_cache > 0 — a delta frame's \
                  base generation is reconstructed through the decoded cache"
+                    .into(),
+            ));
+        }
+        let shard_spec = crate::store::shard::ShardSpec::parse(&self.params_sharding)?;
+        if shard_spec.on() && self.decode_cache == 0 {
+            return Err(Error::Config(
+                "params_sharding requires decode_cache > 0 — the handler \
+                 resolves a shard manifest through the decoded cache"
                     .into(),
             ));
         }
@@ -700,6 +722,34 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn shard_plane_knobs_roundtrip() {
+        let cfg = TrainConfig { params_sharding: "layer".into(), ..Default::default() };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.params_sharding, "layer");
+        let cfg = TrainConfig { params_sharding: "8".into(), ..Default::default() };
+        assert_eq!(
+            TrainConfig::from_json(&cfg.to_json()).unwrap().params_sharding,
+            "8"
+        );
+        // default: the plane is off (monolithic params object)
+        assert_eq!(TrainConfig::default().params_sharding, "off");
+        // bad specs are rejected up front, naming the knob
+        let bad = TrainConfig { params_sharding: "banana".into(), ..Default::default() };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("params_sharding"), "{err}");
+        let bad = TrainConfig { params_sharding: "0".into(), ..Default::default() };
+        assert!(bad.validate().is_err());
+        // a shard manifest cannot resolve without the decoded cache
+        let bad = TrainConfig {
+            params_sharding: "4".into(),
+            decode_cache: 0,
+            ..Default::default()
+        };
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("params_sharding"), "{err}");
     }
 
     #[test]

@@ -115,6 +115,10 @@ pub struct PeerReport {
     /// Branches executed and billed but excluded from the fold by the
     /// `--fold-quorum` k-of-n partial fold.
     pub fold_stragglers: usize,
+    /// FNV-1a fingerprint of this peer's final packed params — the
+    /// bit-exactness handle the cross-plane invariance tests compare
+    /// without shipping the full vector around.
+    pub params_fnv: u64,
 }
 
 /// One peer of the cluster.
@@ -231,6 +235,7 @@ impl Peer {
             overlap_wall: std::time::Duration::ZERO,
             lambda_retries: 0,
             fold_stragglers: 0,
+            params_fnv: 0,
         };
 
         // heartbeat pump: beats until dropped — which happens on every
@@ -602,6 +607,7 @@ impl Peer {
             offload.finish_run();
         }
         epochs_outcome?;
+        report.params_fnv = crate::store::shard::hash_f32s(&self.params);
         Ok(report)
     }
 

@@ -121,6 +121,9 @@ use crate::faas::{
 };
 use crate::harness::faults::FaultPlan as InjectedFaults;
 use crate::runtime::{ModelRuntime, PackedBatch};
+use crate::store::shard::{
+    self, ShardManifest, ShardPlane, ShardState, SHARD_KIND_RAW, SHARD_KIND_WIRE,
+};
 use crate::store::{DecodedCache, ObjectRef, ObjectStore, PARAMS_BUCKET};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use crate::util::{Bytes, Json};
@@ -227,11 +230,67 @@ fn parse_branch_response(out: &[u8]) -> Result<(f64, ObjectRef)> {
 /// this slot. `None` (the default) injects nothing.
 type FaultSlot = Arc<Mutex<Option<Arc<InjectedFaults>>>>;
 
+/// Every store reference one peer holds for one generation's params:
+/// the **primary** object the branch payloads name (the `SPv1` manifest
+/// with sharding on, the params object itself otherwise) plus the
+/// per-shard objects the manifest resolves to — freshly stored *or*
+/// retained from a prior generation. The whole handle lives and dies as
+/// one unit through the lagged-release lifecycle, which is exactly what
+/// keeps a reused shard's object alive while any manifest naming it is
+/// still in its sweep window.
+struct ParamsHandle {
+    primary: ObjectRef,
+    shards: Vec<ObjectRef>,
+}
+
+impl ParamsHandle {
+    /// The monolithic plane's handle: one object, no shards.
+    fn monolithic(primary: ObjectRef) -> Self {
+        Self { primary, shards: Vec::new() }
+    }
+}
+
+/// Resolve a sharded params upload on the handler side: parse the
+/// `SPv1` manifest, decode every shard through the shared cache — each
+/// *changed* shard decodes exactly once cluster-wide, reused shards are
+/// already resident under their own refs — verify each shard's content
+/// hash, and memoize the assembled vector under the manifest's own ref
+/// so sibling branches of the same generation reassemble nothing.
+fn resolve_sharded_params(
+    wire: &WirePlane,
+    manifest_ref: &ObjectRef,
+    cache: &DecodedCache,
+    store: &ObjectStore,
+) -> Result<Arc<Vec<f32>>> {
+    cache.get_or_decode_with(manifest_ref, store, &|bytes| {
+        let manifest = ShardManifest::from_wire(bytes)?;
+        let expected = if wire.params_on() { SHARD_KIND_WIRE } else { SHARD_KIND_RAW };
+        let mut out = Vec::with_capacity(manifest.total_elems);
+        for entry in &manifest.shards {
+            if entry.kind != expected {
+                return Err(Error::Store(format!(
+                    "shard {}: manifest kind {} does not match the wire \
+                     plane's expected kind {expected}",
+                    entry.id, entry.kind
+                )));
+            }
+            // per-shard cache keys are the shard objects themselves, so
+            // this recursion memoizes independently of the assembled
+            // manifest entry; decode_params handles both the framed and
+            // the raw layout, matching the uniform manifest kind
+            let decoded = wire.decode_params(&entry.object, cache, store)?;
+            shard::verify_shard(entry, &decoded)?;
+            out.extend_from_slice(&decoded);
+        }
+        Ok(out)
+    })
+}
+
 /// One dispatched-but-not-yet-collected epoch (cross-epoch mode).
 struct InflightEpoch {
     epoch: usize,
     generation: u64,
-    params_ref: ObjectRef,
+    params: ParamsHandle,
     pipe: PipelinedMap,
     batches: usize,
     dispatched_at: Instant,
@@ -249,8 +308,20 @@ pub struct ServerlessOffload {
     /// the uncompressed plane.
     wire: Arc<WirePlane>,
     /// This peer's generation-keyed params delta chain (wire plane's
-    /// params path; idle when `params_delta_every == 0`).
+    /// params path; idle when `params_delta_every == 0` or when the
+    /// shard plane supersedes it with per-shard chains).
     chain: ParamsChain,
+    /// Cluster-shared shard-plane layout + `shard.*` counters
+    /// ([`ShardPlane::off`] reproduces the monolithic params plane byte
+    /// for byte).
+    shard: Arc<ShardPlane>,
+    /// This peer's per-shard upload history: content hashes for change
+    /// detection, prior objects for cross-generation reuse.
+    shard_state: ShardState,
+    /// Per-shard delta chains (wire params path × shard plane): shard i
+    /// delta-encodes against its own previous frame, and a reused shard
+    /// re-keys its chain instead of breaking it.
+    shard_chains: Vec<ParamsChain>,
     function: String,
     bucket: String,
     peer: usize,
@@ -278,7 +349,7 @@ pub struct ServerlessOffload {
     inflight: Mutex<VecDeque<InflightEpoch>>,
     /// Cross-epoch mode: collected generations whose scratch sweep is
     /// lagged (the newest entry stays alive while the next epoch runs).
-    retired: Mutex<VecDeque<(u64, ObjectRef)>>,
+    retired: Mutex<VecDeque<(u64, ParamsHandle)>>,
     /// Staged/pipelined modes: the previous epoch's params reference,
     /// released one epoch late. A fast peer finishing its fan-out must
     /// not drive the shared deduplicated params object's refcount to
@@ -290,7 +361,7 @@ pub struct ServerlessOffload {
     /// Drained by the next epoch's fan-out or [`Self::finish_run`].
     /// Tagged with its generation so a takeover can locate the still-
     /// resident params object for the epoch being recovered.
-    pending_release: Mutex<Option<(u64, ObjectRef)>>,
+    pending_release: Mutex<Option<(u64, ParamsHandle)>>,
 }
 
 /// Result of one serverless epoch fan-out.
@@ -332,7 +403,10 @@ impl ServerlessOffload {
     /// `decode_cache` memoizes the params decode across branches;
     /// `wire` carries the cluster-shared wire-plane knobs/counters
     /// ([`WirePlane::off`] reproduces the uncompressed plane byte for
-    /// byte); `sweep_scratch = false` keeps per-epoch scratch alive
+    /// byte); `shard` carries the cluster-shared shard-plane layout and
+    /// `shard.*` counters ([`ShardPlane::off`] reproduces the
+    /// monolithic params plane byte for byte);
+    /// `sweep_scratch = false` keeps per-epoch scratch alive
     /// (debugging aid — the store then grows with the epoch count);
     /// `pipeline_depth` bounds the cross-epoch in-flight window
     /// (ignored by staged/pipelined modes; clamped to >= 1).
@@ -344,6 +418,7 @@ impl ServerlessOffload {
         scheduler: Arc<BranchScheduler>,
         decode_cache: Arc<DecodedCache>,
         wire: Arc<WirePlane>,
+        shard_plane: Arc<ShardPlane>,
         peer_rank: usize,
         memory_mb: u32,
         concurrency: usize,
@@ -369,6 +444,7 @@ impl ServerlessOffload {
         let h_bucket = bucket.clone();
         let h_cache = decode_cache.clone();
         let h_wire = wire.clone();
+        let h_shard = shard_plane.clone();
         let h_faults = faults.clone();
         let h_peer = peer_rank;
         let handler: Handler = Arc::new(move |payload: &Bytes| {
@@ -392,10 +468,16 @@ impl ServerlessOffload {
                     }
                 }
             }
-            // framed params decode when the wire plane's params path is
-            // on, the plain cached decode otherwise — both memoized per
-            // version in the shared cache
-            let params = h_wire.decode_params(&params_ref, &h_cache, &h_store)?;
+            // with the shard plane on the primary ref is always an SPv1
+            // manifest, resolved shard by shard through the shared
+            // cache; otherwise a framed params decode when the wire
+            // plane's params path is on, the plain cached decode when
+            // not — every path memoized per version in the shared cache
+            let params = if h_shard.on() {
+                resolve_sharded_params(&h_wire, &params_ref, &h_cache, &h_store)?
+            } else {
+                h_wire.decode_params(&params_ref, &h_cache, &h_store)?
+            };
             // cached-literal fast path: the batch object is immutable
             // and read by exactly one branch per epoch, so its input
             // literals are packed once per object and checked out /
@@ -437,6 +519,9 @@ impl ServerlessOffload {
             Ok(Bytes::from(resp.to_string().into_bytes()))
         });
         platform.register(FunctionSpec::new(&function, memory_mb, handler))?;
+        let shard_state = ShardState::new(shard_plane.shard_count());
+        let shard_chains =
+            (0..shard_plane.shard_count()).map(|_| ParamsChain::new()).collect();
         Ok(Self {
             platform,
             store,
@@ -445,6 +530,9 @@ impl ServerlessOffload {
             decode_cache,
             wire,
             chain: ParamsChain::new(),
+            shard: shard_plane,
+            shard_state,
+            shard_chains,
             function,
             bucket,
             peer: peer_rank,
@@ -582,26 +670,26 @@ impl ServerlessOffload {
     /// epoch `e` runs strictly before this peer computes `e + 1`, so a
     /// miss means the recovery window already aged out.
     fn current_params_ref(&self, generation: u64) -> Option<ObjectRef> {
-        if let Some((g, r)) = self.pending_release.lock().unwrap().as_ref() {
+        if let Some((g, h)) = self.pending_release.lock().unwrap().as_ref() {
             if *g == generation {
-                return Some(r.clone());
+                return Some(h.primary.clone());
             }
         }
-        if let Some((_, r)) = self
+        if let Some((_, h)) = self
             .retired
             .lock()
             .unwrap()
             .iter()
             .find(|(g, _)| *g == generation)
         {
-            return Some(r.clone());
+            return Some(h.primary.clone());
         }
         self.inflight
             .lock()
             .unwrap()
             .iter()
             .find(|ep| ep.generation == generation)
-            .map(|ep| ep.params_ref.clone())
+            .map(|ep| ep.params.primary.clone())
     }
 
     /// Recompute a *dead* peer's epoch-`epoch` fold on this peer's lane
@@ -744,20 +832,92 @@ impl ServerlessOffload {
     /// both content-deduplicated through the shared bucket (frame bytes
     /// are rank-independent, so synchronous peers still store one object
     /// per epoch). On the framed path the chain is committed to this
-    /// upload so the next generation deltas against it.
-    fn upload_params(&self, params: &[f32], generation: u64) -> Result<ObjectRef> {
+    /// upload so the next generation deltas against it. With the shard
+    /// plane on, the same machinery runs per shard and the handle's
+    /// primary is the `SPv1` manifest instead.
+    fn upload_params(&self, params: &[f32], generation: u64) -> Result<ParamsHandle> {
+        if self.shard.on() {
+            return self.upload_params_sharded(params, generation);
+        }
         if !self.wire.params_on() {
-            return self.store.put_dedup(
+            return Ok(ParamsHandle::monolithic(self.store.put_dedup(
                 PARAMS_BUCKET,
                 Bytes::from(f32s_to_bytes(params)),
                 generation,
-            );
+            )?));
         }
         let (frame, reconstructed) =
             self.wire.encode_params(params, generation, &self.chain, &self.store)?;
         let params_ref = self.store.put_dedup(PARAMS_BUCKET, frame, generation)?;
         self.chain.commit(generation, params_ref.clone(), reconstructed);
-        Ok(params_ref)
+        Ok(ParamsHandle::monolithic(params_ref))
+    }
+
+    /// Sharded upload: only the shards whose content hash changed since
+    /// this peer's previous upload are encoded (each through its own
+    /// per-shard delta chain when the wire params path is on) and
+    /// stored; unchanged shards re-reference the prior generation's
+    /// objects via [`crate::store::ObjectStore::retain`]. The `SPv1`
+    /// manifest the branch payloads name is itself `put_dedup`'d — its
+    /// bytes are rank-independent, so synchronous peers still store one
+    /// manifest (and one object per changed shard) per epoch.
+    fn upload_params_sharded(
+        &self,
+        params: &[f32],
+        generation: u64,
+    ) -> Result<ParamsHandle> {
+        let kind = if self.wire.params_on() { SHARD_KIND_WIRE } else { SHARD_KIND_RAW };
+        let up = shard::upload_sharded(
+            &self.shard,
+            &self.shard_state,
+            &self.store,
+            PARAMS_BUCKET,
+            params,
+            generation,
+            kind,
+            |i, slice| {
+                if self.wire.params_on() {
+                    let (frame, reconstructed) = self.wire.encode_params(
+                        slice,
+                        generation,
+                        &self.shard_chains[i],
+                        &self.store,
+                    )?;
+                    let r = self.store.put_dedup(PARAMS_BUCKET, frame, generation)?;
+                    self.shard_chains[i].commit(generation, r.clone(), reconstructed.clone());
+                    Ok((r, reconstructed))
+                } else {
+                    let r = self.store.put_dedup(
+                        PARAMS_BUCKET,
+                        Bytes::from(f32s_to_bytes(slice)),
+                        generation,
+                    )?;
+                    Ok((r, slice.to_vec()))
+                }
+            },
+        )?;
+        // reused shards shipped no frame: advance their delta chains to
+        // this generation so the next real change delta-encodes against
+        // the reused object instead of forcing a full resync
+        if self.wire.params_on() {
+            for (i, reused) in up.reused.iter().enumerate() {
+                if *reused {
+                    self.shard_chains[i].rekey(generation);
+                }
+            }
+        }
+        Ok(ParamsHandle { primary: up.manifest, shards: up.shards })
+    }
+
+    /// Pin a generation's live decoded views: the primary (manifest or
+    /// monolithic object) and every shard. Tail branches must find each
+    /// of them memoized for the generation's whole life, whatever the
+    /// cache pressure from other peers' insertions.
+    fn pin_params(&self, handle: &ParamsHandle) {
+        self.decode_cache.pin(&handle.primary);
+        for r in &handle.shards {
+            self.decode_cache.pin(r);
+        }
     }
 
     /// Run one epoch's batches through the dynamically-generated state
@@ -801,19 +961,19 @@ impl ServerlessOffload {
         // identical, so the cluster stores one object per epoch and
         // each peer holds a reference
         let generation = epoch as u64;
-        let params_ref = self.upload_params(params, generation)?;
+        let handle = self.upload_params(params, generation)?;
         // the live params version must survive cache pressure for the
         // whole fan-out, whatever the mode — without the pin, a small
         // shared cache lets another peer's params insertion evict this
         // epoch's entry mid-fan-out and break the one-decode-per-epoch
         // invariant
-        self.decode_cache.pin(&params_ref);
+        self.pin_params(&handle);
         let outcome = match self.mode {
             OffloadMode::Staged => {
-                self.fan_out_epoch_staged(epoch, &params_ref, &batch_refs, generation)
+                self.fan_out_epoch_staged(epoch, &handle.primary, &batch_refs, generation)
             }
             OffloadMode::Pipelined | OffloadMode::CrossEpoch => {
-                self.fan_out_epoch_pipelined(&params_ref, &batch_refs, generation)
+                self.fan_out_epoch_pipelined(&handle.primary, &batch_refs, generation)
             }
         };
         // this peer's own scratch (parked gradients) is reclaimed
@@ -831,9 +991,9 @@ impl ServerlessOffload {
             .pending_release
             .lock()
             .unwrap()
-            .replace((generation, params_ref));
-        if let Some((_, lagged_ref)) = lagged {
-            self.release_params(&lagged_ref);
+            .replace((generation, handle));
+        if let Some((_, lagged_handle)) = lagged {
+            self.release_params(&lagged_handle);
         }
         outcome
     }
@@ -887,24 +1047,24 @@ impl ServerlessOffload {
         )?
         .with_generation(generation)
         .with_quorum(self.effective_quorum(batch_refs.len()));
-        let params_ref = self.upload_params(params, generation)?;
+        let handle = self.upload_params(params, generation)?;
         // the live params version must survive cache pressure until its
         // generation retires — tail branches re-reading an evicted entry
         // would still be *correct* (the lagged sweep keeps the object),
         // but the exactly-one-decode-per-epoch invariant would not hold
-        self.decode_cache.pin(&params_ref);
+        self.pin_params(&handle);
         // duplicated deliveries race the real fan-out on the shared pool
-        self.inject_duplicates(&params_ref, &batch_refs, generation);
+        self.inject_duplicates(&handle.primary, &batch_refs, generation);
         for (idx, batch_ref) in batch_refs.iter().enumerate() {
             pipe.submit(
-                branch_payload(&params_ref, batch_ref, generation, self.idx_tag(idx)),
+                branch_payload(&handle.primary, batch_ref, generation, self.idx_tag(idx)),
                 None,
             );
         }
         self.inflight.lock().unwrap().push_back(InflightEpoch {
             epoch,
             generation,
-            params_ref,
+            params: handle,
             pipe,
             batches: batch_refs.len(),
             dispatched_at: Instant::now(),
@@ -927,7 +1087,7 @@ impl ServerlessOffload {
             .ok_or_else(|| {
                 Error::Faas(format!("peer {}: no epoch in flight to collect", self.peer))
             })?;
-        let InflightEpoch { epoch, generation, params_ref, mut pipe, batches, dispatched_at } =
+        let InflightEpoch { epoch, generation, params, mut pipe, batches, dispatched_at } =
             ep;
         let overlap = dispatched_at.elapsed();
         let mut acc = GradAccumulator::new();
@@ -946,7 +1106,7 @@ impl ServerlessOffload {
             (Some(e), _) | (None, Err(e)) => {
                 // failed epochs are retired immediately — there is no
                 // later dispatch to lag behind
-                self.retire_generation(generation, &params_ref);
+                self.retire_generation(generation, &params);
                 return Err(e);
             }
             (None, Ok(r)) => r,
@@ -954,7 +1114,7 @@ impl ServerlessOffload {
         // the generation stays pinned through its lag window: a
         // stale-tolerant tail branch must find params v(e) both in the
         // store *and* still memoized while epoch e+1 runs
-        self.retired.lock().unwrap().push_back((generation, params_ref));
+        self.retired.lock().unwrap().push_back((generation, params));
         Ok((
             epoch,
             OffloadResult {
@@ -982,33 +1142,41 @@ impl ServerlessOffload {
     /// object by refcounted release (the object goes when the *last*
     /// peer retires the generation) — and drop this peer's claim on the
     /// params cache entry, which also clears its pin.
-    fn retire_generation(&self, generation: u64, params_ref: &ObjectRef) {
+    fn retire_generation(&self, generation: u64, params: &ParamsHandle) {
         self.scheduler.await_generation_drained(self.peer, generation);
         if self.sweep_scratch {
             self.store.sweep_generation(&self.bucket, generation);
         }
-        self.release_params(params_ref);
+        self.release_params(params);
     }
 
     /// Drop this peer's claims on a generation's shared params: the
-    /// store reference (honoring `sweep_scratch` — the object goes when
-    /// the *last* peer releases) and the decode-cache pin/entry. Used
-    /// alone by the one-epoch-late staged/pipelined path, whose
-    /// generation was already drained and swept when its epoch
-    /// completed.
-    fn release_params(&self, params_ref: &ObjectRef) {
+    /// store references (honoring `sweep_scratch` — an object goes when
+    /// the *last* holder releases, so a shard still referenced by a
+    /// newer generation's manifest survives on that handle's retained
+    /// ref) and the decode-cache pins/entries (per-holder, same
+    /// survival rule). Used alone by the one-epoch-late
+    /// staged/pipelined path, whose generation was already drained and
+    /// swept when its epoch completed.
+    fn release_params(&self, params: &ParamsHandle) {
         if self.sweep_scratch {
-            self.store.release(params_ref);
+            self.store.release(&params.primary);
+            for r in &params.shards {
+                self.store.release(r);
+            }
         }
-        self.decode_cache.invalidate(params_ref);
+        self.decode_cache.invalidate(&params.primary);
+        for r in &params.shards {
+            self.decode_cache.invalidate(r);
+        }
     }
 
     /// Sweep every retired generation except the newest (the lag).
     fn sweep_lagged(&self) {
         let mut retired = self.retired.lock().unwrap();
         while retired.len() > 1 {
-            let (generation, params_ref) = retired.pop_front().unwrap();
-            self.retire_generation(generation, &params_ref);
+            let (generation, params) = retired.pop_front().unwrap();
+            self.retire_generation(generation, &params);
         }
     }
 
@@ -1022,20 +1190,20 @@ impl ServerlessOffload {
         loop {
             let ep = self.inflight.lock().unwrap().pop_front();
             let Some(ep) = ep else { break };
-            let InflightEpoch { generation, params_ref, mut pipe, .. } = ep;
+            let InflightEpoch { generation, params, mut pipe, .. } = ep;
             while pipe.next_output().is_some() {}
             let _ = pipe.finish();
-            self.retire_generation(generation, &params_ref);
+            self.retire_generation(generation, &params);
         }
         {
             let mut retired = self.retired.lock().unwrap();
-            while let Some((generation, params_ref)) = retired.pop_front() {
-                self.retire_generation(generation, &params_ref);
+            while let Some((generation, params)) = retired.pop_front() {
+                self.retire_generation(generation, &params);
             }
         }
         let pending = self.pending_release.lock().unwrap().take();
-        if let Some((_, params_ref)) = pending {
-            self.release_params(&params_ref);
+        if let Some((_, params)) = pending {
+            self.release_params(&params);
         }
     }
 
@@ -1257,6 +1425,62 @@ mod tests {
         let mut resp = Json::obj();
         resp.set("grad", ref_to_json(&r));
         assert!(parse_branch_response(resp.to_string().as_bytes()).is_err());
+    }
+
+    #[test]
+    fn sharded_manifest_resolves_once_per_shard_through_the_cache() {
+        use crate::store::shard::{ShardPlane, ShardSpec};
+        let store = Arc::new(ObjectStore::new());
+        store.create_bucket(PARAMS_BUCKET);
+        let cache = DecodedCache::new(8);
+        let wire = WirePlane::off();
+        let plane = ShardPlane::new(ShardSpec::Count(3), 10, &[]).unwrap();
+        let state = ShardState::new(plane.shard_count());
+        let params: Vec<f32> = (0..10).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let up = shard::upload_sharded(
+            &plane,
+            &state,
+            &store,
+            PARAMS_BUCKET,
+            &params,
+            1,
+            SHARD_KIND_RAW,
+            |_, slice| {
+                let r =
+                    store.put_dedup(PARAMS_BUCKET, Bytes::from(f32s_to_bytes(slice)), 1)?;
+                Ok((r, slice.to_vec()))
+            },
+        )
+        .unwrap();
+        let v = resolve_sharded_params(&wire, &up.manifest, &cache, &store).unwrap();
+        assert_eq!(*v, params);
+        assert_eq!(cache.misses(), 4, "manifest + 3 shards, each decoded once");
+        // a sibling branch of the same generation reassembles nothing
+        let v2 = resolve_sharded_params(&wire, &up.manifest, &cache, &store).unwrap();
+        assert_eq!(*v2, params);
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.hits(), 1);
+        // a tampered per-shard hash is rejected actionably, never folded
+        let mut m = ShardManifest::from_wire(&store.get_ref(&up.manifest).unwrap()).unwrap();
+        m.shards[1].hash ^= 1;
+        let bad = store
+            .put_dedup(PARAMS_BUCKET, Bytes::from(m.to_wire()), 1)
+            .unwrap();
+        let cold = DecodedCache::new(8);
+        let err = resolve_sharded_params(&wire, &bad, &cold, &store).unwrap_err();
+        assert!(err.to_string().contains("hash mismatch"), "{err}");
+        // a manifest whose kind disagrees with the wire plane's config
+        // is a plane mismatch, not a decode attempt
+        let mut m = ShardManifest::from_wire(&store.get_ref(&up.manifest).unwrap()).unwrap();
+        for e in &mut m.shards {
+            e.kind = SHARD_KIND_WIRE;
+        }
+        let mismatched = store
+            .put_dedup(PARAMS_BUCKET, Bytes::from(m.to_wire()), 1)
+            .unwrap();
+        let cold = DecodedCache::new(8);
+        let err = resolve_sharded_params(&wire, &mismatched, &cold, &store).unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
     }
 
     // Full offload integration (real PJRT) lives in rust/tests/.

@@ -23,7 +23,7 @@ use crate::harness::faults::FaultPlanSpec;
 use crate::metrics::{MetricsRegistry, Stage, StageSummary};
 use crate::perfmodel;
 use crate::runtime::{Engine, ModelRuntime};
-use crate::store::{peer_bucket, DecodedCache, ObjectStore, GEN_PERSISTENT};
+use crate::store::{peer_bucket, shard, DecodedCache, ObjectStore, GEN_PERSISTENT};
 
 /// Everything a finished run reports.
 #[derive(Debug)]
@@ -206,6 +206,20 @@ impl Cluster {
             &cfg.artifacts_dir,
             &cfg.model_key(),
         )?);
+        // the sharded-params plane: resolved against this model's packed
+        // size (and, in layer mode, the AOT manifest's per-layer
+        // params_spec) after the runtime loads; off by default, which
+        // keeps the monolithic params object byte-identical
+        let shard_plane = {
+            let spec = shard::ShardSpec::parse(&cfg.params_sharding)?;
+            let layer_sizes: Vec<usize> =
+                runtime.entry.params_spec.iter().map(|&(_, n)| n).collect();
+            Arc::new(shard::ShardPlane::new(
+                spec,
+                runtime.entry.param_count,
+                &layer_sizes,
+            )?)
+        };
 
         // ---- data -------------------------------------------------------
         let train = SyntheticDataset::new(kind, cfg.seed).generate(cfg.train_samples);
@@ -289,6 +303,7 @@ impl Cluster {
                         scheduler.clone(),
                         decode_cache.clone(),
                         wire_plane.clone(),
+                        shard_plane.clone(),
                         rank,
                         mem,
                         cfg.lambda_concurrency,
@@ -483,6 +498,13 @@ impl Cluster {
         metrics.set_counter("wire.encode_us", wire_plane.encode_us());
         metrics.set_counter("wire.decode_us", wire_plane.decode_us());
         metrics.set_counter("wire.delta_resyncs", wire_plane.delta_resyncs());
+        // sharded-params plane: shard uploads attempted, actually changed
+        // (re-encoded + re-put), reused from the prior generation, and the
+        // raw bytes those reuses kept off the wire (all zero when off)
+        metrics.set_counter("shard.total", shard_plane.total());
+        metrics.set_counter("shard.changed", shard_plane.changed());
+        metrics.set_counter("shard.reused", shard_plane.reused());
+        metrics.set_counter("shard.bytes_saved", shard_plane.bytes_saved());
         // execution fusion: fused dispatches, branches that rode them,
         // and the mean group fill as a percentage of --exec-batch
         let (batched, fused) = self.engine.batch_stats();

@@ -75,6 +75,12 @@ TRAIN OPTIONS:
                              previous generation, resyncing with a full
                              object every N generations (default 0 =
                              off; needs --decode-cache > 0)
+    --params-sharding S      off | N | layer (default off): split each
+                             params upload into N shards (or one per
+                             model layer) under an SPv1 manifest; only
+                             shards whose contents changed are re-put,
+                             the rest reuse the prior generation's
+                             objects (needs --decode-cache > 0)
     --exec-threads N         FaaS worker-pool threads (0 = machine size);
                              physical fan-out concurrency only — the
                              modeled accounting does not move with N
@@ -254,6 +260,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = parse_num(args, "params-delta-every")? {
         cfg.params_delta_every = v;
     }
+    if let Some(v) = args.flags.get("params-sharding") {
+        cfg.params_sharding = v.clone();
+    }
     if let Some(v) = parse_num(args, "exec-threads")? {
         cfg.exec_threads = v;
     }
@@ -419,6 +428,24 @@ fn cmd_train(args: &Args) -> Result<()> {
                 c("wire.decode_us") as f64 / 1e3,
                 perfmodel::store_put_time(wire as usize),
                 pricing::transfer_cost(wire, c("store.puts"), c("store.gets")),
+            );
+        }
+        if report.config.params_sharding != "off" {
+            let total = c("shard.total");
+            let reused = c("shard.reused");
+            let pct = if total > 0 {
+                reused as f64 * 100.0 / total as f64
+            } else {
+                0.0
+            };
+            println!(
+                "shard plane ({}): {} shard uploads -> {} changed / {} reused \
+                 ({pct:.1}%), {} raw bytes kept off the wire",
+                report.config.params_sharding,
+                total,
+                c("shard.changed"),
+                reused,
+                c("shard.bytes_saved"),
             );
         }
         if report.config.exec_batch > 1 {

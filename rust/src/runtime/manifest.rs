@@ -31,6 +31,34 @@ pub struct ModelEntry {
     pub update: String,
     /// Raw little-endian f32 initial parameters.
     pub init_params: String,
+    /// Per-layer `(name, element count)` slices of the packed params
+    /// vector, in pack order — the shard-plane layout source for
+    /// `--params-sharding layer`. Empty when the compiler did not emit
+    /// per-layer shapes (older artifacts); layer sharding then errors
+    /// actionably instead of guessing.
+    pub params_spec: Vec<(String, usize)>,
+}
+
+/// Parse `[{"name": ..., "size": N, ...}, ...]` (per-layer params
+/// slices; `shape`/`offset` are informational and ignored here).
+fn params_spec(json: &Json) -> Result<Vec<(String, usize)>> {
+    let Some(arr) = json.as_arr() else {
+        return Err(Error::Json("params_spec must be an array".into()));
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    for entry in arr {
+        let name = entry
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| Error::Json("params_spec name must be a string".into()))?
+            .to_string();
+        let size = entry
+            .req("size")?
+            .as_usize()
+            .ok_or_else(|| Error::Json("params_spec size must be an integer".into()))?;
+        out.push((name, size));
+    }
+    Ok(out)
 }
 
 /// The QSGD kernel artifact pair (rust<->kernel cross-validation).
@@ -157,6 +185,11 @@ impl Manifest {
                         .as_str()
                         .ok_or_else(|| Error::Json("init_params".into()))?
                         .to_string(),
+                    params_spec: m
+                        .get("params_spec")
+                        .map(params_spec)
+                        .transpose()?
+                        .unwrap_or_default(),
                 },
             );
         }
@@ -323,6 +356,49 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), future).unwrap();
         let err = Manifest::load(&dir).unwrap_err().to_string();
         assert!(err.contains("schema v3"), "{err}");
+    }
+
+    #[test]
+    fn params_spec_parses_layer_sizes_in_pack_order() {
+        let dir = std::env::temp_dir().join("p2pless_manifest_test_spec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let with_spec = SAMPLE.replace(
+            "\"params_spec\": []",
+            r#""params_spec": [
+              {"name": "conv1/kernel", "shape": [3, 3, 1, 8], "offset": 0, "size": 72},
+              {"name": "conv1/bias", "shape": [8], "offset": 72, "size": 8},
+              {"name": "dense/kernel", "shape": [1568, 10], "offset": 80, "size": 15680}
+            ]"#,
+        );
+        std::fs::write(dir.join("manifest.json"), with_spec).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("mini_vgg_mnist").unwrap();
+        assert_eq!(
+            e.params_spec,
+            vec![
+                ("conv1/kernel".to_string(), 72),
+                ("conv1/bias".to_string(), 8),
+                ("dense/kernel".to_string(), 15680),
+            ]
+        );
+        // the committed SAMPLE's empty spec and a v1 manifest without
+        // the key both load as "no per-layer shapes"
+        let dir2 = std::env::temp_dir().join("p2pless_manifest_test_spec_empty");
+        std::fs::create_dir_all(&dir2).unwrap();
+        write_sample(&dir2);
+        assert!(Manifest::load(&dir2)
+            .unwrap()
+            .model("mini_vgg_mnist")
+            .unwrap()
+            .params_spec
+            .is_empty());
+        // malformed entries are rejected, not defaulted
+        let dir3 = std::env::temp_dir().join("p2pless_manifest_test_spec_bad");
+        std::fs::create_dir_all(&dir3).unwrap();
+        let bad = SAMPLE
+            .replace("\"params_spec\": []", "\"params_spec\": [{\"name\": \"x\"}]");
+        std::fs::write(dir3.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir3).is_err());
     }
 
     #[test]

@@ -74,6 +74,8 @@ use std::sync::RwLock;
 
 use crate::error::{Error, Result};
 
+pub mod shard;
+
 /// Generation tag for objects that live for the whole run (the paper's
 /// pre-batched dataset partitions). Never matched by an epoch sweep
 /// unless explicitly requested at teardown.
@@ -188,7 +190,9 @@ impl Object {
 
 /// FNV-1a over the object bytes — the dedup content hash. Collisions
 /// are guarded by a full byte comparison before any ref is shared.
-fn fnv1a64(data: &[u8]) -> u64 {
+/// The shard plane's [`shard::hash_f32s`] computes the same hash over
+/// an f32 view without materializing the bytes.
+pub(crate) fn fnv1a64(data: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in data {
         h ^= b as u64;
@@ -342,6 +346,24 @@ impl ObjectStore {
             }
         }
         true
+    }
+
+    /// Acquire one more reference to a live object — the shard plane's
+    /// cross-generation reuse: a manifest entry pointing at a prior
+    /// generation's shard holds its own reference so the older
+    /// generation's retirement cannot strand it. Returns false (and
+    /// acquires nothing) if the object is already gone; callers treat
+    /// that as "changed" and re-upload. Dedupe can't serve this — the
+    /// dedup index is generation-keyed, and reuse spans generations.
+    pub fn retain(&self, r: &ObjectRef) -> bool {
+        let mut inner = self.inner.write().unwrap();
+        match inner.buckets.get_mut(&r.bucket).and_then(|b| b.get_mut(&r.key)) {
+            Some(obj) => {
+                obj.refs += 1;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Total dedup hits: puts that were answered by an existing
@@ -1073,6 +1095,21 @@ mod tests {
         let p = s.put_new("b", Bytes::from_static(b"x")).unwrap();
         assert!(s.release(&p));
         assert!(s.get_ref(&p).is_err());
+    }
+
+    #[test]
+    fn retain_acquires_a_reference_and_reports_dead_objects() {
+        let s = ObjectStore::new();
+        let r = s.put_dedup("shared", Bytes::from_static(b"shard-0"), 1).unwrap();
+        assert!(s.retain(&r), "live object must be retainable");
+        // two references now: one from put, one from retain
+        assert!(!s.release(&r), "retained object survives the original release");
+        assert!(s.get_ref(&r).is_ok());
+        assert!(s.release(&r), "last release removes it");
+        assert!(s.get_ref(&r).is_err());
+        // retaining a dead object acquires nothing
+        assert!(!s.retain(&r), "dead object must not be retainable");
+        assert!(!s.release(&r));
     }
 
     #[test]

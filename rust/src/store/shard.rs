@@ -1,0 +1,898 @@
+//! Sharded params manifest (`SPv1`) — the big-model data plane.
+//!
+//! The monolithic plane ships the *whole* params object to every
+//! gradient Lambda each epoch; at production model sizes that re-uploads
+//! and re-decodes megabytes even when only a few layers changed. This
+//! module splits the packed params into contiguous **shards** (an even
+//! `--params-sharding N` split, or one shard per layer from the AOT
+//! manifest's `params_spec`), content-hashes each shard, and describes
+//! one generation's params as a small **manifest object**: shard
+//! id/kind/bytes/hash/object-ref per entry (the schema shape of
+//! `manifest-core` in the PB-AI sharder, see SNIPPETS.md snippet 1).
+//!
+//! Per generation, a peer uploads the manifest plus **only the shards
+//! whose content hash changed** since its previous upload; an unchanged
+//! shard's entry carries the *prior* generation's object ref, kept alive
+//! by an extra store reference ([`ObjectStore::retain`]) that this
+//! holder releases when the generation retires — so the reuse composes
+//! with the refcounted shared-params dedupe and the lagged sweep without
+//! any new lifecycle. The handler side resolves the manifest through the
+//! [`DecodedCache`](super::DecodedCache) per shard, so a generation
+//! decodes each *changed* shard exactly once cluster-wide, and verifies
+//! every shard's content hash before reassembly.
+//!
+//! Everything here is store-level plumbing: the wire plane's per-shard
+//! delta framing stays in `compress::wire` (the encode closure passed to
+//! [`upload_sharded`] is where the offload plugs it in), and the
+//! dispatch lifecycle stays in `coordinator::serverless`.
+//!
+//! ## Manifest wire format (magic `SPv1`)
+//!
+//! ```text
+//! "SPv1" | u32 shard_count LE | u64 total_elems LE | per shard:
+//!   u32 id | u8 kind | u64 elems | u64 hash | u64 generation
+//!   | u32 ref_len | ObjectRef wire (ref_len bytes)
+//! ```
+//!
+//! `hash` is FNV-1a over the shard's *receiver-side* f32 bytes (the
+//! reconstruction a decoder produces — identical to the true params
+//! under lossless codecs, the mirrored reconstruction under lossy delta
+//! frames), so the handler can verify what it actually decoded.
+//! Parsing is strict: bad magic, unsupported version, truncation, id or
+//! element-count mismatches, and trailing bytes are all actionable
+//! [`Error`]s, never a panic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::Bytes;
+
+use super::{ObjectRef, ObjectStore};
+
+/// Magic prefix of an `SPv1` shard-manifest object.
+pub const SHARD_MAGIC: &[u8; 4] = b"SPv1";
+
+/// Shard payload kind: raw little-endian f32 bytes.
+pub const SHARD_KIND_RAW: u8 = 0;
+/// Shard payload kind: a wire-plane `WPv1` frame (full or delta).
+pub const SHARD_KIND_WIRE: u8 = 1;
+
+/// FNV-1a over the little-endian byte view of an f32 slice — the shard
+/// content hash. Identical to the store's dedup hash over
+/// `f32s_to_bytes(vals)`, without materializing the byte vector.
+pub fn hash_f32s(vals: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in vals {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// The `--params-sharding` knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Monolithic params object — today's plane, byte for byte.
+    Off,
+    /// Split the packed params into `n` contiguous near-equal shards.
+    Count(usize),
+    /// One shard per layer, sizes from the AOT manifest's `params_spec`.
+    Layer,
+}
+
+impl ShardSpec {
+    /// Parse `"off"`, `"layer"`, or a shard count.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Self::Off),
+            "layer" => Ok(Self::Layer),
+            _ => {
+                let n: usize = s.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "bad params_sharding {s:?} (want off, layer, or a shard count)"
+                    ))
+                })?;
+                if n == 0 {
+                    return Err(Error::Config(
+                        "params_sharding count must be >= 1 (use \"off\" to disable)".into(),
+                    ));
+                }
+                Ok(Self::Count(n))
+            }
+        }
+    }
+
+    pub fn on(&self) -> bool {
+        !matches!(self, Self::Off)
+    }
+}
+
+/// Resolve a spec to the contiguous `(offset, elems)` shard ranges over
+/// a `total_elems`-element params vector. `layer_sizes` comes from the
+/// AOT manifest's `params_spec` and is only consulted in layer mode.
+pub fn resolve_layout(
+    spec: &ShardSpec,
+    total_elems: usize,
+    layer_sizes: &[usize],
+) -> Result<Vec<(usize, usize)>> {
+    if total_elems == 0 {
+        return Err(Error::Config(
+            "params_sharding cannot shard an empty params vector".into(),
+        ));
+    }
+    match spec {
+        ShardSpec::Off => Ok(Vec::new()),
+        ShardSpec::Count(n) => {
+            // more shards than elements would create empty shards:
+            // clamp instead of erroring so tiny test models still run
+            let n = (*n).min(total_elems);
+            let base = total_elems / n;
+            let extra = total_elems % n;
+            let mut out = Vec::with_capacity(n);
+            let mut off = 0;
+            for i in 0..n {
+                let len = base + usize::from(i < extra);
+                out.push((off, len));
+                off += len;
+            }
+            Ok(out)
+        }
+        ShardSpec::Layer => {
+            if layer_sizes.is_empty() {
+                return Err(Error::Config(
+                    "params_sharding layer needs the AOT manifest's params_spec — \
+                     rebuild artifacts with a compiler that emits per-layer \
+                     shapes, or use a numeric shard count"
+                        .into(),
+                ));
+            }
+            let mut out = Vec::with_capacity(layer_sizes.len());
+            let mut off = 0;
+            for (i, &len) in layer_sizes.iter().enumerate() {
+                if len == 0 {
+                    return Err(Error::Config(format!(
+                        "params_sharding layer: params_spec layer {i} has zero elements"
+                    )));
+                }
+                out.push((off, len));
+                off += len;
+            }
+            if off != total_elems {
+                return Err(Error::Config(format!(
+                    "params_sharding layer: params_spec covers {off} elements \
+                     but the model has {total_elems}"
+                )));
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// One manifest entry: which shard, how it is encoded, how many f32
+/// elements it reassembles to, the content hash of its decoded view,
+/// the generation its object was stored under (older than the
+/// manifest's for a reused shard), and the object itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub id: u32,
+    pub kind: u8,
+    pub elems: usize,
+    pub hash: u64,
+    pub generation: u64,
+    pub object: ObjectRef,
+}
+
+/// One generation's params described as shards (`SPv1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardManifest {
+    pub total_elems: usize,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    pub fn is_wire(data: &[u8]) -> bool {
+        data.len() >= 4 && &data[0..4] == SHARD_MAGIC
+    }
+
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.shards.len() * 48);
+        out.extend_from_slice(SHARD_MAGIC);
+        out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.total_elems as u64).to_le_bytes());
+        for s in &self.shards {
+            let ref_wire = s.object.to_wire();
+            out.extend_from_slice(&s.id.to_le_bytes());
+            out.push(s.kind);
+            out.extend_from_slice(&(s.elems as u64).to_le_bytes());
+            out.extend_from_slice(&s.hash.to_le_bytes());
+            out.extend_from_slice(&s.generation.to_le_bytes());
+            out.extend_from_slice(&(ref_wire.len() as u32).to_le_bytes());
+            out.extend_from_slice(&ref_wire);
+        }
+        out
+    }
+
+    /// Strict parse: the buffer must be exactly one well-formed `SPv1`
+    /// manifest — truncation, trailing bytes, out-of-order ids and a
+    /// header/entry element-count mismatch are all rejected.
+    pub fn from_wire(data: &[u8]) -> Result<Self> {
+        if data.len() < 4 || data[0..3] != SHARD_MAGIC[0..3] {
+            return Err(Error::Store("not an SPv1 shard manifest".into()));
+        }
+        if data[3] != SHARD_MAGIC[3] {
+            return Err(Error::Store(format!(
+                "unsupported shard manifest version {:?} (this runtime \
+                 understands SPv1)",
+                char::from(data[3])
+            )));
+        }
+        let mut i = 4usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            let v = data
+                .get(*i..*i + n)
+                .ok_or_else(|| Error::Store("truncated SPv1 shard manifest".into()))?;
+            *i += n;
+            Ok(v)
+        };
+        let count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        let total_elems = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize;
+        let mut shards = Vec::with_capacity(count.min(4096));
+        let mut covered = 0usize;
+        for idx in 0..count {
+            let id = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap());
+            if id as usize != idx {
+                return Err(Error::Store(format!(
+                    "SPv1 shard manifest: entry {idx} carries id {id}"
+                )));
+            }
+            let kind = take(&mut i, 1)?[0];
+            let elems = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize;
+            let hash = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+            let generation = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+            let ref_len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+            let object = ObjectRef::from_wire(take(&mut i, ref_len)?)?;
+            covered += elems;
+            shards.push(ShardEntry { id, kind, elems, hash, generation, object });
+        }
+        if i != data.len() {
+            return Err(Error::Store(format!(
+                "SPv1 shard manifest has {} trailing bytes",
+                data.len() - i
+            )));
+        }
+        if covered != total_elems {
+            return Err(Error::Store(format!(
+                "SPv1 shard manifest: entries cover {covered} elements but the \
+                 header claims {total_elems}"
+            )));
+        }
+        Ok(Self { total_elems, shards })
+    }
+}
+
+/// Verify one decoded shard against its manifest entry: the element
+/// count and the content hash must both match, or the decode chain
+/// delivered the wrong (or corrupted) bytes.
+pub fn verify_shard(entry: &ShardEntry, decoded: &[f32]) -> Result<()> {
+    if decoded.len() != entry.elems {
+        return Err(Error::Store(format!(
+            "shard {} decoded to {} elements, manifest says {}",
+            entry.id,
+            decoded.len(),
+            entry.elems
+        )));
+    }
+    let h = hash_f32s(decoded);
+    if h != entry.hash {
+        return Err(Error::Store(format!(
+            "shard {} content hash mismatch: decoded {h:#018x}, manifest \
+             says {:#018x}",
+            entry.id, entry.hash
+        )));
+    }
+    Ok(())
+}
+
+/// Cluster-shared shard-plane state: the resolved layout plus the
+/// `shard.*` counters the trainer exports (all zero with the plane
+/// off, like the wire plane's).
+pub struct ShardPlane {
+    spec: ShardSpec,
+    /// Contiguous `(offset, elems)` ranges; empty when the plane is off.
+    layout: Vec<(usize, usize)>,
+    total: AtomicU64,
+    changed: AtomicU64,
+    reused: AtomicU64,
+    bytes_saved: AtomicU64,
+}
+
+impl ShardPlane {
+    pub fn new(spec: ShardSpec, total_elems: usize, layer_sizes: &[usize]) -> Result<Self> {
+        let layout = if spec.on() {
+            resolve_layout(&spec, total_elems, layer_sizes)?
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            spec,
+            layout,
+            total: AtomicU64::new(0),
+            changed: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+            bytes_saved: AtomicU64::new(0),
+        })
+    }
+
+    /// A fully disabled plane: the monolithic params object, byte for
+    /// byte.
+    pub fn off() -> Self {
+        Self::new(ShardSpec::Off, 1, &[]).expect("off plane is infallible")
+    }
+
+    pub fn on(&self) -> bool {
+        self.spec.on()
+    }
+
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    pub fn layout(&self) -> &[(usize, usize)] {
+        &self.layout
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.layout.len()
+    }
+
+    /// Shard slots considered across every upload (uploads × shards).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Shards whose content hash changed and were (re-)encoded.
+    pub fn changed(&self) -> u64 {
+        self.changed.load(Ordering::Relaxed)
+    }
+
+    /// Shards reused from a prior generation (entry carries the old
+    /// object, retained instead of re-uploaded).
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// On-wire bytes the reuse avoided shipping (the reused objects'
+    /// stored sizes).
+    pub fn bytes_saved(&self) -> u64 {
+        self.bytes_saved.load(Ordering::Relaxed)
+    }
+}
+
+/// The previous upload of one shard, per holder: the content hash of
+/// the *true* params slice (change detection), the hash of its
+/// receiver-side reconstruction (what the manifest advertises), and the
+/// stored object + generation a reuse re-references.
+struct PrevShard {
+    true_hash: u64,
+    wire_hash: u64,
+    object: ObjectRef,
+    generation: u64,
+}
+
+/// One holder's (peer offload's) per-shard upload history.
+pub struct ShardState {
+    prev: Mutex<Vec<Option<PrevShard>>>,
+}
+
+impl ShardState {
+    pub fn new(shards: usize) -> Self {
+        Self { prev: Mutex::new((0..shards).map(|_| None).collect()) }
+    }
+}
+
+/// Outcome of one sharded params upload: the stored manifest, the shard
+/// object references this holder now owns (one per shard — freshly put
+/// or retained), and which shards were reused (so the caller can re-key
+/// per-shard delta chains).
+pub struct ShardUpload {
+    pub manifest: ObjectRef,
+    pub shards: Vec<ObjectRef>,
+    pub reused: Vec<bool>,
+}
+
+/// Upload params v(`generation`) as shards + manifest into `bucket`.
+///
+/// Per shard: hash the true params slice; if it matches this holder's
+/// previous upload *and* the old object is still alive
+/// ([`ObjectStore::retain`] acquires this holder's reference), the
+/// manifest entry reuses the prior generation's object — nothing is
+/// encoded or shipped. Otherwise `encode_put(shard_idx, slice)` encodes
+/// and stores the shard (through `put_dedup`, so synchronous peers
+/// still store one object per shard per generation) and returns the new
+/// ref plus the receiver-side reconstruction the manifest hash is
+/// computed over. The manifest itself is `put_dedup`'d last — its bytes
+/// are rank-independent, so N peers store one manifest per generation.
+///
+/// A steady-state epoch touching k of L shards therefore puts exactly
+/// k shard objects + 1 manifest (cluster-wide, after dedupe).
+///
+/// On error every reference acquired so far is released — a failed
+/// upload leaks nothing into the store.
+#[allow(clippy::too_many_arguments)]
+pub fn upload_sharded<E>(
+    plane: &ShardPlane,
+    state: &ShardState,
+    store: &ObjectStore,
+    bucket: &str,
+    params: &[f32],
+    generation: u64,
+    kind: u8,
+    mut encode_put: E,
+) -> Result<ShardUpload>
+where
+    E: FnMut(usize, &[f32]) -> Result<(ObjectRef, Vec<f32>)>,
+{
+    let layout = plane.layout();
+    if layout.is_empty() {
+        return Err(Error::Store(
+            "upload_sharded called with the shard plane off".into(),
+        ));
+    }
+    let covered: usize = layout.iter().map(|&(_, n)| n).sum();
+    if covered != params.len() {
+        return Err(Error::Store(format!(
+            "shard layout covers {covered} elements but params have {}",
+            params.len()
+        )));
+    }
+    let mut prev = state.prev.lock().unwrap();
+    if prev.len() != layout.len() {
+        return Err(Error::Store(format!(
+            "shard state tracks {} shards but the layout has {}",
+            prev.len(),
+            layout.len()
+        )));
+    }
+    let mut entries = Vec::with_capacity(layout.len());
+    let mut shards: Vec<ObjectRef> = Vec::with_capacity(layout.len());
+    let mut reused_flags = vec![false; layout.len()];
+    let (mut changed, mut reused, mut saved) = (0u64, 0u64, 0u64);
+    let outcome = (|| -> Result<()> {
+        for (i, &(off, n)) in layout.iter().enumerate() {
+            let slice = &params[off..off + n];
+            let true_hash = hash_f32s(slice);
+            // unchanged since this holder's previous upload *and* the
+            // object still resolvable: retain acquires our reference
+            // atomically, so a concurrent release cannot strand the
+            // manifest entry on a dead object
+            let reuse = matches!(
+                &prev[i],
+                Some(p) if p.true_hash == true_hash && store.retain(&p.object)
+            );
+            if reuse {
+                let p = prev[i].as_ref().unwrap();
+                entries.push(ShardEntry {
+                    id: i as u32,
+                    kind,
+                    elems: n,
+                    hash: p.wire_hash,
+                    generation: p.generation,
+                    object: p.object.clone(),
+                });
+                shards.push(p.object.clone());
+                reused_flags[i] = true;
+                reused += 1;
+                saved += p.object.size as u64;
+            } else {
+                let (object, recon) = encode_put(i, slice)?;
+                if recon.len() != n {
+                    return Err(Error::Store(format!(
+                        "shard {i} encoder reconstructed {} elements, expected {n}",
+                        recon.len()
+                    )));
+                }
+                let wire_hash = hash_f32s(&recon);
+                entries.push(ShardEntry {
+                    id: i as u32,
+                    kind,
+                    elems: n,
+                    hash: wire_hash,
+                    generation,
+                    object: object.clone(),
+                });
+                prev[i] = Some(PrevShard {
+                    true_hash,
+                    wire_hash,
+                    object: object.clone(),
+                    generation,
+                });
+                shards.push(object);
+                changed += 1;
+            }
+        }
+        Ok(())
+    })();
+    drop(prev);
+    if let Err(e) = outcome {
+        for r in &shards {
+            store.release(r);
+        }
+        return Err(e);
+    }
+    plane.total.fetch_add(layout.len() as u64, Ordering::Relaxed);
+    plane.changed.fetch_add(changed, Ordering::Relaxed);
+    plane.reused.fetch_add(reused, Ordering::Relaxed);
+    plane.bytes_saved.fetch_add(saved, Ordering::Relaxed);
+    let manifest = ShardManifest { total_elems: params.len(), shards: entries };
+    let manifest_ref =
+        match store.put_dedup(bucket, Bytes::from(manifest.to_wire()), generation) {
+            Ok(r) => r,
+            Err(e) => {
+                for r in &shards {
+                    store.release(r);
+                }
+                return Err(e);
+            }
+        };
+    Ok(ShardUpload { manifest: manifest_ref, shards, reused: reused_flags })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{fnv1a64, PARAMS_BUCKET};
+    use crate::util::bytes::f32s_to_bytes;
+
+    fn plane(n: usize, total: usize) -> ShardPlane {
+        ShardPlane::new(ShardSpec::Count(n), total, &[]).unwrap()
+    }
+
+    /// Raw-f32 encode closure: what the offload passes with the wire
+    /// plane off.
+    fn raw_put<'a>(
+        store: &'a ObjectStore,
+        generation: u64,
+    ) -> impl FnMut(usize, &[f32]) -> Result<(ObjectRef, Vec<f32>)> + 'a {
+        move |_, slice| {
+            let r = store.put_dedup(
+                PARAMS_BUCKET,
+                Bytes::from(f32s_to_bytes(slice)),
+                generation,
+            )?;
+            Ok((r, slice.to_vec()))
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        assert_eq!(ShardSpec::parse("off").unwrap(), ShardSpec::Off);
+        assert_eq!(ShardSpec::parse("layer").unwrap(), ShardSpec::Layer);
+        assert_eq!(ShardSpec::parse("8").unwrap(), ShardSpec::Count(8));
+        assert!(!ShardSpec::Off.on());
+        assert!(ShardSpec::Layer.on());
+        let err = ShardSpec::parse("banana").unwrap_err().to_string();
+        assert!(err.contains("params_sharding"), "{err}");
+        let err = ShardSpec::parse("0").unwrap_err().to_string();
+        assert!(err.contains("params_sharding"), "{err}");
+    }
+
+    #[test]
+    fn count_layout_splits_evenly_with_remainder_up_front() {
+        let l = resolve_layout(&ShardSpec::Count(3), 10, &[]).unwrap();
+        assert_eq!(l, vec![(0, 4), (4, 3), (7, 3)]);
+        // more shards than elements clamps instead of creating empties
+        let l = resolve_layout(&ShardSpec::Count(10), 3, &[]).unwrap();
+        assert_eq!(l, vec![(0, 1), (1, 1), (2, 1)]);
+        assert!(resolve_layout(&ShardSpec::Count(2), 0, &[]).is_err());
+    }
+
+    #[test]
+    fn layer_layout_follows_spec_and_rejects_mismatch() {
+        let l = resolve_layout(&ShardSpec::Layer, 10, &[4, 5, 1]).unwrap();
+        assert_eq!(l, vec![(0, 4), (4, 5), (9, 1)]);
+        let err = resolve_layout(&ShardSpec::Layer, 10, &[]).unwrap_err().to_string();
+        assert!(err.contains("params_spec"), "{err}");
+        let err = resolve_layout(&ShardSpec::Layer, 10, &[4, 5]).unwrap_err().to_string();
+        assert!(err.contains("10"), "{err}");
+        assert!(resolve_layout(&ShardSpec::Layer, 4, &[4, 0]).is_err());
+    }
+
+    #[test]
+    fn hash_matches_store_dedup_hash() {
+        let v: Vec<f32> = (0..257).map(|i| (i as f32) * 0.5 - 3.0).collect();
+        assert_eq!(hash_f32s(&v), fnv1a64(&f32s_to_bytes(&v)));
+        assert_eq!(hash_f32s(&[]), fnv1a64(&[]));
+        // -0.0 and 0.0 hash differently: the hash is over the bit view,
+        // exactly like the store's byte-level dedupe
+        assert_ne!(hash_f32s(&[0.0]), hash_f32s(&[-0.0]));
+    }
+
+    fn sample_manifest() -> ShardManifest {
+        ShardManifest {
+            total_elems: 12,
+            shards: vec![
+                ShardEntry {
+                    id: 0,
+                    kind: SHARD_KIND_RAW,
+                    elems: 7,
+                    hash: 0xdead_beef,
+                    generation: 3,
+                    object: ObjectRef { bucket: "shared".into(), key: "a".into(), size: 28 },
+                },
+                ShardEntry {
+                    id: 1,
+                    kind: SHARD_KIND_WIRE,
+                    elems: 5,
+                    hash: 0xfeed_face,
+                    generation: 2,
+                    object: ObjectRef { bucket: "shared".into(), key: "bb".into(), size: 25 },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_wire_roundtrip() {
+        let m = sample_manifest();
+        let wire = m.to_wire();
+        assert!(ShardManifest::is_wire(&wire));
+        assert_eq!(ShardManifest::from_wire(&wire).unwrap(), m);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage_and_versions() {
+        assert!(!ShardManifest::is_wire(b"WPv1"));
+        let err = ShardManifest::from_wire(b"nope").unwrap_err().to_string();
+        assert!(err.contains("not an SPv1"), "{err}");
+        let err = ShardManifest::from_wire(b"SPv2\x00\x00").unwrap_err().to_string();
+        assert!(err.contains("unsupported shard manifest version"), "{err}");
+        assert!(ShardManifest::from_wire(b"").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_truncation_and_trailing_bytes() {
+        let wire = sample_manifest().to_wire();
+        // every strict prefix is a truncation error, never a panic
+        for cut in 0..wire.len() {
+            assert!(
+                ShardManifest::from_wire(&wire[..cut]).is_err(),
+                "prefix of {cut} bytes parsed"
+            );
+        }
+        let mut long = wire.clone();
+        long.push(0xAB);
+        let err = ShardManifest::from_wire(&long).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn manifest_rejects_id_and_count_mismatches() {
+        let mut m = sample_manifest();
+        m.shards[1].id = 7;
+        let err = ShardManifest::from_wire(&m.to_wire()).unwrap_err().to_string();
+        assert!(err.contains("id 7"), "{err}");
+        let mut m = sample_manifest();
+        m.total_elems = 13;
+        let err = ShardManifest::from_wire(&m.to_wire()).unwrap_err().to_string();
+        assert!(err.contains("header claims 13"), "{err}");
+    }
+
+    #[test]
+    fn verify_shard_checks_len_and_hash() {
+        let decoded = vec![1.0f32, 2.0, 3.0];
+        let entry = ShardEntry {
+            id: 4,
+            kind: SHARD_KIND_RAW,
+            elems: 3,
+            hash: hash_f32s(&decoded),
+            generation: 1,
+            object: ObjectRef { bucket: "b".into(), key: "k".into(), size: 12 },
+        };
+        verify_shard(&entry, &decoded).unwrap();
+        let err = verify_shard(&entry, &decoded[..2]).unwrap_err().to_string();
+        assert!(err.contains("shard 4"), "{err}");
+        let err = verify_shard(&entry, &[1.0, 2.0, 4.0]).unwrap_err().to_string();
+        assert!(err.contains("hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn split_reassemble_roundtrip() {
+        // the handler's reassembly path: decode each shard in id order and
+        // concatenate — must reproduce the input exactly for any layout
+        let params: Vec<f32> = (0..23).map(|i| i as f32 * 1.25 - 7.0).collect();
+        for shards in [1usize, 2, 5, 23] {
+            let store = ObjectStore::new();
+            let p = plane(shards, params.len());
+            let st = ShardState::new(p.shard_count());
+            let up = upload_sharded(
+                &p,
+                &st,
+                &store,
+                PARAMS_BUCKET,
+                &params,
+                1,
+                SHARD_KIND_RAW,
+                raw_put(&store, 1),
+            )
+            .unwrap();
+            let m = ShardManifest::from_wire(&store.get_ref(&up.manifest).unwrap()).unwrap();
+            assert_eq!(m.total_elems, params.len());
+            let mut back = Vec::with_capacity(m.total_elems);
+            for e in &m.shards {
+                let decoded =
+                    crate::util::bytes::bytes_to_f32s(&store.get_ref(&e.object).unwrap());
+                verify_shard(e, &decoded).unwrap();
+                back.extend_from_slice(&decoded);
+            }
+            assert_eq!(back, params, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn steady_state_epoch_puts_exactly_k_changed_shards_plus_manifest() {
+        // the ISSUE's exact-counter acceptance: a generation touching k
+        // of L shards puts exactly k shard objects + 1 manifest
+        let store = ObjectStore::new();
+        let total = 40;
+        let p = plane(4, total); // L = 4 shards of 10
+        let st = ShardState::new(4);
+        let mut params: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let up1 = upload_sharded(
+            &p, &st, &store, PARAMS_BUCKET, &params, 1, SHARD_KIND_RAW, raw_put(&store, 1),
+        )
+        .unwrap();
+        let puts_after_first = store.stats().0;
+        assert_eq!(puts_after_first, 5, "first upload: L shards + manifest");
+        assert_eq!((p.changed(), p.reused()), (4, 0));
+
+        // generation 2 touches k = 2 of the 4 shards (shards 1 and 3)
+        params[12] += 1.0;
+        params[33] -= 1.0;
+        let up2 = upload_sharded(
+            &p, &st, &store, PARAMS_BUCKET, &params, 2, SHARD_KIND_RAW, raw_put(&store, 2),
+        )
+        .unwrap();
+        assert_eq!(store.stats().0 - puts_after_first, 3, "k=2 shards + 1 manifest");
+        assert_eq!((p.total(), p.changed(), p.reused()), (8, 6, 2));
+        assert_eq!(p.bytes_saved(), 2 * 10 * 4, "two 10-elem raw shards not re-shipped");
+        assert_eq!(up2.reused, vec![true, false, true, false]);
+
+        // reused entries carry the prior generation's objects
+        let m2 = ShardManifest::from_wire(&store.get_ref(&up2.manifest).unwrap()).unwrap();
+        assert_eq!(m2.shards[0].generation, 1);
+        assert_eq!(m2.shards[0].object, up1.shards[0]);
+        assert_eq!(m2.shards[1].generation, 2);
+        assert_ne!(m2.shards[1].object, up1.shards[1]);
+        assert_eq!(store.generation_of(&m2.shards[0].object), Some(1));
+
+        // lifecycle: generation 1's holder releases its refs — the
+        // reused objects survive on generation 2's retained references
+        for r in &up1.shards {
+            store.release(r);
+        }
+        store.release(&up1.manifest);
+        assert!(store.get_ref(&m2.shards[0].object).is_ok(), "reused shard swept early");
+        // changed shard 1's generation-1 object is gone (last ref released)
+        assert!(store.get_ref(&up1.shards[1]).is_err());
+        for r in &up2.shards {
+            store.release(r);
+        }
+        store.release(&up2.manifest);
+        assert_eq!(store.total_objects(), 0, "all refs released, store empty");
+    }
+
+    #[test]
+    fn identical_peers_dedupe_shards_and_manifest() {
+        // two synchronous peers (separate states) upload identical
+        // bytes: the cluster stores one object per shard + one manifest
+        let store = ObjectStore::new();
+        let params: Vec<f32> = (0..20).map(|i| i as f32 * 0.5).collect();
+        let p = plane(2, params.len());
+        let (st_a, st_b) = (ShardState::new(2), ShardState::new(2));
+        let up_a = upload_sharded(
+            &p, &st_a, &store, PARAMS_BUCKET, &params, 1, SHARD_KIND_RAW, raw_put(&store, 1),
+        )
+        .unwrap();
+        let up_b = upload_sharded(
+            &p, &st_b, &store, PARAMS_BUCKET, &params, 1, SHARD_KIND_RAW, raw_put(&store, 1),
+        )
+        .unwrap();
+        assert_eq!(up_a.manifest, up_b.manifest);
+        assert_eq!(up_a.shards, up_b.shards);
+        assert_eq!(store.stats().0, 3, "2 shards + 1 manifest, once");
+        assert_eq!(store.dedup_hits(), 3, "peer B dedup-hit all three");
+        // each holder releases independently
+        for r in up_a.shards.iter().chain([&up_a.manifest]) {
+            store.release(r);
+        }
+        assert_eq!(store.total_objects(), 3, "peer B's refs keep everything");
+        for r in up_b.shards.iter().chain([&up_b.manifest]) {
+            store.release(r);
+        }
+        assert_eq!(store.total_objects(), 0);
+    }
+
+    #[test]
+    fn vanished_previous_object_falls_back_to_a_fresh_put() {
+        // retain() fails when the old object is gone (swept / released
+        // elsewhere): the shard re-encodes instead of publishing a
+        // dangling manifest entry
+        let store = ObjectStore::new();
+        let params: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let p = plane(2, params.len());
+        let st = ShardState::new(2);
+        let up1 = upload_sharded(
+            &p, &st, &store, PARAMS_BUCKET, &params, 1, SHARD_KIND_RAW, raw_put(&store, 1),
+        )
+        .unwrap();
+        // simulate a premature sweep of generation 1
+        for r in &up1.shards {
+            store.release(r);
+        }
+        store.release(&up1.manifest);
+        assert_eq!(store.total_objects(), 0);
+        let up2 = upload_sharded(
+            &p, &st, &store, PARAMS_BUCKET, &params, 2, SHARD_KIND_RAW, raw_put(&store, 2),
+        )
+        .unwrap();
+        assert_eq!(up2.reused, vec![false, false], "dead objects cannot be reused");
+        assert_eq!(p.changed(), 4);
+        let m2 = ShardManifest::from_wire(&store.get_ref(&up2.manifest).unwrap()).unwrap();
+        for e in &m2.shards {
+            assert_eq!(e.generation, 2);
+            assert!(store.get_ref(&e.object).is_ok());
+        }
+    }
+
+    #[test]
+    fn failed_encode_releases_everything_acquired() {
+        let store = ObjectStore::new();
+        let params: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let p = plane(3, params.len());
+        let st = ShardState::new(3);
+        let mut calls = 0;
+        let err = upload_sharded(
+            &p,
+            &st,
+            &store,
+            PARAMS_BUCKET,
+            &params,
+            1,
+            SHARD_KIND_RAW,
+            |i, slice| {
+                calls += 1;
+                if i == 2 {
+                    return Err(Error::Store("injected encode failure".into()));
+                }
+                let r = store.put_dedup(PARAMS_BUCKET, Bytes::from(f32s_to_bytes(slice)), 1)?;
+                Ok((r, slice.to_vec()))
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+        assert_eq!(calls, 3);
+        assert_eq!(store.total_objects(), 0, "failed upload must leak nothing");
+    }
+
+    #[test]
+    fn upload_rejects_layout_mismatch_and_off_plane() {
+        let store = ObjectStore::new();
+        let p = plane(2, 8);
+        let st = ShardState::new(2);
+        let short = vec![0.0f32; 5];
+        assert!(upload_sharded(
+            &p, &st, &store, PARAMS_BUCKET, &short, 1, SHARD_KIND_RAW, raw_put(&store, 1),
+        )
+        .is_err());
+        let off = ShardPlane::off();
+        assert!(!off.on());
+        let st0 = ShardState::new(0);
+        assert!(upload_sharded(
+            &off, &st0, &store, PARAMS_BUCKET, &short, 1, SHARD_KIND_RAW, raw_put(&store, 1),
+        )
+        .is_err());
+    }
+}

@@ -3,6 +3,8 @@
 
 use std::sync::{Arc, OnceLock};
 
+use p2pless::config::{Backend, TrainConfig};
+use p2pless::coordinator::{Cluster, TrainReport};
 use p2pless::runtime::Engine;
 
 /// Artifacts dir resolved against the workspace root (tests run with
@@ -18,6 +20,68 @@ pub fn engine() -> Arc<Engine> {
     ENGINE
         .get_or_init(|| Arc::new(Engine::new().expect("PJRT CPU client")))
         .clone()
+}
+
+/// The canonical 2-peer serverless cluster the data-plane acceptance
+/// suites (`wire_plane`, `fused_exec`, `shard_plane`) all start from:
+/// mini_squeezenet on MNIST, full batches only (no remainder), sized so
+/// every peer runs `epochs` complete epochs.
+#[allow(dead_code)]
+pub fn serverless_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mini_squeezenet".into(),
+        dataset: "mnist".into(),
+        peers: 2,
+        batch_size: 16,
+        epochs,
+        lr: 0.05,
+        train_samples: 2 * 16 * epochs, // full batches per peer, no remainder
+        val_samples: 64,
+        backend: Backend::Serverless,
+        artifacts_dir: artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+/// Run one cluster on the shared per-binary engine.
+#[allow(dead_code)]
+pub fn run(cfg: TrainConfig) -> TrainReport {
+    Cluster::with_engine(cfg, engine()).unwrap().run().unwrap()
+}
+
+/// The counters a plane that claims byte-identity must not perturb: the
+/// whole store data-plane fingerprint plus the fold-visible broker
+/// number.
+#[allow(dead_code)]
+pub const PINNED_COUNTERS: &[&str] = &[
+    "store.puts",
+    "store.gets",
+    "store.bytes_in",
+    "store.dedup_hits",
+    "store.decode_hits",
+    "store.decode_misses",
+    "broker.stale_drops",
+];
+
+/// Bit-exact validation-curve equality — epoch ids, loss bits and
+/// accuracy bits all identical. `ctx` names the configuration under
+/// test in the failure message.
+#[allow(dead_code)]
+pub fn assert_val_curves_bit_identical(a: &TrainReport, b: &TrainReport, ctx: &str) {
+    assert_eq!(a.val_curve.len(), b.val_curve.len(), "curve length diverged: {ctx}");
+    for ((e1, l1, a1), (e2, l2, a2)) in a.val_curve.iter().zip(&b.val_curve) {
+        assert_eq!(e1, e2, "epoch ids diverged: {ctx}");
+        assert_eq!(l1.to_bits(), l2.to_bits(), "val loss bits diverged: {ctx}");
+        assert_eq!(a1.to_bits(), a2.to_bits(), "val acc bits diverged: {ctx}");
+    }
+}
+
+/// Every [`PINNED_COUNTERS`] entry identical between two runs.
+#[allow(dead_code)]
+pub fn assert_pinned_counters_eq(a: &TrainReport, b: &TrainReport, ctx: &str) {
+    for name in PINNED_COUNTERS {
+        assert_eq!(a.counter(name), b.counter(name), "counter {name} diverged: {ctx}");
+    }
 }
 
 /// Skip (with a loud message) when artifacts are missing — keeps

@@ -323,6 +323,74 @@ fn takeover_completes_all_epochs_with_reference_curve() {
     assert_eq!(rep.store_objects, 0);
 }
 
+/// PR-9 satellite: the same kill with the sharded params plane on. The
+/// dead peer's shard objects and manifest are orphan-swept (store ends
+/// empty), and the takeover re-dispatch resolves the SAME manifest the
+/// dead peer published — the survivors' final params fingerprints and
+/// the validation curve match the fault-free sharded run exactly.
+#[test]
+fn takeover_resolves_the_same_shard_manifest() {
+    require_artifacts!();
+    let sharded = TrainConfig { params_sharding: "4".into(), ..fault_cfg() };
+    let reference = Cluster::with_engine(sharded.clone(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Takeover,
+        fault_plan: "kill:peer1@2".into(),
+        ..sharded
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.deaths"), Some(1));
+    assert_eq!(rep.counter("membership.takeover_epochs"), Some(2));
+    let total = rep.counter("shard.total").unwrap();
+    assert!(total > 0, "sharded faulted run reported no shard uploads");
+    assert_eq!(
+        rep.counter("shard.changed").unwrap() + rep.counter("shard.reused").unwrap(),
+        total
+    );
+    assert_eq!(rep.val_curve.len(), reference.val_curve.len());
+    for ((e1, l1, _), (e2, l2, _)) in reference.val_curve.iter().zip(&rep.val_curve) {
+        assert_eq!(e1, e2);
+        assert!(
+            (l1 - l2).abs() < 1e-6,
+            "sharded takeover diverged at epoch {e1}: {l1} vs {l2}"
+        );
+    }
+    // the dead peer's shard scratch (manifest + shard objects) was
+    // orphan-swept with its generations; nothing survives the run
+    assert_eq!(rep.store_objects, 0, "sharded takeover leaked store objects");
+    // bit-stable replay: the takeover resolves the same manifest to the
+    // same shard objects every time — survivors' final params bits are
+    // identical across reruns of the same fault plan
+    let replay = Cluster::with_engine(
+        TrainConfig {
+            on_peer_failure: FailurePolicy::Takeover,
+            fault_plan: "kill:peer1@2".into(),
+            params_sharding: "4".into(),
+            ..fault_cfg()
+        },
+        common::engine(),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(replay.peers.len(), rep.peers.len());
+    for (a, b) in rep.peers.iter().zip(&replay.peers) {
+        assert_eq!(a.rank, b.rank);
+        assert_eq!(
+            a.params_fnv, b.params_fnv,
+            "rank {} params bits not replay-stable under sharded takeover",
+            a.rank
+        );
+    }
+}
+
 /// Same kill under `drop`: the run completes with the fold shrunk to
 /// the survivors (no takeover, gradients recorded as dropped).
 #[test]

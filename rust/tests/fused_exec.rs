@@ -26,7 +26,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use p2pless::config::{Backend, OffloadMode, TrainConfig};
+use p2pless::config::{OffloadMode, TrainConfig};
 use p2pless::coordinator::Cluster;
 use p2pless::faas::Semaphore;
 use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey, Manifest};
@@ -270,20 +270,10 @@ fn oversized_groups_fall_back_without_corruption() {
 
 // -------------------------------------------------------------- cluster
 
+/// The shared 2-peer serverless base at 2 epochs (the fusion suites
+/// only need two generations to cross an epoch boundary).
 fn serverless_cfg() -> TrainConfig {
-    TrainConfig {
-        model: "mini_squeezenet".into(),
-        dataset: "mnist".into(),
-        peers: 2,
-        batch_size: 16,
-        epochs: 2,
-        lr: 0.05,
-        train_samples: 2 * 16 * 2, // 2 full batches per peer
-        val_samples: 64,
-        backend: Backend::Serverless,
-        artifacts_dir: common::artifacts_dir(),
-        ..Default::default()
-    }
+    common::serverless_cfg(2)
 }
 
 fn engine_with_batch(exec_batch: usize, wait_us: u64) -> Arc<Engine> {

@@ -8,6 +8,12 @@ use p2pless::compress::{codec_for, Codec, QsgdCodec, RawCodec, TopkCodec};
 use p2pless::config::Compression;
 use p2pless::coordinator::GradientDict;
 use p2pless::faas::schedule_wall;
+use p2pless::store::shard::{
+    hash_f32s, upload_sharded, ShardManifest, ShardPlane, ShardSpec, ShardState,
+    SHARD_KIND_RAW,
+};
+use p2pless::store::{ObjectStore, PARAMS_BUCKET};
+use p2pless::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 use p2pless::util::{Bytes, Rng};
 use std::time::Duration;
 
@@ -109,6 +115,134 @@ fn prop_qsgd_wire_never_larger_than_raw_plus_header() {
         let c = QsgdCodec::new(127, seed); // worst case: 8 bits/elem
         let wire = c.encode(&v).unwrap();
         assert!(wire.len() <= 10 + v.len() + 8, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------- shard codec
+
+/// A random on-plane shard spec for `total` elements: either an N-way
+/// cut or a `layer` cut along randomly drawn layer sizes (returned so
+/// the plane can be built).
+fn rand_spec(rng: &mut Rng, total: usize) -> (ShardSpec, Vec<usize>) {
+    if rng.gen_below(2) == 0 {
+        (ShardSpec::Count(1 + rng.gen_below(total)), Vec::new())
+    } else {
+        let mut sizes = Vec::new();
+        let mut left = total;
+        while left > 0 {
+            let s = 1 + rng.gen_below(left);
+            sizes.push(s);
+            left -= s;
+        }
+        (ShardSpec::Layer, sizes)
+    }
+}
+
+/// Raw-f32 encode closure (what the offload uses with the wire plane
+/// off): put each slice as plain bytes.
+fn raw_put(
+    store: &ObjectStore,
+    generation: u64,
+) -> impl FnMut(usize, &[f32]) -> p2pless::Result<(p2pless::store::ObjectRef, Vec<f32>)> + '_ {
+    move |_, slice| {
+        let r = store.put_dedup(PARAMS_BUCKET, Bytes::from(f32s_to_bytes(slice)), generation)?;
+        Ok((r, slice.to_vec()))
+    }
+}
+
+/// Split → upload → reassemble is bit-lossless for arbitrary layouts,
+/// and the manifest survives a wire roundtrip unchanged.
+#[test]
+fn prop_shard_split_reassemble_roundtrips_any_layout() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5a5a);
+        let total = 1 + rng.gen_below(400);
+        let v: Vec<f32> = (0..total).map(|_| rng.gen_range_f32(-10.0, 10.0)).collect();
+        let (spec, sizes) = rand_spec(&mut rng, total);
+        let plane = ShardPlane::new(spec, total, &sizes)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let state = ShardState::new(plane.shard_count());
+        let store = ObjectStore::new();
+        let up = upload_sharded(
+            &plane, &state, &store, PARAMS_BUCKET, &v, 1, SHARD_KIND_RAW,
+            raw_put(&store, 1),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let wire = store.get_ref(&up.manifest).unwrap();
+        let m = ShardManifest::from_wire(&wire).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(m.to_wire(), wire.to_vec(), "seed {seed}: wire roundtrip not stable");
+        assert_eq!(m.total_elems, total, "seed {seed}");
+        let mut back = Vec::with_capacity(total);
+        for e in &m.shards {
+            back.extend_from_slice(&bytes_to_f32s(&store.get_ref(&e.object).unwrap()));
+        }
+        let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back), bits(&v), "seed {seed}: reassembly diverged");
+    }
+}
+
+/// The shard content hash is stable (same bits → same hash) and
+/// sensitive to any single-element bit change (FNV-1a folds every byte
+/// through an injective step, so one changed byte always moves it).
+#[test]
+fn prop_shard_hash_stable_and_input_sensitive() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x6b6b);
+        let n = 1 + rng.gen_below(300);
+        let v: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-10.0, 10.0)).collect();
+        let h = hash_f32s(&v);
+        assert_eq!(h, hash_f32s(&v.clone()), "seed {seed}: hash not deterministic");
+        let mut w = v.clone();
+        let i = rng.gen_below(n);
+        w[i] = f32::from_bits(w[i].to_bits() ^ 1);
+        assert_ne!(h, hash_f32s(&w), "seed {seed}: single-bit change not detected at {i}");
+    }
+}
+
+/// Every strict prefix of a valid `SPv1` manifest is rejected with an
+/// actionable error (never a panic), as are unknown versions, trailing
+/// bytes, and arbitrary single-byte corruption (which must either parse
+/// or error — structured rejection, no crashes).
+#[test]
+fn prop_shard_manifest_rejects_malformed_wire_bytes() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7c7c);
+        let total = 1 + rng.gen_below(120);
+        let v: Vec<f32> = (0..total).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+        let (spec, sizes) = rand_spec(&mut rng, total);
+        let plane = ShardPlane::new(spec, total, &sizes).unwrap();
+        let state = ShardState::new(plane.shard_count());
+        let store = ObjectStore::new();
+        let up = upload_sharded(
+            &plane, &state, &store, PARAMS_BUCKET, &v, 1, SHARD_KIND_RAW,
+            raw_put(&store, 1),
+        )
+        .unwrap();
+        let wire = store.get_ref(&up.manifest).unwrap().to_vec();
+
+        // one random strict prefix per case (the unit suite walks all)
+        let cut = rng.gen_below(wire.len());
+        let err = ShardManifest::from_wire(&wire[..cut]).unwrap_err().to_string();
+        assert!(
+            err.contains("SPv1") || err.contains("shard manifest"),
+            "seed {seed} cut {cut}: unhelpful error {err:?}"
+        );
+
+        // trailing garbage is rejected
+        let mut long = wire.clone();
+        long.push(rng.next_u64() as u8);
+        assert!(ShardManifest::from_wire(&long).is_err(), "seed {seed}: trailing byte");
+
+        // unknown version byte is rejected
+        let mut vers = wire.clone();
+        vers[3] = vers[3].wrapping_add(1 + (rng.gen_below(200) as u8));
+        assert!(ShardManifest::from_wire(&vers).is_err(), "seed {seed}: version");
+
+        // arbitrary single-byte corruption: Ok or Err, never a panic
+        let mut mutated = wire.clone();
+        let i = rng.gen_below(mutated.len());
+        mutated[i] ^= 1 << rng.gen_below(8);
+        let _ = ShardManifest::from_wire(&mutated);
     }
 }
 

@@ -1,0 +1,267 @@
+//! Cluster-level acceptance for the sharded params manifest (PR 9):
+//!
+//! - cross-plane invariance: `--params-sharding 4` trains bit-identically
+//!   to the monolithic plane — validation curves, final packed params
+//!   (FNV fingerprints), modeled lambda invocations/billed cost, and
+//!   broker traffic — across offload modes staged/pipelined/cross-epoch
+//!   × `--wire-compression none|qsgd:16` × `--exec-threads` 1/2/8;
+//! - exact-counter acceptance (no artifacts needed): a steady-state
+//!   generation touching k of L shards puts exactly k shard objects
+//!   + 1 manifest, and reused entries resolve to the prior generation's
+//!   live objects;
+//! - decode economy: each changed shard is decoded exactly once
+//!   cluster-wide per generation (`store.decode_misses` grows by exactly
+//!   the shard count over the monolithic plane);
+//! - cache interactions: a decode cache far smaller than the live shard
+//!   set still trains bit-identically under cross-epoch pipelining,
+//!   because live generations' pinned shards are admitted over capacity
+//!   instead of being evicted;
+//! - `layer` mode rides the AOT manifest's `params_spec` when the
+//!   artifacts carry one (skips loudly otherwise).
+
+mod common;
+
+use common::{run, serverless_cfg};
+use p2pless::config::{Compression, OffloadMode, TrainConfig};
+use p2pless::coordinator::TrainReport;
+use p2pless::runtime::Manifest;
+use p2pless::store::shard::{
+    hash_f32s, upload_sharded, ShardManifest, ShardPlane, ShardSpec, ShardState,
+    SHARD_KIND_RAW,
+};
+use p2pless::store::{ObjectStore, PARAMS_BUCKET};
+use p2pless::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+use p2pless::util::Bytes;
+
+const SHARDS: usize = 4;
+
+fn sharded(cfg: TrainConfig) -> TrainConfig {
+    TrainConfig { params_sharding: SHARDS.to_string(), ..cfg }
+}
+
+/// Everything that must not move when the only change is how the params
+/// object is cut up: the math, the fold, the modeled bill, the broker.
+fn assert_cross_plane_invariant(mono: &TrainReport, shard: &TrainReport, ctx: &str) {
+    common::assert_val_curves_bit_identical(mono, shard, ctx);
+    assert_eq!(mono.peers.len(), shard.peers.len(), "{ctx}");
+    for (a, b) in mono.peers.iter().zip(&shard.peers) {
+        assert_ne!(a.params_fnv, 0, "peer {} reported no params fingerprint: {ctx}", a.rank);
+        assert_eq!(
+            a.params_fnv, b.params_fnv,
+            "peer {} final params bits diverged under sharding: {ctx}",
+            a.rank
+        );
+    }
+    assert_eq!(mono.lambda_invocations, shard.lambda_invocations, "{ctx}");
+    assert_eq!(
+        mono.lambda_cost_usd.to_bits(),
+        shard.lambda_cost_usd.to_bits(),
+        "modeled billed cost diverged under sharding: {ctx}"
+    );
+    assert_eq!(mono.broker_msgs, shard.broker_msgs, "{ctx}");
+    assert_eq!(mono.broker_bytes, shard.broker_bytes, "{ctx}");
+    assert_eq!(
+        mono.counter("broker.stale_drops"),
+        shard.counter("broker.stale_drops"),
+        "{ctx}"
+    );
+    for rep in [mono, shard] {
+        assert_eq!(rep.store_objects, 0, "leaked store objects: {ctx}");
+    }
+    // the shard counters themselves: silent on the monolithic plane,
+    // fully accounted on the sharded one
+    for c in ["shard.total", "shard.changed", "shard.reused", "shard.bytes_saved"] {
+        assert_eq!(mono.counter(c), Some(0), "{c} nonzero on the monolithic plane: {ctx}");
+    }
+    let total = shard.counter("shard.total").unwrap();
+    assert!(total > 0, "sharded run reported no shard uploads: {ctx}");
+    assert_eq!(
+        shard.counter("shard.changed").unwrap() + shard.counter("shard.reused").unwrap(),
+        total,
+        "changed + reused must account for every shard upload: {ctx}"
+    );
+}
+
+/// The headline invariance matrix: sharding is a pure data-plane
+/// re-encoding at every offload mode × wire plane × thread count.
+#[test]
+fn sharded_plane_is_bit_identical_to_monolithic_everywhere() {
+    require_artifacts!();
+    for mode in [OffloadMode::Staged, OffloadMode::Pipelined, OffloadMode::CrossEpoch] {
+        for compression in [Compression::None, Compression::Qsgd { s: 16 }] {
+            for threads in [1usize, 2, 8] {
+                let cfg = TrainConfig {
+                    offload_mode: mode,
+                    wire_compression: compression,
+                    exec_threads: threads,
+                    ..serverless_cfg(2)
+                };
+                let mono = run(cfg.clone());
+                let shard = run(sharded(cfg));
+                let ctx = format!("{mode:?} × {compression:?} × threads {threads}");
+                assert_cross_plane_invariant(&mono, &shard, &ctx);
+            }
+        }
+    }
+}
+
+/// Each changed shard is decoded exactly once cluster-wide: relative to
+/// the monolithic plane (one params decode per generation), a sharded
+/// generation adds exactly `SHARDS` decode misses — the manifest
+/// assembly replaces the monolithic miss, and each shard misses once no
+/// matter how many branches resolve the same generation.
+#[test]
+fn changed_shards_decode_exactly_once_cluster_wide() {
+    require_artifacts!();
+    let epochs = 2usize;
+    let cfg = TrainConfig { exec_threads: 8, ..serverless_cfg(epochs) };
+    let mono = run(cfg.clone());
+    let shard = run(sharded(cfg));
+    assert_cross_plane_invariant(&mono, &shard, "staged × none × threads 8");
+    // per peer per epoch one upload of SHARDS shards; real training
+    // perturbs every layer every epoch, so nothing is reusable here
+    assert_eq!(
+        shard.counter("shard.total"),
+        Some((2 * epochs * SHARDS) as u64),
+        "2 peers × {epochs} epochs × {SHARDS} shards"
+    );
+    let mono_misses = mono.counter("store.decode_misses").unwrap();
+    let shard_misses = shard.counter("store.decode_misses").unwrap();
+    assert_eq!(
+        shard_misses - mono_misses,
+        (epochs * SHARDS) as u64,
+        "a sharded generation must cost exactly {SHARDS} extra decode misses \
+         (manifest + {SHARDS} shards, vs one monolithic object)"
+    );
+}
+
+/// A decode cache far smaller than one generation's live shard set
+/// (capacity 2 vs manifest + 4 shards, × pipeline depth) still trains
+/// bit-identically under cross-epoch dispatch: pinned live generations
+/// are admitted over capacity, never evicted mid-flight.
+#[test]
+fn tiny_decode_cache_survives_cross_epoch_sharding() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        offload_mode: OffloadMode::CrossEpoch,
+        exec_threads: 4,
+        decode_cache: 2,
+        ..serverless_cfg(3)
+    };
+    let mono = run(cfg.clone());
+    let shard = run(sharded(cfg));
+    assert_cross_plane_invariant(&mono, &shard, "cross-epoch × tiny cache");
+}
+
+/// `--params-sharding layer` cuts along the AOT manifest's
+/// `params_spec` and stays bit-identical to the monolithic plane.
+/// Older artifacts (no `params_spec`) skip loudly — `N`-way mode and
+/// the unit suite cover the codec either way.
+#[test]
+fn layer_mode_matches_monolithic_when_artifacts_carry_a_params_spec() {
+    require_artifacts!();
+    let man = Manifest::load(common::artifacts_dir()).unwrap();
+    let has_spec = man
+        .models
+        .get("mini_squeezenet_mnist")
+        .is_some_and(|e| !e.params_spec.is_empty());
+    if !has_spec {
+        eprintln!(
+            "SKIP layer_mode_matches_monolithic_when_artifacts_carry_a_params_spec: \
+             artifacts manifest has no params_spec (re-run aot.py)"
+        );
+        return;
+    }
+    let mono = run(serverless_cfg(2));
+    let layered = run(TrainConfig {
+        params_sharding: "layer".into(),
+        ..serverless_cfg(2)
+    });
+    assert_cross_plane_invariant(&mono, &layered, "layer mode");
+}
+
+// ------------------------------------------------- store-level acceptance
+// (no PJRT, no artifacts: the ISSUE's exact-counter bar, driven through
+// the public shard API exactly as `ServerlessOffload` drives it)
+
+fn raw_put(store: &ObjectStore, generation: u64) -> impl FnMut(usize, &[f32]) -> p2pless::Result<(p2pless::store::ObjectRef, Vec<f32>)> + '_ {
+    move |_, slice| {
+        let r = store.put_dedup(PARAMS_BUCKET, Bytes::from(f32s_to_bytes(slice)), generation)?;
+        Ok((r, slice.to_vec()))
+    }
+}
+
+/// A steady-state generation that touches k of L shards puts exactly k
+/// shard objects + 1 manifest; the other L−k manifest entries resolve
+/// to the prior generation's still-live objects, bit-identically.
+#[test]
+fn k_of_l_generation_puts_exactly_k_shards_plus_one_manifest() {
+    let store = ObjectStore::new();
+    let total = 60usize;
+    let l = 5usize;
+    let plane =
+        ShardPlane::new(ShardSpec::Count(l), total, &[]).unwrap();
+    let state = ShardState::new(plane.shard_count());
+    let mut params: Vec<f32> = (0..total).map(|i| i as f32 * 0.25).collect();
+
+    let up1 = upload_sharded(
+        &plane, &state, &store, PARAMS_BUCKET, &params, 1, SHARD_KIND_RAW,
+        raw_put(&store, 1),
+    )
+    .unwrap();
+    let first_puts = store.stats().0;
+    assert_eq!(first_puts, (l + 1) as u64, "first generation: L shards + manifest");
+
+    // generation 2 touches k = 2 of the 5 shards
+    let k = 2usize;
+    params[0] += 1.0; // shard 0
+    params[30] += 1.0; // shard 2
+    let up2 = upload_sharded(
+        &plane, &state, &store, PARAMS_BUCKET, &params, 2, SHARD_KIND_RAW,
+        raw_put(&store, 2),
+    )
+    .unwrap();
+    assert_eq!(
+        store.stats().0 - first_puts,
+        (k + 1) as u64,
+        "k-of-L generation: exactly k shard puts + 1 manifest"
+    );
+    assert_eq!(plane.total(), (2 * l) as u64);
+    assert_eq!(plane.changed(), (l + k) as u64);
+    assert_eq!(plane.reused(), (l - k) as u64);
+
+    // reused entries are the prior generation's objects, and decoding
+    // through the new manifest reproduces the new params bit-exactly
+    let m2 = ShardManifest::from_wire(&store.get_ref(&up2.manifest).unwrap()).unwrap();
+    assert_eq!(m2.total_elems, total);
+    for (i, e) in m2.shards.iter().enumerate() {
+        if up2.reused[i] {
+            assert_eq!(e.generation, 1, "shard {i}");
+            assert_eq!(e.object, up1.shards[i], "shard {i}");
+        } else {
+            assert_eq!(e.generation, 2, "shard {i}");
+        }
+    }
+    let mut back = Vec::with_capacity(total);
+    for e in &m2.shards {
+        back.extend_from_slice(&bytes_to_f32s(&store.get_ref(&e.object).unwrap()));
+    }
+    assert_eq!(hash_f32s(&back), hash_f32s(&params), "reassembly diverged");
+    assert_eq!(
+        back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        params.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+    );
+
+    // lifecycle: generation 1's holder releases; generation 2's
+    // retained refs keep the reused shards alive, then release clean
+    for r in up1.shards.iter().chain([&up1.manifest]) {
+        store.release(r);
+    }
+    for e in &m2.shards {
+        assert!(store.get_ref(&e.object).is_ok(), "reused shard died with gen 1");
+    }
+    for r in up2.shards.iter().chain([&up2.manifest]) {
+        store.release(r);
+    }
+    assert_eq!(store.total_objects(), 0, "lifecycle leaked objects");
+}

@@ -11,40 +11,8 @@
 
 mod common;
 
-use p2pless::config::{Backend, Compression, OffloadMode, TrainConfig};
-use p2pless::coordinator::{Cluster, TrainReport};
-
-fn serverless_cfg() -> TrainConfig {
-    TrainConfig {
-        model: "mini_squeezenet".into(),
-        dataset: "mnist".into(),
-        peers: 2,
-        batch_size: 16,
-        epochs: 3,
-        lr: 0.05,
-        train_samples: 2 * 16 * 3, // 3 full batches per peer, no remainder
-        val_samples: 64,
-        backend: Backend::Serverless,
-        artifacts_dir: common::artifacts_dir(),
-        ..Default::default()
-    }
-}
-
-fn run(cfg: TrainConfig) -> TrainReport {
-    Cluster::with_engine(cfg, common::engine()).unwrap().run().unwrap()
-}
-
-/// The counters the `none` plane must not perturb: the whole store
-/// data-plane fingerprint plus the fold-visible lambda numbers.
-const PINNED: &[&str] = &[
-    "store.puts",
-    "store.gets",
-    "store.bytes_in",
-    "store.dedup_hits",
-    "store.decode_hits",
-    "store.decode_misses",
-    "broker.stale_drops",
-];
+use common::{run, serverless_cfg};
+use p2pless::config::{Compression, OffloadMode, TrainConfig};
 
 /// Explicitly passing `--wire-compression none` must be byte-identical
 /// to the default plane on every offload mode: same validation curve
@@ -54,32 +22,21 @@ const PINNED: &[&str] = &[
 fn none_wire_plane_is_byte_identical_on_every_mode() {
     require_artifacts!();
     for mode in [OffloadMode::Staged, OffloadMode::Pipelined, OffloadMode::CrossEpoch] {
-        let base = run(TrainConfig { offload_mode: mode, ..serverless_cfg() });
+        let base = run(TrainConfig { offload_mode: mode, ..serverless_cfg(3) });
         let explicit = run(TrainConfig {
             offload_mode: mode,
             wire_compression: Compression::None,
             params_delta_every: 0,
-            ..serverless_cfg()
+            ..serverless_cfg(3)
         });
-        assert_eq!(base.val_curve.len(), explicit.val_curve.len());
-        for ((e1, l1, a1), (e2, l2, a2)) in base.val_curve.iter().zip(&explicit.val_curve) {
-            assert_eq!(e1, e2, "mode {mode:?}");
-            assert_eq!(l1.to_bits(), l2.to_bits(), "val loss bits diverged: {mode:?}");
-            assert_eq!(a1.to_bits(), a2.to_bits(), "val acc bits diverged: {mode:?}");
-        }
+        common::assert_val_curves_bit_identical(&base, &explicit, &format!("{mode:?}"));
         assert_eq!(base.lambda_invocations, explicit.lambda_invocations);
         assert_eq!(
             base.lambda_cost_usd.to_bits(),
             explicit.lambda_cost_usd.to_bits(),
             "modeled cost diverged with an explicit none plane: {mode:?}"
         );
-        for name in PINNED {
-            assert_eq!(
-                base.counter(name),
-                explicit.counter(name),
-                "counter {name} diverged: {mode:?}"
-            );
-        }
+        common::assert_pinned_counters_eq(&base, &explicit, &format!("{mode:?}"));
         for rep in [&base, &explicit] {
             for c in
                 ["wire.bytes_raw", "wire.bytes_wire", "wire.encode_us", "wire.decode_us",
@@ -99,11 +56,11 @@ fn none_wire_plane_is_byte_identical_on_every_mode() {
 #[test]
 fn qsgd16_delta_plane_converges_and_shrinks_the_wire() {
     require_artifacts!();
-    let baseline = run(serverless_cfg());
+    let baseline = run(serverless_cfg(3));
     let quant = run(TrainConfig {
         wire_compression: Compression::Qsgd { s: 16 },
         params_delta_every: 4,
-        ..serverless_cfg()
+        ..serverless_cfg(3)
     });
     let l_base = baseline.final_val_loss().unwrap();
     let l_quant = quant.final_val_loss().unwrap();
