@@ -3,10 +3,12 @@
 //! worker-pool fan-out at several thread counts, the pipelined-vs-staged
 //! epoch dispatch, and a real two-peer PJRT run per backend and mode.
 
-use p2pless::broker::Broker;
+use p2pless::broker::{Broker, Message, QueueMode};
 use p2pless::compress::WirePlane;
 use p2pless::config::{Backend, FailurePolicy, OffloadMode, TrainConfig};
-use p2pless::coordinator::{Cluster, EpochBarrier, Membership, ServerlessOffload};
+use p2pless::coordinator::{
+    Cluster, EpochBarrier, Membership, PartitionHandle, ServerlessOffload,
+};
 use p2pless::data::{Batcher, DatasetKind, SyntheticDataset};
 use p2pless::error::Error;
 use p2pless::faas::{
@@ -16,10 +18,10 @@ use p2pless::faas::{
 use p2pless::faas::Semaphore;
 use p2pless::harness::bench::{header, Bench};
 use p2pless::harness::cloud_exps::fig3_cell;
-use p2pless::harness::faults::FaultPlanSpec;
+use p2pless::harness::faults::{FaultPlanSpec, FaultScope};
 use p2pless::perfmodel::PaperModel;
 use p2pless::runtime::{literal_f32, Engine, ExecBatcher, FuseKey, ModelRuntime};
-use p2pless::store::{shard::ShardPlane, DecodedCache, ObjectStore};
+use p2pless::store::{shard::ShardPlane, DecodedCache, ObjectRef, ObjectStore};
 use p2pless::util::{Bytes, Json};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -32,11 +34,16 @@ fn main() {
     // CI sets BENCH_FUSED_ONLY to skip the sleep-driven synthetic
     // sections and go straight to the fused-exec comparison + JSON;
     // BENCH_STACKED_ONLY runs only the stacked three-way below;
-    // BENCH_FAULTS_ONLY runs only the fault-tolerance sweep
+    // BENCH_FAULTS_ONLY runs only the fault-tolerance sweep;
+    // BENCH_CHAOS_ONLY runs only the churn × store-fault chaos sweep
     let fused_only = std::env::var_os("BENCH_FUSED_ONLY").is_some();
     let stacked_only = std::env::var_os("BENCH_STACKED_ONLY").is_some();
     if std::env::var_os("BENCH_FAULTS_ONLY").is_some() {
         bench_faults();
+        return;
+    }
+    if std::env::var_os("BENCH_CHAOS_ONLY").is_some() {
+        bench_chaos();
         return;
     }
 
@@ -841,5 +848,203 @@ fn bench_faults() {
         .set("retry", retry_cell);
     if let Err(e) = std::fs::write("BENCH_fault_tolerance.json", j.to_string()) {
         eprintln!("could not write BENCH_fault_tolerance.json: {e}");
+    }
+}
+
+/// The chaos sweep (`BENCH_CHAOS_ONLY=1`): seeded churn rate (kills
+/// plus matching mid-run joins) × store-fault rate × failure policy,
+/// replayed against the real elastic [`Membership`] table and the
+/// growth-aware [`EpochBarrier`] — admissions, partition splits, shed
+/// directives, takeover claims and barrier proxies all exercise the
+/// production plane — plus an armed store/broker I/O replay per cell
+/// under the shared retry policy, where injected transients, corrupted
+/// reads and dropped publishes must all be absorbed. Every value in
+/// the committed JSON is a deterministic integer (schedules are
+/// seeded, the chaos gates fire once per scheduled event, the
+/// bookkeeping is exact), so `BENCH_chaos.json` is byte-stable across
+/// runs and machines — walls go to stdout only.
+fn bench_chaos() {
+    const EPOCHS: usize = 6;
+    const SEED: u64 = 13;
+    const REFS_PER_RANK: usize = 6;
+    const RETRY_MAX: u32 = 3;
+    let mut cells: Vec<Json> = Vec::new();
+    for &peers in &[4usize, 8] {
+        for &churn_pct in &[0usize, 25, 50] {
+            for &store_pct in &[0usize, 20] {
+                // kills and joins ride the same churn rate so every
+                // casualty has a matching mid-run scale-up; two fixed
+                // explicit broker faults exercise the publish gate in
+                // every cell
+                let spec = format!(
+                    "rate:kill=0.{churn_pct:02},join=0.{churn_pct:02},\
+                     store=0.{store_pct:02},seed={SEED};\
+                     brokerdrop:peer1@1;brokerdelay:peer0@2:0ms"
+                );
+
+                // ---- armed I/O replay: one put + verified get + publish
+                // per (rank, epoch) cell under that peer's fault scope —
+                // every scheduled store/broker fault fires exactly once
+                let parsed = FaultPlanSpec::parse(&spec).unwrap();
+                let plan = Arc::new(parsed.resolve(peers, EPOCHS).unwrap());
+                let store = ObjectStore::new();
+                let chaos_broker = Broker::default();
+                let retry = RetryPolicy::configured(RETRY_MAX, 0, SEED);
+                store.arm_chaos(plan.clone(), retry);
+                chaos_broker.arm_chaos(plan.clone(), retry);
+                store.create_bucket("chaos");
+                chaos_broker.declare("chaos.sync", QueueMode::Fifo).unwrap();
+                for epoch in 1..=EPOCHS as u64 {
+                    for rank in 0..peers {
+                        let _scope = FaultScope::enter(rank, epoch);
+                        let payload = Bytes::from(vec![rank as u8, epoch as u8, 0xC5]);
+                        let key = format!("r{rank}-e{epoch}");
+                        let r = store.put_gen("chaos", &key, payload.clone(), epoch).unwrap();
+                        let back = store.get_ref(&r).unwrap();
+                        assert_eq!(back, payload, "verified get must round-trip");
+                        chaos_broker
+                            .publish("chaos.sync", Message::new(rank, epoch, payload))
+                            .unwrap();
+                    }
+                }
+                let io = (
+                    store.chaos_retries(),
+                    store.corrupt_refetches(),
+                    chaos_broker.chaos_retries(),
+                    plan.store_faults_fired(),
+                    plan.broker_faults_fired(),
+                );
+                println!(
+                    "chaos(p{peers} churn {churn_pct}% store {store_pct}%): \
+                     {} store retries, {} corrupt refetches, {} broker retries, \
+                     {} store + {} broker faults fired",
+                    io.0, io.1, io.2, io.3, io.4,
+                );
+
+                // ---- membership replay: boundary admissions land first
+                // (the trainer's step order), then scheduled kills, then
+                // the survivors' consume walk; the cumulative barrier
+                // must fill via proxies every epoch
+                for &policy in &[FailurePolicy::Drop, FailurePolicy::Takeover] {
+                    let plan = parsed.resolve(peers, EPOCHS).unwrap();
+                    let mut kills: Vec<(usize, u64)> = (0..peers)
+                        .filter_map(|r| plan.kill_epoch(r).map(|e| (r, e)))
+                        .collect();
+                    kills.sort_by_key(|&(r, e)| (e, r));
+                    let joins = plan.join_events();
+                    let broker = Arc::new(Broker::default());
+                    let m = Membership::new(
+                        broker.clone(),
+                        peers,
+                        policy,
+                        Duration::from_millis(1),
+                        Duration::from_secs(3600),
+                        true,
+                    )
+                    .unwrap();
+                    m.set_join_schedule(&joins).unwrap();
+                    for r in 0..peers {
+                        let refs = (0..REFS_PER_RANK)
+                            .map(|i| ObjectRef {
+                                bucket: "chaos".into(),
+                                key: format!("p{r}-b{i}"),
+                                size: 1,
+                            })
+                            .collect();
+                        m.register_partition(r, PartitionHandle::Refs(refs));
+                    }
+                    let growth = m.growth_epochs();
+                    let barrier = EpochBarrier::with_growth(&broker, peers, growth).unwrap();
+                    let mut sheds_taken = 0usize;
+                    for epoch in 1..=EPOCHS as u64 {
+                        for (jrank, jepoch) in m.pending_joins_at(epoch) {
+                            let adm = m
+                                .admit_join(jrank, jepoch)
+                                .unwrap()
+                                .expect("rate plans schedule growth joins only");
+                            m.proxy_catch_up(&barrier, jrank, &adm.catch_up).unwrap();
+                        }
+                        for &(r, at) in &kills {
+                            if at == epoch {
+                                m.declare_dead(r, "scheduled kill");
+                            }
+                        }
+                        let width = m.width_at(epoch);
+                        let alive: Vec<usize> = (0..width).filter(|&r| m.is_alive(r)).collect();
+                        for &me in &alive {
+                            if m.take_shed(me, epoch).is_some() {
+                                sheds_taken += 1;
+                            }
+                        }
+                        for &me in &alive {
+                            for dead in 0..width {
+                                if m.is_alive(dead) || m.awaiting_join(dead, epoch) {
+                                    continue;
+                                }
+                                if m.claim_takeover(me, dead, epoch) {
+                                    m.note_takeover_published(dead, epoch);
+                                } else if policy == FailurePolicy::Drop {
+                                    m.note_dropped_grad();
+                                }
+                            }
+                        }
+                        for &me in &alive {
+                            barrier.arrive(me, epoch).unwrap();
+                            m.note_barrier_arrival(me, epoch);
+                        }
+                        m.fill_barrier(&barrier, epoch).unwrap();
+                        assert!(
+                            barrier.wait_timeout(epoch, Duration::from_secs(5)).unwrap(),
+                            "barrier {epoch} must fill via proxies"
+                        );
+                    }
+                    println!(
+                        "chaos(p{peers} churn {churn_pct}% store {store_pct}% {}): \
+                         {} deaths, {} joins, width {}, {} takeover epochs, \
+                         {} dropped, {} proxies, {} sheds, leader {}",
+                        policy.name(),
+                        m.deaths(),
+                        m.joins(),
+                        m.width_at(EPOCHS as u64),
+                        m.takeover_epochs(),
+                        m.dropped_grads(),
+                        m.barrier_proxies(),
+                        sheds_taken,
+                        m.leader(),
+                    );
+                    let mut cell = Json::obj();
+                    cell.set("peers", peers)
+                        .set("churn_pct", churn_pct)
+                        .set("store_pct", store_pct)
+                        .set("policy", policy.name())
+                        .set("kills_scheduled", kills.len())
+                        .set("joins_scheduled", joins.len())
+                        .set("joins_admitted", m.joins())
+                        .set("final_width", m.width_at(EPOCHS as u64))
+                        .set("deaths", m.deaths())
+                        .set("takeover_epochs", m.takeover_epochs())
+                        .set("dropped_grads", m.dropped_grads())
+                        .set("barrier_proxies", m.barrier_proxies())
+                        .set("sheds_consumed", sheds_taken)
+                        .set("final_leader", m.leader())
+                        .set("store_retries", io.0)
+                        .set("corrupt_refetches", io.1)
+                        .set("broker_retries", io.2)
+                        .set("store_faults_fired", io.3)
+                        .set("broker_faults_fired", io.4);
+                    cells.push(cell);
+                }
+            }
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "chaos")
+        .set("epochs", EPOCHS)
+        .set("seed", SEED)
+        .set("retry_max_attempts", RETRY_MAX as usize)
+        .set("cells", cells);
+    if let Err(e) = std::fs::write("BENCH_chaos.json", j.to_string()) {
+        eprintln!("could not write BENCH_chaos.json: {e}");
     }
 }

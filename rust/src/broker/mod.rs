@@ -24,8 +24,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use std::sync::Mutex;
+use std::sync::RwLock;
 
 use crate::error::{Error, Result};
+use crate::harness::faults::{self, BrokerFault, FaultPlan as ChaosPlan};
+use crate::util::retry::RetryPolicy;
 
 /// Amazon MQ's per-message size cap the paper works around via S3+UUID.
 pub const DEFAULT_MESSAGE_CAP: usize = 100 * 1024 * 1024;
@@ -39,7 +42,21 @@ pub struct FaultPlan {
     pub delay_us: u64,
 }
 
+/// The armed publish-side chaos hook: scheduled drop/delay faults plus
+/// the retry policy drops are absorbed under.
+#[derive(Clone)]
+struct ChaosHook {
+    plan: Arc<ChaosPlan>,
+    retry: RetryPolicy,
+}
+
 /// The broker: a registry of named queues.
+///
+/// When a fault plan schedules broker faults, [`Broker::arm_chaos`]
+/// turns on the publish hook: a scoped peer's publish can be dropped
+/// (re-published under the shared retry policy, counted in
+/// `broker.retries`) or delayed (measured time only). Unarmed, the
+/// publish path is byte-identical to the pre-chaos broker.
 pub struct Broker {
     queues: Mutex<HashMap<String, Arc<Queue>>>,
     cap_bytes: usize,
@@ -47,6 +64,10 @@ pub struct Broker {
     abort: Arc<AbortState>,
     published: AtomicU64,
     published_bytes: AtomicU64,
+    /// Injected-fault hook; `None` (default) is the untouched path.
+    chaos: RwLock<Option<ChaosHook>>,
+    /// Re-publish attempts forced by injected drops.
+    chaos_retries: AtomicU64,
 }
 
 impl Default for Broker {
@@ -64,7 +85,21 @@ impl Broker {
             abort: Arc::new(AbortState::default()),
             published: AtomicU64::new(0),
             published_bytes: AtomicU64::new(0),
+            chaos: RwLock::new(None),
+            chaos_retries: AtomicU64::new(0),
         }
+    }
+
+    /// Arm the publish-side chaos hook (injected drops/delays scoped by
+    /// [`crate::harness::faults::FaultScope`], drops absorbed under
+    /// `retry`).
+    pub fn arm_chaos(&self, plan: Arc<ChaosPlan>, retry: RetryPolicy) {
+        *self.chaos.write().unwrap() = Some(ChaosHook { plan, retry });
+    }
+
+    /// Re-publish attempts forced by injected drops.
+    pub fn chaos_retries(&self) -> u64 {
+        self.chaos_retries.load(Ordering::Relaxed)
     }
 
     /// Abort the run: every consumer blocked on any of this broker's
@@ -119,8 +154,39 @@ impl Broker {
             .ok_or_else(|| Error::Broker(format!("unknown queue {name:?}")))
     }
 
-    /// Publish `payload` to `name` (queue must exist).
+    /// Publish `payload` to `name` (queue must exist). With the chaos
+    /// hook armed, scheduled drop faults for the calling thread's
+    /// (rank, epoch) scope make the delivery fail and be re-published
+    /// under the retry policy — a drop is only *lost* once the policy
+    /// is exhausted, which is exactly the at-least-once delivery story
+    /// the paper's MQ substrate gives real deployments.
     pub fn publish(&self, name: &str, msg: Message) -> Result<()> {
+        let hook = self.chaos.read().unwrap().clone();
+        if let (Some(h), Some((rank, epoch))) = (hook, faults::current_fault_scope()) {
+            let mut dropped = 0u32;
+            while let Some(fault) = h.plan.take_broker_fault(rank, epoch) {
+                match fault {
+                    BrokerFault::Delay(us) => {
+                        std::thread::sleep(std::time::Duration::from_micros(us));
+                    }
+                    BrokerFault::Drop => {
+                        dropped += 1;
+                        if dropped >= h.retry.max_attempts {
+                            return Err(Error::Broker(format!(
+                                "injected publish drop on {name:?}: {} attempts \
+                                 exhausted",
+                                h.retry.max_attempts
+                            )));
+                        }
+                        self.chaos_retries.fetch_add(1, Ordering::Relaxed);
+                        let delay = h.retry.backoff_delay(dropped);
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                    }
+                }
+            }
+        }
         let q = self.get(name)?;
         let bytes = msg.payload.len() as u64;
         q.publish(msg)?;
@@ -169,6 +235,19 @@ impl Broker {
     /// (LatestOnly: only the freshest beat matters).
     pub fn heartbeat_queue(r: usize) -> String {
         format!("peer.{r}.heartbeat")
+    }
+
+    /// Conventional name of the membership join-announce queue: joining
+    /// peers publish their rank here and the leader admits them at the
+    /// next epoch boundary (Fifo: announcements are never lost).
+    pub fn join_queue() -> String {
+        "membership.join".to_string()
+    }
+
+    /// Conventional queue name for the admit message the leader sends
+    /// back to joining peer `r` (warm-start params ref + start epoch).
+    pub fn join_admit_queue(r: usize) -> String {
+        format!("membership.join.admit.{r}")
     }
 }
 
@@ -243,5 +322,48 @@ mod tests {
     fn queue_name_conventions() {
         assert_eq!(Broker::gradient_queue(3), "peer.3.gradients");
         assert_eq!(Broker::sync_queue(), "sync.barrier");
+        assert_eq!(Broker::join_queue(), "membership.join");
+        assert_eq!(Broker::join_admit_queue(4), "membership.join.admit.4");
+    }
+
+    #[test]
+    fn armed_broker_drop_is_republished_and_counted() {
+        use crate::harness::faults::{FaultPlanSpec, FaultScope};
+        let b = Broker::default();
+        b.declare("a", QueueMode::Fifo).unwrap();
+        let plan = Arc::new(
+            FaultPlanSpec::parse("brokerdrop:peer1@1;brokerdelay:peer1@1:0ms")
+                .unwrap()
+                .resolve(4, 2)
+                .unwrap(),
+        );
+        b.arm_chaos(plan.clone(), RetryPolicy::configured(3, 0, 0));
+        // Unscoped publishes never see faults.
+        b.publish("a", msg(b"x")).unwrap();
+        let _scope = FaultScope::enter(1, 1);
+        b.publish("a", msg(b"y")).unwrap();
+        assert_eq!(b.chaos_retries(), 1);
+        assert_eq!(plan.broker_faults_fired(), 2);
+        let (n, _) = b.stats();
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn armed_broker_drop_exhausts_single_attempt_policy() {
+        use crate::harness::faults::{FaultPlanSpec, FaultScope};
+        let b = Broker::default();
+        b.declare("a", QueueMode::Fifo).unwrap();
+        let plan = Arc::new(
+            FaultPlanSpec::parse("brokerdrop:peer2@1")
+                .unwrap()
+                .resolve(4, 2)
+                .unwrap(),
+        );
+        b.arm_chaos(plan, RetryPolicy::configured(1, 0, 0));
+        let _scope = FaultScope::enter(2, 1);
+        let err = b.publish("a", msg(b"x")).unwrap_err();
+        assert!(err.to_string().contains("injected publish drop"));
+        let (n, _) = b.stats();
+        assert_eq!(n, 0);
     }
 }

@@ -300,6 +300,13 @@ pub struct TrainConfig {
     /// 0 (the default) retries immediately — the pre-backoff behavior.
     /// Measured wall only; the modeled accounting never moves.
     pub retry_backoff_ms: u64,
+    /// Store/broker I/O attempts per operation under injected chaos
+    /// (first try + retries) — the unified retry policy the offload
+    /// uploads, handler gets, and broker publishes all share.
+    pub store_retries: u32,
+    /// Base of the store/broker retry backoff, in milliseconds (same
+    /// exponential-plus-jitter schedule as `retry_backoff_ms`).
+    pub store_backoff_ms: u64,
     pub seed: u64,
     /// Where the AOT artifacts live.
     pub artifacts_dir: String,
@@ -346,6 +353,8 @@ impl Default for TrainConfig {
             fault_plan: String::new(),
             lambda_retries: 3,
             retry_backoff_ms: 0,
+            store_retries: 3,
+            store_backoff_ms: 0,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             early_stop_patience: 0,
@@ -423,6 +432,8 @@ impl TrainConfig {
                 "fault_plan" => cfg.fault_plan = v.as_str().ok_or_else(missing)?.into(),
                 "lambda_retries" => cfg.lambda_retries = v.as_u64().ok_or_else(missing)? as u32,
                 "retry_backoff_ms" => cfg.retry_backoff_ms = v.as_u64().ok_or_else(missing)?,
+                "store_retries" => cfg.store_retries = v.as_u64().ok_or_else(missing)? as u32,
+                "store_backoff_ms" => cfg.store_backoff_ms = v.as_u64().ok_or_else(missing)?,
                 "seed" => cfg.seed = v.as_u64().ok_or_else(missing)?,
                 "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(missing)?.into(),
                 "early_stop_patience" => {
@@ -472,6 +483,8 @@ impl TrainConfig {
             .set("fault_plan", self.fault_plan.as_str())
             .set("lambda_retries", self.lambda_retries as u64)
             .set("retry_backoff_ms", self.retry_backoff_ms)
+            .set("store_retries", self.store_retries as u64)
+            .set("store_backoff_ms", self.store_backoff_ms)
             .set("seed", self.seed)
             .set("artifacts_dir", self.artifacts_dir.as_str())
             .set("early_stop_patience", self.early_stop_patience)
@@ -563,6 +576,11 @@ impl TrainConfig {
         if self.lambda_retries == 0 {
             return Err(Error::Config(
                 "lambda_retries must be >= 1 (the first attempt counts)".into(),
+            ));
+        }
+        if self.store_retries == 0 {
+            return Err(Error::Config(
+                "store_retries must be >= 1 (the first attempt counts)".into(),
             ));
         }
         // reject a malformed fault plan up front, not mid-run
@@ -801,6 +819,23 @@ mod tests {
         assert_eq!(TrainConfig::default().retry_backoff_ms, 0);
         // zero attempts would never invoke at all
         let bad = TrainConfig { lambda_retries: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn store_retry_knobs_roundtrip() {
+        let cfg = TrainConfig {
+            store_retries: 5,
+            store_backoff_ms: 7,
+            ..Default::default()
+        };
+        let back = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.store_retries, 5);
+        assert_eq!(back.store_backoff_ms, 7);
+        // defaults mirror the branch retry policy's
+        assert_eq!(TrainConfig::default().store_retries, 3);
+        assert_eq!(TrainConfig::default().store_backoff_ms, 0);
+        let bad = TrainConfig { store_retries: 0, ..Default::default() };
         assert!(bad.validate().is_err());
     }
 

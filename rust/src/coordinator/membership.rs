@@ -29,6 +29,30 @@
 //!   proxy arrivals for dead ranks via [`Membership::fill_barrier`],
 //!   each (peer, epoch) proxy claimed exactly once.
 //!
+//! **Elastic scale-up (PR 10).** Membership is no longer shrink-only:
+//! a fault plan can script `join:rankN@E` events and the table admits
+//! the new peer at the epoch-`E` boundary. The lifecycle is
+//! announce → admit → warm-start:
+//!
+//! - the joiner thread publishes its rank on the `membership.join`
+//!   Fifo queue at spawn and parks on `membership.join.admit.{rank}`;
+//! - the **leader**, after folding epoch `E-1`'s model update, calls
+//!   [`Membership::admit_join`] for every scheduled join at `E`:
+//!   a *revival* (rank below the original width, currently dead)
+//!   re-arms the dead slot and hands back its registered partition —
+//!   the joiner absorbs the orphaned batch refs bit-identically, so
+//!   the post-join loss curve matches the fault-free run; a *growth*
+//!   join (rank == current width) splits the largest live partition,
+//!   the donor sheds half via a [`Membership::take_shed`] directive it
+//!   picks up at its next epoch start;
+//! - the leader uploads a warm-start copy of the post-`E-1` params to
+//!   the shared store and publishes the admit message (params ref +
+//!   start epoch) so the joiner can decode state without replaying
+//!   history;
+//! - the cumulative barrier widens piecewise
+//!   ([`EpochBarrier::with_growth`]); revival catch-up epochs the dead
+//!   rank still owes are proxied by the admitting leader exactly once.
+//!
 //! The membership plane is **armed** only when the policy is not
 //! `abort` or a fault plan is active: an unarmed run publishes no
 //! heartbeats and reaps nothing, keeping every broker/message counter
@@ -59,6 +83,49 @@ pub enum PartitionHandle {
     Data(Box<Dataset>),
 }
 
+/// How a scheduled join lands in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinKind {
+    /// The rank existed at start, died, and rejoins: it absorbs its own
+    /// orphaned partition, so the math is bit-identical to a fault-free
+    /// run once the takeover hand-back completes.
+    Revival,
+    /// A brand-new rank widens the cluster; it receives half of the
+    /// largest live partition (deterministic, but a different batch
+    /// split than the fault-free run).
+    Growth,
+}
+
+/// What the admitting leader must do after [`Membership::admit_join`]
+/// flips the slot.
+#[derive(Debug)]
+pub struct JoinAdmission {
+    pub kind: JoinKind,
+    /// First epoch the joiner computes (its join epoch).
+    pub start_epoch: u64,
+    /// Barrier epochs the revived rank still owes that nobody proxied
+    /// yet — claimed under the table lock, published by the leader
+    /// before its own barrier arrival so the barrier can't hang.
+    pub catch_up: Vec<u64>,
+}
+
+/// One scheduled join (from the fault plan), tracked to admission.
+#[derive(Debug, Clone)]
+struct JoinEntry {
+    rank: usize,
+    epoch: u64,
+    admitted: bool,
+}
+
+/// A pending "shrink your partition" directive for a growth-join
+/// donor, picked up at the donor's next epoch start.
+#[derive(Debug)]
+struct Shed {
+    donor: usize,
+    epoch: u64,
+    handle: PartitionHandle,
+}
+
 #[derive(Debug)]
 struct Slot {
     alive: bool,
@@ -75,6 +142,27 @@ struct Slot {
     /// Highest epoch a successor has published a gradient for.
     takeover_published: u64,
     partition: Option<PartitionHandle>,
+    /// A growth joiner that hasn't been admitted yet: the slot exists
+    /// (so beats/indexing work) but it is neither alive nor dead —
+    /// reaping, proxying and takeover all skip it.
+    pending_join: Option<u64>,
+}
+
+impl Slot {
+    fn fresh(now: Instant, pending_join: Option<u64>) -> Self {
+        Slot {
+            alive: pending_join.is_none(),
+            done: false,
+            last_beat: now,
+            reason: None,
+            last_barrier_epoch: 0,
+            proxied_to: 0,
+            successor: None,
+            takeover_published: 0,
+            partition: None,
+            pending_join,
+        }
+    }
 }
 
 /// Cluster-wide liveness table shared by every peer thread and the
@@ -87,11 +175,17 @@ pub struct Membership {
     peer_timeout: Duration,
     broker: Arc<Broker>,
     state: Mutex<Vec<Slot>>,
+    /// Scheduled joins from the fault plan (locked after `state` is
+    /// never needed: always lock `schedule` first, then `state`).
+    schedule: Mutex<Vec<JoinEntry>>,
+    /// Pending partition-shrink directives for growth-join donors.
+    sheds: Mutex<Vec<Shed>>,
     beats: AtomicU64,
     deaths: AtomicU64,
     barrier_proxies: AtomicU64,
     takeover_epochs: AtomicU64,
     dropped_grads: AtomicU64,
+    joins_admitted: AtomicU64,
 }
 
 impl Membership {
@@ -112,19 +206,7 @@ impl Membership {
             }
         }
         let now = Instant::now();
-        let slots = (0..peers)
-            .map(|_| Slot {
-                alive: true,
-                done: false,
-                last_beat: now,
-                reason: None,
-                last_barrier_epoch: 0,
-                proxied_to: 0,
-                successor: None,
-                takeover_published: 0,
-                partition: None,
-            })
-            .collect();
+        let slots = (0..peers).map(|_| Slot::fresh(now, None)).collect();
         Ok(Self {
             peers,
             policy,
@@ -133,11 +215,14 @@ impl Membership {
             peer_timeout,
             broker,
             state: Mutex::new(slots),
+            schedule: Mutex::new(Vec::new()),
+            sheds: Mutex::new(Vec::new()),
             beats: AtomicU64::new(0),
             deaths: AtomicU64::new(0),
             barrier_proxies: AtomicU64::new(0),
             takeover_epochs: AtomicU64::new(0),
             dropped_grads: AtomicU64::new(0),
+            joins_admitted: AtomicU64::new(0),
         })
     }
 
@@ -151,6 +236,221 @@ impl Membership {
 
     pub fn peers(&self) -> usize {
         self.peers
+    }
+
+    /// Install the scheduled joins (from the resolved fault plan),
+    /// ordered (epoch, rank). Growth ranks must extend the table
+    /// contiguously — guaranteed by the plan's width simulation, but
+    /// re-checked here. Armed tables declare the new ranks' heartbeat
+    /// queues up front so consumers never race a missing queue.
+    pub fn set_join_schedule(&self, joins: &[(usize, u64)]) -> Result<()> {
+        let mut sched = self.schedule.lock().unwrap();
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        for &(rank, epoch) in joins {
+            if rank >= st.len() {
+                if rank != st.len() {
+                    return Err(Error::Config(format!(
+                        "growth join rank {rank} is not contiguous with \
+                         the table width {}",
+                        st.len()
+                    )));
+                }
+                st.push(Slot::fresh(now, Some(epoch)));
+                if self.armed {
+                    self.broker
+                        .declare(&Broker::heartbeat_queue(rank), QueueMode::LatestOnly)?;
+                }
+            }
+            sched.push(JoinEntry { rank, epoch, admitted: false });
+        }
+        sched.sort_by_key(|j| (j.epoch, j.rank));
+        Ok(())
+    }
+
+    /// Every scheduled join as (rank, epoch), admission order.
+    pub fn join_schedule(&self) -> Vec<(usize, u64)> {
+        self.schedule
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|j| (j.rank, j.epoch))
+            .collect()
+    }
+
+    /// The epochs at which *growth* joins widen the barrier (one entry
+    /// per new rank) — feed to [`EpochBarrier::with_growth`].
+    pub fn growth_epochs(&self) -> Vec<u64> {
+        self.schedule
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|j| j.rank >= self.peers)
+            .map(|j| j.epoch)
+            .collect()
+    }
+
+    /// Cluster width at `epoch`: the base peers plus every growth rank
+    /// whose join epoch has arrived. Static in the schedule, so every
+    /// peer computes the same consume/fold width with no coordination.
+    pub fn width_at(&self, epoch: u64) -> usize {
+        self.peers
+            + self
+                .schedule
+                .lock()
+                .unwrap()
+                .iter()
+                .filter(|j| j.rank >= self.peers && j.epoch <= epoch)
+                .count()
+    }
+
+    /// The widest the cluster ever gets (for teardown/reporting).
+    pub fn max_width(&self) -> usize {
+        self.state.lock().unwrap().len()
+    }
+
+    /// Scheduled joins due at or before `epoch` that were not admitted
+    /// yet, in admission order. The leader drains this at each epoch
+    /// boundary (`<=` so a boundary skipped by a leader fail-over is
+    /// caught up at the next one).
+    pub fn pending_joins_at(&self, epoch: u64) -> Vec<(usize, u64)> {
+        self.schedule
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|j| !j.admitted && j.epoch <= epoch)
+            .map(|j| (j.rank, j.epoch))
+            .collect()
+    }
+
+    /// Admit scheduled joiner `rank` at its `join_epoch` boundary.
+    ///
+    /// Returns `Ok(None)` when the admission is declined — a revival
+    /// whose rank never died (the scripted kill didn't land) has
+    /// nothing to rejoin. A *revival* re-arms the dead slot: the
+    /// registered partition stays put for the joiner to absorb, and the
+    /// barrier epochs the dead rank still owes are claimed here (under
+    /// the lock, so concurrent [`Self::fill_barrier`] callers can't
+    /// double-proxy) and returned for the leader to publish. A *growth*
+    /// join activates the pending slot and splits the largest live
+    /// partition: the donor's shrunken handle is parked as a shed
+    /// directive ([`Self::take_shed`]) and the split-off half becomes
+    /// the joiner's registered partition.
+    pub fn admit_join(&self, rank: usize, join_epoch: u64) -> Result<Option<JoinAdmission>> {
+        let mut sched = self.schedule.lock().unwrap();
+        let entry = sched
+            .iter_mut()
+            .find(|j| j.rank == rank && j.epoch == join_epoch && !j.admitted)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no pending join scheduled for rank {rank} at epoch {join_epoch}"
+                ))
+            })?;
+        let mut st = self.state.lock().unwrap();
+        if rank < self.peers {
+            // Revival: the rank must actually be dead.
+            if st[rank].alive {
+                entry.admitted = true;
+                return Ok(None);
+            }
+            let slot = &mut st[rank];
+            let from = slot.proxied_to.max(slot.last_barrier_epoch) + 1;
+            let catch_up: Vec<u64> = (from..join_epoch).collect();
+            slot.proxied_to = slot.proxied_to.max(join_epoch.saturating_sub(1));
+            slot.alive = true;
+            slot.done = false;
+            slot.reason = None;
+            slot.successor = None;
+            slot.last_beat = Instant::now();
+            entry.admitted = true;
+            self.joins_admitted.fetch_add(1, Ordering::Relaxed);
+            return Ok(Some(JoinAdmission {
+                kind: JoinKind::Revival,
+                start_epoch: join_epoch,
+                catch_up,
+            }));
+        }
+        // Growth: activate the pending slot, then split the largest
+        // live partition between the donor and the joiner.
+        let donor = st
+            .iter()
+            .enumerate()
+            .filter(|&(r, s)| {
+                r != rank && s.alive && s.pending_join.is_none() && s.partition.is_some()
+            })
+            .max_by_key(|&(r, s)| {
+                let len = match s.partition.as_ref() {
+                    Some(PartitionHandle::Refs(v)) => v.len(),
+                    Some(PartitionHandle::Data(d)) => d.len(),
+                    None => 0,
+                };
+                (len, std::cmp::Reverse(r))
+            })
+            .map(|(r, _)| r)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "growth join rank {rank}: no live peer with a registered \
+                     partition to split"
+                ))
+            })?;
+        let handle = st[donor].partition.take().expect("donor has a partition");
+        let (keep, give) = split_partition(handle)?;
+        st[donor].partition = Some(keep.clone());
+        st[rank].partition = Some(give);
+        st[rank].alive = true;
+        st[rank].pending_join = None;
+        st[rank].last_beat = Instant::now();
+        self.sheds.lock().unwrap().push(Shed { donor, epoch: join_epoch, handle: keep });
+        entry.admitted = true;
+        self.joins_admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(JoinAdmission {
+            kind: JoinKind::Growth,
+            start_epoch: join_epoch,
+            catch_up: Vec::new(),
+        }))
+    }
+
+    /// The shrink directive waiting for donor `me` with effect at or
+    /// before `epoch`, if any — consumed exactly once. The donor
+    /// applies the returned (smaller) handle as its active partition
+    /// before computing the epoch.
+    pub fn take_shed(&self, me: usize, epoch: u64) -> Option<PartitionHandle> {
+        let mut sheds = self.sheds.lock().unwrap();
+        let i = sheds.iter().position(|s| s.donor == me && s.epoch <= epoch)?;
+        Some(sheds.remove(i).handle)
+    }
+
+    /// Is `rank` a scheduled joiner whose admission hasn't landed by
+    /// `epoch`? Consumers skip such ranks instead of applying the
+    /// failure policy to a peer that was never up.
+    pub fn awaiting_join(&self, rank: usize, epoch: u64) -> bool {
+        self.schedule
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|j| j.rank == rank && !j.admitted && j.epoch <= epoch)
+    }
+
+    /// Publish an admission's claimed catch-up proxies — the barrier
+    /// epochs a revived rank still owed, returned by
+    /// [`Self::admit_join`] — and count them with the regular proxies.
+    pub fn proxy_catch_up(
+        &self,
+        barrier: &EpochBarrier,
+        rank: usize,
+        epochs: &[u64],
+    ) -> Result<()> {
+        for &e in epochs {
+            barrier.proxy_arrive(rank, e)?;
+            self.barrier_proxies.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// The configured peer-death deadline (the admitting leader bounds
+    /// its announce wait with it).
+    pub fn peer_timeout(&self) -> Duration {
+        self.peer_timeout
     }
 
     /// The wait-slice for membership-aware blocking loops: short enough
@@ -208,14 +508,17 @@ impl Membership {
         st[rank].alive = false;
         st[rank].reason = Some(reason.to_string());
         self.deaths.fetch_add(1, Ordering::Relaxed);
+        // successors come from the full (possibly grown) table; pending
+        // growth slots are not candidates until admitted
         let next_alive = |st: &Vec<Slot>, from: usize| -> Option<usize> {
-            (1..self.peers)
-                .map(|d| (from + d) % self.peers)
-                .find(|&r| st[r].alive && !st[r].done)
+            let n = st.len();
+            (1..n)
+                .map(|d| (from + d) % n)
+                .find(|&r| st[r].alive && !st[r].done && st[r].pending_join.is_none())
         };
         st[rank].successor = next_alive(&st, rank);
-        for r in 0..self.peers {
-            if !st[r].alive && st[r].successor == Some(rank) {
+        for r in 0..st.len() {
+            if !st[r].alive && st[r].pending_join.is_none() && st[r].successor == Some(rank) {
                 st[r].successor = next_alive(&st, r);
             }
         }
@@ -230,14 +533,15 @@ impl Membership {
         self.state.lock().unwrap().iter().filter(|s| s.alive).count()
     }
 
-    /// Ranks currently declared dead, with their recorded reasons.
+    /// Ranks currently declared dead, with their recorded reasons
+    /// (pending growth joiners are neither alive nor dead).
     pub fn dead_peers(&self) -> Vec<(usize, String)> {
         self.state
             .lock()
             .unwrap()
             .iter()
             .enumerate()
-            .filter(|(_, s)| !s.alive)
+            .filter(|(_, s)| !s.alive && s.pending_join.is_none())
             .map(|(r, s)| (r, s.reason.clone().unwrap_or_default()))
             .collect()
     }
@@ -304,7 +608,7 @@ impl Membership {
         {
             let mut st = self.state.lock().unwrap();
             for (r, slot) in st.iter_mut().enumerate() {
-                if slot.alive {
+                if slot.alive || slot.pending_join.is_some() {
                     continue;
                 }
                 let from = slot.proxied_to.max(slot.last_barrier_epoch) + 1;
@@ -388,6 +692,38 @@ impl Membership {
     /// Dead-peer gradients skipped under the `drop` policy.
     pub fn dropped_grads(&self) -> u64 {
         self.dropped_grads.load(Ordering::Relaxed)
+    }
+
+    /// Joins actually admitted (revivals + growth).
+    pub fn joins(&self) -> u64 {
+        self.joins_admitted.load(Ordering::Relaxed)
+    }
+}
+
+/// Split a partition in two for a growth join: the donor keeps the
+/// first (never smaller by more than one element/ref) half, the joiner
+/// takes the rest. Deterministic, so every replay splits identically.
+fn split_partition(handle: PartitionHandle) -> Result<(PartitionHandle, PartitionHandle)> {
+    match handle {
+        PartitionHandle::Refs(mut refs) => {
+            if refs.len() < 2 {
+                return Err(Error::Runtime(format!(
+                    "cannot split a {}-ref partition for a growth join",
+                    refs.len()
+                )));
+            }
+            let give = refs.split_off(refs.len() - refs.len() / 2);
+            Ok((PartitionHandle::Refs(refs), PartitionHandle::Refs(give)))
+        }
+        PartitionHandle::Data(d) => {
+            let mut parts = d.partition(2)?;
+            let give = parts.pop().expect("partition(2) yields two");
+            let keep = parts.pop().expect("partition(2) yields two");
+            Ok((
+                PartitionHandle::Data(Box::new(keep)),
+                PartitionHandle::Data(Box::new(give)),
+            ))
+        }
     }
 }
 
@@ -553,5 +889,102 @@ mod tests {
         assert!(m.partition_of(1).is_none());
         m.register_partition(1, PartitionHandle::Refs(Vec::new()));
         assert!(matches!(m.partition_of(1), Some(PartitionHandle::Refs(_))));
+    }
+
+    fn refs(n: usize) -> PartitionHandle {
+        PartitionHandle::Refs(
+            (0..n)
+                .map(|i| ObjectRef {
+                    bucket: "b".into(),
+                    key: format!("k{i}"),
+                    size: 1,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn revival_admission_rearms_dead_slot_and_claims_catch_up() {
+        let (_, m) = table(3, FailurePolicy::Takeover);
+        m.set_join_schedule(&[(1, 3)]).unwrap();
+        m.register_partition(1, refs(2));
+        m.note_barrier_arrival(1, 1);
+        m.declare_dead(1, "killed");
+        assert!(m.claim_takeover(2, 1, 2));
+        assert_eq!(m.pending_joins_at(3), vec![(1, 3)]);
+        let adm = m.admit_join(1, 3).unwrap().expect("revival admitted");
+        assert_eq!(adm.kind, JoinKind::Revival);
+        assert_eq!(adm.start_epoch, 3);
+        // peer 1 really arrived for epoch 1; epoch 2 is still owed
+        assert_eq!(adm.catch_up, vec![2]);
+        assert!(m.is_alive(1));
+        assert_eq!(m.joins(), 1);
+        // the revived rank computes for itself again
+        assert!(!m.claim_takeover(2, 1, 3));
+        // its orphaned partition is still registered for it to absorb
+        assert!(matches!(m.partition_of(1), Some(PartitionHandle::Refs(v)) if v.len() == 2));
+        assert!(m.pending_joins_at(3).is_empty());
+        // barrier width never changes for a revival
+        assert!(m.growth_epochs().is_empty());
+        assert_eq!(m.width_at(3), 3);
+    }
+
+    #[test]
+    fn revival_is_declined_when_the_rank_never_died() {
+        let (_, m) = table(2, FailurePolicy::Takeover);
+        m.set_join_schedule(&[(1, 2)]).unwrap();
+        assert!(m.admit_join(1, 2).unwrap().is_none());
+        assert_eq!(m.joins(), 0);
+        assert!(m.pending_joins_at(2).is_empty());
+        // double-admission is an error, not a second flip
+        assert!(m.admit_join(1, 2).is_err());
+    }
+
+    #[test]
+    fn growth_admission_splits_the_largest_live_partition() {
+        let (_, m) = table(2, FailurePolicy::Takeover);
+        m.set_join_schedule(&[(2, 2)]).unwrap();
+        m.register_partition(0, refs(4));
+        m.register_partition(1, refs(2));
+        assert_eq!(m.width_at(1), 2);
+        assert_eq!(m.width_at(2), 3);
+        assert_eq!(m.growth_epochs(), vec![2]);
+        assert_eq!(m.max_width(), 3);
+        // pending slot is neither alive nor dead
+        assert_eq!(m.alive_count(), 2);
+        assert!(m.dead_peers().is_empty());
+        let adm = m.admit_join(2, 2).unwrap().expect("growth admitted");
+        assert_eq!(adm.kind, JoinKind::Growth);
+        assert!(adm.catch_up.is_empty());
+        assert_eq!(m.alive_count(), 3);
+        assert_eq!(m.joins(), 1);
+        // rank 0 (4 refs) was the donor: keeps 2, sheds a directive
+        assert!(matches!(m.partition_of(2), Some(PartitionHandle::Refs(v)) if v.len() == 2));
+        assert!(matches!(m.partition_of(0), Some(PartitionHandle::Refs(v)) if v.len() == 2));
+        let shed = m.take_shed(0, 2).expect("donor directive parked");
+        assert!(matches!(shed, PartitionHandle::Refs(v) if v.len() == 2));
+        assert!(m.take_shed(0, 9).is_none(), "directive is consumed once");
+        assert!(m.take_shed(1, 9).is_none());
+    }
+
+    #[test]
+    fn growth_schedule_requires_contiguous_ranks() {
+        let (_, m) = table(2, FailurePolicy::Takeover);
+        assert!(m.set_join_schedule(&[(4, 2)]).is_err());
+        // contiguous ranks in epoch order are accepted
+        m.set_join_schedule(&[(2, 2), (3, 3)]).unwrap();
+        assert_eq!(m.width_at(3), 4);
+    }
+
+    #[test]
+    fn grown_rank_can_be_a_takeover_successor() {
+        let (_, m) = table(2, FailurePolicy::Takeover);
+        m.set_join_schedule(&[(2, 2)]).unwrap();
+        m.register_partition(0, refs(4));
+        m.admit_join(2, 2).unwrap().expect("growth admitted");
+        // rank 1 dies after the join: rank 2 is next alive after it
+        m.declare_dead(1, "killed");
+        assert!(m.claim_takeover(2, 1, 2));
+        assert!(!m.claim_takeover(0, 1, 2));
     }
 }

@@ -29,16 +29,18 @@ use std::time::Duration;
 
 use super::convergence::{EarlyStopping, ReduceLROnPlateau};
 use super::gradient::{GradAccumulator, GradientDict, GradientWire};
-use super::membership::{Membership, PartitionHandle};
+use super::membership::{JoinKind, Membership, PartitionHandle};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
 use crate::broker::{Broker, Message, QueueMode};
 use crate::config::{FailurePolicy, OffloadMode, SyncMode, TrainConfig};
 use crate::data::{Batcher, Dataset};
 use crate::error::{Error, Result};
-use crate::harness::faults::FaultPlan;
+use crate::harness::faults::{FaultPlan, FaultScope};
 use crate::metrics::{MetricsRegistry, Stage, StageTimer};
 use crate::runtime::ModelRuntime;
+use crate::store::{DecodedCache, ObjectStore, GEN_PERSISTENT, PARAMS_BUCKET};
+use crate::util::bytes::f32s_to_bytes;
 use crate::util::{Bytes, Json};
 
 /// Name of the control queue the leader broadcasts verdicts on.
@@ -139,6 +141,11 @@ pub struct Peer {
     membership: Option<Arc<Membership>>,
     /// Deterministic fault-injection plan (`--fault-plan`).
     faults: Option<Arc<FaultPlan>>,
+    /// Shared store plane for elastic-join warm-starts: the admitting
+    /// leader uploads its params here, the joiner decodes them through
+    /// the cache. `None` outside elastic runs.
+    store: Option<Arc<ObjectStore>>,
+    decode_cache: Option<Arc<DecodedCache>>,
 }
 
 impl Peer {
@@ -173,6 +180,8 @@ impl Peer {
             params,
             membership: None,
             faults: None,
+            store: None,
+            decode_cache: None,
         })
     }
 
@@ -187,6 +196,13 @@ impl Peer {
     /// delays/dups).
     pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
         self.faults = Some(faults);
+    }
+
+    /// Attach the shared store plane (elastic runs only): the leader
+    /// uses it to stage warm-start params for admitted joiners.
+    pub fn set_store_plane(&mut self, store: Arc<ObjectStore>, cache: Arc<DecodedCache>) {
+        self.store = Some(store);
+        self.decode_cache = Some(cache);
     }
 
     pub fn params(&self) -> &[f32] {
@@ -211,6 +227,30 @@ impl Peer {
 
     /// Run Algorithm 1. Returns the per-peer report.
     pub fn run(&mut self) -> Result<PeerReport> {
+        self.run_epochs(1, None)
+    }
+
+    /// Run as a mid-run joiner admitted at `start_epoch`: install the
+    /// admitting leader's warm-start params, absorb the partition the
+    /// membership table registered for this rank (the orphaned refs on
+    /// a revival, the split-off half on a growth join), replay past
+    /// verdicts into the local convergence state, and enter the epoch
+    /// loop at `start_epoch`.
+    pub fn run_joined(&mut self, start_epoch: u64, warm_params: Vec<f32>) -> Result<PeerReport> {
+        if start_epoch < 2 {
+            return Err(Error::Runtime(format!(
+                "peer {}: join start epoch must be >= 2, got {start_epoch}",
+                self.rank
+            )));
+        }
+        self.run_epochs(start_epoch, Some(warm_params))
+    }
+
+    fn run_epochs(
+        &mut self,
+        start_epoch: u64,
+        warm_params: Option<Vec<f32>>,
+    ) -> Result<PeerReport> {
         let batcher = Batcher::new(self.config.batch_size, self.config.seed ^ self.rank as u64);
         let mut early = if self.config.early_stop_patience > 0 {
             EarlyStopping::new(self.config.early_stop_patience, 1e-4)
@@ -238,6 +278,12 @@ impl Peer {
             params_fnv: 0,
         };
 
+        // a joiner starts from the admitting leader's post-update
+        // params instead of the deterministic init
+        if let Some(p) = warm_params {
+            self.params = p;
+        }
+
         // heartbeat pump: beats until dropped — which happens on every
         // exit path of this function, so this peer's beats stop exactly
         // when its thread does and survivors' reap timers start counting
@@ -245,31 +291,69 @@ impl Peer {
             .armed_membership()
             .map(|m| m.clone().start_pump(self.rank));
 
-        // Serverless fidelity (paper §III-B): the partition is batched
-        // once and uploaded to the peer's bucket *before* training;
-        // every epoch re-reads the same batch objects, so steady-state
-        // epochs upload only the params. The instance path keeps
-        // Algorithm 1's per-epoch reshuffle (batch membership there is
-        // ephemeral — nothing is uploaded).
-        if let GradBackend::Serverless(offload) = &self.backend {
-            let batches = batcher.epoch_batches(&self.partition, 0);
-            if batches.is_empty() {
-                return Err(self.no_batch_error());
-            }
-            offload.upload_batches(&batches)?;
-        }
-
-        // register what a takeover successor would need to recompute
-        // this peer's partition: the epoch-persistent batch refs
-        // (serverless) or the raw partition (instance)
-        if let Some(m) = self.armed_membership() {
-            let handle = match &self.backend {
-                GradBackend::Serverless(offload) => PartitionHandle::Refs(offload.batch_refs()),
-                GradBackend::Local { .. } => {
-                    PartitionHandle::Data(Box::new(self.partition.clone()))
+        if start_epoch == 1 {
+            // Serverless fidelity (paper §III-B): the partition is batched
+            // once and uploaded to the peer's bucket *before* training;
+            // every epoch re-reads the same batch objects, so steady-state
+            // epochs upload only the params. The instance path keeps
+            // Algorithm 1's per-epoch reshuffle (batch membership there is
+            // ephemeral — nothing is uploaded).
+            if let GradBackend::Serverless(offload) = &self.backend {
+                let batches = batcher.epoch_batches(&self.partition, 0);
+                if batches.is_empty() {
+                    return Err(self.no_batch_error());
                 }
-            };
-            m.register_partition(self.rank, handle);
+                offload.upload_batches(&batches)?;
+            }
+
+            // register what a takeover successor would need to recompute
+            // this peer's partition: the epoch-persistent batch refs
+            // (serverless) or the raw partition (instance)
+            if let Some(m) = self.armed_membership() {
+                let handle = match &self.backend {
+                    GradBackend::Serverless(offload) => {
+                        PartitionHandle::Refs(offload.batch_refs())
+                    }
+                    GradBackend::Local { .. } => {
+                        PartitionHandle::Data(Box::new(self.partition.clone()))
+                    }
+                };
+                m.register_partition(self.rank, handle);
+            }
+        } else {
+            // joiner: absorb the partition the admission registered for
+            // this rank — nothing is re-uploaded, a revival re-dispatches
+            // the orphaned epoch-persistent refs and a growth join works
+            // the donor's split-off half in place
+            self.adopt_join_partition()?;
+
+            if self.config.sync == SyncMode::Synchronous {
+                // replay the leader's past verdicts (the control queue is
+                // a never-drained Fifo) so this rank's early-stop /
+                // plateau / lr state matches what every survivor
+                // accumulated — a later leader fallback onto this rank
+                // must continue the same history
+                let ctl = self.broker.get(&control_queue())?;
+                for e in 1..start_epoch {
+                    if let Some(msg) = ctl.await_epoch_timeout(e, Duration::ZERO)? {
+                        let v = Verdict::from_message(&msg)?;
+                        early.observe(v.val_loss);
+                        plateau.observe(v.val_loss);
+                        lr = if v.lr > 0.0 { v.lr } else { lr };
+                    }
+                }
+                // wait (without arriving — this rank's arrivals only
+                // count from start_epoch on) until the admitting epoch's
+                // barrier fills, so the first compute can't outrun
+                // survivors still folding epoch start_epoch-1
+                if let Some(m) = self.armed_membership() {
+                    let m = m.clone();
+                    while !self.barrier.wait_timeout(start_epoch - 1, m.wait_slice())? {
+                        m.reap()?;
+                        m.fill_barrier(&self.barrier, start_epoch - 1)?;
+                    }
+                }
+            }
         }
 
         // Cross-epoch pre-dispatch is only sound when the verdict can
@@ -277,11 +361,18 @@ impl Peer {
         // stopping then cancels would burn invocations/cost the staged
         // reference never pays. With early stopping disabled (the
         // default) the epoch count is fixed and speculation is exact.
+        // Growth joins additionally disable speculation: the donor's
+        // active refs shrink at the join boundary, so a pre-dispatched
+        // epoch would fan out the stale (pre-shed) partition.
         let speculate = match &self.backend {
             GradBackend::Serverless(offload) => {
                 offload.mode() == OffloadMode::CrossEpoch
                     && offload.pipeline_depth() >= 2
                     && self.config.early_stop_patience == 0
+                    && self
+                        .armed_membership()
+                        .map(|m| m.growth_epochs().is_empty())
+                        .unwrap_or(true)
             }
             GradBackend::Local { .. } => false,
         };
@@ -296,7 +387,7 @@ impl Peer {
         // not past the teardown.
         #[allow(clippy::redundant_closure_call)]
         let epochs_outcome = (|| -> Result<()> {
-            for epoch in 1..=self.config.epochs as u64 {
+            for epoch in start_epoch..=self.config.epochs as u64 {
                 // ---- 0. injected death ------------------------------------
                 // a killed peer errors out *before* computing the epoch, so
                 // it never publishes v(epoch); the `?` routes through the
@@ -308,6 +399,34 @@ impl Peer {
                             "peer {}: fault plan killed this peer at epoch {epoch}",
                             self.rank
                         )));
+                    }
+                }
+
+                // scope injected store/broker chaos to (rank, epoch) on
+                // this thread for the rest of the iteration — I/O faults
+                // in the plan target the epoch's owning rank
+                let _fault_scope = FaultScope::enter(self.rank, epoch);
+
+                // ---- 0b. growth-join donor shed ---------------------------
+                // an admission that split this rank's partition parked the
+                // shrunken half as a directive; apply it before computing
+                if let Some(m) = self.armed_membership() {
+                    if let Some(handle) = m.take_shed(self.rank, epoch) {
+                        match (&self.backend, handle) {
+                            (GradBackend::Serverless(offload), PartitionHandle::Refs(refs)) => {
+                                offload.set_active_refs(refs);
+                            }
+                            (GradBackend::Local { .. }, PartitionHandle::Data(data)) => {
+                                self.partition = *data;
+                            }
+                            _ => {
+                                return Err(Error::Runtime(format!(
+                                    "peer {}: shed partition handle does not match \
+                                     this backend",
+                                    self.rank
+                                )));
+                            }
+                        }
                     }
                 }
 
@@ -382,8 +501,26 @@ impl Peer {
                 let t = StageTimer::start(Stage::ReceiveGradients);
                 let mut dict = GradientDict::new();
                 dict.insert(self.rank, my_grad);
-                for peer in 0..self.config.peers {
+                // the exchange width is the (schedule-static) cluster
+                // width at this epoch: growth joiners count from their
+                // join epoch on, and every peer computes the same width
+                // with no coordination
+                let width = self
+                    .armed_membership()
+                    .map(|m| m.width_at(epoch))
+                    .unwrap_or(self.config.peers);
+                for peer in 0..width {
                     if peer == self.rank {
+                        continue;
+                    }
+                    // never wait on (or drop/take over) a scheduled
+                    // joiner whose admission hasn't landed — it was
+                    // never up, so it owes nothing for this epoch
+                    if self
+                        .armed_membership()
+                        .map(|m| m.awaiting_join(peer, epoch))
+                        .unwrap_or(false)
+                    {
                         continue;
                     }
                     let q = self.broker.get(&Broker::gradient_queue(peer))?;
@@ -506,6 +643,16 @@ impl Peer {
                     t.stop(&self.metrics);
                 }
 
+                // ---- 5b. elastic admissions (leader) ----------------------
+                // scheduled joins due at the next epoch are admitted at
+                // this boundary: after the verdict broadcast (so the
+                // joiner can replay it) and before this rank's barrier
+                // arrival (so the barrier can't fill until the table is
+                // updated and the revival catch-up proxies are out)
+                if self.rank == leader && !stop {
+                    self.admit_scheduled_joins(epoch)?;
+                }
+
                 // ---- 6. barrier (synchronous mode) ------------------------
                 if self.config.sync == SyncMode::Synchronous {
                     match self.armed_membership() {
@@ -609,6 +756,136 @@ impl Peer {
         epochs_outcome?;
         report.params_fnv = crate::store::shard::hash_f32s(&self.params);
         Ok(report)
+    }
+
+    /// Absorb the partition the admission registered for this rank:
+    /// the orphaned epoch-persistent refs on a revival (bit-identical
+    /// to the dead peer's own batches), the donor's split-off half on
+    /// a growth join.
+    fn adopt_join_partition(&mut self) -> Result<()> {
+        let m = self.membership.clone().ok_or_else(|| {
+            Error::Runtime(format!(
+                "peer {}: joined without a membership table",
+                self.rank
+            ))
+        })?;
+        let handle = m.partition_of(self.rank).ok_or_else(|| {
+            Error::Runtime(format!(
+                "peer {}: no partition registered to absorb on join",
+                self.rank
+            ))
+        })?;
+        match (&self.backend, handle) {
+            (GradBackend::Serverless(offload), PartitionHandle::Refs(refs)) => {
+                offload.adopt_batch_refs(refs)?;
+            }
+            (GradBackend::Local { .. }, PartitionHandle::Data(data)) => {
+                self.partition = *data;
+            }
+            _ => {
+                return Err(Error::Runtime(format!(
+                    "peer {}: joined partition handle does not match this backend",
+                    self.rank
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Leader-side admission at the end of epoch `epoch`: every
+    /// scheduled join due at `epoch + 1` — or earlier, when a leader
+    /// fail-over skipped a boundary — is matched against its announce
+    /// message, admitted into the membership table, warm-started from
+    /// this leader's post-update params, and released via its admit
+    /// queue. A joiner that never announced within the peer timeout is
+    /// declined so nobody waits for its gradients.
+    fn admit_scheduled_joins(&self, epoch: u64) -> Result<()> {
+        let Some(m) = self.armed_membership().cloned() else {
+            return Ok(());
+        };
+        let pending = m.pending_joins_at(epoch + 1);
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let store = self.store.as_ref().ok_or_else(|| {
+            Error::Runtime(format!(
+                "peer {}: join scheduled but no store plane attached",
+                self.rank
+            ))
+        })?;
+        let announce = self.broker.get(&Broker::join_queue())?;
+        for (jrank, jepoch) in pending {
+            let deadline = std::time::Instant::now() + m.peer_timeout();
+            let mut announced = false;
+            loop {
+                if announce.snapshot().iter().any(|msg| msg.sender == jrank) {
+                    announced = true;
+                    break;
+                }
+                if std::time::Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(m.wait_slice());
+            }
+            let admit_q = self
+                .broker
+                .declare(&Broker::join_admit_queue(jrank), QueueMode::Fifo)?;
+            let admission = if announced {
+                m.admit_join(jrank, jepoch)?
+            } else {
+                None
+            };
+            match admission {
+                None => {
+                    let mut j = Json::obj();
+                    j.set("admit", false);
+                    admit_q.publish(Message::new(
+                        self.rank,
+                        jepoch,
+                        Bytes::from(j.to_string().into_bytes()),
+                    ))?;
+                }
+                Some(adm) => {
+                    // warm-start: stage this leader's post-update params
+                    // in the persistent generation for the joiner to
+                    // decode (and the trainer teardown to sweep)
+                    store.create_bucket(PARAMS_BUCKET);
+                    let key = format!("join-warm-{jrank}-e{jepoch}");
+                    let r = store.put_gen(
+                        PARAMS_BUCKET,
+                        &key,
+                        Bytes::from(f32s_to_bytes(&self.params)),
+                        GEN_PERSISTENT,
+                    )?;
+                    let mut j = Json::obj();
+                    j.set("admit", true)
+                        .set(
+                            "kind",
+                            match adm.kind {
+                                JoinKind::Revival => "revival",
+                                JoinKind::Growth => "growth",
+                            },
+                        )
+                        .set("start", adm.start_epoch)
+                        .set("bucket", r.bucket.as_str())
+                        .set("key", r.key.as_str())
+                        .set("size", r.size);
+                    admit_q.publish(Message::new(
+                        self.rank,
+                        adm.start_epoch,
+                        Bytes::from(j.to_string().into_bytes()),
+                    ))?;
+                    // revival catch-up: barrier epochs the dead rank
+                    // still owed, claimed atomically in admit_join —
+                    // published here so the widened barrier can't hang
+                    m.proxy_catch_up(&self.barrier, jrank, &adm.catch_up)?;
+                    if let Some(plan) = &self.faults {
+                        plan.record_join_fired();
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Recompute a dead peer's epoch-`epoch` gradient from its

@@ -457,6 +457,12 @@ impl ServerlessOffload {
                 .req("gen")?
                 .as_u64()
                 .ok_or_else(|| Error::Faas("branch request: \"gen\" is not a number".into()))?;
+            // scope this handler's store I/O to (owning rank, epoch) so
+            // scheduled store faults land inside the Lambda exactly as
+            // they would on the peer loop's own thread; a takeover
+            // fan-out runs the *dead* rank's handler, so its scheduled
+            // faults follow the partition, not the successor
+            let _fault_scope = crate::harness::faults::FaultScope::enter(h_peer, generation);
             // injected branch delay (fault harness): the branch index
             // rides in the payload whenever any delay/dup targets this
             // peer, so the lookup is exact. Measured time only — the
@@ -664,6 +670,17 @@ impl ServerlessOffload {
         self.batch_refs.lock().unwrap().clone()
     }
 
+    /// The shared object store this offload reads/writes (the elastic
+    /// trainer threads the same handle into every peer's store plane).
+    pub fn store(&self) -> &Arc<ObjectStore> {
+        &self.store
+    }
+
+    /// The shared decode cache (joiner warm-starts decode through it).
+    pub fn decode_cache(&self) -> &Arc<DecodedCache> {
+        &self.decode_cache
+    }
+
     /// Still-resident params object for `generation`, if any: the
     /// staged/pipelined one-epoch-late release slot, then cross-epoch's
     /// lagged-retire queue, then the in-flight window. A takeover for
@@ -825,6 +842,35 @@ impl ServerlessOffload {
             );
         }
         Ok(refs.len())
+    }
+
+    /// Install already-uploaded batch refs as this peer's partition —
+    /// the joiner's path: a revived rank absorbs its orphaned
+    /// epoch-persistent objects, a growth joiner receives the split-off
+    /// half of a donor's. Nothing is uploaded; the objects already
+    /// exist. Refuses to clobber an uploaded partition.
+    pub fn adopt_batch_refs(&self, adopted: Vec<ObjectRef>) -> Result<usize> {
+        if adopted.is_empty() {
+            return Err(Error::Faas("no batch refs to adopt".into()));
+        }
+        let mut refs = self.batch_refs.lock().unwrap();
+        if !refs.is_empty() {
+            return Err(Error::Faas(format!(
+                "peer {}: batch objects already uploaded ({})",
+                self.peer,
+                refs.len()
+            )));
+        }
+        *refs = adopted;
+        Ok(refs.len())
+    }
+
+    /// Replace this peer's active partition refs — the growth-join
+    /// donor's shed path: the donor keeps computing its half, the
+    /// joiner adopted the rest. Applied at an epoch boundary, never
+    /// mid-fan-out (the epoch snapshot is taken under the same lock).
+    pub fn set_active_refs(&self, new_refs: Vec<ObjectRef>) {
+        *self.batch_refs.lock().unwrap() = new_refs;
     }
 
     /// Upload params v(`generation`) through the wire plane: a delta (or

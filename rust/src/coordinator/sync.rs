@@ -18,12 +18,28 @@ use crate::util::Bytes;
 pub struct EpochBarrier {
     queue: Arc<Queue>,
     peers: usize,
+    /// Epochs at which a *growth* join widens the barrier (one entry
+    /// per admitted rank; revivals reuse an original slot and don't
+    /// appear here). Sorted ascending. A join at epoch `E` means the
+    /// new peer arrives for every epoch `>= E`.
+    growth_epochs: Vec<u64>,
 }
 
 impl EpochBarrier {
     pub fn new(broker: &Broker, peers: usize) -> Result<Self> {
+        Self::with_growth(broker, peers, Vec::new())
+    }
+
+    /// A barrier whose width grows at scheduled epochs: `growth_epochs`
+    /// holds the first epoch each *new* rank participates in (one entry
+    /// per growth join; duplicates allowed when two ranks join at the
+    /// same boundary). The schedule is fixed up front — joins are
+    /// scripted by the fault plan, so every peer computes the same
+    /// piecewise-cumulative expectation with no runtime coordination.
+    pub fn with_growth(broker: &Broker, peers: usize, mut growth_epochs: Vec<u64>) -> Result<Self> {
         let queue = broker.declare(&Broker::sync_queue(), QueueMode::Fifo)?;
-        Ok(Self { queue, peers })
+        growth_epochs.sort_unstable();
+        Ok(Self { queue, peers, growth_epochs })
     }
 
     /// Signal that `rank` finished epoch `epoch` (1-based), then block
@@ -70,8 +86,22 @@ impl EpochBarrier {
     }
 
     /// Cumulative arrivals the barrier expects after epoch `epoch`.
+    ///
+    /// Piecewise with growth joins: the base width contributes
+    /// `peers * epoch` and a rank joining at epoch `E` contributes one
+    /// arrival per epoch in `E..=epoch`, i.e. `max(0, epoch - E + 1)`.
     pub fn expected(&self, epoch: u64) -> u64 {
-        epoch * self.peers as u64
+        let grown: u64 = self
+            .growth_epochs
+            .iter()
+            .map(|&e| (epoch + 1).saturating_sub(e))
+            .sum();
+        epoch * self.peers as u64 + grown
+    }
+
+    /// Barrier width (number of expected arrivals) *at* `epoch`.
+    pub fn width_at(&self, epoch: u64) -> usize {
+        self.peers + self.growth_epochs.iter().filter(|&&e| e <= epoch).count()
     }
 
     /// Completed arrivals so far (all epochs).
@@ -118,6 +148,40 @@ mod tests {
             .arrive_and_wait_timeout(0, 1, Duration::from_millis(30))
             .unwrap();
         assert!(!ok, "barrier should time out when peer 1 never arrives");
+    }
+
+    #[test]
+    fn growth_expectation_is_piecewise_cumulative() {
+        let broker = Arc::new(Broker::default());
+        // 2 base peers; one rank joins at epoch 2, another at epoch 3.
+        let barrier = EpochBarrier::with_growth(&broker, 2, vec![3, 2]).unwrap();
+        assert_eq!(barrier.expected(1), 2); // base only
+        assert_eq!(barrier.expected(2), 5); // 4 base + 1 (joiner@2)
+        assert_eq!(barrier.expected(3), 9); // 6 base + 2 + 1
+        assert_eq!(barrier.expected(4), 13); // 8 base + 3 + 2
+        assert_eq!(barrier.width_at(1), 2);
+        assert_eq!(barrier.width_at(2), 3);
+        assert_eq!(barrier.width_at(3), 4);
+    }
+
+    #[test]
+    fn grown_barrier_fills_with_joiner_arrivals() {
+        let broker = Arc::new(Broker::default());
+        let barrier = Arc::new(EpochBarrier::with_growth(&broker, 2, vec![2]).unwrap());
+        // Epoch 1: only the 2 base peers.
+        let b0 = barrier.clone();
+        let t = std::thread::spawn(move || b0.arrive_and_wait(0, 1).unwrap());
+        barrier.arrive_and_wait(1, 1).unwrap();
+        t.join().unwrap();
+        // Epoch 2: base peers park until rank 2 arrives too.
+        let ok = barrier
+            .arrive_and_wait_timeout(0, 2, Duration::from_millis(20))
+            .unwrap();
+        assert!(!ok, "barrier must now expect the epoch-2 joiner");
+        barrier.arrive(1, 2).unwrap();
+        barrier.arrive(2, 2).unwrap();
+        assert!(barrier.wait_timeout(2, Duration::from_millis(200)).unwrap());
+        assert_eq!(barrier.arrivals(), 5);
     }
 
     #[test]

@@ -13,17 +13,20 @@ use super::membership::Membership;
 use super::peer::{control_queue, GradBackend, Peer, PeerReport, Verdict};
 use super::serverless::ServerlessOffload;
 use super::sync::EpochBarrier;
-use crate::broker::{Broker, FaultPlan, QueueMode, DEFAULT_MESSAGE_CAP};
+use crate::broker::{Broker, FaultPlan, Message, QueueMode, DEFAULT_MESSAGE_CAP};
 use crate::compress::{codec_for, WirePlane};
 use crate::config::{Backend, FailurePolicy, TrainConfig};
-use crate::data::{DatasetKind, SyntheticDataset};
+use crate::data::{Dataset, DatasetKind, SyntheticDataset};
 use crate::error::{Error, Result};
 use crate::faas::{BranchScheduler, Executor, FaasPlatform, RetryPolicy, SchedulerStats};
 use crate::harness::faults::FaultPlanSpec;
 use crate::metrics::{MetricsRegistry, Stage, StageSummary};
 use crate::perfmodel;
 use crate::runtime::{Engine, ModelRuntime};
-use crate::store::{peer_bucket, shard, DecodedCache, ObjectStore, GEN_PERSISTENT};
+use crate::store::{
+    peer_bucket, shard, DecodedCache, ObjectRef, ObjectStore, GEN_PERSISTENT, PARAMS_BUCKET,
+};
+use crate::util::{Bytes, Json};
 
 /// Everything a finished run reports.
 #[derive(Debug)]
@@ -233,16 +236,11 @@ impl Cluster {
         );
         let partitions = train.partition(cfg.peers)?;
 
-        // ---- queues + barrier -------------------------------------------
-        for rank in 0..cfg.peers {
-            broker.declare(&Broker::gradient_queue(rank), QueueMode::LatestOnly)?;
-        }
-        broker.declare(&control_queue(), QueueMode::Fifo)?;
-        let barrier = Arc::new(EpochBarrier::new(&broker, cfg.peers)?);
-
         // ---- membership + fault plan --------------------------------------
-        // the injected-fault plan (kills / branch delays / duplicate
-        // deliveries) is resolved once for the whole cluster
+        // the injected-fault plan (kills / joins / branch delays /
+        // duplicate deliveries / store + broker I/O faults) is resolved
+        // once for the whole cluster — before the barrier, because
+        // scheduled growth joins widen it
         let fault_plan = {
             let spec = FaultPlanSpec::parse(&cfg.fault_plan)?;
             if spec.is_empty() {
@@ -264,6 +262,43 @@ impl Cluster {
             Duration::from_millis(cfg.peer_timeout_ms),
             armed,
         )?);
+        // scheduled joins widen the membership table (and, for growth
+        // ranks, the epoch barrier) up front — admission itself stays an
+        // epoch-boundary event driven by the leader
+        let joins: Vec<(usize, u64)> = fault_plan
+            .as_ref()
+            .map(|p| p.join_events())
+            .unwrap_or_default();
+        membership.set_join_schedule(&joins)?;
+
+        // ---- queues + barrier -------------------------------------------
+        // gradient queues for every rank the cluster can ever hold, so
+        // consumers never race a growth joiner's queue into existence
+        for rank in 0..membership.max_width() {
+            broker.declare(&Broker::gradient_queue(rank), QueueMode::LatestOnly)?;
+        }
+        broker.declare(&control_queue(), QueueMode::Fifo)?;
+        if !joins.is_empty() {
+            broker.declare(&Broker::join_queue(), QueueMode::Fifo)?;
+        }
+        let barrier = Arc::new(EpochBarrier::with_growth(
+            &broker,
+            cfg.peers,
+            membership.growth_epochs(),
+        )?);
+
+        // store/broker chaos: injected I/O faults route every put/get
+        // and publish through the deterministic hooks, retried under
+        // the shared `--store-retries`/`--store-backoff-ms` policy.
+        // Plans without I/O faults leave both planes untouched.
+        if let Some(plan) = &fault_plan {
+            if plan.has_io_faults() {
+                let io_retry =
+                    RetryPolicy::configured(cfg.store_retries, cfg.store_backoff_ms, cfg.seed);
+                store.arm_chaos(plan.clone(), io_retry);
+                broker.arm_chaos(plan.clone(), io_retry);
+            }
+        }
         // branch retry policy: seeded per-attempt jitter on top of the
         // exponential backoff, shared by every peer's fan-outs
         let retry = RetryPolicy::configured(cfg.lambda_retries, cfg.retry_backoff_ms, cfg.seed);
@@ -332,6 +367,7 @@ impl Cluster {
                 metrics.clone(),
             )?;
             peer.set_membership(membership.clone());
+            peer.set_store_plane(store.clone(), decode_cache.clone());
             if let Some(plan) = &fault_plan {
                 peer.set_faults(plan.clone());
             }
@@ -381,6 +417,178 @@ impl Cluster {
             }));
         }
 
+        // ---- spawn joiners ------------------------------------------------
+        // one thread per scheduled join, up front: it announces its
+        // rank on the join queue, parks on its admit queue until a
+        // leader admits (or declines) it at the epoch boundary, decodes
+        // the leader's warm-start params through the shared cache, and
+        // enters the epoch loop mid-run. The backend is built only
+        // after admission, so a declined join leaves no scheduler lane
+        // or registered function behind.
+        let mut join_handles = Vec::with_capacity(joins.len());
+        for &(jrank, jepoch) in &joins {
+            let cfg = cfg.clone();
+            let val = val.clone();
+            let runtime = runtime.clone();
+            let broker2 = broker.clone();
+            let store2 = store.clone();
+            let platform2 = platform.clone();
+            let scheduler2 = scheduler.clone();
+            let decode_cache2 = decode_cache.clone();
+            let wire_plane2 = wire_plane.clone();
+            let shard_plane2 = shard_plane.clone();
+            let metrics2 = metrics.clone();
+            let membership2 = membership.clone();
+            let fault_plan2 = fault_plan.clone();
+            let barrier2 = barrier.clone();
+            let survivable = armed && cfg.on_peer_failure != FailurePolicy::Abort;
+            join_handles.push((
+                jrank,
+                std::thread::spawn(move || {
+                    let run = || -> Result<Option<PeerReport>> {
+                        broker2.publish(
+                            &Broker::join_queue(),
+                            Message::new(jrank, jepoch, Bytes::new()),
+                        )?;
+                        let admit_q = broker2
+                            .declare(&Broker::join_admit_queue(jrank), QueueMode::Fifo)?;
+                        while !admit_q.await_version_timeout(1, membership2.wait_slice())? {}
+                        let msg = admit_q.snapshot().into_iter().next().ok_or_else(|| {
+                            Error::Broker(format!("joiner {jrank}: empty admit queue"))
+                        })?;
+                        let j = Json::parse(
+                            std::str::from_utf8(&msg.payload)
+                                .map_err(|e| Error::Broker(e.to_string()))?,
+                        )?;
+                        if !j.req("admit")?.as_bool().unwrap_or(false) {
+                            return Ok(None);
+                        }
+                        let start = j.req("start")?.as_u64().ok_or_else(|| {
+                            Error::Broker(format!("joiner {jrank}: admit without start epoch"))
+                        })?;
+                        let warm_ref = ObjectRef {
+                            bucket: j.req("bucket")?.as_str().unwrap_or_default().to_string(),
+                            key: j.req("key")?.as_str().unwrap_or_default().to_string(),
+                            size: j.req("size")?.as_u64().unwrap_or(0) as usize,
+                        };
+                        // warm-start: decode through the shared cache
+                        // (the chaos-gated get verifies the content
+                        // hash), then drop the entry and the object
+                        let warm = {
+                            let decoded = decode_cache2.get_or_decode(&warm_ref, &store2)?;
+                            let v = decoded.as_ref().clone();
+                            decode_cache2.invalidate(&warm_ref);
+                            store2.delete(&warm_ref.bucket, &warm_ref.key)?;
+                            v
+                        };
+                        let codec = Arc::from(codec_for(cfg.compression, cfg.seed ^ jrank as u64));
+                        let wire = GradientWire::new(codec, store2.clone(), DEFAULT_MESSAGE_CAP);
+                        let backend = match cfg.backend {
+                            Backend::Instance => GradBackend::Local { pallas: true },
+                            Backend::Serverless => {
+                                let mem = if cfg.lambda_memory_mb > 0 {
+                                    cfg.lambda_memory_mb
+                                } else {
+                                    perfmodel::PaperModel::from_key(&cfg.model_key())
+                                        .map(|m| {
+                                            perfmodel::lambda_memory_for(
+                                                perfmodel::paper_model(m),
+                                                cfg.batch_size,
+                                            )
+                                        })
+                                        .unwrap_or(1769)
+                                };
+                                let mut offload = ServerlessOffload::new(
+                                    platform2.clone(),
+                                    store2.clone(),
+                                    runtime.clone(),
+                                    scheduler2.clone(),
+                                    decode_cache2.clone(),
+                                    wire_plane2.clone(),
+                                    shard_plane2.clone(),
+                                    jrank,
+                                    mem,
+                                    cfg.lambda_concurrency,
+                                    cfg.offload_mode,
+                                    cfg.sweep_scratch,
+                                    cfg.pipeline_depth,
+                                )?;
+                                offload.set_retry(retry);
+                                offload.set_fold_quorum(cfg.fold_quorum);
+                                if let Some(plan) = &fault_plan2 {
+                                    offload.set_faults(plan.clone());
+                                }
+                                GradBackend::Serverless(offload)
+                            }
+                        };
+                        // a revival's scheduler lane was evicted when
+                        // the rank died; growth lanes were just created
+                        scheduler2.readmit_peer(jrank);
+                        // placeholder partition — run_joined absorbs the
+                        // handle the admission registered for this rank
+                        let placeholder = Dataset {
+                            x: Vec::new(),
+                            y: Vec::new(),
+                            h: val.h,
+                            w: val.w,
+                            c: val.c,
+                            nclass: val.nclass,
+                        };
+                        let mut peer = Peer::new(
+                            jrank,
+                            cfg.clone(),
+                            placeholder,
+                            val.clone(),
+                            runtime.clone(),
+                            broker2.clone(),
+                            wire,
+                            backend,
+                            barrier2.clone(),
+                            metrics2.clone(),
+                        )?;
+                        peer.set_membership(membership2.clone());
+                        peer.set_store_plane(store2.clone(), decode_cache2.clone());
+                        if let Some(plan) = &fault_plan2 {
+                            peer.set_faults(plan.clone());
+                        }
+                        peer.run_joined(start, warm).map(Some)
+                    };
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
+                    match outcome {
+                        Ok(result) => {
+                            match &result {
+                                Err(e) if !matches!(e, Error::Aborted(_)) => {
+                                    if survivable {
+                                        membership2.declare_dead(
+                                            jrank,
+                                            &format!("joiner {jrank} failed: {e}"),
+                                        );
+                                        scheduler2.evict_peer(jrank);
+                                    } else {
+                                        broker2.abort(&format!("joiner {jrank} failed: {e}"));
+                                    }
+                                }
+                                Err(_) => {}
+                                Ok(Some(_)) => membership2.mark_done(jrank),
+                                Ok(None) => {}
+                            }
+                            result
+                        }
+                        Err(_) => {
+                            if survivable {
+                                membership2
+                                    .declare_dead(jrank, &format!("joiner {jrank} panicked"));
+                                scheduler2.evict_peer(jrank);
+                            } else {
+                                broker2.abort(&format!("joiner {jrank} panicked"));
+                            }
+                            Err(Error::Broker(format!("joiner {jrank} thread panicked")))
+                        }
+                    }
+                }),
+            ));
+        }
+
         let mut peers = Vec::with_capacity(cfg.peers);
         // join everyone (threads exit promptly after an abort), then
         // surface the root cause — not the secondary Aborted errors
@@ -412,6 +620,35 @@ impl Cluster {
                 Err(_) => record(
                     &mut failure,
                     Error::Broker("peer thread panicked".into()),
+                ),
+            }
+        }
+        // release any joiner whose admission boundary never came (early
+        // stop, abort, or a failed run): publish a decline so its
+        // thread stops parking, then join them all
+        for &(jrank, _) in &joins {
+            if membership.awaiting_join(jrank, u64::MAX) {
+                if let Ok(q) = broker.declare(&Broker::join_admit_queue(jrank), QueueMode::Fifo) {
+                    let mut j = Json::obj();
+                    j.set("admit", false);
+                    let _ = q.publish(Message::new(
+                        0,
+                        0,
+                        Bytes::from(j.to_string().into_bytes()),
+                    ));
+                }
+            }
+        }
+        for (jrank, h) in join_handles {
+            match h.join() {
+                Ok(Ok(Some(p))) => peers.push(p),
+                // declined: the join never landed, nothing to report
+                Ok(Ok(None)) => {}
+                Ok(Err(_)) if survivable && !membership.is_alive(jrank) => {}
+                Ok(Err(e)) => record(&mut failure, e),
+                Err(_) => record(
+                    &mut failure,
+                    Error::Broker("joiner thread panicked".into()),
                 ),
             }
         }
@@ -450,8 +687,15 @@ impl Cluster {
         // training is over: drop the epoch-persistent batch objects so
         // `store_objects` measures per-epoch sweep hygiene only — any
         // scratch generation a sweep missed stays visible
-        for rank in 0..cfg.peers {
+        for rank in 0..membership.max_width() {
             store.sweep_generation(&peer_bucket(rank), GEN_PERSISTENT);
+        }
+        // elastic runs stage warm-start params in the persistent
+        // generation of the shared params bucket; an admitted joiner
+        // deletes its copy after decoding, this catches declined or
+        // interrupted admissions
+        if !joins.is_empty() {
+            store.sweep_generation(PARAMS_BUCKET, GEN_PERSISTENT);
         }
         // dead peers never ran their own teardown to the end of the run:
         // straggling branches on their evicted lanes (and takeover
@@ -538,6 +782,13 @@ impl Cluster {
         metrics.set_counter("membership.takeover_epochs", membership.takeover_epochs());
         metrics.set_counter("membership.dropped_grads", membership.dropped_grads());
         metrics.set_counter("membership.orphans_swept", orphans_swept as u64);
+        metrics.set_counter("membership.joins", membership.joins());
+        // chaos-hardened I/O planes: injected-fault retries and the
+        // hash-verified re-fetches that caught corrupted reads (all
+        // zero when no I/O faults are armed)
+        metrics.set_counter("store.retries", store.chaos_retries());
+        metrics.set_counter("store.corrupt_refetches", store.corrupt_refetches());
+        metrics.set_counter("broker.retries", broker.chaos_retries());
         // k-of-n partial folds and the configured Lambda retry policy
         metrics.set_counter("fold.quorum", cfg.fold_quorum as u64);
         let stragglers: usize = peers.iter().map(|p| p.fold_stragglers).sum();
@@ -550,6 +801,9 @@ impl Cluster {
             metrics.set_counter("fault.kills_fired", plan.kills_fired());
             metrics.set_counter("fault.delays_fired", plan.delays_fired());
             metrics.set_counter("fault.dups_fired", plan.dups_fired());
+            metrics.set_counter("fault.joins_fired", plan.joins_fired());
+            metrics.set_counter("fault.store_faults_fired", plan.store_faults_fired());
+            metrics.set_counter("fault.broker_faults_fired", plan.broker_faults_fired());
         }
 
         Ok(TrainReport {

@@ -34,64 +34,11 @@ use super::executor::{Executor, Semaphore};
 use super::lambda::{FaasPlatform, Invocation};
 use crate::error::{Error, Result};
 
-/// Retry policy for transient task failures (Step Functions' `Retry`).
-///
-/// Configured per run via `--lambda-retries` / `--retry-backoff-ms`;
-/// the default (3 attempts, no backoff) matches the policy that was
-/// hardcoded before the knobs existed, so default runs are unchanged.
-#[derive(Debug, Clone, Copy)]
-pub struct RetryPolicy {
-    /// Total attempts (the first try counts; minimum 1).
-    pub max_attempts: u32,
-    /// Base sleep before the first retry; attempt `k` waits
-    /// `backoff * 2^(k-1)` plus seeded jitter. Measured time only —
-    /// modeled walls never include backoff sleeps.
-    pub backoff: Duration,
-    /// Seed for the deterministic jitter (same seed → same delays).
-    pub jitter_seed: u64,
-}
-
-impl Default for RetryPolicy {
-    fn default() -> Self {
-        Self { max_attempts: 3, backoff: Duration::ZERO, jitter_seed: 0 }
-    }
-}
-
-impl RetryPolicy {
-    /// Policy from the config knobs, with a per-peer jitter seed so
-    /// colliding retries from different peers decorrelate.
-    pub fn configured(max_attempts: u32, backoff_ms: u64, jitter_seed: u64) -> Self {
-        Self {
-            max_attempts: max_attempts.max(1),
-            backoff: Duration::from_millis(backoff_ms),
-            jitter_seed,
-        }
-    }
-
-    /// Sleep owed before retry attempt `attempt` (1-based over
-    /// retries): exponential base plus jitter in `[0, base/2]`.
-    pub fn backoff_delay(&self, attempt: u32) -> Duration {
-        if self.backoff.is_zero() || attempt == 0 {
-            return Duration::ZERO;
-        }
-        let base = self.backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(10));
-        let half = base.as_nanos() as u64 / 2;
-        let jitter = if half == 0 {
-            0
-        } else {
-            jitter_hash(self.jitter_seed ^ u64::from(attempt)) % (half + 1)
-        };
-        base + Duration::from_nanos(jitter)
-    }
-}
-
-/// splitmix64 — a tiny stateless hash for deterministic retry jitter.
-fn jitter_hash(state: u64) -> u64 {
-    let mut z = state.wrapping_add(0x9e3779b97f4a7c15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
-    z ^ (z >> 31)
-}
+/// The branch retry policy now lives in [`crate::util::retry`] so the
+/// store/broker chaos planes share the exact same exhaustion and
+/// backoff semantics; re-exported here because `faas::RetryPolicy` is
+/// the historical path every call site (and the public API) uses.
+pub use crate::util::retry::RetryPolicy;
 
 /// A state in the machine.
 pub enum State {

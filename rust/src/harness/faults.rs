@@ -2,9 +2,11 @@
 //!
 //! A fault plan is a seeded, fully explicit schedule of failures —
 //! *kill* a peer at an epoch, *delay* a gradient branch, *duplicate* a
-//! branch delivery — parsed from a compact spec string
-//! (`--fault-plan`) and resolved against the concrete cluster shape
-//! before the run starts. Resolution is pure: the same spec, peer
+//! branch delivery, *join* a peer mid-run, or break the I/O planes
+//! (transient store put/get errors, injected store latency, corrupted
+//! reads, broker publish drops/delays) — parsed from a compact spec
+//! string (`--fault-plan`) and resolved against the concrete cluster
+//! shape before the run starts. Resolution is pure: the same spec, peer
 //! count, and epoch count always produce the same event list, so every
 //! failure mode is replayable byte-for-byte in tests and benches.
 //!
@@ -16,17 +18,33 @@
 //! | `delay:peer0@3:5ms`            | every epoch-3 branch of peer 0 sleeps 5ms |
 //! | `delay:peer0.branch3@1:5ms`    | only branch 3 sleeps                      |
 //! | `dup:peer2.branch0@1`          | branch 0 is dispatched twice in epoch 1   |
+//! | `join:peer1@3`                 | peer 1 (re)joins at the epoch-3 boundary  |
+//! | `join:peer4@3`                 | a brand-new rank 4 grows the cluster      |
+//! | `storeput:peer1@2`             | one transient S3 put error (retried)      |
+//! | `storeget:peer1@2`             | one transient S3 get error (retried)      |
+//! | `storedelay:peer1@2:5ms`       | one store op sleeps 5ms (measured only)   |
+//! | `storecorrupt:peer1@2`         | one read returns corrupted bytes          |
+//! | `brokerdrop:peer1@2`           | one publish is dropped (retried)          |
+//! | `brokerdelay:peer1@2:5ms`      | one publish sleeps 5ms (measured only)    |
 //! | `rate:kill=0.25,seed=7`        | seeded kills covering 25% of the peers    |
+//! | `rate:join=0.5,seed=7`         | seeded growth joins (floor(rate × peers)) |
+//! | `rate:store=0.2,seed=7`        | seeded store faults over peer × epoch     |
 //!
-//! Kills take effect in [`crate::coordinator::peer::Peer::run`];
-//! delays and duplicates are applied at the serverless branch dispatch
-//! site (the delay sleeps inside the Lambda handler, so it moves only
-//! the *measured* wall — modeled accounting is untouched — and a
-//! duplicate's second landing is suppressed before the fold so the
-//! gradient math never sees it).
+//! Kills and joins take effect in the coordinator (peer loop /
+//! membership admission); delays and duplicates are applied at the
+//! serverless branch dispatch site; store and broker faults fire inside
+//! [`crate::store::ObjectStore`] / [`crate::broker::Broker`] via the
+//! chaos hook, scoped to the injecting peer's ops by the thread-local
+//! [`FaultScope`]. Every I/O fault is *transparent* by construction —
+//! transient errors are retried under the shared
+//! [`crate::util::retry::RetryPolicy`], corrupted reads are caught by
+//! content-hash verification and re-fetched, and delays move only the
+//! measured wall — so an armed run's training math is bit-identical to
+//! the fault-free run.
 
+use std::cell::Cell;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
 
@@ -40,6 +58,23 @@ pub enum FaultKind {
     /// The branch is dispatched twice; the duplicate's result is
     /// discarded deterministically before the fold.
     Dup,
+    /// The peer joins the run at this epoch's boundary: a dead rank is
+    /// revived onto its old partition, a rank equal to the current
+    /// cluster width grows the cluster.
+    Join,
+    /// One store put by the peer fails transiently (succeeds on retry).
+    StorePutErr,
+    /// One store get by the peer fails transiently (succeeds on retry).
+    StoreGetErr,
+    /// One store op by the peer sleeps (measured time only).
+    StoreDelay,
+    /// One store get returns corrupted bytes (caught by hash
+    /// verification, re-fetched).
+    StoreCorrupt,
+    /// One broker publish by the peer is dropped (succeeds on retry).
+    BrokerDrop,
+    /// One broker publish by the peer sleeps (measured time only).
+    BrokerDelay,
 }
 
 impl FaultKind {
@@ -48,7 +83,32 @@ impl FaultKind {
             Self::Kill => "kill",
             Self::Delay => "delay",
             Self::Dup => "dup",
+            Self::Join => "join",
+            Self::StorePutErr => "storeput",
+            Self::StoreGetErr => "storeget",
+            Self::StoreDelay => "storedelay",
+            Self::StoreCorrupt => "storecorrupt",
+            Self::BrokerDrop => "brokerdrop",
+            Self::BrokerDelay => "brokerdelay",
         }
+    }
+
+    /// Kinds carrying a `:Tms` duration suffix.
+    fn has_duration(self) -> bool {
+        matches!(self, Self::Delay | Self::StoreDelay | Self::BrokerDelay)
+    }
+
+    /// Kinds injected at the store/broker layer (fire-once I/O faults).
+    fn is_io(self) -> bool {
+        matches!(
+            self,
+            Self::StorePutErr
+                | Self::StoreGetErr
+                | Self::StoreDelay
+                | Self::StoreCorrupt
+                | Self::BrokerDrop
+                | Self::BrokerDelay
+        )
     }
 }
 
@@ -62,7 +122,7 @@ pub struct FaultEvent {
     pub branch: Option<usize>,
     /// 1-based training epoch the fault fires in.
     pub epoch: u64,
-    /// Injected sleep for [`FaultKind::Delay`], in microseconds.
+    /// Injected sleep for the delay kinds, in microseconds.
     pub delay_us: u64,
 }
 
@@ -73,21 +133,21 @@ impl fmt::Display for FaultEvent {
             write!(f, ".branch{b}")?;
         }
         write!(f, "@{}", self.epoch)?;
-        if self.kind == FaultKind::Delay {
+        if self.kind.has_duration() {
             write!(f, ":{}ms", self.delay_us / 1000)?;
         }
         Ok(())
     }
 }
 
-/// A parsed-but-unresolved `--fault-plan`: explicit events plus an
-/// optional seeded kill-rate clause that expands once the cluster
-/// shape (peers, epochs) is known.
+/// A parsed-but-unresolved `--fault-plan`: explicit events plus
+/// optional seeded rate clauses that expand once the cluster shape
+/// (peers, epochs) is known.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultPlanSpec {
     explicit: Vec<FaultEvent>,
-    /// `(kill_rate, seed)` from a `rate:` clause.
-    rate: Option<(f64, u64)>,
+    /// `(kill_rate, join_rate, store_rate, seed)` from a `rate:` clause.
+    rate: Option<(f64, f64, f64, u64)>,
 }
 
 impl FaultPlanSpec {
@@ -115,20 +175,14 @@ impl FaultPlanSpec {
                     });
                 }
                 "delay" => {
-                    let (target, ms) = rest.rsplit_once(':').ok_or_else(|| {
-                        Error::Config(format!("delay needs a duration: {entry:?}"))
-                    })?;
-                    let ms = ms.strip_suffix("ms").unwrap_or(ms);
-                    let ms: u64 = ms.parse().map_err(|_| {
-                        Error::Config(format!("bad fault delay duration {ms:?}"))
-                    })?;
+                    let (target, us) = parse_duration_suffix(entry, rest)?;
                     let (peer, branch, epoch) = parse_target(target)?;
                     plan.explicit.push(FaultEvent {
                         kind: FaultKind::Delay,
                         peer,
                         branch,
                         epoch,
-                        delay_us: ms * 1000,
+                        delay_us: us,
                     });
                 }
                 "dup" => {
@@ -144,21 +198,93 @@ impl FaultPlanSpec {
                         delay_us: 0,
                     });
                 }
+                "join" => {
+                    let (peer, branch, epoch) = parse_target(rest)?;
+                    if branch.is_some() {
+                        return Err(Error::Config(format!(
+                            "join targets a peer, not a branch: {entry:?}"
+                        )));
+                    }
+                    plan.explicit.push(FaultEvent {
+                        kind: FaultKind::Join,
+                        peer,
+                        branch: None,
+                        epoch,
+                        delay_us: 0,
+                    });
+                }
+                "storeput" | "storeget" | "storecorrupt" | "brokerdrop" => {
+                    let k = match kind {
+                        "storeput" => FaultKind::StorePutErr,
+                        "storeget" => FaultKind::StoreGetErr,
+                        "storecorrupt" => FaultKind::StoreCorrupt,
+                        _ => FaultKind::BrokerDrop,
+                    };
+                    let (peer, branch, epoch) = parse_target(rest)?;
+                    if branch.is_some() {
+                        return Err(Error::Config(format!(
+                            "{kind} targets a peer, not a branch: {entry:?}"
+                        )));
+                    }
+                    plan.explicit.push(FaultEvent {
+                        kind: k,
+                        peer,
+                        branch: None,
+                        epoch,
+                        delay_us: 0,
+                    });
+                }
+                "storedelay" | "brokerdelay" => {
+                    let k = if kind == "storedelay" {
+                        FaultKind::StoreDelay
+                    } else {
+                        FaultKind::BrokerDelay
+                    };
+                    let (target, us) = parse_duration_suffix(entry, rest)?;
+                    let (peer, branch, epoch) = parse_target(target)?;
+                    if branch.is_some() {
+                        return Err(Error::Config(format!(
+                            "{kind} targets a peer, not a branch: {entry:?}"
+                        )));
+                    }
+                    plan.explicit.push(FaultEvent {
+                        kind: k,
+                        peer,
+                        branch: None,
+                        epoch,
+                        delay_us: us,
+                    });
+                }
                 "rate" => {
-                    let mut kill_rate = None;
+                    let mut kill_rate = 0f64;
+                    let mut join_rate = 0f64;
+                    let mut store_rate = 0f64;
+                    let mut any = false;
                     let mut seed = 0u64;
+                    let parse_rate = |key: &str, v: &str| -> Result<f64> {
+                        let r: f64 = v.parse().map_err(|_| {
+                            Error::Config(format!("bad fault {key} rate {v:?}"))
+                        })?;
+                        if !(0.0..=1.0).contains(&r) {
+                            return Err(Error::Config(format!(
+                                "fault {key} rate {r} outside [0,1]"
+                            )));
+                        }
+                        Ok(r)
+                    };
                     for kv in rest.split(',').map(str::trim) {
                         match kv.split_once('=') {
                             Some(("kill", v)) => {
-                                let r: f64 = v.parse().map_err(|_| {
-                                    Error::Config(format!("bad fault kill rate {v:?}"))
-                                })?;
-                                if !(0.0..=1.0).contains(&r) {
-                                    return Err(Error::Config(format!(
-                                        "fault kill rate {r} outside [0,1]"
-                                    )));
-                                }
-                                kill_rate = Some(r);
+                                kill_rate = parse_rate("kill", v)?;
+                                any = true;
+                            }
+                            Some(("join", v)) => {
+                                join_rate = parse_rate("join", v)?;
+                                any = true;
+                            }
+                            Some(("store", v)) => {
+                                store_rate = parse_rate("store", v)?;
+                                any = true;
                             }
                             Some(("seed", v)) => {
                                 seed = v.parse().map_err(|_| {
@@ -172,10 +298,12 @@ impl FaultPlanSpec {
                             }
                         }
                     }
-                    let kill_rate = kill_rate.ok_or_else(|| {
-                        Error::Config(format!("rate clause needs kill=<frac>: {entry:?}"))
-                    })?;
-                    plan.rate = Some((kill_rate, seed));
+                    if !any {
+                        return Err(Error::Config(format!(
+                            "rate clause needs kill=/join=/store=<frac>: {entry:?}"
+                        )));
+                    }
+                    plan.rate = Some((kill_rate, join_rate, store_rate, seed));
                 }
                 other => {
                     return Err(Error::Config(format!("unknown fault kind {other:?}")))
@@ -191,14 +319,32 @@ impl FaultPlanSpec {
     }
 
     /// Expand against the concrete cluster shape into a sorted,
-    /// deterministic event list. Rate-based kills pick distinct
-    /// victims among ranks `1..peers` (rank 0 is spared so the seeded
-    /// sweep always keeps the natural leader) and fire in seeded
-    /// epochs `1..=epochs`; the count is `floor(rate × peers)` capped
-    /// at `peers - 1` so at least one survivor remains.
+    /// deterministic event list. Rate-based kills pick distinct victims
+    /// among ranks `1..peers` (rank 0 is spared so the seeded sweep
+    /// always keeps the natural leader) and fire in seeded epochs
+    /// `1..=epochs`; rate-based joins grow the cluster with
+    /// `floor(rate × peers)` new ranks at seeded epochs `2..=epochs`
+    /// (earliest epoch gets the lowest new rank, so admission order is
+    /// well-formed); rate-based store faults spread
+    /// `floor(rate × peers × epochs)` events over the peer × epoch
+    /// grid, cycling get-error / put-error / corrupt kinds.
     pub fn resolve(&self, peers: usize, epochs: usize) -> Result<FaultPlan> {
         let mut events = self.explicit.clone();
         for ev in &events {
+            if ev.kind == FaultKind::Join {
+                // join ranks are validated by the width simulation
+                // below (a growth join's rank exceeds `peers` by
+                // design); epochs start at 2 — admission happens at
+                // the end of epoch-1 at the earliest
+                if ev.epoch < 2 || ev.epoch > epochs as u64 {
+                    return Err(Error::Config(format!(
+                        "join at epoch {} outside 2..={epochs} \
+                         (admission needs a completed prior epoch)",
+                        ev.epoch
+                    )));
+                }
+                continue;
+            }
             if ev.peer >= peers {
                 return Err(Error::Config(format!(
                     "fault plan targets peer {} but the cluster has {peers}",
@@ -212,9 +358,10 @@ impl FaultPlanSpec {
                 )));
             }
         }
-        if let Some((rate, seed)) = self.rate {
-            let kills = ((rate * peers as f64).floor() as usize).min(peers.saturating_sub(1));
+        if let Some((kill_rate, join_rate, store_rate, seed)) = self.rate {
             let mut rng = seed ^ 0x9e37_79b9_7f4a_7c15;
+            let kills =
+                ((kill_rate * peers as f64).floor() as usize).min(peers.saturating_sub(1));
             let mut victims: Vec<usize> = (1..peers).collect();
             for k in 0..kills {
                 let pick = k + (splitmix(&mut rng) as usize) % (victims.len() - k).max(1);
@@ -228,11 +375,86 @@ impl FaultPlanSpec {
                     delay_us: 0,
                 });
             }
+            if epochs >= 2 {
+                let joins = (join_rate * peers as f64).floor() as usize;
+                let mut join_epochs: Vec<u64> = (0..joins)
+                    .map(|_| 2 + splitmix(&mut rng) % (epochs as u64 - 1))
+                    .collect();
+                // earliest join gets the lowest new rank so each growth
+                // admission sees a contiguous width
+                join_epochs.sort_unstable();
+                for (i, epoch) in join_epochs.into_iter().enumerate() {
+                    events.push(FaultEvent {
+                        kind: FaultKind::Join,
+                        peer: peers + i,
+                        branch: None,
+                        epoch,
+                        delay_us: 0,
+                    });
+                }
+            }
+            let cells = peers * epochs;
+            let store_faults =
+                ((store_rate * cells as f64).floor() as usize).min(cells);
+            const STORE_KINDS: [FaultKind; 3] =
+                [FaultKind::StoreGetErr, FaultKind::StorePutErr, FaultKind::StoreCorrupt];
+            for i in 0..store_faults {
+                let peer = (splitmix(&mut rng) as usize) % peers.max(1);
+                let epoch = 1 + splitmix(&mut rng) % epochs.max(1) as u64;
+                events.push(FaultEvent {
+                    kind: STORE_KINDS[i % STORE_KINDS.len()],
+                    peer,
+                    branch: None,
+                    epoch,
+                    delay_us: 0,
+                });
+            }
         }
         events.sort();
         events.dedup();
+        // joins must form a well-ordered admission sequence: a revival
+        // targets an original rank, a growth join's rank must equal the
+        // cluster width at its admission boundary, and no rank joins
+        // twice (rank 0 — the epoch-1 leader — never joins)
+        let mut joins: Vec<&FaultEvent> =
+            events.iter().filter(|e| e.kind == FaultKind::Join).collect();
+        joins.sort_by_key(|e| (e.epoch, e.peer));
+        let mut width = peers;
+        let mut seen: Vec<usize> = Vec::new();
+        for j in &joins {
+            if j.peer == 0 {
+                return Err(Error::Config("rank 0 (the leader) cannot join".into()));
+            }
+            if seen.contains(&j.peer) {
+                return Err(Error::Config(format!("peer {} joins twice", j.peer)));
+            }
+            seen.push(j.peer);
+            if j.peer >= peers {
+                if j.peer != width {
+                    return Err(Error::Config(format!(
+                        "growth join rank {} does not match the cluster \
+                         width {width} at epoch {}",
+                        j.peer, j.epoch
+                    )));
+                }
+                width += 1;
+            }
+        }
         Ok(FaultPlan::new(events))
     }
+}
+
+/// Split a duration-suffixed entry (`target:Tms`) into target and
+/// microseconds.
+fn parse_duration_suffix<'a>(entry: &str, rest: &'a str) -> Result<(&'a str, u64)> {
+    let (target, ms) = rest
+        .rsplit_once(':')
+        .ok_or_else(|| Error::Config(format!("delay needs a duration: {entry:?}")))?;
+    let ms = ms.strip_suffix("ms").unwrap_or(ms);
+    let ms: u64 = ms
+        .parse()
+        .map_err(|_| Error::Config(format!("bad fault delay duration {ms:?}")))?;
+    Ok((target, ms * 1000))
 }
 
 fn parse_target(s: &str) -> Result<(usize, Option<usize>, u64)> {
@@ -267,21 +489,99 @@ fn splitmix(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// A resolved fault schedule, consulted by the peer loop (kills) and
-/// the serverless branch dispatch (delays, duplicates). Counters track
-/// how many injections actually fired, surfaced as `fault.*` in the
-/// train report.
+thread_local! {
+    /// The (rank, epoch) whose I/O the current thread is performing —
+    /// set by the peer loop around each epoch and by the Lambda handler
+    /// around each branch, read by the store/broker chaos hooks.
+    /// Threads without a scope (trainer setup/teardown, tests) are
+    /// never faulted.
+    static FAULT_SCOPE: Cell<Option<(usize, u64)>> = const { Cell::new(None) };
+}
+
+/// RAII guard scoping the current thread's store/broker ops to one
+/// (rank, epoch) for fault matching; restores the previous scope on
+/// drop so nested scopes (a takeover fan-out inside a survivor's
+/// epoch) compose.
+pub struct FaultScope {
+    prev: Option<(usize, u64)>,
+}
+
+impl FaultScope {
+    pub fn enter(rank: usize, epoch: u64) -> Self {
+        let prev = FAULT_SCOPE.with(|s| s.replace(Some((rank, epoch))));
+        Self { prev }
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        FAULT_SCOPE.with(|s| s.set(prev));
+    }
+}
+
+/// The (rank, epoch) scope of the current thread, if any.
+pub fn current_fault_scope() -> Option<(usize, u64)> {
+    FAULT_SCOPE.with(|s| s.get())
+}
+
+/// Which store primitive is asking for a fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Put,
+    Get,
+}
+
+/// An injected store fault, consumed (at most once per scheduled
+/// event) by the [`crate::store::ObjectStore`] chaos hook.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFault {
+    /// Fail this op with a transient error (the retry loop recovers).
+    Transient,
+    /// Sleep this many microseconds before the op (measured time only).
+    Delay(u64),
+    /// Return corrupted bytes from this get (hash verification catches
+    /// it and re-fetches).
+    Corrupt,
+}
+
+/// An injected broker fault, consumed by the [`crate::broker::Broker`]
+/// publish hook.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrokerFault {
+    /// Drop this publish (fail transiently; the retry loop recovers).
+    Drop,
+    /// Sleep this many microseconds before publishing.
+    Delay(u64),
+}
+
+/// A resolved fault schedule, consulted by the peer loop (kills,
+/// joins), the serverless branch dispatch (delays, duplicates) and the
+/// store/broker chaos hooks (I/O faults). Counters track how many
+/// injections actually fired, surfaced as `fault.*` in the train
+/// report. I/O events fire exactly once each: the first matching op
+/// under the event's (peer, epoch) scope consumes it atomically —
+/// *which* op wins under concurrency is timing-dependent, but every
+/// injected fault is transparent (retried / re-fetched / sleep-only),
+/// so the training math never sees the difference.
 #[derive(Debug, Default)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
+    /// Per-event consumed flags (I/O kinds only; index-aligned with
+    /// `events`).
+    fired: Vec<AtomicBool>,
     kills_fired: AtomicU64,
     delays_fired: AtomicU64,
     dups_fired: AtomicU64,
+    joins_fired: AtomicU64,
+    store_faults_fired: AtomicU64,
+    broker_faults_fired: AtomicU64,
 }
 
 impl FaultPlan {
     pub fn new(events: Vec<FaultEvent>) -> Self {
-        Self { events, ..Default::default() }
+        let fired = events.iter().map(|_| AtomicBool::new(false)).collect();
+        Self { events, fired, ..Default::default() }
     }
 
     /// The resolved schedule, sorted and deduplicated.
@@ -316,6 +616,33 @@ impl FaultPlan {
             .filter(|e| e.kind == FaultKind::Kill && e.peer == rank)
             .map(|e| e.epoch)
             .min()
+    }
+
+    /// Every scheduled join as (rank, first-epoch), ordered by epoch
+    /// then rank — the membership admission schedule.
+    pub fn join_events(&self) -> Vec<(usize, u64)> {
+        let mut joins: Vec<(usize, u64)> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Join)
+            .map(|e| (e.peer, e.epoch))
+            .collect();
+        joins.sort_by_key(|&(r, e)| (e, r));
+        joins
+    }
+
+    /// The epoch `rank` is scheduled to join in, if any.
+    pub fn join_epoch(&self, rank: usize) -> Option<u64> {
+        self.events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Join && e.peer == rank)
+            .map(|e| e.epoch)
+            .min()
+    }
+
+    /// Record one admitted join (fired by membership on admission).
+    pub fn record_join_fired(&self) {
+        self.joins_fired.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Injected sleep for this branch invocation, if any (the longest
@@ -358,7 +685,72 @@ impl FaultPlan {
     pub fn targets_branches(&self, rank: usize) -> bool {
         self.events
             .iter()
-            .any(|e| e.peer == rank && e.kind != FaultKind::Kill)
+            .any(|e| e.peer == rank && matches!(e.kind, FaultKind::Delay | FaultKind::Dup))
+    }
+
+    /// Consume one matching event atomically (fire-once).
+    fn take(&self, want: impl Fn(&FaultEvent) -> bool) -> Option<&FaultEvent> {
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.kind.is_io() || !want(e) {
+                continue;
+            }
+            if self.fired[i]
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    /// One store fault owed to `(rank, epoch)` for this op, if any —
+    /// consumed exactly once per scheduled event. Put sites take
+    /// put-errors and delays; get sites take get-errors, corruption
+    /// and delays.
+    pub fn take_store_fault(
+        &self,
+        rank: usize,
+        epoch: u64,
+        op: StoreOp,
+    ) -> Option<StoreFault> {
+        let ev = self.take(|e| {
+            e.peer == rank
+                && e.epoch == epoch
+                && match e.kind {
+                    FaultKind::StorePutErr => op == StoreOp::Put,
+                    FaultKind::StoreGetErr | FaultKind::StoreCorrupt => op == StoreOp::Get,
+                    FaultKind::StoreDelay => true,
+                    _ => false,
+                }
+        })?;
+        self.store_faults_fired.fetch_add(1, Ordering::Relaxed);
+        Some(match ev.kind {
+            FaultKind::StorePutErr | FaultKind::StoreGetErr => StoreFault::Transient,
+            FaultKind::StoreDelay => StoreFault::Delay(ev.delay_us),
+            _ => StoreFault::Corrupt,
+        })
+    }
+
+    /// One broker fault owed to `(rank, epoch)` for this publish, if
+    /// any — consumed exactly once per scheduled event.
+    pub fn take_broker_fault(&self, rank: usize, epoch: u64) -> Option<BrokerFault> {
+        let ev = self.take(|e| {
+            e.peer == rank
+                && e.epoch == epoch
+                && matches!(e.kind, FaultKind::BrokerDrop | FaultKind::BrokerDelay)
+        })?;
+        self.broker_faults_fired.fetch_add(1, Ordering::Relaxed);
+        Some(match ev.kind {
+            FaultKind::BrokerDrop => BrokerFault::Drop,
+            _ => BrokerFault::Delay(ev.delay_us),
+        })
+    }
+
+    /// Does the plan schedule any store/broker fault at all? Gates the
+    /// chaos arming of the I/O planes (unarmed = untouched fast path).
+    pub fn has_io_faults(&self) -> bool {
+        self.events.iter().any(|e| e.kind.is_io())
     }
 
     /// Kills that actually fired.
@@ -374,6 +766,21 @@ impl FaultPlan {
     /// Branch duplicates that actually fired.
     pub fn dups_fired(&self) -> u64 {
         self.dups_fired.load(Ordering::Relaxed)
+    }
+
+    /// Joins that were actually admitted.
+    pub fn joins_fired(&self) -> u64 {
+        self.joins_fired.load(Ordering::Relaxed)
+    }
+
+    /// Store faults that actually fired.
+    pub fn store_faults_fired(&self) -> u64 {
+        self.store_faults_fired.load(Ordering::Relaxed)
+    }
+
+    /// Broker faults that actually fired.
+    pub fn broker_faults_fired(&self) -> u64 {
+        self.broker_faults_fired.load(Ordering::Relaxed)
     }
 }
 
@@ -402,6 +809,71 @@ mod tests {
     }
 
     #[test]
+    fn parses_join_and_io_kinds() {
+        let plan = FaultPlanSpec::parse(
+            "join:peer1@3;join:peer4@2;storeput:peer0@1;storeget:peer1@2;\
+             storedelay:peer2@1:5ms;storecorrupt:peer3@2;brokerdrop:peer0@2;\
+             brokerdelay:peer1@1:3ms",
+        )
+        .unwrap()
+        .resolve(4, 4)
+        .unwrap();
+        assert_eq!(plan.events().len(), 8);
+        assert_eq!(plan.join_epoch(1), Some(3));
+        assert_eq!(plan.join_epoch(4), Some(2));
+        assert_eq!(plan.join_events(), vec![(4, 2), (1, 3)]);
+        assert!(plan.has_io_faults());
+        assert_eq!(
+            plan.take_store_fault(0, 1, StoreOp::Put),
+            Some(StoreFault::Transient)
+        );
+        assert_eq!(
+            plan.take_store_fault(3, 2, StoreOp::Get),
+            Some(StoreFault::Corrupt)
+        );
+        assert_eq!(
+            plan.take_store_fault(2, 1, StoreOp::Get),
+            Some(StoreFault::Delay(5000))
+        );
+        assert_eq!(plan.take_broker_fault(0, 2), Some(BrokerFault::Drop));
+        assert_eq!(plan.take_broker_fault(1, 1), Some(BrokerFault::Delay(3000)));
+        assert_eq!(plan.store_faults_fired(), 3);
+        assert_eq!(plan.broker_faults_fired(), 2);
+    }
+
+    #[test]
+    fn io_faults_fire_exactly_once() {
+        let plan = FaultPlanSpec::parse("storeget:peer1@2")
+            .unwrap()
+            .resolve(4, 4)
+            .unwrap();
+        // a get-error never matches a put site
+        assert_eq!(plan.take_store_fault(1, 2, StoreOp::Put), None);
+        assert_eq!(
+            plan.take_store_fault(1, 2, StoreOp::Get),
+            Some(StoreFault::Transient)
+        );
+        // consumed: the second matching op sees nothing
+        assert_eq!(plan.take_store_fault(1, 2, StoreOp::Get), None);
+        assert_eq!(plan.store_faults_fired(), 1);
+    }
+
+    #[test]
+    fn fault_scope_nests_and_restores() {
+        assert_eq!(current_fault_scope(), None);
+        {
+            let _outer = FaultScope::enter(1, 2);
+            assert_eq!(current_fault_scope(), Some((1, 2)));
+            {
+                let _inner = FaultScope::enter(3, 4);
+                assert_eq!(current_fault_scope(), Some((3, 4)));
+            }
+            assert_eq!(current_fault_scope(), Some((1, 2)));
+        }
+        assert_eq!(current_fault_scope(), None);
+    }
+
+    #[test]
     fn empty_plan_is_empty() {
         let plan = FaultPlanSpec::parse("").unwrap();
         assert!(plan.is_empty());
@@ -418,6 +890,16 @@ mod tests {
         assert!(FaultPlanSpec::parse("delay:peer1@1:banana").is_err());
         assert!(FaultPlanSpec::parse("rate:kill=2.0").is_err());
         assert!(FaultPlanSpec::parse("rate:seed=7").is_err());
+        // the new kinds reject the same malformed shapes
+        assert!(FaultPlanSpec::parse("join:banana").is_err());
+        assert!(FaultPlanSpec::parse("join:peer1").is_err());
+        assert!(FaultPlanSpec::parse("join:peer1.branch2@3").is_err());
+        assert!(FaultPlanSpec::parse("storeput:peer1.branch0@1").is_err());
+        assert!(FaultPlanSpec::parse("storedelay:peer1@1").is_err());
+        assert!(FaultPlanSpec::parse("storedelay:peer1@1:soon").is_err());
+        assert!(FaultPlanSpec::parse("brokerdrop:peerX@1").is_err());
+        assert!(FaultPlanSpec::parse("rate:join=-0.5,seed=1").is_err());
+        assert!(FaultPlanSpec::parse("rate:store=1.5,seed=1").is_err());
     }
 
     #[test]
@@ -426,6 +908,20 @@ mod tests {
         assert!(plan.resolve(4, 4).is_err());
         let plan = FaultPlanSpec::parse("kill:peer1@9").unwrap();
         assert!(plan.resolve(4, 4).is_err());
+        // joins: epoch 1 is too early, rank 0 never joins, growth must
+        // be contiguous, nobody joins twice
+        assert!(FaultPlanSpec::parse("join:peer1@1").unwrap().resolve(4, 4).is_err());
+        assert!(FaultPlanSpec::parse("join:peer0@2").unwrap().resolve(4, 4).is_err());
+        assert!(FaultPlanSpec::parse("join:peer6@2").unwrap().resolve(4, 4).is_err());
+        assert!(FaultPlanSpec::parse("join:peer1@2;join:peer1@3")
+            .unwrap()
+            .resolve(4, 4)
+            .is_err());
+        // a contiguous growth pair is fine
+        assert!(FaultPlanSpec::parse("join:peer4@2;join:peer5@3")
+            .unwrap()
+            .resolve(4, 4)
+            .is_ok());
     }
 
     #[test]
@@ -450,6 +946,28 @@ mod tests {
     }
 
     #[test]
+    fn seeded_join_and_store_rates_resolve_deterministically() {
+        let spec = FaultPlanSpec::parse("rate:join=0.5,store=0.25,seed=9").unwrap();
+        let a = spec.resolve(4, 4).unwrap();
+        let b = spec.resolve(4, 4).unwrap();
+        assert_eq!(a.to_spec(), b.to_spec());
+        let joins = a.join_events();
+        assert_eq!(joins.len(), 2, "floor(0.5 × 4) growth joins");
+        // growth ranks are contiguous from the initial width, in epoch
+        // order, within the epoch range
+        assert_eq!(joins[0].0, 4);
+        assert_eq!(joins[1].0, 5);
+        for &(_, e) in &joins {
+            assert!((2..=4).contains(&e));
+        }
+        let io = a.events().iter().filter(|e| e.kind.is_io()).count();
+        assert!(io >= 1 && io <= 4, "floor(0.25 × 16) store faults minus dedup");
+        // and the canonical form re-resolves identically
+        let again = FaultPlanSpec::parse(&a.to_spec()).unwrap().resolve(4, 4).unwrap();
+        assert_eq!(again.to_spec(), a.to_spec());
+    }
+
+    #[test]
     fn rate_always_leaves_a_survivor() {
         let spec = FaultPlanSpec::parse("rate:kill=1.0,seed=1").unwrap();
         let plan = spec.resolve(4, 4).unwrap();
@@ -467,5 +985,18 @@ mod tests {
             .resolve(4, 4)
             .unwrap();
         assert_eq!(plan.events(), again.events());
+    }
+
+    #[test]
+    fn canonical_spec_roundtrips_with_new_kinds() {
+        let spec = "join:peer4@2;storecorrupt:peer1@2;brokerdelay:peer0@1:2ms;\
+                    storedelay:peer3@3:1ms;kill:peer2@2";
+        let plan = FaultPlanSpec::parse(spec).unwrap().resolve(4, 4).unwrap();
+        let again = FaultPlanSpec::parse(&plan.to_spec())
+            .unwrap()
+            .resolve(4, 4)
+            .unwrap();
+        assert_eq!(plan.events(), again.events());
+        assert_eq!(plan.to_spec(), again.to_spec());
     }
 }

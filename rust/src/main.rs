@@ -122,14 +122,22 @@ TRAIN OPTIONS:
                              excluded from the fold (default 0 = all)
     --fault-plan SPEC        deterministic fault injection: semicolon-
                              separated events such as kill:peer1@2 /
-                             delay:peer0.branch3@1:5ms /
-                             dup:peer2.branch0@1, or the seeded form
-                             rate:kill=0.25,seed=7 (empty = off; any
-                             plan arms the membership plane)
+                             join:peer1@3 / delay:peer0.branch3@1:5ms /
+                             dup:peer2.branch0@1 / storeput:peer0@2 /
+                             storeget:peer1@2 / storecorrupt:peer1@2 /
+                             storedelay:peer0@1:3ms / brokerdrop:peer1@2
+                             / brokerdelay:peer0@1:2ms, or the seeded
+                             form rate:kill=0.25,join=0.1,store=0.2,
+                             seed=7 (empty = off; any plan arms the
+                             membership plane)
     --lambda-retries N       invocation attempts per lambda branch
                              (default 3; 1 = fail fast)
     --retry-backoff-ms N     base of the exponential retry backoff
                              with seeded jitter (default 0 = immediate)
+    --store-retries N        store/broker I/O attempts per op under
+                             injected chaos (default 3; 1 = fail fast)
+    --store-backoff-ms N     base of the store/broker retry backoff
+                             (default 0 = immediate)
     --early-stop N           early-stopping patience (0 = off)
     --plateau N              ReduceLROnPlateau patience (0 = off)
     --seed N                 RNG seed
@@ -306,6 +314,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(v) = parse_num(args, "retry-backoff-ms")? {
         cfg.retry_backoff_ms = v;
+    }
+    if let Some(v) = parse_num(args, "store-retries")? {
+        cfg.store_retries = v;
+    }
+    if let Some(v) = parse_num(args, "store-backoff-ms")? {
+        cfg.store_backoff_ms = v;
     }
     if let Some(v) = parse_num(args, "early-stop")? {
         cfg.early_stop_patience = v;
@@ -492,6 +506,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             c("membership.dropped_grads"),
             c("membership.orphans_swept"),
         );
+        if c("membership.joins") > 0 {
+            println!("elastic joins: {} admitted mid-run", c("membership.joins"));
+        }
+        if c("store.retries") + c("store.corrupt_refetches") + c("broker.retries") > 0 {
+            println!(
+                "io chaos: {} store retries, {} corrupt re-fetches, {} broker republishes",
+                c("store.retries"),
+                c("store.corrupt_refetches"),
+                c("broker.retries"),
+            );
+        }
     }
     if report.config.fold_quorum > 0 {
         println!(
@@ -502,11 +527,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if !report.config.fault_plan.is_empty() {
         println!(
-            "fault plan \"{}\": {} kills / {} delays / {} dups fired",
+            "fault plan \"{}\": {} kills / {} joins / {} delays / {} dups / \
+             {} store faults / {} broker faults fired",
             report.config.fault_plan,
             c("fault.kills_fired"),
+            c("fault.joins_fired"),
             c("fault.delays_fired"),
             c("fault.dups_fired"),
+            c("fault.store_faults_fired"),
+            c("fault.broker_faults_fired"),
         );
     }
     println!("wall: {:?}", report.wall);

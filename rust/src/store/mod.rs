@@ -68,7 +68,9 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::harness::faults::{self, FaultPlan as ChaosPlan, StoreFault, StoreOp};
 use crate::util::bytes::bytes_to_f32s;
+use crate::util::retry::RetryPolicy;
 use crate::util::Bytes;
 use std::sync::RwLock;
 
@@ -210,7 +212,27 @@ struct StoreInner {
     dedup: HashMap<(String, u64, u64), String>,
 }
 
+/// The armed chaos hook: the resolved fault plan plus the retry policy
+/// transient faults are absorbed under (`--store-retries` /
+/// `--store-backoff-ms`).
+#[derive(Clone)]
+struct ChaosHook {
+    plan: Arc<ChaosPlan>,
+    retry: RetryPolicy,
+}
+
 /// In-process S3: buckets of key→object with monotonic usage stats.
+///
+/// When a fault plan schedules store faults, [`ObjectStore::arm_chaos`]
+/// turns on the injection hook: puts and gets by a scoped peer thread
+/// (see [`crate::harness::faults::FaultScope`]) can fail transiently
+/// (absorbed by the configured retry policy, counted in
+/// `store.retries`), sleep, or deliver corrupted bytes — the armed get
+/// path verifies every read against the object's recorded content hash
+/// and re-fetches on mismatch (counted in `store.corrupt_refetches`),
+/// which extends the shard plane's hash verification to monolithic
+/// params and `SPv1` manifests alike. Unarmed (the default), every
+/// code path is byte-identical to the pre-chaos store.
 #[derive(Default)]
 pub struct ObjectStore {
     inner: RwLock<StoreInner>,
@@ -219,6 +241,12 @@ pub struct ObjectStore {
     bytes_in: AtomicU64,
     dedup_hits: AtomicU64,
     key_counter: AtomicU64,
+    /// Injected-fault hook; `None` (default) is the untouched path.
+    chaos: RwLock<Option<ChaosHook>>,
+    /// Extra put/get attempts forced by injected transient errors.
+    chaos_retries: AtomicU64,
+    /// Corrupted reads caught by hash verification and re-fetched.
+    corrupt_refetches: AtomicU64,
 }
 
 impl ObjectStore {
@@ -248,13 +276,24 @@ impl ObjectStore {
         data: Bytes,
         generation: u64,
     ) -> Result<ObjectRef> {
+        let armed = self.chaos_gate(StoreOp::Put, bucket, key)?;
         let size = data.len();
+        // with the chaos plane armed every object records its content
+        // hash, so the verified-get path can catch corrupted reads of
+        // plain objects (batches, parked gradients, warm-start params)
+        // — not just the deduplicated params plane
+        let object = if armed {
+            let hash = fnv1a64(&data);
+            Object { data, generation, refs: 1, content_hash: Some(hash) }
+        } else {
+            Object::plain(data, generation)
+        };
         let mut inner = self.inner.write().unwrap();
         inner
             .buckets
             .entry(bucket.to_string())
             .or_default()
-            .insert(key.to_string(), Object::plain(data, generation));
+            .insert(key.to_string(), object);
         self.puts.fetch_add(1, Ordering::Relaxed);
         self.bytes_in.fetch_add(size as u64, Ordering::Relaxed);
         Ok(ObjectRef { bucket: bucket.to_string(), key: key.to_string(), size })
@@ -282,6 +321,7 @@ impl ObjectStore {
     /// params bytes end up putting one object (ROADMAP follow-up from
     /// the zero-redundancy data plane).
     pub fn put_dedup(&self, bucket: &str, data: Bytes, generation: u64) -> Result<ObjectRef> {
+        self.chaos_gate(StoreOp::Put, bucket, "<dedup>")?;
         let hash = fnv1a64(&data);
         let mut inner = self.inner.write().unwrap();
         let dkey = (bucket.to_string(), generation, hash);
@@ -373,6 +413,15 @@ impl ObjectStore {
     }
 
     pub fn get(&self, bucket: &str, key: &str) -> Result<Bytes> {
+        let hook = self.chaos.read().unwrap().clone();
+        match hook {
+            None => self.get_raw(bucket, key),
+            Some(h) => self.get_chaos(bucket, key, &h),
+        }
+    }
+
+    /// The plain read (one S3 GET): exactly the pre-chaos `get` body.
+    fn get_raw(&self, bucket: &str, key: &str) -> Result<Bytes> {
         self.gets.fetch_add(1, Ordering::Relaxed);
         self.inner
             .read().unwrap()
@@ -380,6 +429,139 @@ impl ObjectStore {
             .get(bucket)
             .and_then(|b| b.get(key).map(|o| o.data.clone()))
             .ok_or_else(|| Error::Store(format!("missing s3://{bucket}/{key}")))
+    }
+
+    /// The armed read: consumes at most the scheduled faults for the
+    /// calling thread's (rank, epoch) scope, then returns a
+    /// hash-verified payload. A transient error is absorbed by the
+    /// retry policy (or surfaced once it is exhausted); a corrupted
+    /// delivery fails verification against the object's recorded
+    /// content hash and is re-fetched, counted in
+    /// `store.corrupt_refetches`.
+    fn get_chaos(&self, bucket: &str, key: &str, h: &ChaosHook) -> Result<Bytes> {
+        let scope = faults::current_fault_scope();
+        let mut transient = 0u32;
+        loop {
+            let fault =
+                scope.and_then(|(r, e)| h.plan.take_store_fault(r, e, StoreOp::Get));
+            let delivered = match fault {
+                Some(StoreFault::Delay(us)) => {
+                    std::thread::sleep(std::time::Duration::from_micros(us));
+                    continue;
+                }
+                Some(StoreFault::Transient) => {
+                    transient += 1;
+                    if transient >= h.retry.max_attempts {
+                        return Err(Error::Store(format!(
+                            "injected transient get error on s3://{bucket}/{key}: \
+                             {} attempts exhausted",
+                            h.retry.max_attempts
+                        )));
+                    }
+                    self.chaos_retries.fetch_add(1, Ordering::Relaxed);
+                    let delay = h.retry.backoff_delay(transient);
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
+                    continue;
+                }
+                Some(StoreFault::Corrupt) => {
+                    // the delivery pays a real GET, then arrives with a
+                    // flipped byte
+                    let clean = self.get_raw(bucket, key)?;
+                    let mut bad = clean.to_vec();
+                    match bad.first_mut() {
+                        Some(b) => *b = !*b,
+                        None => bad.push(0xFF),
+                    }
+                    Bytes::from(bad)
+                }
+                None => self.get_raw(bucket, key)?,
+            };
+            if self.verify_bytes(bucket, key, &delivered) {
+                return Ok(delivered);
+            }
+            // hash mismatch: drop the poisoned payload and re-fetch
+            self.corrupt_refetches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Does `bytes` match the object's recorded content hash? Objects
+    /// without a hash (stored before arming) fall back to a direct
+    /// byte comparison — still a real verification, just not a cheap
+    /// one. A concurrently swept object verifies trivially (there is
+    /// nothing left to compare against; the caller's payload is what
+    /// the store answered).
+    fn verify_bytes(&self, bucket: &str, key: &str, bytes: &Bytes) -> bool {
+        let inner = self.inner.read().unwrap();
+        let Some(obj) = inner.buckets.get(bucket).and_then(|b| b.get(key)) else {
+            return true;
+        };
+        match obj.content_hash {
+            Some(h) => fnv1a64(bytes) == h,
+            None => obj.data == *bytes,
+        }
+    }
+
+    /// Arm the chaos hook: injected store faults scoped by
+    /// [`crate::harness::faults::FaultScope`] fire on puts/gets under
+    /// `retry`. Unarmed stores never touch any of this machinery.
+    pub fn arm_chaos(&self, plan: Arc<ChaosPlan>, retry: RetryPolicy) {
+        *self.chaos.write().unwrap() = Some(ChaosHook { plan, retry });
+    }
+
+    /// Is the chaos hook armed?
+    pub fn chaos_armed(&self) -> bool {
+        self.chaos.read().unwrap().is_some()
+    }
+
+    /// Extra put/get attempts forced by injected transient errors.
+    pub fn chaos_retries(&self) -> u64 {
+        self.chaos_retries.load(Ordering::Relaxed)
+    }
+
+    /// Corrupted reads caught by hash verification and re-fetched.
+    pub fn corrupt_refetches(&self) -> u64 {
+        self.corrupt_refetches.load(Ordering::Relaxed)
+    }
+
+    /// The put-side chaos gate: absorbs scheduled transient errors and
+    /// latency under the retry policy before the put proceeds. Returns
+    /// whether the chaos plane is armed (armed puts record content
+    /// hashes for the verified-get path).
+    fn chaos_gate(&self, op: StoreOp, bucket: &str, key: &str) -> Result<bool> {
+        let hook = self.chaos.read().unwrap().clone();
+        let Some(h) = hook else { return Ok(false) };
+        let Some((rank, epoch)) = faults::current_fault_scope() else {
+            return Ok(true);
+        };
+        let mut transient = 0u32;
+        while let Some(fault) = h.plan.take_store_fault(rank, epoch, op) {
+            match fault {
+                StoreFault::Delay(us) => {
+                    std::thread::sleep(std::time::Duration::from_micros(us));
+                }
+                StoreFault::Transient => {
+                    transient += 1;
+                    if transient >= h.retry.max_attempts {
+                        return Err(Error::Store(format!(
+                            "injected transient put error on s3://{bucket}/{key}: \
+                             {} attempts exhausted",
+                            h.retry.max_attempts
+                        )));
+                    }
+                    self.chaos_retries.fetch_add(1, Ordering::Relaxed);
+                    let delay = h.retry.backoff_delay(transient);
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
+                }
+                // corruption is a read-side fault; a put site never
+                // takes it (see FaultPlan::take_store_fault)
+                StoreFault::Corrupt => unreachable!("corrupt fault at a put site"),
+            }
+        }
+        Ok(true)
     }
 
     pub fn get_ref(&self, r: &ObjectRef) -> Result<Bytes> {

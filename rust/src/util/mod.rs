@@ -5,10 +5,12 @@
 
 pub mod bytes;
 pub mod json;
+pub mod retry;
 pub mod rng;
 pub mod sync;
 
 pub use bytes::Bytes;
 pub use json::Json;
+pub use retry::RetryPolicy;
 pub use rng::Rng;
 pub use sync::{Semaphore, SemaphorePermit};

@@ -1,0 +1,169 @@
+//! Shared retry/backoff policy for every transient-failure site.
+//!
+//! One [`RetryPolicy`] now drives three planes:
+//!
+//! - the Step-Functions-style branch invocations (`--lambda-retries` /
+//!   `--retry-backoff-ms`, the PR-1 knobs — their exhaustion semantics
+//!   are unchanged and regression-tested);
+//! - [`crate::store::ObjectStore`] puts/gets under injected store
+//!   faults (`--store-retries` / `--store-backoff-ms`);
+//! - [`crate::broker::Broker`] publishes under injected drop faults
+//!   (same store knobs — one I/O policy, two substrates).
+//!
+//! The policy is a pure value: attempts, exponential backoff base, and
+//! a seeded jitter hash. Backoff sleeps are *measured* time only — the
+//! modeled walls (paper-table mode) never include them, which is what
+//! keeps a disarmed chaos run byte-identical to the plain path.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Retry policy for transient failures (Step Functions' `Retry`, the
+/// S3 SDK's exponential backoff).
+///
+/// The default (3 attempts, no backoff) matches the policy that was
+/// hardcoded before the knobs existed, so default runs are unchanged.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts (the first try counts; minimum 1).
+    pub max_attempts: u32,
+    /// Base sleep before the first retry; attempt `k` waits
+    /// `backoff * 2^(k-1)` plus seeded jitter. Measured time only —
+    /// modeled walls never include backoff sleeps.
+    pub backoff: Duration,
+    /// Seed for the deterministic jitter (same seed → same delays).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 3, backoff: Duration::ZERO, jitter_seed: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Policy from the config knobs, with a per-peer jitter seed so
+    /// colliding retries from different peers decorrelate.
+    pub fn configured(max_attempts: u32, backoff_ms: u64, jitter_seed: u64) -> Self {
+        Self {
+            max_attempts: max_attempts.max(1),
+            backoff: Duration::from_millis(backoff_ms),
+            jitter_seed,
+        }
+    }
+
+    /// Sleep owed before retry attempt `attempt` (1-based over
+    /// retries): exponential base plus jitter in `[0, base/2]`.
+    pub fn backoff_delay(&self, attempt: u32) -> Duration {
+        if self.backoff.is_zero() || attempt == 0 {
+            return Duration::ZERO;
+        }
+        let base = self.backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(10));
+        let half = base.as_nanos() as u64 / 2;
+        let jitter = if half == 0 {
+            0
+        } else {
+            jitter_hash(self.jitter_seed ^ u64::from(attempt)) % (half + 1)
+        };
+        base + Duration::from_nanos(jitter)
+    }
+
+    /// Run `op` under this policy: up to `max_attempts` tries, sleeping
+    /// the backoff between them. `on_retry` is called once per *extra*
+    /// attempt (the retry accounting hook — `store.retries`,
+    /// `broker.retries`); the final error is returned verbatim when
+    /// every attempt fails, preserving the PR-1 exhaustion semantics.
+    pub fn run<T>(
+        &self,
+        mut op: impl FnMut() -> Result<T>,
+        mut on_retry: impl FnMut(),
+    ) -> Result<T> {
+        let mut last: Option<Error> = None;
+        for attempt in 0..self.max_attempts.max(1) {
+            if attempt > 0 {
+                on_retry();
+                let delay = self.backoff_delay(attempt);
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+            }
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::Runtime("retry loop ran zero attempts".into())))
+    }
+}
+
+/// splitmix64 — a tiny stateless hash for deterministic retry jitter.
+fn jitter_hash(state: u64) -> u64 {
+    let mut z = state.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_historical_policy() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 3);
+        assert!(p.backoff.is_zero());
+        assert!(p.backoff_delay(1).is_zero());
+    }
+
+    #[test]
+    fn configured_clamps_to_one_attempt() {
+        let p = RetryPolicy::configured(0, 0, 0);
+        assert_eq!(p.max_attempts, 1);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        let p = RetryPolicy::configured(5, 8, 42);
+        let d1 = p.backoff_delay(1);
+        let d3 = p.backoff_delay(3);
+        assert!(d1 >= Duration::from_millis(8) && d1 <= Duration::from_millis(12));
+        assert!(d3 >= Duration::from_millis(32) && d3 <= Duration::from_millis(48));
+        // deterministic: same policy, same attempt, same delay
+        assert_eq!(d3, p.backoff_delay(3));
+    }
+
+    #[test]
+    fn run_retries_then_succeeds_and_counts() {
+        let p = RetryPolicy::configured(3, 0, 0);
+        let mut fails = 2;
+        let mut retries = 0u64;
+        let out = p
+            .run(
+                || {
+                    if fails > 0 {
+                        fails -= 1;
+                        Err(Error::Store("transient".into()))
+                    } else {
+                        Ok(7u32)
+                    }
+                },
+                || retries += 1,
+            )
+            .unwrap();
+        assert_eq!(out, 7);
+        assert_eq!(retries, 2, "two extra attempts beyond the first");
+    }
+
+    #[test]
+    fn run_exhaustion_returns_last_error() {
+        let p = RetryPolicy::configured(2, 0, 0);
+        let mut retries = 0u64;
+        let err = p
+            .run(|| Err::<(), _>(Error::Store("still down".into())), || retries += 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("still down"));
+        assert_eq!(retries, 1);
+    }
+}

@@ -464,6 +464,244 @@ fn instance_backend_takeover_matches_reference_curve() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// elastic joins × failures (real PJRT, artifact-gated)
+// ---------------------------------------------------------------------------
+
+/// Per-rank final-params fingerprints, keyed so reports with different
+/// peer orderings (joiner threads land last) compare cleanly.
+fn fnv_by_rank(rep: &p2pless::coordinator::TrainReport) -> Vec<(usize, u64)> {
+    let mut v: Vec<(usize, u64)> =
+        rep.peers.iter().map(|p| (p.rank, p.params_fnv)).collect();
+    v.sort_unstable();
+    v
+}
+
+/// The tentpole composition: kill peer 1 at epoch 2 (takeover absorbs
+/// its partition), then re-admit it at the epoch-3 boundary (revival).
+/// The joiner warm-starts from the leader's params, takes its old
+/// partition back, and the cluster lands on the fault-free result —
+/// validation curve AND every rank's final params bits.
+#[test]
+fn revival_join_after_takeover_lands_on_fault_free_bits() {
+    require_artifacts!();
+    let reference = Cluster::with_engine(fault_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Takeover,
+        fault_plan: "kill:peer1@2;join:peer1@3".into(),
+        ..fault_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.deaths"), Some(1));
+    assert_eq!(rep.counter("fault.kills_fired"), Some(1));
+    assert_eq!(rep.counter("membership.joins"), Some(1));
+    assert_eq!(rep.counter("fault.joins_fired"), Some(1));
+    // only epoch 2 was carried by the survivors; epoch 3 is the
+    // joiner's own work again
+    assert_eq!(rep.counter("membership.takeover_epochs"), Some(1));
+    // all three ranks report — the joiner's thread files for rank 1
+    assert_eq!(rep.peers.len(), 3, "revived rank must file a report");
+    common::assert_val_curves_bit_identical(&reference, &rep, "revival join");
+    assert_eq!(
+        fnv_by_rank(&reference),
+        fnv_by_rank(&rep),
+        "revival join must land on the fault-free params bits"
+    );
+    // warm-start object deleted by the joiner, scratch swept as usual
+    assert_eq!(rep.store_objects, 0, "revival join leaked store objects");
+}
+
+/// Growth join: a brand-new rank 3 grows a 3-peer cluster at the
+/// epoch-2 boundary. The largest live partition is split with the
+/// newcomer, the barrier widens piecewise, and the run is replay-stable
+/// (same plan → same bits), with every rank in lockstep at the end.
+#[test]
+fn growth_join_splits_partition_and_replays_bit_stably() {
+    require_artifacts!();
+    let run = || {
+        let cfg = TrainConfig {
+            on_peer_failure: FailurePolicy::Takeover,
+            fault_plan: "join:peer3@2".into(),
+            ..fault_cfg()
+        };
+        Cluster::with_engine(cfg, common::engine()).unwrap().run().unwrap()
+    };
+    let rep = run();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.joins"), Some(1));
+    assert_eq!(rep.counter("fault.joins_fired"), Some(1));
+    assert_eq!(rep.counter("membership.deaths"), Some(0));
+    assert_eq!(rep.peers.len(), 4, "grown cluster must report all four ranks");
+    // synchronous averaging keeps every rank's params identical
+    let fnvs = fnv_by_rank(&rep);
+    for (rank, fnv) in &fnvs {
+        assert_eq!(
+            *fnv, fnvs[0].1,
+            "rank {rank} out of lockstep after the growth join"
+        );
+    }
+    assert_eq!(rep.store_objects, 0, "growth join leaked store objects");
+    let replay = run();
+    common::assert_val_curves_bit_identical(&rep, &replay, "growth join replay");
+    assert_eq!(fnv_by_rank(&replay), fnvs, "growth join not replay-stable");
+}
+
+/// Join under a k-of-n fold quorum: admission, warm start and the
+/// shrunk fold compose — the run completes every epoch and the joiner
+/// participates in the quorumed fold like any other rank.
+#[test]
+fn revival_join_composes_with_fold_quorum() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Takeover,
+        fault_plan: "kill:peer1@2;join:peer1@3".into(),
+        fold_quorum: 1,
+        ..fault_cfg()
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.joins"), Some(1));
+    assert_eq!(rep.counter("fold.quorum"), Some(1));
+    assert!(rep.counter("fold.stragglers").unwrap() > 0);
+    assert!(rep.mean_train_loss_last_epoch().unwrap().is_finite());
+    assert_eq!(rep.store_objects, 0);
+}
+
+/// The instance backend joins too: the revived peer re-batches its raw
+/// partition with its own seed (no store-backed refs involved), so the
+/// composition lands on the instance reference curve.
+#[test]
+fn instance_backend_revival_join_matches_reference() {
+    require_artifacts!();
+    let base = TrainConfig { backend: Backend::Instance, ..fault_cfg() };
+    let reference = Cluster::with_engine(base.clone(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let cfg = TrainConfig {
+        on_peer_failure: FailurePolicy::Takeover,
+        fault_plan: "kill:peer2@2;join:peer2@3".into(),
+        ..base
+    };
+    let rep = Cluster::with_engine(cfg, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.epochs_run(), 3);
+    assert_eq!(rep.counter("membership.joins"), Some(1));
+    assert_eq!(rep.counter("membership.takeover_epochs"), Some(1));
+    assert_eq!(rep.peers.len(), 3);
+    common::assert_val_curves_bit_identical(&reference, &rep, "instance revival join");
+    assert_eq!(fnv_by_rank(&reference), fnv_by_rank(&rep));
+}
+
+// ---------------------------------------------------------------------------
+// chaos invariance: injected I/O faults are transparent (artifact-gated)
+// ---------------------------------------------------------------------------
+
+/// Every chaos kind at once — transient store put/get errors, a
+/// corrupted read, store/broker delays, a publish drop, a kill AND a
+/// revival join — under `takeover`. At each exec-slot count the faulted
+/// run must land on the fault-free run's exact bits: the retry loop
+/// absorbs transients, hash verification catches the corruption and
+/// re-fetches, delays only move measured wall, and the join path is
+/// warm-started from in-lockstep params.
+#[test]
+fn full_chaos_run_is_bit_identical_to_fault_free() {
+    require_artifacts!();
+    const PLAN: &str = "kill:peer1@2;join:peer1@3;\
+                        storeput:peer0@1;storeget:peer2@2;storecorrupt:peer0@3;\
+                        storedelay:peer1@1:0ms;\
+                        brokerdrop:peer2@1;brokerdelay:peer0@2:0ms";
+    for slots in [1usize, 2, 8] {
+        let engine = Arc::new(p2pless::runtime::Engine::with_slots(slots).unwrap());
+        let base = TrainConfig { exec_slots: slots, ..fault_cfg() };
+        let reference = Cluster::with_engine(base.clone(), engine.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let cfg = TrainConfig {
+            on_peer_failure: FailurePolicy::Takeover,
+            fault_plan: PLAN.into(),
+            ..base
+        };
+        let rep = Cluster::with_engine(cfg, engine).unwrap().run().unwrap();
+        assert_eq!(rep.epochs_run(), 3, "slots {slots}");
+        // every scheduled injection found its op and fired exactly once
+        assert_eq!(rep.counter("fault.kills_fired"), Some(1), "slots {slots}");
+        assert_eq!(rep.counter("fault.joins_fired"), Some(1), "slots {slots}");
+        assert_eq!(rep.counter("fault.store_faults_fired"), Some(4), "slots {slots}");
+        assert_eq!(rep.counter("fault.broker_faults_fired"), Some(2), "slots {slots}");
+        // ...and was absorbed by the matching recovery plane
+        assert!(rep.counter("store.retries").unwrap() >= 2, "slots {slots}");
+        assert_eq!(rep.counter("store.corrupt_refetches"), Some(1), "slots {slots}");
+        assert!(rep.counter("broker.retries").unwrap() >= 1, "slots {slots}");
+        // transparency: the training math never saw any of it
+        common::assert_val_curves_bit_identical(
+            &reference,
+            &rep,
+            &format!("chaos at {slots} slots"),
+        );
+        assert_eq!(
+            fnv_by_rank(&reference),
+            fnv_by_rank(&rep),
+            "chaos perturbed final params bits at {slots} slots"
+        );
+        assert_eq!(rep.store_objects, 0, "chaos run leaked store objects");
+    }
+}
+
+/// Disarmed regression: without a fault plan the chaos plane must not
+/// exist observably. The retry knobs may be set to anything — the
+/// pinned data-plane counters, the curve and the final params bits are
+/// byte-identical to the default-knob run, and every chaos counter
+/// reads zero.
+#[test]
+fn disarmed_chaos_knobs_change_nothing() {
+    require_artifacts!();
+    let baseline = Cluster::with_engine(fault_cfg(), common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    let tuned = TrainConfig {
+        store_retries: 7,
+        store_backoff_ms: 5,
+        ..fault_cfg()
+    };
+    let rep = Cluster::with_engine(tuned, common::engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    common::assert_val_curves_bit_identical(&baseline, &rep, "disarmed knobs");
+    common::assert_pinned_counters_eq(&baseline, &rep, "disarmed knobs");
+    assert_eq!(fnv_by_rank(&baseline), fnv_by_rank(&rep));
+    for counter in [
+        "store.retries",
+        "store.corrupt_refetches",
+        "broker.retries",
+        "membership.joins",
+    ] {
+        assert_eq!(rep.counter(counter), Some(0), "{counter} fired while disarmed");
+        assert_eq!(baseline.counter(counter), Some(0), "{counter} fired in baseline");
+    }
+    // the PR-1 lambda-retry accounting is untouched by the store knobs
+    assert_eq!(
+        rep.counter("faas.retries"),
+        baseline.counter("faas.retries"),
+        "store knobs leaked into the faas retry plane"
+    );
+}
+
 /// k-of-n through the whole cluster: a serverless run with a fold
 /// quorum completes, counts its stragglers, and still learns (the loss
 /// denominators shrink to the folded branch count).

@@ -8,6 +8,7 @@ use p2pless::compress::{codec_for, Codec, QsgdCodec, RawCodec, TopkCodec};
 use p2pless::config::Compression;
 use p2pless::coordinator::GradientDict;
 use p2pless::faas::schedule_wall;
+use p2pless::harness::faults::{FaultKind, FaultPlanSpec};
 use p2pless::store::shard::{
     hash_f32s, upload_sharded, ShardManifest, ShardPlane, ShardSpec, ShardState,
     SHARD_KIND_RAW,
@@ -315,6 +316,172 @@ fn prop_fifo_version_equals_accepted_publishes() {
         let dropped = if drop_every > 0 { n / drop_every } else { 0 };
         assert_eq!(q.version(), n - dropped, "seed {seed}");
         assert_eq!(q.len() as u64, n - dropped, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------- fault plans
+
+/// Random valid spec entries covering every fault kind. Join ranks are
+/// drawn so the admission sequence is well-formed (distinct revival
+/// ranks in `1..peers`, growth ranks contiguous from `peers` with
+/// non-decreasing epochs).
+fn rand_fault_entries(rng: &mut Rng, peers: usize, epochs: usize) -> Vec<String> {
+    let mut entries = Vec::new();
+    for _ in 0..rng.gen_below(8) {
+        let p = rng.gen_below(peers);
+        let e = 1 + rng.gen_below(epochs);
+        let ms = rng.gen_below(3);
+        entries.push(match rng.gen_below(9) {
+            0 => format!("kill:peer{p}@{e}"),
+            1 => format!("delay:peer{p}@{e}:{ms}ms"),
+            2 => format!("dup:peer{p}.branch{}@{e}", rng.gen_below(4)),
+            3 => format!("storeput:peer{p}@{e}"),
+            4 => format!("storeget:peer{p}@{e}"),
+            5 => format!("storecorrupt:peer{p}@{e}"),
+            6 => format!("storedelay:peer{p}@{e}:{ms}ms"),
+            7 => format!("brokerdrop:peer{p}@{e}"),
+            _ => format!("brokerdelay:peer{p}@{e}:{ms}ms"),
+        });
+    }
+    for r in 1..peers {
+        if rng.gen_below(3) == 0 {
+            entries.push(format!("join:peer{r}@{}", 2 + rng.gen_below(epochs - 1)));
+        }
+    }
+    let growth = rng.gen_below(3);
+    let mut growth_epochs: Vec<usize> =
+        (0..growth).map(|_| 2 + rng.gen_below(epochs - 1)).collect();
+    growth_epochs.sort_unstable();
+    for (i, e) in growth_epochs.into_iter().enumerate() {
+        entries.push(format!("join:peer{}@{e}", peers + i));
+    }
+    entries
+}
+
+/// parse → resolve → to_spec → parse → resolve is a fixpoint: the
+/// canonical rendering of any resolved plan resolves back to the same
+/// sorted, deduplicated event list, for every fault kind including the
+/// elastic-join and store/broker chaos kinds.
+#[test]
+fn prop_fault_plan_spec_roundtrips_through_canonical_rendering() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x4f4f);
+        let peers = 2 + rng.gen_below(5);
+        let epochs = 2 + rng.gen_below(6);
+        let spec = rand_fault_entries(&mut rng, peers, epochs).join(";");
+        let plan = FaultPlanSpec::parse(&spec)
+            .unwrap_or_else(|e| panic!("seed {seed} parse {spec:?}: {e}"))
+            .resolve(peers, epochs)
+            .unwrap_or_else(|e| panic!("seed {seed} resolve {spec:?}: {e}"));
+        // resolved events are sorted and deduplicated
+        for w in plan.events().windows(2) {
+            assert!(w[0] < w[1], "seed {seed}: events not strictly ascending");
+        }
+        let rendered = plan.to_spec();
+        let back = FaultPlanSpec::parse(&rendered)
+            .unwrap_or_else(|e| panic!("seed {seed} reparse {rendered:?}: {e}"))
+            .resolve(peers, epochs)
+            .unwrap_or_else(|e| panic!("seed {seed} re-resolve {rendered:?}: {e}"));
+        assert_eq!(back.events(), plan.events(), "seed {seed}: roundtrip diverged");
+        assert_eq!(back.to_spec(), rendered, "seed {seed}: rendering not a fixpoint");
+    }
+}
+
+/// Seeded rate clauses resolve deterministically (same spec + shape →
+/// identical event list), produce only in-bounds events, and their
+/// expansion survives the canonical-rendering roundtrip as a plain
+/// explicit plan.
+#[test]
+fn prop_fault_plan_rate_resolution_deterministic_and_in_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5e5e);
+        let peers = 2 + rng.gen_below(6);
+        let epochs = 2 + rng.gen_below(6);
+        let kill = rng.gen_below(100) as f64 / 100.0;
+        let join = rng.gen_below(100) as f64 / 100.0;
+        let store = rng.gen_below(100) as f64 / 100.0;
+        let spec = format!(
+            "rate:kill={kill},join={join},store={store},seed={}",
+            rng.next_u64() % 1000
+        );
+        let parsed = FaultPlanSpec::parse(&spec).unwrap();
+        let a = parsed.resolve(peers, epochs).unwrap();
+        let b = parsed.resolve(peers, epochs).unwrap();
+        assert_eq!(a.events(), b.events(), "seed {seed}: rate resolution not deterministic");
+        let joins = a.events().iter().filter(|e| e.kind == FaultKind::Join).count();
+        assert_eq!(
+            joins,
+            (join * peers as f64).floor() as usize,
+            "seed {seed}: join count off"
+        );
+        for ev in a.events() {
+            assert!(ev.epoch >= 1 && ev.epoch <= epochs as u64, "seed {seed}: {ev}");
+            if ev.kind == FaultKind::Join {
+                assert!(ev.epoch >= 2, "seed {seed}: join in epoch 1: {ev}");
+            } else {
+                assert!(ev.peer < peers, "seed {seed}: out-of-cluster target {ev}");
+            }
+        }
+        // the expansion is expressible as an explicit plan
+        let back = FaultPlanSpec::parse(&a.to_spec()).unwrap().resolve(peers, epochs).unwrap();
+        assert_eq!(back.events(), a.events(), "seed {seed}: expansion not re-resolvable");
+    }
+}
+
+/// Malformed specs are structured `Err`s, never panics — both at parse
+/// time (bad grammar) and at resolve time (out-of-shape targets,
+/// ill-ordered joins).
+#[test]
+fn prop_malformed_fault_specs_error_never_panic() {
+    for bad in [
+        "join:banana",
+        "join:peer1",
+        "join:peer1.branch0@2",
+        "kill:rank1@2",
+        "kill:peer1",
+        "kill:peer1.branch0@1",
+        "dup:peer1@1",
+        "delay:peer0@1",
+        "storedelay:peer1@2",
+        "storeput:peer1.branch0@1",
+        "brokerdrop:peer1.branch0@1",
+        "brokerdelay:peer1@2:xms",
+        "frobnicate:peer0@1",
+        "rate:seed=3",
+        "rate:kill=1.5",
+        "rate:kill=banana",
+        "rate:churn=0.5",
+        "storeput",
+        ":@",
+    ] {
+        assert!(FaultPlanSpec::parse(bad).is_err(), "{bad:?} parsed");
+    }
+    // grammatically fine, rejected against the cluster shape (2 peers,
+    // 4 epochs)
+    for bad in [
+        "kill:peer9@1",
+        "kill:peer1@0",
+        "kill:peer1@9",
+        "join:peer0@2",
+        "join:peer1@1",
+        "join:peer1@9",
+        "join:peer5@2",
+        "join:peer1@2;join:peer1@3",
+    ] {
+        let spec = FaultPlanSpec::parse(bad).unwrap_or_else(|e| panic!("{bad:?}: {e}"));
+        assert!(spec.resolve(2, 4).is_err(), "{bad:?} resolved");
+    }
+    // fuzz: arbitrary strings over the grammar's alphabet parse to Ok
+    // or Err, never a crash
+    const ALPHABET: &[u8] = b"kiljondupstrebcamy:@.;=0123456789, ";
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x6d6d);
+        let n = rng.gen_below(40);
+        let s: String =
+            (0..n).map(|_| ALPHABET[rng.gen_below(ALPHABET.len())] as char).collect();
+        if let Ok(spec) = FaultPlanSpec::parse(&s) {
+            let _ = spec.resolve(2, 4);
+        }
     }
 }
 
